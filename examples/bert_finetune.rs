@@ -1,0 +1,33 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): fine-tune the
+//! mini-BERT transformer on the synthetic MRPC-sized sentence-pair task
+//! with LGD vs SGD batch sampling, exercising all three layers:
+//!
+//!   L1 Pallas kernels + L2 JAX transformer  →  AOT HLO text artifacts
+//!   →  Rust PJRT runtime (this process)      →  L3 LSH coordinator
+//!
+//! Prints the epoch-wise loss/accuracy table the paper's Figure 5 plots.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example bert_finetune
+//! ```
+
+use lgd::experiments::{fig5, ExpOptions};
+
+fn main() -> lgd::Result<()> {
+    let artifacts = lgd::runtime::default_artifacts_dir();
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("no artifacts at {} — run `make artifacts` first", artifacts.display());
+        std::process::exit(2);
+    }
+    let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.25);
+    let opts = ExpOptions {
+        scale,
+        out_dir: std::path::PathBuf::from("results"),
+        seed: 42,
+        quick: false,
+        artifacts: Some(artifacts),
+    };
+    fig5::run(&opts)?;
+    println!("\ncurves in results/fig5.csv — epoch-wise convergence, LGD vs SGD (paper Fig. 5)");
+    Ok(())
+}

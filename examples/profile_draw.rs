@@ -1,0 +1,16 @@
+use lgd::config::spec::{EstimatorKind, RunConfig};
+use lgd::coordinator::trainer::build_estimator;
+use lgd::data::preprocess::{preprocess, PreprocessOptions};
+use lgd::data::SynthSpec;
+fn main() {
+    let ds = SynthSpec::power_law("p", 9000, 90, 7).generate().unwrap();
+    let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.lsh.l = 100;
+    cfg.train.estimator = EstimatorKind::Lgd;
+    let mut est = build_estimator(&cfg, &pre).unwrap();
+    let theta = vec![0.01f32; 90];
+    let mut acc = 0.0f64;
+    for _ in 0..3_000_000 { acc += std::hint::black_box(est.draw(&theta)).weight; }
+    println!("{acc}");
+}

@@ -1,0 +1,73 @@
+//! Regression suite: the paper's three linear-regression workloads
+//! (Table 4 sizes, scaled) with plain and AdaGrad optimizers, LGD vs SGD —
+//! a compact re-run of Figures 10–13 with a summary table.
+//!
+//! ```bash
+//! cargo run --release --example regression_suite [-- scale]
+//! ```
+
+use lgd::config::spec::{EstimatorKind, OptimizerKind, RunConfig};
+use lgd::coordinator::trainer::{train, GradSource};
+use lgd::data::paper_specs;
+use lgd::data::preprocess::{preprocess, PreprocessOptions};
+use lgd::optim::Schedule;
+
+fn main() -> lgd::Result<()> {
+    let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.01);
+    println!("running at scale {scale} of the paper's dataset sizes\n");
+    println!(
+        "{:<16} {:<9} {:<9} {:>12} {:>12} {:>10} {:>10}",
+        "dataset", "optim", "estimator", "final train", "final test", "wall s", "speedup"
+    );
+    for spec in paper_specs(scale, 42).into_iter().take(3) {
+        let ds = spec.generate()?;
+        let (tr, te) = ds.split(0.9, 1)?;
+        let pre = preprocess(tr, &PreprocessOptions::default())?;
+        for optim in [OptimizerKind::Sgd, OptimizerKind::AdaGrad] {
+            let mut wall = [0.0f64; 2];
+            let mut when_half = [f64::INFINITY; 2];
+            for (i, est) in [EstimatorKind::Lgd, EstimatorKind::Sgd].into_iter().enumerate() {
+                let mut cfg = RunConfig::default();
+                cfg.train.estimator = est;
+                cfg.train.optimizer = optim;
+                cfg.train.epochs = 5;
+                cfg.train.schedule =
+                    Schedule::Const(if optim == OptimizerKind::AdaGrad { 0.1 } else { 0.05 });
+                cfg.train.seed = 7;
+                cfg.lsh.l = 50;
+                let out = train(&cfg, &pre, &te, GradSource::Native)?;
+                let first = out.curve.first().unwrap().train_loss;
+                when_half[i] = out
+                    .curve
+                    .iter()
+                    .find(|p| p.train_loss <= first * 0.5)
+                    .map(|p| p.wall)
+                    .unwrap_or(f64::INFINITY);
+                wall[i] = out.wall_secs;
+                let last = out.curve.last().unwrap();
+                println!(
+                    "{:<16} {:<9} {:<9} {:>12.6} {:>12.6} {:>10.3} {:>10}",
+                    spec.name,
+                    match optim {
+                        OptimizerKind::AdaGrad => "adagrad",
+                        _ => "plain",
+                    },
+                    out.estimator,
+                    last.train_loss,
+                    last.test_loss,
+                    out.wall_secs,
+                    "",
+                );
+            }
+            if when_half[0].is_finite() && when_half[1].is_finite() {
+                println!(
+                    "{:<16} {:<9} time-to-half-loss speedup (sgd/lgd): {:.2}x",
+                    spec.name,
+                    "",
+                    when_half[1] / when_half[0]
+                );
+            }
+        }
+    }
+    Ok(())
+}

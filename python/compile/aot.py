@@ -1,0 +1,233 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one `<entry>.hlo.txt` per entry point plus `manifest.json`
+describing argument/output shapes and dtypes plus the mini-BERT
+parameter ABI — everything the Rust runtime needs to build literals.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (batch, dim) combinations compiled for the linear models. d values are
+# the paper's three regression datasets (Table 4; Slice per appendix D);
+# batch 1 is the paper's plain setting, the larger batches serve the
+# minibatch ablations and loss evaluation.
+LINREG_DIMS = (90, 385, 529)
+GRAD_BATCHES = (1, 32, 256)
+LOSS_BATCH = 1024
+LOGREG_DIM = 64
+SIMHASH_SHAPES = ((64, 91),)  # (batch, hash-space dim) for yearmsd-like
+SIMHASH_K = 5
+SIMHASH_L = 100
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _shape_struct(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entries():
+    """Yield (name, jitted_fn, example_args, arg_specs, out_specs)."""
+    entries = []
+
+    for d in LINREG_DIMS:
+        for b in GRAD_BATCHES:
+            name = f"linreg_grad_b{b}_d{d}"
+            args = [
+                _shape_struct((b, d)),
+                _shape_struct((b,)),
+                _shape_struct((d,)),
+                _shape_struct((b,)),
+            ]
+            entries.append(
+                (
+                    name,
+                    model.linreg_grad,
+                    args,
+                    [_spec((b, d)), _spec((b,)), _spec((d,)), _spec((b,))],
+                    [_spec((d,))],
+                )
+            )
+        name = f"linreg_loss_b{LOSS_BATCH}_d{d}"
+        args = [
+            _shape_struct((LOSS_BATCH, d)),
+            _shape_struct((LOSS_BATCH,)),
+            _shape_struct((d,)),
+        ]
+        entries.append(
+            (
+                name,
+                model.linreg_loss,
+                args,
+                [_spec((LOSS_BATCH, d)), _spec((LOSS_BATCH,)), _spec((d,))],
+                [_spec(())],
+            )
+        )
+
+    d = LOGREG_DIM
+    for b in (1, 32):
+        entries.append(
+            (
+                f"logreg_grad_b{b}_d{d}",
+                model.logreg_grad,
+                [
+                    _shape_struct((b, d)),
+                    _shape_struct((b,)),
+                    _shape_struct((d,)),
+                    _shape_struct((b,)),
+                ],
+                [_spec((b, d)), _spec((b,)), _spec((d,)), _spec((b,))],
+                [_spec((d,))],
+            )
+        )
+    entries.append(
+        (
+            f"logreg_loss_b{LOSS_BATCH}_d{d}",
+            model.logreg_loss,
+            [
+                _shape_struct((LOSS_BATCH, d)),
+                _shape_struct((LOSS_BATCH,)),
+                _shape_struct((d,)),
+            ],
+            [_spec((LOSS_BATCH, d)), _spec((LOSS_BATCH,)), _spec((d,))],
+            [_spec(())],
+        )
+    )
+
+    for b, hd in SIMHASH_SHAPES:
+        p = SIMHASH_K * SIMHASH_L
+
+        def simhash_fn(x, planes, _k=SIMHASH_K, _l=SIMHASH_L):
+            return model.simhash_codes(x, planes, _k, _l)
+
+        entries.append(
+            (
+                f"simhash_b{b}_d{hd}_k{SIMHASH_K}_l{SIMHASH_L}",
+                simhash_fn,
+                [_shape_struct((b, hd)), _shape_struct((p, hd))],
+                [_spec((b, hd)), _spec((p, hd))],
+                [_spec((b, SIMHASH_L), "u32")],
+            )
+        )
+
+    # --- mini-BERT ---
+    spec = model.bert_param_spec()
+    pshapes = [s for _, s in spec]
+    params = [_shape_struct(s) for s in pshapes]
+    bt, tt = 32, model.MAX_T
+    entries.append(
+        (
+            "bert_grad_b32",
+            model.bert_grad,
+            params
+            + [
+                _shape_struct((bt, tt), jnp.int32),
+                _shape_struct((bt,), jnp.int32),
+                _shape_struct((bt,)),
+            ],
+            [_spec(s) for s in pshapes]
+            + [_spec((bt, tt), "s32"), _spec((bt,), "s32"), _spec((bt,))],
+            [_spec(())] + [_spec(s) for s in pshapes],
+        )
+    )
+    be = 64
+    entries.append(
+        (
+            "bert_logits_b64",
+            model.bert_logits,
+            params + [_shape_struct((be, tt), jnp.int32)],
+            [_spec(s) for s in pshapes] + [_spec((be, tt), "s32")],
+            [_spec((be, model.N_CLASSES))],
+        )
+    )
+    entries.append(
+        (
+            "bert_pooled_b64",
+            model.bert_pooled,
+            params + [_shape_struct((be, tt), jnp.int32)],
+            [_spec(s) for s in pshapes] + [_spec((be, tt), "s32")],
+            [_spec((be, model.D_MODEL))],
+        )
+    )
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="", help="comma-separated entry filter")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(filter(None, args.only.split(",")))
+
+    manifest = {
+        "format": "hlo-text",
+        "entries": {},
+        "bert": {
+            "param_names": [n for n, _ in model.bert_param_spec()],
+            "param_shapes": [list(s) for _, s in model.bert_param_spec()],
+            "vocab": model.VOCAB,
+            "max_t": model.MAX_T,
+            "d_model": model.D_MODEL,
+            "n_classes": model.N_CLASSES,
+        },
+        "simhash": {"k": SIMHASH_K, "l": SIMHASH_L},
+    }
+    for name, fn, example_args, arg_specs, out_specs in build_entries():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": fname,
+            "args": arg_specs,
+            "outputs": out_specs,
+        }
+        print(f"  {name}: {len(text)} chars")
+    # Initial mini-BERT parameters (npz; keys carry a sort index so the
+    # Rust loader can restore ABI order).
+    if not only or "bert_init" in only:
+        import numpy as np
+
+        params = model.bert_init_params(seed=0)
+        names = [n for n, _ in model.bert_param_spec()]
+        arrs = {f"p{i:03d}_{n}": np.asarray(p) for i, (n, p) in enumerate(zip(names, params))}
+        np.savez(os.path.join(args.out_dir, "bert_init.npz"), **arrs)
+        manifest["bert"]["init_file"] = "bert_init.npz"
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(manifest['entries'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

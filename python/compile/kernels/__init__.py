@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (build-time only) and their pure-jnp oracles."""
+
+from compile.kernels.linreg_grad import linreg_grad
+from compile.kernels.logreg_grad import logreg_grad
+from compile.kernels.simhash import pack_codes, simhash_signs
+
+__all__ = ["linreg_grad", "logreg_grad", "simhash_signs", "pack_codes"]

@@ -1,0 +1,65 @@
+"""Pallas kernel: importance-weighted batched logistic gradient.
+
+    g = (1/B) * sum_b  w_b * (-y_b) * sigma(-y_b x_b.theta) * x_b
+
+Same batch-tiled accumulator structure as `linreg_grad` (see that module
+for the VMEM/MXU tiling rationale); the only difference is the VPU
+epilogue computing the sigmoid weighting.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _logreg_grad_kernel(x_ref, y_ref, w_ref, th_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xb = x_ref[...]  # (bb, d)
+    yb = y_ref[...]
+    m = yb * (xb @ th_ref[...])  # (bb,) margins
+    s = 1.0 / (1.0 + jnp.exp(m))  # sigma(-m)
+    c = -(w_ref[...] * yb * s)  # (bb,)
+    o_ref[...] += c @ xb
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def logreg_grad(x, y, theta, weights, *, block_b=256):
+    """Weighted batched logistic gradient via a Pallas kernel.
+
+    Args:
+      x: (B, d) float32, y: (B,) float32 labels in ±1, theta: (d,),
+      weights: (B,) float32.
+
+    Returns:
+      (d,) float32 gradient estimate (mean over the batch).
+    """
+    b, d = x.shape
+    bb = min(block_b, b)
+    pad = -b % bb
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        # pad labels with +1 to keep margins finite; zero weight kills them
+        y = jnp.pad(y, (0, pad), constant_values=1.0)
+        weights = jnp.pad(weights, (0, pad))
+    grid = ((b + pad) // bb,)
+    out = pl.pallas_call(
+        _logreg_grad_kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        interpret=True,
+    )(x, y, weights, theta)
+    return out / b

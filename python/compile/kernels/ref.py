@@ -1,0 +1,82 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(`python/tests/`) sweeps shapes/dtypes with hypothesis and asserts
+allclose between kernel and oracle. These references are also what the
+L2 model entry points are validated against.
+"""
+
+import jax.numpy as jnp
+
+
+def simhash_signs_ref(x, planes):
+    """Sign bits of signed random projections.
+
+    Args:
+      x: (B, d) float32 input vectors.
+      planes: (P, d) float32 hyperplanes (P = K*L).
+
+    Returns:
+      (B, P) int32 in {0, 1}: 1 where <plane, x> >= 0.
+    """
+    proj = x @ planes.T  # (B, P)
+    return (proj >= 0.0).astype(jnp.int32)
+
+
+def pack_codes_ref(signs, k, l):
+    """Pack per-bit signs into K-bit table codes.
+
+    Args:
+      signs: (B, K*L) int32 in {0, 1}, bit (t*K + b) is table t's bit b.
+      k: bits per table.
+      l: number of tables.
+
+    Returns:
+      (B, L) uint32 codes; bit b of table t contributes
+      `signs[:, t*K + b] << (K - 1 - b)` — matching the Rust
+      `DenseSrp::code` layout (first hyperplane = most significant bit).
+    """
+    b = signs.shape[0]
+    s = signs.reshape(b, l, k).astype(jnp.uint32)
+    shifts = jnp.arange(k - 1, -1, -1, dtype=jnp.uint32)
+    return jnp.sum(s << shifts[None, None, :], axis=-1)
+
+
+def linreg_grad_ref(x, y, theta, weights):
+    """Importance-weighted batched least-squares gradient.
+
+    Estimator of the full gradient from a weighted minibatch:
+      (1/B) * sum_b w_b * 2 (x_b . theta - y_b) x_b
+
+    Args:
+      x: (B, d), y: (B,), theta: (d,), weights: (B,) importance weights
+        (all-ones = plain SGD minibatch).
+
+    Returns:
+      (d,) gradient estimate.
+    """
+    r = x @ theta - y  # (B,)
+    return (2.0 * (weights * r)) @ x / x.shape[0]
+
+
+def linreg_loss_ref(x, y, theta):
+    """Mean squared residual over the batch: (1/B) sum (x.theta - y)^2."""
+    r = x @ theta - y
+    return jnp.mean(r * r)
+
+
+def logreg_grad_ref(x, y, theta, weights):
+    """Importance-weighted batched logistic gradient (labels in ±1).
+
+      grad_b = -y_b * sigma(-y_b x_b.theta) * x_b
+    """
+    m = y * (x @ theta)  # (B,)
+    s = 1.0 / (1.0 + jnp.exp(m))  # sigma(-m)
+    c = -(weights * y * s)
+    return c @ x / x.shape[0]
+
+
+def logreg_loss_ref(x, y, theta):
+    """Mean logistic loss ln(1 + e^{-y x.theta}), overflow-safe."""
+    m = y * (x @ theta)
+    return jnp.mean(jnp.logaddexp(0.0, -m))

@@ -1,0 +1,80 @@
+"""Pallas kernel: SimHash sign bits (L1 hot-spot).
+
+The projection `X @ W^T` followed by sign extraction is LGD's per-query
+hash computation; batched over queries it is also the table-build
+preprocessing pass. On TPU this is an MXU matmul with a VPU sign
+epilogue; the BlockSpec below expresses the HBM->VMEM tiling the paper's
+CPU implementation did with cache blocking.
+
+TPU tiling rationale (see DESIGN.md 'Hardware adaptation'):
+  * block_b x d x block_p f32 tiles; with the default block_b = 128,
+    block_p = 128 and d <= 1024 the working set is
+    128*1024*4 + 1024*128*4 + 128*128*4 B ~= 1.1 MiB << 16 MiB VMEM,
+    leaving room for double buffering.
+  * the (128, 128) output tile matches the MXU systolic array shape.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO so the Rust runtime can
+run the same artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _simhash_kernel(x_ref, w_ref, o_ref):
+    """One (block_b, block_p) tile of sign(X @ W^T)."""
+    proj = jnp.dot(x_ref[...], w_ref[...].T)
+    o_ref[...] = (proj >= 0.0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_p"))
+def simhash_signs(x, planes, *, block_b=128, block_p=128):
+    """Sign bits of signed random projections via a Pallas kernel.
+
+    Args:
+      x: (B, d) float32.
+      planes: (P, d) float32.
+      block_b, block_p: tile sizes (clamped to the actual shapes).
+
+    Returns:
+      (B, P) int32 in {0, 1}.
+    """
+    b, d = x.shape
+    p, d2 = planes.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    bb = min(block_b, b)
+    bp = min(block_p, p)
+    # Pad to tile multiples so the grid divides evenly.
+    b_pad = -b % bb
+    p_pad = -p % bp
+    xp = jnp.pad(x, ((0, b_pad), (0, 0))) if b_pad else x
+    wp = jnp.pad(planes, ((0, p_pad), (0, 0))) if p_pad else planes
+    grid = ((b + b_pad) // bb, (p + p_pad) // bp)
+    out = pl.pallas_call(
+        _simhash_kernel,
+        out_shape=jax.ShapeDtypeStruct((b + b_pad, p + p_pad), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bp, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bp), lambda i, j: (i, j)),
+        interpret=True,
+    )(xp, wp)
+    return out[:b, :p]
+
+
+def pack_codes(signs, k, l):
+    """Pack (B, K*L) sign bits into (B, L) uint32 K-bit codes.
+
+    Pure-jnp epilogue (bit twiddling is VPU work; no MXU benefit from a
+    dedicated kernel).
+    """
+    b = signs.shape[0]
+    s = signs.reshape(b, l, k).astype(jnp.uint32)
+    shifts = jnp.arange(k - 1, -1, -1, dtype=jnp.uint32)
+    return jnp.sum(s << shifts[None, None, :], axis=-1)

@@ -1,0 +1,207 @@
+"""L2: JAX compute graphs (build-time only; lowered to HLO by aot.py).
+
+Entry points exported to the Rust runtime:
+
+  * linreg_grad / linreg_loss       — least squares (calls L1 kernel)
+  * logreg_grad / logreg_loss       — logistic regression (calls L1 kernel)
+  * simhash_codes                   — batched SimHash codes (L1 kernel)
+  * bert_grad / bert_logits / bert_pooled — the mini-BERT stand-in for
+    the paper's §3.2 fine-tuning experiment (Appendix E): a small
+    transformer encoder whose pooled [CLS] representation feeds the LSH
+    tables while Rust coordinates sampling and optimisation.
+
+All functions are pure and shape-static; the Rust side owns state.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import linreg_grad as _linreg_grad_kernel
+from compile.kernels import logreg_grad as _logreg_grad_kernel
+from compile.kernels import pack_codes, simhash_signs
+
+# ---------------------------------------------------------------------------
+# Linear models (delegate to the L1 Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def linreg_grad(x, y, theta, weights):
+    """Weighted minibatch least-squares gradient. Returns a 1-tuple."""
+    return (_linreg_grad_kernel(x, y, theta, weights),)
+
+
+def linreg_loss(x, y, theta):
+    """Mean squared residual; weights not applied (plain loss eval)."""
+    r = x @ theta - y
+    return (jnp.mean(r * r),)
+
+
+def logreg_grad(x, y, theta, weights):
+    """Weighted minibatch logistic gradient. Returns a 1-tuple."""
+    return (_logreg_grad_kernel(x, y, theta, weights),)
+
+
+def logreg_loss(x, y, theta):
+    """Mean logistic loss (labels ±1)."""
+    m = y * (x @ theta)
+    return (jnp.mean(jnp.logaddexp(0.0, -m)),)
+
+
+def simhash_codes(x, planes, k, l):
+    """(B, L) uint32 SimHash table codes of a batch (L1 kernel + packing)."""
+    signs = simhash_signs(x, planes)
+    return (pack_codes(signs, k, l),)
+
+
+# ---------------------------------------------------------------------------
+# Mini-BERT: transformer encoder for the §3.2 stand-in task
+# ---------------------------------------------------------------------------
+
+# Architecture constants (small enough to fine-tune on CPU in seconds,
+# structured exactly like BERT: embeddings -> N encoder layers -> pooled
+# [CLS] -> classifier).
+VOCAB = 1024
+MAX_T = 32
+D_MODEL = 64
+N_HEADS = 4
+D_FF = 256
+N_LAYERS = 2
+N_CLASSES = 2
+
+# Parameter layout: a flat, ordered list of (name, shape). The Rust
+# runtime threads parameters positionally, so ORDER IS ABI.
+def bert_param_spec():
+    """Ordered (name, shape) list of all mini-BERT parameters."""
+    spec = [
+        ("tok_emb", (VOCAB, D_MODEL)),
+        ("pos_emb", (MAX_T, D_MODEL)),
+    ]
+    for i in range(N_LAYERS):
+        spec += [
+            (f"l{i}.wq", (D_MODEL, D_MODEL)),
+            (f"l{i}.wk", (D_MODEL, D_MODEL)),
+            (f"l{i}.wv", (D_MODEL, D_MODEL)),
+            (f"l{i}.wo", (D_MODEL, D_MODEL)),
+            (f"l{i}.ln1_g", (D_MODEL,)),
+            (f"l{i}.ln1_b", (D_MODEL,)),
+            (f"l{i}.ff1", (D_MODEL, D_FF)),
+            (f"l{i}.ff1_b", (D_FF,)),
+            (f"l{i}.ff2", (D_FF, D_MODEL)),
+            (f"l{i}.ff2_b", (D_MODEL,)),
+            (f"l{i}.ln2_g", (D_MODEL,)),
+            (f"l{i}.ln2_b", (D_MODEL,)),
+        ]
+    spec += [
+        ("pool_w", (D_MODEL, D_MODEL)),
+        ("pool_b", (D_MODEL,)),
+        ("cls_w", (D_MODEL, N_CLASSES)),
+        ("cls_b", (N_CLASSES,)),
+    ]
+    return spec
+
+
+def bert_init_params(seed=0):
+    """Initialise parameters (list of arrays in spec order)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in bert_param_spec():
+        key, sub = jax.random.split(key)
+        if name.endswith(("_b", "_g")):
+            init = jnp.ones(shape) if name.endswith("_g") else jnp.zeros(shape)
+        else:
+            fan_in = shape[0]
+            init = jax.random.normal(sub, shape) * (1.0 / jnp.sqrt(fan_in))
+        params.append(init.astype(jnp.float32))
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(x, wq, wk, wv, wo):
+    b, t, d = x.shape
+    hd = d // N_HEADS
+
+    def split(w_x):
+        return w_x.reshape(b, t, N_HEADS, hd).transpose(0, 2, 1, 3)
+
+    q = split(x @ wq)
+    k = split(x @ wk)
+    v = split(x @ wv)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(hd)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", attn, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ wo
+
+
+def _encoder(params, ids):
+    """ids (B, T) int32 -> hidden states (B, T, D_MODEL)."""
+    names = [n for n, _ in bert_param_spec()]
+    p = dict(zip(names, params))
+    b, t = ids.shape
+    h = p["tok_emb"][ids] + p["pos_emb"][None, :t, :]
+    for i in range(N_LAYERS):
+        a = _attention(h, p[f"l{i}.wq"], p[f"l{i}.wk"], p[f"l{i}.wv"], p[f"l{i}.wo"])
+        h = _layer_norm(h + a, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"])
+        ff = jax.nn.gelu(h @ p[f"l{i}.ff1"] + p[f"l{i}.ff1_b"]) @ p[f"l{i}.ff2"] + p[f"l{i}.ff2_b"]
+        h = _layer_norm(h + ff, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+    return h
+
+
+def _pool(params, h):
+    """BERT-style pooled representation: tanh(W h_[CLS] + b)."""
+    names = [n for n, _ in bert_param_spec()]
+    p = dict(zip(names, params))
+    return jnp.tanh(h[:, 0, :] @ p["pool_w"] + p["pool_b"])
+
+
+def _logits_from_params(params, ids):
+    h = _encoder(params, ids)
+    pooled = _pool(params, h)
+    names = [n for n, _ in bert_param_spec()]
+    p = dict(zip(names, params))
+    return pooled @ p["cls_w"] + p["cls_b"]
+
+
+def _weighted_ce(params, ids, labels, weights):
+    logits = _logits_from_params(params, ids)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(weights * nll)
+
+
+def bert_grad(*args):
+    """Loss and gradients of the weighted fine-tuning objective.
+
+    Args (positional, ABI order): *params, ids (B,T) int32,
+      labels (B,) int32, weights (B,) float32.
+
+    Returns: (loss, *grads) — grads in parameter order. The optimiser
+    (Adam, per §3.2) runs on the Rust side.
+    """
+    n = len(bert_param_spec())
+    params, (ids, labels, weights) = list(args[:n]), args[n:]
+    loss, grads = jax.value_and_grad(_weighted_ce)(params, ids, labels, weights)
+    return (loss, *grads)
+
+
+def bert_logits(*args):
+    """Classifier logits: *params, ids -> (B, N_CLASSES)."""
+    n = len(bert_param_spec())
+    params, (ids,) = list(args[:n]), args[n:]
+    return (_logits_from_params(params, ids),)
+
+
+def bert_pooled(*args):
+    """Pooled [CLS] representations: *params, ids -> (B, D_MODEL).
+
+    These are the vectors Appendix E hashes into the LSH tables (and
+    periodically refreshes as fine-tuning drifts them).
+    """
+    n = len(bert_param_spec())
+    params, (ids,) = list(args[:n]), args[n:]
+    return (_pool(params, _encoder(params, ids)),)

@@ -1,0 +1,59 @@
+"""AOT pipeline checks: entry construction, HLO text generation and
+manifest schema — without touching the artifacts/ directory."""
+
+import json
+
+import jax
+
+from compile import aot, model
+
+
+def test_build_entries_cover_paper_dims():
+    names = [e[0] for e in aot.build_entries()]
+    for d in (90, 385, 529):
+        assert f"linreg_grad_b1_d{d}" in names
+        assert f"linreg_grad_b32_d{d}" in names
+        assert f"linreg_loss_b1024_d{d}" in names
+    assert "bert_grad_b32" in names
+    assert "bert_pooled_b64" in names
+    assert any(n.startswith("simhash_") for n in names)
+
+
+def test_entry_specs_match_example_args():
+    for name, fn, example_args, arg_specs, out_specs in aot.build_entries():
+        assert len(example_args) == len(arg_specs), name
+        for ex, spec in zip(example_args, arg_specs):
+            assert list(ex.shape) == spec["shape"], name
+        assert out_specs, name
+
+
+def test_hlo_text_generation_smoke():
+    """Lower one small entry end-to-end and sanity-check the HLO text."""
+    entries = {e[0]: e for e in aot.build_entries()}
+    name, fn, example_args, _, _ = entries["linreg_grad_b1_d90"]
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # tuple return (return_tuple=True) so the rust side can to_tuple1()
+    assert "f32[90]" in text
+
+
+def test_manifest_schema(tmp_path):
+    """Run the writer restricted to one tiny entry; validate the manifest."""
+    import sys
+    from unittest import mock
+
+    argv = ["aot", "--out-dir", str(tmp_path), "--only", "linreg_grad_b1_d90"]
+    with mock.patch.object(sys, "argv", argv):
+        aot.main()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text"
+    ent = manifest["entries"]["linreg_grad_b1_d90"]
+    assert ent["file"] == "linreg_grad_b1_d90.hlo.txt"
+    assert ent["args"][0] == {"shape": [1, 90], "dtype": "f32"}
+    assert ent["outputs"] == [{"shape": [90], "dtype": "f32"}]
+    assert (tmp_path / ent["file"]).exists()
+    # bert ABI block
+    assert manifest["bert"]["param_names"] == [n for n, _ in model.bert_param_spec()]
+    assert manifest["bert"]["d_model"] == model.D_MODEL

@@ -1,0 +1,131 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; every kernel must match its oracle
+to float32 tolerance across batch sizes that do and do not divide the
+tile size (exercising the padding paths).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import linreg_grad, logreg_grad, pack_codes, simhash_signs
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+shapes = st.tuples(
+    st.integers(min_value=1, max_value=300),  # batch
+    st.integers(min_value=1, max_value=64),  # dim
+)
+
+
+@given(shapes, st.integers(min_value=0, max_value=2**31 - 1))
+def test_linreg_grad_matches_ref(shape, seed):
+    b, d = shape
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, d)
+    y = _rand(rng, b)
+    th = _rand(rng, d)
+    w = jnp.asarray(rng.uniform(0.0, 3.0, size=(b,)), jnp.float32)
+    got = linreg_grad(x, y, th, w, block_b=64)
+    want = ref.linreg_grad_ref(x, y, th, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+@given(shapes, st.integers(min_value=0, max_value=2**31 - 1))
+def test_logreg_grad_matches_ref(shape, seed):
+    b, d = shape
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, d)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=(b,)), jnp.float32)
+    th = _rand(rng, d)
+    w = jnp.asarray(rng.uniform(0.0, 3.0, size=(b,)), jnp.float32)
+    got = logreg_grad(x, y, th, w, block_b=64)
+    want = ref.logreg_grad_ref(x, y, th, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+@given(
+    st.tuples(
+        st.integers(min_value=1, max_value=200),
+        st.integers(min_value=1, max_value=48),
+        st.integers(min_value=1, max_value=80),
+    ),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_simhash_signs_match_ref(shape, seed):
+    b, d, p = shape
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, d)
+    planes = _rand(rng, p, d)
+    got = simhash_signs(x, planes, block_b=32, block_p=32)
+    want = ref.simhash_signs_ref(x, planes)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    st.integers(min_value=1, max_value=64),
+    st.integers(min_value=1, max_value=8),
+    st.integers(min_value=1, max_value=12),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pack_codes_matches_ref(b, k, l, seed):
+    rng = np.random.default_rng(seed)
+    signs = jnp.asarray(rng.integers(0, 2, size=(b, k * l)), jnp.int32)
+    got = pack_codes(signs, k, l)
+    want = ref.pack_codes_ref(signs, k, l)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert np.asarray(got).max() < 2**k
+
+
+def test_zero_weights_zero_gradient():
+    rng = np.random.default_rng(7)
+    x = _rand(rng, 16, 8)
+    y = _rand(rng, 16)
+    th = _rand(rng, 8)
+    w = jnp.zeros((16,), jnp.float32)
+    g = np.asarray(linreg_grad(x, y, th, w))
+    assert np.allclose(g, 0.0)
+
+
+def test_importance_weighting_linearity():
+    """g(alpha * w) == alpha * g(w) — the property LGD's 1/(pN) relies on."""
+    rng = np.random.default_rng(11)
+    x = _rand(rng, 32, 8)
+    y = _rand(rng, 32)
+    th = _rand(rng, 8)
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=(32,)), jnp.float32)
+    g1 = np.asarray(linreg_grad(x, y, th, w))
+    g3 = np.asarray(linreg_grad(x, y, th, 3.0 * w))
+    np.testing.assert_allclose(3.0 * g1, g3, rtol=1e-4)
+
+
+def test_tile_boundary_exact():
+    """Batch exactly equal to, one less, one more than the tile."""
+    rng = np.random.default_rng(13)
+    for b in (63, 64, 65, 128):
+        x = _rand(rng, b, 10)
+        y = _rand(rng, b)
+        th = _rand(rng, 10)
+        w = jnp.ones((b,), jnp.float32)
+        got = np.asarray(linreg_grad(x, y, th, w, block_b=64))
+        want = np.asarray(ref.linreg_grad_ref(x, y, th, w))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_simhash_antipodal_complement():
+    """sign bits of -x are the complement of x's (measure-zero ties aside)."""
+    rng = np.random.default_rng(17)
+    x = _rand(rng, 8, 16)
+    planes = _rand(rng, 24, 16)
+    a = np.asarray(simhash_signs(x, planes))
+    b = np.asarray(simhash_signs(-x, planes))
+    assert np.array_equal(a ^ 1, b)

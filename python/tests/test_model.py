@@ -1,0 +1,119 @@
+"""L2 model-level checks: entry-point shapes, numerics and the mini-BERT
+training signal (gradients are finite and actually descend the loss)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_linreg_entries_shapes():
+    x = jnp.ones((32, 90))
+    y = jnp.ones((32,))
+    th = jnp.zeros((90,))
+    w = jnp.ones((32,))
+    (g,) = model.linreg_grad(x, y, th, w)
+    assert g.shape == (90,)
+    (loss,) = model.linreg_loss(x, y, th)
+    assert loss.shape == ()
+    np.testing.assert_allclose(float(loss), 1.0, rtol=1e-6)  # residual = -1
+
+
+def test_logreg_loss_at_zero_is_ln2():
+    x = jnp.ones((8, 4))
+    y = jnp.asarray([1.0, -1.0] * 4)
+    th = jnp.zeros((4,))
+    (loss,) = model.logreg_loss(x, y, th)
+    np.testing.assert_allclose(float(loss), np.log(2.0), rtol=1e-6)
+
+
+def test_simhash_codes_entry():
+    rng = np.random.default_rng(3)
+    k, l = 3, 5
+    x = jnp.asarray(rng.normal(size=(16, 12)), jnp.float32)
+    planes = jnp.asarray(rng.normal(size=(k * l, 12)), jnp.float32)
+    (codes,) = model.simhash_codes(x, planes, k, l)
+    assert codes.shape == (16, l)
+    want = ref.pack_codes_ref(ref.simhash_signs_ref(x, planes), k, l)
+    assert np.array_equal(np.asarray(codes), np.asarray(want))
+
+
+def _bert_batch(rng, b=32):
+    ids = jnp.asarray(rng.integers(0, model.VOCAB, size=(b, model.MAX_T)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, model.N_CLASSES, size=(b,)), jnp.int32)
+    weights = jnp.ones((b,), jnp.float32)
+    return ids, labels, weights
+
+
+def test_bert_param_spec_consistent():
+    spec = model.bert_param_spec()
+    params = model.bert_init_params(0)
+    assert len(params) == len(spec)
+    for (name, shape), arr in zip(spec, params):
+        assert arr.shape == tuple(shape), name
+        assert arr.dtype == jnp.float32
+
+
+def test_bert_grad_shapes_and_finite():
+    params = model.bert_init_params(1)
+    rng = np.random.default_rng(5)
+    ids, labels, weights = _bert_batch(rng)
+    out = model.bert_grad(*params, ids, labels, weights)
+    loss, grads = out[0], out[1:]
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    assert len(grads) == len(params)
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+        assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_bert_sgd_descends():
+    """A few SGD steps on one batch must reduce the loss (overfit check)."""
+    params = model.bert_init_params(2)
+    rng = np.random.default_rng(7)
+    ids, labels, weights = _bert_batch(rng, b=16)
+
+    @jax.jit
+    def step(params):
+        out = model.bert_grad(*params, ids, labels, weights)
+        return out[0], out[1:]
+
+    loss0, grads = step(params)
+    lr = 0.02
+    for _ in range(20):
+        params = [p - lr * g for p, g in zip(params, grads)]
+        loss, grads = step(params)
+    assert float(loss) < float(loss0) * 0.8, (float(loss0), float(loss))
+
+
+def test_bert_pooled_in_tanh_range():
+    params = model.bert_init_params(3)
+    rng = np.random.default_rng(9)
+    ids, _, _ = _bert_batch(rng, b=8)
+    (pooled,) = model.bert_pooled(*params, ids)
+    assert pooled.shape == (8, model.D_MODEL)
+    a = np.asarray(pooled)
+    assert np.all(a <= 1.0) and np.all(a >= -1.0)
+
+
+def test_bert_logits_deterministic():
+    params = model.bert_init_params(4)
+    rng = np.random.default_rng(11)
+    ids, _, _ = _bert_batch(rng, b=4)
+    (l1,) = model.bert_logits(*params, ids)
+    (l2,) = model.bert_logits(*params, ids)
+    assert np.array_equal(np.asarray(l1), np.asarray(l2))
+    assert l1.shape == (4, model.N_CLASSES)
+
+
+def test_weighted_ce_weights_scale_loss():
+    params = model.bert_init_params(5)
+    rng = np.random.default_rng(13)
+    ids, labels, _ = _bert_batch(rng, b=8)
+    w1 = jnp.ones((8,), jnp.float32)
+    out1 = model.bert_grad(*params, ids, labels, w1)
+    out2 = model.bert_grad(*params, ids, labels, 2.0 * w1)
+    np.testing.assert_allclose(2.0 * float(out1[0]), float(out2[0]), rtol=1e-5)

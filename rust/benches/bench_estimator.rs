@@ -1,0 +1,62 @@
+//! Full-iteration cost (sample + gradient estimate + update) of LGD vs SGD
+//! at batch 1 and 32, plus the variance measurement throughput — the
+//! end-to-end per-iteration numbers behind the wall-clock curves.
+
+use lgd::benchkit::{bb, Bench};
+use lgd::config::spec::{EstimatorKind, HasherKind, RunConfig};
+use lgd::coordinator::trainer::build_estimator;
+use lgd::core::matrix::axpy;
+use lgd::data::preprocess::{preprocess, PreprocessOptions};
+use lgd::data::SynthSpec;
+use lgd::estimator::WeightedDraw;
+use lgd::model::{LinReg, Model};
+use lgd::optim::{Optimizer, Sgd};
+
+fn main() {
+    let mut bench = Bench::new("estimator iteration");
+    for &(n, d) in &[(8_000usize, 90usize), (2_000, 529)] {
+        let ds = SynthSpec::power_law(&format!("d{d}"), n, d, 11).generate().unwrap();
+        let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
+        let model = LinReg;
+
+        for est_kind in [EstimatorKind::Sgd, EstimatorKind::Lgd] {
+            let mut cfg = RunConfig::default();
+            cfg.lsh.hasher = HasherKind::Sparse;
+            cfg.train.estimator = est_kind;
+            let mut est = build_estimator(&cfg, &pre).unwrap();
+            let name = match est_kind {
+                EstimatorKind::Sgd => "sgd",
+                EstimatorKind::Lgd => "lgd",
+            };
+
+            // batch = 1 (the paper's plain setting)
+            let mut theta = vec![0.0f32; d];
+            let mut g = vec![0.0f32; d];
+            let mut opt = Sgd::constant(1e-3);
+            bench.bench(&format!("{name}_iter_b1_d{d}"), || {
+                let dr = est.draw(&theta);
+                let (x, y) = pre.data.example(dr.index);
+                model.grad(x, y, &theta, &mut g);
+                lgd::core::matrix::scale(dr.weight as f32, &mut g);
+                opt.step(&mut theta, &g);
+                bb(theta[0]);
+            });
+
+            // batch = 32 (Appendix B.2)
+            let mut draws: Vec<WeightedDraw> = Vec::new();
+            let mut acc = vec![0.0f32; d];
+            bench.bench(&format!("{name}_iter_b32_d{d}"), || {
+                est.draw_batch(&theta, 32, &mut draws);
+                acc.iter_mut().for_each(|v| *v = 0.0);
+                for dr in &draws {
+                    let (x, y) = pre.data.example(dr.index);
+                    model.grad(x, y, &theta, &mut g);
+                    axpy(dr.weight as f32 / 32.0, &g, &mut acc);
+                }
+                opt.step(&mut theta, &acc);
+                bb(theta[0]);
+            });
+        }
+    }
+    bench.report();
+}

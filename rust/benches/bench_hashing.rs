@@ -1,0 +1,49 @@
+//! Hash-function cost: dense vs sparse (paper density 1/30) vs implicit
+//! quadratic SRP, per K-bit code and for all-L preprocessing — the
+//! "fast hash computation is critical" claim of §2.2.
+
+use lgd::benchkit::{bb, Bench};
+use lgd::core::rng::{Pcg64, Rng};
+use lgd::lsh::srp::{DenseSrp, SparseSrp, SrpHasher};
+use lgd::lsh::QuadraticSrp;
+
+fn unit(d: usize, rng: &mut Pcg64) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+    lgd::core::matrix::normalize(&mut v);
+    v
+}
+
+fn main() {
+    let mut b = Bench::new("hashing");
+    let (k, l) = (5usize, 100usize);
+    let mut rng = Pcg64::seeded(1);
+    for &d in &[91usize, 386, 530] {
+        let x = unit(d, &mut rng);
+        let dense = DenseSrp::new(d, k, l, 2);
+        let sparse = SparseSrp::paper_default(d, k, l, 3);
+        let quad = QuadraticSrp::new(d.min(64), k, l, 1.0 / 30.0, 4); // quadratic on reduced dim
+        let xq = unit(d.min(64), &mut rng);
+
+        b.bench(&format!("dense_code_d{d}"), || {
+            bb(dense.code(0, &x));
+        });
+        b.bench(&format!("sparse_code_d{d}"), || {
+            bb(sparse.code(0, &x));
+        });
+        b.bench(&format!("quadratic_code_d{}", d.min(64)), || {
+            bb(quad.code(0, &xq));
+        });
+        let mut codes = Vec::new();
+        b.bench(&format!("sparse_all_L_codes_d{d}"), || {
+            sparse.codes_all(&x, &mut codes);
+            bb(codes.len());
+        });
+        println!(
+            "  cost model d={d}: dense {:.0} mults/code, sparse {:.1}, ratio {:.1}x",
+            dense.mults_per_code(),
+            sparse.mults_per_code(),
+            dense.mults_per_code() / sparse.mults_per_code()
+        );
+    }
+    b.report();
+}

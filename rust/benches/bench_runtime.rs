@@ -1,0 +1,78 @@
+//! PJRT execution latency of the AOT artifacts: per-call cost of the
+//! linreg gradient at batch 1/32/256, loss eval, simhash codes, and the
+//! mini-BERT step — quantifying the L3↔runtime boundary. Skips cleanly if
+//! artifacts are missing (`make artifacts`).
+
+use lgd::benchkit::{bb, Bench};
+use lgd::runtime::executor::{lit_f32, lit_i32};
+use lgd::runtime::{BertSession, Runtime};
+
+fn main() {
+    let dir = lgd::runtime::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("bench_runtime: no artifacts at {} — run `make artifacts` first", dir.display());
+        return;
+    }
+    let mut rt = Runtime::new(&dir).unwrap();
+    let mut b = Bench::new("pjrt runtime");
+
+    let d = 90usize;
+    let theta: Vec<f32> = (0..d).map(|i| i as f32 / d as f32).collect();
+    for &batch in &[1usize, 32, 256] {
+        let entry = format!("linreg_grad_b{batch}_d{d}");
+        let x = vec![0.1f32; batch * d];
+        let y = vec![0.2f32; batch];
+        let w = vec![1.0f32; batch];
+        let args = [
+            lit_f32(&x, &[batch, d]).unwrap(),
+            lit_f32(&y, &[batch]).unwrap(),
+            lit_f32(&theta, &[d]).unwrap(),
+            lit_f32(&w, &[batch]).unwrap(),
+        ];
+        rt.load(&entry).unwrap();
+        b.bench(&format!("linreg_grad_b{batch}_d{d}"), || {
+            bb(rt.execute(&entry, &args).unwrap());
+        });
+    }
+
+    // loss eval at the chunk size the trainer uses
+    let lb = 1024usize;
+    let entry = format!("linreg_loss_b{lb}_d{d}");
+    let args = [
+        lit_f32(&vec![0.1f32; lb * d], &[lb, d]).unwrap(),
+        lit_f32(&vec![0.2f32; lb], &[lb]).unwrap(),
+        lit_f32(&theta, &[d]).unwrap(),
+    ];
+    rt.load(&entry).unwrap();
+    b.bench("linreg_loss_b1024_d90", || {
+        bb(rt.execute(&entry, &args).unwrap());
+    });
+
+    // simhash codes kernel
+    let entry = "simhash_b64_d91_k5_l100";
+    let args = [
+        lit_f32(&vec![0.1f32; 64 * 91], &[64, 91]).unwrap(),
+        lit_f32(&vec![0.05f32; 500 * 91], &[500, 91]).unwrap(),
+    ];
+    rt.load(entry).unwrap();
+    b.bench("simhash_codes_b64", || {
+        bb(rt.execute(entry, &args).unwrap());
+    });
+
+    // mini-BERT Adam step (grad through PJRT + update in Rust)
+    let mut sess = BertSession::new(&mut rt, 1e-4).unwrap();
+    let t = sess.abi().max_t;
+    let bsz = sess.grad_batch();
+    let ids: Vec<i32> = (0..bsz * t).map(|i| (i % 512) as i32).collect();
+    let labels: Vec<i32> = (0..bsz).map(|i| (i % 2) as i32).collect();
+    let weights = vec![1.0f32; bsz];
+    b.bench("bert_step_b32 (grad+Adam)", || {
+        bb(sess.step(&mut rt, &ids, &labels, &weights).unwrap());
+    });
+    let eids: Vec<i32> = (0..sess.eval_batch() * t).map(|i| (i % 512) as i32).collect();
+    b.bench("bert_pooled_b64", || {
+        bb(sess.pooled(&mut rt, &eids).unwrap());
+    });
+    let _ = lit_i32(&[0], &[1]); // keep import used in all cfgs
+    b.report();
+}

@@ -1,0 +1,73 @@
+//! §2.2 sampling-cost table: per-draw cost of uniform (SGD) vs LSH (LGD)
+//! sampling, the gradient-update baseline, table build, and the §2.2.1
+//! near-neighbor query comparison. Regenerates the paper's running-time
+//! accounting on this machine.
+
+use lgd::benchkit::{bb, Bench};
+use lgd::config::spec::{EstimatorKind, HasherKind, RunConfig};
+use lgd::coordinator::trainer::build_estimator;
+use lgd::core::matrix::axpy;
+use lgd::data::preprocess::{preprocess, PreprocessOptions};
+use lgd::data::SynthSpec;
+use lgd::lsh::sampler::LshSampler;
+use lgd::lsh::srp::SparseSrp;
+use lgd::lsh::tables::LshTables;
+use lgd::model::{LinReg, Model};
+
+fn main() {
+    let mut b = Bench::new("sampling (paper §2.2 cost model)");
+    // Keep N modest so the bench is quick but buckets are realistic.
+    for &(n, d) in &[(8_000usize, 90usize), (4_000, 385), (2_000, 529)] {
+        let ds = SynthSpec::power_law(&format!("d{d}"), n, d, 7).generate().unwrap();
+        let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
+        let theta = vec![0.01f32; d];
+        let model = LinReg;
+
+        let mut cfg = RunConfig::default();
+        cfg.lsh.hasher = HasherKind::Sparse; // paper: sparsity 1/30, K=5, L=100
+        cfg.train.estimator = EstimatorKind::Sgd;
+        let mut sgd = build_estimator(&cfg, &pre).unwrap();
+        cfg.train.estimator = EstimatorKind::Lgd;
+        let mut lgd = build_estimator(&cfg, &pre).unwrap();
+
+        b.bench(&format!("sgd_draw_d{d}"), || {
+            bb(sgd.draw(&theta));
+        });
+        b.bench(&format!("lgd_draw_d{d}"), || {
+            bb(lgd.draw(&theta));
+        });
+        // The d-multiplication baseline: one gradient + axpy update.
+        let mut g = vec![0.0f32; d];
+        let mut out = vec![0.0f32; d];
+        let mut i = 0usize;
+        b.bench(&format!("grad_update_d{d}"), || {
+            let (x, y) = pre.data.example(i % pre.data.len());
+            model.grad(x, y, &theta, &mut g);
+            axpy(-0.01, &g, &mut out);
+            i += 1;
+            bb(out[0]);
+        });
+
+        // Table build (one-time preprocessing).
+        b.bench(&format!("table_build_n{n}_d{d}_L25"), || {
+            let h = SparseSrp::paper_default(pre.hashed.cols(), 5, 25, 3);
+            let t =
+                LshTables::build(h, (0..pre.data.len()).map(|r| pre.hashed.row(r))).unwrap();
+            bb(t.len());
+        });
+
+        // §2.2.1: full near-neighbor candidate query.
+        let h = SparseSrp::paper_default(pre.hashed.cols(), 5, 100, 3);
+        let tables =
+            LshTables::build(h, (0..pre.data.len()).map(|r| pre.hashed.row(r))).unwrap();
+        let sampler = LshSampler::new(&tables, &pre.hashed);
+        let mut q = Vec::new();
+        pre.query(&theta, &mut q);
+        b.bench(&format!("nn_query_d{d}"), || {
+            bb(sampler.nn_query(&q));
+        });
+    }
+    b.report();
+    println!("\npaper claim: LGD iteration ~= 1.5x SGD iteration; check");
+    println!("(lgd_draw + grad_update) / (sgd_draw + grad_update) per d above.");
+}

@@ -1,0 +1,143 @@
+//! Tiny benchmarking harness (criterion is unavailable offline).
+//!
+//! Usage from a `harness = false` bench target:
+//! ```ignore
+//! let mut b = Bench::new("sampling");
+//! b.bench("lgd_draw_d90", || { ... });
+//! b.report();
+//! ```
+//! Each benchmark is auto-calibrated (target ~0.4 s per measurement), runs
+//! `reps` measured batches and reports median/p95 ns per iteration.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+/// One benchmark result row.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    /// Benchmark name.
+    pub name: String,
+    /// Median ns/iteration.
+    pub median_ns: f64,
+    /// p95 ns/iteration.
+    pub p95_ns: f64,
+    /// Iterations per measured batch.
+    pub iters: u64,
+}
+
+/// A named group of benchmarks with a common report.
+pub struct Bench {
+    group: String,
+    rows: Vec<BenchRow>,
+    /// Measured batches per benchmark.
+    pub reps: usize,
+    /// Target seconds per measured batch during calibration.
+    pub target_secs: f64,
+}
+
+/// Re-export of `std::hint::black_box` for benchmark bodies.
+pub fn bb<T>(x: T) -> T {
+    black_box(x)
+}
+
+impl Bench {
+    /// New group.
+    pub fn new(group: &str) -> Self {
+        let mut b = Bench { group: group.to_string(), rows: Vec::new(), reps: 15, target_secs: 0.2 };
+        // Quick mode for CI: LGD_BENCH_FAST=1 shrinks the measurement.
+        if std::env::var("LGD_BENCH_FAST").is_ok() {
+            b.reps = 5;
+            b.target_secs = 0.02;
+        }
+        b
+    }
+
+    /// Run one benchmark; `f` is a single iteration.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchRow {
+        // Calibrate: how many iterations fit in target_secs?
+        let mut iters = 1u64;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            if dt >= self.target_secs / 4.0 || iters >= 1 << 30 {
+                let scale = (self.target_secs / dt.max(1e-9)).clamp(1.0, 1e6);
+                iters = ((iters as f64) * scale).ceil() as u64;
+                break;
+            }
+            iters *= 8;
+        }
+        // Measure.
+        let mut samples = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters as f64 * 1e9);
+        }
+        let median = crate::core::stats::median(&samples);
+        let p95 = crate::core::stats::quantile(&samples, 0.95);
+        self.rows.push(BenchRow { name: name.to_string(), median_ns: median, p95_ns: p95, iters });
+        self.rows.last().unwrap()
+    }
+
+    /// Record an externally measured value (e.g. whole-run seconds).
+    pub fn record(&mut self, name: &str, ns_per_iter: f64) {
+        self.rows
+            .push(BenchRow { name: name.to_string(), median_ns: ns_per_iter, p95_ns: ns_per_iter, iters: 1 });
+    }
+
+    /// Results so far.
+    pub fn rows(&self) -> &[BenchRow] {
+        &self.rows
+    }
+
+    /// Print the group report (aligned table).
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!("{:<44} {:>14} {:>14} {:>10}", "name", "median ns/it", "p95 ns/it", "iters");
+        for r in &self.rows {
+            println!(
+                "{:<44} {:>14.1} {:>14.1} {:>10}",
+                r.name, r.median_ns, r.p95_ns, r.iters
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("LGD_BENCH_FAST", "1");
+        let mut b = Bench::new("test");
+        let mut acc = 0u64;
+        let row = b.bench("add", || {
+            acc = bb(acc.wrapping_add(1));
+        });
+        assert!(row.median_ns > 0.0);
+        assert!(row.iters >= 1);
+        let sleepy = b.bench("sleep", || std::thread::sleep(std::time::Duration::from_micros(50)));
+        assert!(sleepy.median_ns > 10_000.0, "sleep measured {}", sleepy.median_ns);
+        assert_eq!(b.rows().len(), 2);
+    }
+
+    #[test]
+    fn relative_ordering_sane() {
+        std::env::set_var("LGD_BENCH_FAST", "1");
+        let mut b = Bench::new("order");
+        let data: Vec<f64> = (0..4096).map(|i| i as f64).collect();
+        let small = b.bench("sum16", || {
+            bb(data[..16].iter().sum::<f64>());
+        }).median_ns;
+        let large = b.bench("sum4096", || {
+            bb(data.iter().sum::<f64>());
+        }).median_ns;
+        assert!(large > small, "sum4096 {large} should exceed sum16 {small}");
+    }
+}

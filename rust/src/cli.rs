@@ -1,0 +1,148 @@
+//! Hand-rolled CLI argument parser (clap unavailable offline).
+//!
+//! Grammar: `lgd <subcommand> [--flag value]... [--switch]...`.
+//! Unknown flags are errors; every subcommand documents its flags in
+//! `main.rs`'s usage text.
+
+use std::collections::BTreeMap;
+
+use crate::core::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (subcommand).
+    pub command: String,
+    /// `--key value` pairs.
+    flags: BTreeMap<String, String>,
+    /// Bare `--switch` flags.
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (without the program name).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut i = 0usize;
+        if i < argv.len() && !argv[i].starts_with("--") {
+            a.command = argv[i].clone();
+            i += 1;
+        }
+        while i < argv.len() {
+            let tok = &argv[i];
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("expected --flag, got '{tok}'")))?;
+            if key.is_empty() {
+                return Err(Error::Config("empty flag".into()));
+            }
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                a.flags.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                a.switches.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(a)
+    }
+
+    /// String flag with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string flag.
+    pub fn require(&self, key: &str) -> Result<String> {
+        self.flags
+            .get(key)
+            .cloned()
+            .ok_or_else(|| Error::Config(format!("missing required --{key}")))
+    }
+
+    /// Float flag with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: bad float '{v}'"))),
+        }
+    }
+
+    /// Integer flag with default.
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: bad integer '{v}'"))),
+        }
+    }
+
+    /// Is a bare switch present?
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    /// Validate that only the listed flags/switches were used.
+    pub fn allow(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(Error::Config(format!("unknown flag --{k}")));
+            }
+        }
+        for k in &self.switches {
+            if !allowed.contains(&k.as_str()) {
+                return Err(Error::Config(format!("unknown switch --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(&v(&["train", "--config", "x.toml", "--quick", "--seed", "7"])).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.str_or("config", ""), "x.toml");
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+        assert!(a.has("quick"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = Args::parse(&v(&["x", "--n", "abc"])).unwrap();
+        assert!(a.u64_or("n", 0).is_err());
+        assert!(a.f64_or("n", 0.0).is_err());
+        assert!(a.require("missing").is_err());
+    }
+
+    #[test]
+    fn allow_rejects_unknown() {
+        let a = Args::parse(&v(&["x", "--good", "1", "--bad", "2"])).unwrap();
+        assert!(a.allow(&["good"]).is_err());
+        assert!(a.allow(&["good", "bad"]).is_ok());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = Args::parse(&v(&["--help"])).unwrap();
+        assert_eq!(a.command, "");
+        assert!(a.has("help"));
+    }
+
+    #[test]
+    fn rejects_positional_after_flags() {
+        assert!(Args::parse(&v(&["cmd", "stray"])).is_err());
+    }
+}

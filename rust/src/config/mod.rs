@@ -1,0 +1,10 @@
+//! Configuration substrate: JSON (artifact manifest), TOML-subset
+//! (experiment configs) and the typed run specification.
+
+pub mod json;
+pub mod spec;
+pub mod toml;
+
+pub use json::Json;
+pub use spec::{Backend, DataConfig, EstimatorKind, HasherKind, LshConfig, OptimizerKind, RunConfig, TrainConfig};
+pub use toml::{TomlDoc, TomlValue};

@@ -1,0 +1,317 @@
+//! TOML-subset parser for experiment configuration files.
+//!
+//! Supported grammar (the subset the repo's configs use):
+//! * `[section]` headers (one level)
+//! * `key = value` with string (`"…"`), integer, float, boolean and
+//!   homogeneous array (`[1, 2, 3]`) values
+//! * `#` comments, blank lines
+//!
+//! Values are exposed through typed getters with good error messages.
+
+use std::collections::BTreeMap;
+
+use crate::core::error::{Error, Result};
+
+/// A TOML scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Array of values.
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    /// Float view (ints widen).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed config: `sections[section][key] = value`. Keys before any
+/// section header land in section `""`.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::Config(format!("line {}: unclosed section", ln + 1)))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(Error::Config(format!("line {}: empty section name", ln + 1)));
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| Error::Config(format!("line {}: expected key = value", ln + 1)))?;
+            let key = line[..eq].trim();
+            let val = line[eq + 1..].trim();
+            if key.is_empty() {
+                return Err(Error::Config(format!("line {}: empty key", ln + 1)));
+            }
+            let value = parse_value(val)
+                .map_err(|e| Error::Config(format!("line {}: {e}", ln + 1)))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    /// Parse a file.
+    pub fn load(path: &std::path::Path) -> Result<TomlDoc> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("{}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    /// Raw value lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Section names.
+    pub fn section_names(&self) -> Vec<&str> {
+        self.sections.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// All keys of a section.
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|m| m.keys().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Typed getters: error when present-but-wrong-type, `default` when absent.
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> Result<String> {
+        match self.get(section, key) {
+            None => Ok(default.to_string()),
+            Some(TomlValue::Str(s)) => Ok(s.clone()),
+            Some(v) => Err(type_err(section, key, "string", v)),
+        }
+    }
+
+    /// Integer getter with default.
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> Result<i64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(TomlValue::Int(i)) => Ok(*i),
+            Some(v) => Err(type_err(section, key, "integer", v)),
+        }
+    }
+
+    /// Float getter with default (ints widen).
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| type_err(section, key, "float", v)),
+        }
+    }
+
+    /// Bool getter with default.
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(TomlValue::Bool(b)) => Ok(*b),
+            Some(v) => Err(type_err(section, key, "bool", v)),
+        }
+    }
+
+    /// Float-array getter (empty when absent).
+    pub fn floats(&self, section: &str, key: &str) -> Result<Vec<f64>> {
+        match self.get(section, key) {
+            None => Ok(Vec::new()),
+            Some(TomlValue::Arr(a)) => a
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| type_err(section, key, "float array", v)))
+                .collect(),
+            Some(v) => Err(type_err(section, key, "array", v)),
+        }
+    }
+}
+
+fn type_err(section: &str, key: &str, want: &str, got: &TomlValue) -> Error {
+    Error::Config(format!("[{section}] {key}: expected {want}, got {got:?}"))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<TomlValue, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(Vec::new()));
+        }
+        let items: std::result::Result<Vec<TomlValue>, String> =
+            split_top_level(inner).into_iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(TomlValue::Arr(items?));
+    }
+    // number: int unless it has . e E
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        s.parse::<f64>().map(TomlValue::Float).map_err(|_| format!("bad float '{s}'"))
+    } else {
+        s.parse::<i64>()
+            .map(TomlValue::Int)
+            .or_else(|_| s.parse::<f64>().map(TomlValue::Float))
+            .map_err(|_| format!("bad number '{s}'"))
+    }
+}
+
+/// Split an array body on commas not nested in brackets/strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0i32;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig10"          # inline comment
+seed = 42
+
+[lsh]
+k = 5
+l = 100
+density = 0.033333
+sparse = true
+
+[train]
+lr_sweep = [1e-5, 1e-3, 1e-1]
+epochs = 10
+dataset = "yearmsd-like"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(d.str_or("", "name", "x").unwrap(), "fig10");
+        assert_eq!(d.int_or("", "seed", 0).unwrap(), 42);
+        assert_eq!(d.int_or("lsh", "k", 0).unwrap(), 5);
+        assert!(d.bool_or("lsh", "sparse", false).unwrap());
+        assert!((d.float_or("lsh", "density", 0.0).unwrap() - 0.033333).abs() < 1e-9);
+        assert_eq!(d.floats("train", "lr_sweep").unwrap(), vec![1e-5, 1e-3, 1e-1]);
+        assert_eq!(d.str_or("train", "dataset", "").unwrap(), "yearmsd-like");
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let d = TomlDoc::parse("").unwrap();
+        assert_eq!(d.int_or("a", "b", 7).unwrap(), 7);
+        assert_eq!(d.str_or("a", "b", "dft").unwrap(), "dft");
+        assert!(d.floats("a", "b").unwrap().is_empty());
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let d = TomlDoc::parse("k = \"five\"").unwrap();
+        assert!(d.int_or("", "k", 0).is_err());
+        let d = TomlDoc::parse("k = 5").unwrap();
+        assert!(d.str_or("", "k", "").is_err());
+    }
+
+    #[test]
+    fn int_widens_to_float() {
+        let d = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(d.float_or("", "x", 0.0).unwrap(), 3.0);
+    }
+
+    #[test]
+    fn bad_syntax_rejected_with_line_numbers() {
+        for bad in ["[unclosed", "novalue", "= 3", "x = ", "x = [1, 2"] {
+            let e = TomlDoc::parse(bad).unwrap_err().to_string();
+            assert!(e.contains("line 1"), "error '{e}' for '{bad}'");
+        }
+    }
+
+    #[test]
+    fn comments_respect_strings() {
+        let d = TomlDoc::parse(r##"s = "a#b" # real comment"##).unwrap();
+        assert_eq!(d.str_or("", "s", "").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let d = TomlDoc::parse("a = [[1, 2], [3]]").unwrap();
+        match d.get("", "a").unwrap() {
+            TomlValue::Arr(outer) => {
+                assert_eq!(outer.len(), 2);
+                assert_eq!(outer[0], TomlValue::Arr(vec![TomlValue::Int(1), TomlValue::Int(2)]));
+            }
+            v => panic!("wrong value {v:?}"),
+        }
+    }
+}

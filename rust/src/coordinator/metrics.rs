@@ -1,0 +1,142 @@
+//! Lightweight metrics registry: named counters and timers shared across
+//! pipeline stages and the trainer. (No external metrics crates offline —
+//! this is the substrate.)
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::core::stats::Welford;
+
+/// Thread-safe metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    timers: Mutex<BTreeMap<String, Welford>>,
+}
+
+impl Metrics {
+    /// Fresh registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a counter by `v`.
+    pub fn count(&self, name: &str, v: u64) {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Read a counter (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|a| a.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Record a duration sample (seconds).
+    pub fn observe(&self, name: &str, secs: f64) {
+        let mut m = self.timers.lock().unwrap();
+        m.entry(name.to_string()).or_default().push(secs);
+    }
+
+    /// Time a closure and record it under `name`.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.observe(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Timer summary: (count, mean_secs, total_secs).
+    pub fn timer(&self, name: &str) -> Option<(u64, f64, f64)> {
+        let m = self.timers.lock().unwrap();
+        m.get(name).map(|w| (w.count(), w.mean(), w.mean() * w.count() as f64))
+    }
+
+    /// Render a human-readable report of everything recorded.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k} = {}\n", v.load(Ordering::Relaxed)));
+        }
+        for (k, w) in self.timers.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "timer   {k}: n={} mean={:.6}s total={:.3}s\n",
+                w.count(),
+                w.mean(),
+                w.mean() * w.count() as f64
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.count("a", 2);
+        m.count("a", 3);
+        assert_eq!(m.counter("a"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn timers_record() {
+        let m = Metrics::new();
+        m.observe("t", 0.5);
+        m.observe("t", 1.5);
+        let (n, mean, total) = m.timer("t").unwrap();
+        assert_eq!(n, 2);
+        assert!((mean - 1.0).abs() < 1e-12);
+        assert!((total - 2.0).abs() < 1e-12);
+        assert!(m.timer("none").is_none());
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let m = Metrics::new();
+        let v = m.time("f", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(m.timer("f").unwrap().0, 1);
+    }
+
+    #[test]
+    fn concurrent_counting() {
+        let m = Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.count("c", 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("c"), 8000);
+    }
+
+    #[test]
+    fn report_contains_entries() {
+        let m = Metrics::new();
+        m.count("x", 1);
+        m.observe("y", 0.1);
+        let r = m.report();
+        assert!(r.contains("counter x = 1"));
+        assert!(r.contains("timer   y"));
+    }
+}

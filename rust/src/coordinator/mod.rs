@@ -1,0 +1,10 @@
+//! L3 coordination: the training driver, the streaming ingestion pipeline
+//! and the metrics registry.
+
+pub mod metrics;
+pub mod pipeline;
+pub mod trainer;
+
+pub use metrics::Metrics;
+pub use pipeline::{streaming_build, PipelineConfig, PipelineReport};
+pub use trainer::{build_estimator, train, CurvePoint, GradSource, TrainOutcome};

@@ -1,0 +1,323 @@
+//! Streaming ingestion pipeline: Source → Preprocess → Hash → Tables.
+//!
+//! LGD's one-time preprocessing (normalise, embed into hash space, compute
+//! K·L codes, insert into tables) is the natural streaming stage of the
+//! system: records flow through bounded channels (backpressure), hash
+//! workers parallelise the code computation across the L tables, and a
+//! single owner thread applies coded inserts so the table structure never
+//! needs locks. The result is bit-identical to the batch
+//! [`crate::data::preprocess::preprocess`] + [`LshTables::build`] path
+//! (tested below), so the trainer can consume either.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use crate::core::error::{Error, Result};
+use crate::core::matrix::{normalize, Matrix};
+use crate::coordinator::metrics::Metrics;
+use crate::data::dataset::Dataset;
+use crate::data::preprocess::{HashSpace, Preprocessed};
+use crate::lsh::srp::SrpHasher;
+use crate::lsh::tables::LshTables;
+
+/// Pipeline tuning knobs.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Bounded-channel capacity between stages (records).
+    pub channel_cap: usize,
+    /// Parallel hash workers (tables are striped across them).
+    pub hash_workers: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { channel_cap: 256, hash_workers: 4 }
+    }
+}
+
+/// Timing/throughput report of a pipeline run.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    /// Records processed.
+    pub records: usize,
+    /// End-to-end wall seconds.
+    pub wall_secs: f64,
+    /// Records/second.
+    pub throughput: f64,
+}
+
+struct RawRecord {
+    id: u32,
+    x: Vec<f32>,
+    y: f32,
+}
+
+struct HashJob {
+    id: u32,
+    v: Arc<Vec<f32>>,
+}
+
+struct CodedInsert {
+    id: u32,
+    table: u32,
+    code: u32,
+}
+
+/// Run the streaming build: consumes `ds`, returns the preprocessed data,
+/// the fully-built tables, and a throughput report.
+pub fn streaming_build<H>(
+    ds: Dataset,
+    hasher: H,
+    cfg: &PipelineConfig,
+    metrics: &Metrics,
+) -> Result<(Preprocessed, LshTables<H>, PipelineReport)>
+where
+    H: SrpHasher + Clone + 'static,
+{
+    let _n = ds.len();
+    let d = ds.dim();
+    let task = ds.task;
+    let space = HashSpace::for_task(task);
+    let hd = space.dim(d);
+    if hasher.dim() != hd {
+        return Err(Error::Pipeline(format!(
+            "hasher dim {} but hash space needs {hd}",
+            hasher.dim()
+        )));
+    }
+    let workers = cfg.hash_workers.max(1);
+    let l = hasher.l();
+    let t0 = Instant::now();
+
+    // Stage channels.
+    let (src_tx, src_rx) = sync_channel::<RawRecord>(cfg.channel_cap);
+    let mut hash_txs: Vec<SyncSender<HashJob>> = Vec::with_capacity(workers);
+    let mut hash_rxs: Vec<Receiver<HashJob>> = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let (tx, rx) = sync_channel::<HashJob>(cfg.channel_cap);
+        hash_txs.push(tx);
+        hash_rxs.push(rx);
+    }
+    let (ins_tx, ins_rx) = sync_channel::<CodedInsert>(cfg.channel_cap * workers.max(1));
+
+    // --- Source: stream the dataset out of this thread. ---
+    let name = ds.name.clone();
+    let src = thread::spawn(move || {
+        let mut rows = 0usize;
+        for i in 0..ds.len() {
+            let (x, y) = ds.example(i);
+            if src_tx
+                .send(RawRecord { id: i as u32, x: x.to_vec(), y })
+                .is_err()
+            {
+                break; // downstream died; it will report the error
+            }
+            rows += 1;
+        }
+        rows
+    });
+
+    // --- Preprocess: normalise + hash-space embed; fan out to workers. ---
+    let pre_handle = thread::spawn(move || -> Result<(Matrix, Vec<f32>, Matrix, Vec<f64>)> {
+        let mut xmat = Matrix::zeros(0, 0);
+        let mut ys = Vec::new();
+        let mut hashed = Matrix::zeros(0, 0);
+        let mut norms = Vec::new();
+        for mut rec in src_rx.iter() {
+            let norm = normalize(&mut rec.x);
+            norms.push(norm);
+            let mut hv = Vec::with_capacity(hd);
+            match space {
+                HashSpace::LinRegAugmented => {
+                    hv.extend_from_slice(&rec.x);
+                    hv.push(rec.y);
+                }
+                HashSpace::LogRegSigned => {
+                    hv.extend(rec.x.iter().map(|v| rec.y * v));
+                }
+            }
+            let hv = Arc::new(hv);
+            for tx in &hash_txs {
+                tx.send(HashJob { id: rec.id, v: hv.clone() })
+                    .map_err(|_| Error::Pipeline("hash worker hung up".into()))?;
+            }
+            xmat.push_row(&rec.x).map_err(|e| Error::Pipeline(e.to_string()))?;
+            ys.push(rec.y);
+            hashed
+                .push_row(&hv)
+                .map_err(|e| Error::Pipeline(e.to_string()))?;
+        }
+        drop(hash_txs);
+        Ok((xmat, ys, hashed, norms))
+    });
+
+    // --- Hash workers: tables striped worker w -> tables {w, w+W, ...} ---
+    let mut worker_handles = Vec::new();
+    for (w, rx) in hash_rxs.into_iter().enumerate() {
+        let h = hasher.clone();
+        let tx = ins_tx.clone();
+        worker_handles.push(thread::spawn(move || -> Result<u64> {
+            let mut codes = 0u64;
+            for job in rx.iter() {
+                let mut t = w;
+                while t < l {
+                    let code = h.code(t, &job.v);
+                    codes += 1;
+                    tx.send(CodedInsert { id: job.id, table: t as u32, code })
+                        .map_err(|_| Error::Pipeline("table owner hung up".into()))?;
+                    t += workers;
+                }
+            }
+            Ok(codes)
+        }));
+    }
+    drop(ins_tx);
+
+    // --- Table owner (this thread): apply coded inserts. ---
+    let mut tables = LshTables::new(hasher);
+    let mut inserts = 0u64;
+    for ins in ins_rx.iter() {
+        tables.insert_coded(ins.table as usize, ins.code, ins.id);
+        inserts += 1;
+    }
+
+    // Join + propagate errors.
+    let rows = src.join().map_err(|_| Error::Pipeline("source panicked".into()))?;
+    let (xmat, ys, hashed, norms) =
+        pre_handle.join().map_err(|_| Error::Pipeline("preprocess panicked".into()))??;
+    let mut total_codes = 0u64;
+    for h in worker_handles {
+        total_codes += h.join().map_err(|_| Error::Pipeline("hash worker panicked".into()))??;
+    }
+    if inserts != total_codes || inserts != (rows as u64) * l as u64 {
+        return Err(Error::Pipeline(format!(
+            "insert count {inserts} != codes {total_codes} != rows*L {}",
+            rows as u64 * l as u64
+        )));
+    }
+    tables.finish_coded_inserts(rows);
+
+    let wall = t0.elapsed().as_secs_f64();
+    metrics.count("pipeline.records", rows as u64);
+    metrics.count("pipeline.codes", total_codes);
+    metrics.observe("pipeline.wall", wall);
+
+    let data = Dataset::new(name, xmat, ys, task).map_err(|e| Error::Pipeline(e.to_string()))?;
+    let pre = Preprocessed { data, hashed, space, center: Vec::new(), norms };
+    let report = PipelineReport {
+        records: rows,
+        wall_secs: wall,
+        throughput: rows as f64 / wall.max(1e-12),
+    };
+    Ok((pre, tables, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::preprocess::{preprocess, PreprocessOptions};
+    use crate::data::synth::SynthSpec;
+    use crate::lsh::srp::DenseSrp;
+
+    fn build_both(
+        n: usize,
+        d: usize,
+        workers: usize,
+    ) -> (Preprocessed, LshTables<DenseSrp>, Preprocessed, LshTables<DenseSrp>) {
+        let ds = SynthSpec::power_law("p", n, d, 3).generate().unwrap();
+        let hasher = DenseSrp::new(d + 1, 4, 10, 7);
+        // batch path
+        let pre_b = preprocess(ds.clone(), &PreprocessOptions::default()).unwrap();
+        let tb = LshTables::build(
+            hasher.clone(),
+            (0..pre_b.data.len()).map(|i| pre_b.hashed.row(i)),
+        )
+        .unwrap();
+        // streaming path
+        let m = Metrics::new();
+        let cfg = PipelineConfig { channel_cap: 8, hash_workers: workers };
+        let (pre_s, ts, rep) = streaming_build(ds, hasher, &cfg, &m).unwrap();
+        assert_eq!(rep.records, n);
+        assert_eq!(m.counter("pipeline.records"), n as u64);
+        (pre_b, tb, pre_s, ts)
+    }
+
+    #[test]
+    fn streaming_matches_batch_path() {
+        let (pre_b, tb, pre_s, ts) = build_both(200, 12, 3);
+        // identical preprocessed data
+        assert_eq!(pre_b.data.y, pre_s.data.y);
+        assert_eq!(pre_b.hashed.as_slice(), pre_s.hashed.as_slice());
+        assert_eq!(pre_b.norms, pre_s.norms);
+        // identical table contents (same hasher -> same codes); bucket order
+        // within a table may differ, compare as sets
+        assert_eq!(tb.len(), ts.len());
+        for t in 0..10 {
+            for code in 0..(1u32 << 4) {
+                let mut a: Vec<u32> = tb.bucket(t, code).to_vec();
+                let mut b: Vec<u32> = ts.bucket(t, code).to_vec();
+                a.sort_unstable();
+                b.sort_unstable();
+                assert_eq!(a, b, "table {t} code {code}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_and_many_workers_agree() {
+        let (_, _, _, t1) = build_both(100, 8, 1);
+        let (_, _, _, t8) = build_both(100, 8, 8);
+        for t in 0..10 {
+            for code in 0..(1u32 << 4) {
+                let mut a: Vec<u32> = t1.bucket(t, code).to_vec();
+                let mut b: Vec<u32> = t8.bucket(t, code).to_vec();
+                a.sort_unstable();
+                b.sort_unstable();
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_channel_capacity_still_completes() {
+        let ds = SynthSpec::power_law("p", 150, 6, 9).generate().unwrap();
+        let hasher = DenseSrp::new(7, 3, 6, 1);
+        let m = Metrics::new();
+        let cfg = PipelineConfig { channel_cap: 1, hash_workers: 2 };
+        let (pre, tables, rep) = streaming_build(ds, hasher, &cfg, &m).unwrap();
+        assert_eq!(rep.records, 150);
+        assert_eq!(pre.data.len(), 150);
+        assert_eq!(tables.len(), 150);
+    }
+
+    #[test]
+    fn dim_mismatch_fails_fast() {
+        let ds = SynthSpec::power_law("p", 10, 6, 9).generate().unwrap();
+        let hasher = DenseSrp::new(6, 3, 4, 1); // should be 7 (augmented)
+        let m = Metrics::new();
+        let r = streaming_build(ds, hasher, &PipelineConfig::default(), &m);
+        assert!(r.is_err());
+    }
+
+    /// The built tables must be usable by the LGD estimator end-to-end.
+    #[test]
+    fn streaming_tables_feed_lgd() {
+        use crate::estimator::lgd::{LgdEstimator, LgdOptions};
+        use crate::estimator::GradientEstimator;
+        let ds = SynthSpec::power_law("p", 300, 10, 11).generate().unwrap();
+        let hasher = DenseSrp::new(11, 4, 12, 5);
+        let m = Metrics::new();
+        let (pre, tables, _) =
+            streaming_build(ds, hasher, &PipelineConfig::default(), &m).unwrap();
+        let mut est = LgdEstimator::from_parts(&pre, tables, 13, LgdOptions::default());
+        let theta = vec![0.05f32; 10];
+        for _ in 0..500 {
+            let d = est.draw(&theta);
+            assert!(d.index < 300);
+            assert!(d.weight > 0.0);
+        }
+        assert_eq!(est.stats().fallbacks, 0);
+    }
+}

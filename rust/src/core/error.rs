@@ -1,0 +1,92 @@
+//! Error types shared across the LGD library.
+//!
+//! Most library routines return [`Result<T>`], aliased to this crate's
+//! [`Error`]. The runtime layer wraps `xla::Error` values; everything else is
+//! constructed directly.
+
+use std::fmt;
+
+/// Crate-wide error type.
+#[derive(Debug)]
+pub enum Error {
+    /// Shape/dimension mismatch in linear-algebra or dataset plumbing.
+    Shape(String),
+    /// Configuration parse or validation failure.
+    Config(String),
+    /// Dataset loading / generation failure.
+    Data(String),
+    /// LSH table or sampler invariant violation.
+    Lsh(String),
+    /// PJRT runtime failure (compile, execute, artifact load).
+    Runtime(String),
+    /// I/O failure, annotated with the path when available.
+    Io(String),
+    /// Pipeline/coordination failure (channel closed, worker panicked...).
+    Pipeline(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Lsh(m) => write!(f, "lsh error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(m) => write!(f, "io error: {m}"),
+            Error::Pipeline(m) => write!(f, "pipeline error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Helper: build a `Shape` error from a format-style message.
+#[macro_export]
+macro_rules! shape_err {
+    ($($arg:tt)*) => { $crate::core::error::Error::Shape(format!($($arg)*)) };
+}
+
+/// Helper: bail out with a `Config` error.
+#[macro_export]
+macro_rules! config_err {
+    ($($arg:tt)*) => { $crate::core::error::Error::Config(format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_and_message() {
+        let e = Error::Shape("3x4 vs 5x4".into());
+        assert_eq!(e.to_string(), "shape error: 3x4 vs 5x4");
+        let e = Error::Runtime("compile failed".into());
+        assert!(e.to_string().contains("runtime"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = shape_err!("{} vs {}", 3, 4);
+        assert!(matches!(e, Error::Shape(_)));
+        let e = config_err!("bad key {}", "k");
+        assert!(matches!(e, Error::Config(_)));
+    }
+}

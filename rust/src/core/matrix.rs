@@ -1,0 +1,304 @@
+//! Dense row-major matrix and vector helpers (BLAS-lite).
+//!
+//! The library deliberately avoids external linear-algebra crates (offline
+//! build): all hot-path math is a handful of dot products and axpys, written
+//! here once with explicit unit tests and reused everywhere. `f32` storage
+//! matches the PJRT artifacts; accumulation happens in `f64` where it
+//! protects a result (means, norms over long vectors).
+
+use crate::core::error::{Error, Result};
+
+/// Row-major dense matrix of `f32`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a flat row-major buffer. Errors if the length mismatches.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "buffer of {} for {rows}x{cols} matrix",
+                data.len()
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row access.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Element write.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Flat row-major buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat buffer.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Matrix–vector product `y = A x`. `x.len()` must equal `cols`.
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) -> Result<()> {
+        if x.len() != self.cols || y.len() != self.rows {
+            return Err(Error::Shape(format!(
+                "matvec {}x{} with x[{}] y[{}]",
+                self.rows, self.cols, x.len(), y.len()
+            )));
+        }
+        for i in 0..self.rows {
+            y[i] = dot(self.row(i), x);
+        }
+        Ok(())
+    }
+
+    /// Append a row (must match `cols`; first append on an empty matrix sets
+    /// the width).
+    pub fn push_row(&mut self, row: &[f32]) -> Result<()> {
+        if self.rows == 0 && self.cols == 0 {
+            self.cols = row.len();
+        }
+        if row.len() != self.cols {
+            return Err(Error::Shape(format!(
+                "push_row of width {} into {} cols",
+                row.len(), self.cols
+            )));
+        }
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+        Ok(())
+    }
+}
+
+/// Dot product with f64 accumulation.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        acc += a[i] as f64 * b[i] as f64;
+    }
+    acc as f32
+}
+
+/// Dot product returning f64 (used where the caller keeps f64 precision).
+#[inline]
+pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        acc += a[i] as f64 * b[i] as f64;
+    }
+    acc
+}
+
+/// Fast f32 dot with 4 independent accumulators (auto-vectorizes; ~4×
+/// faster than the f64-accumulated variant). Used on the sampling hot path
+/// where float32 precision suffices (collision probabilities).
+#[inline]
+pub fn dot_fast(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut acc = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Euclidean norm with f64 accumulation.
+#[inline]
+pub fn norm2(x: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for &v in x {
+        acc += v as f64 * v as f64;
+    }
+    acc.sqrt()
+}
+
+/// Normalize `x` to unit L2 norm in place; returns the original norm.
+/// Zero vectors are left untouched (returns 0).
+#[inline]
+pub fn normalize(x: &mut [f32]) -> f64 {
+    let n = norm2(x);
+    if n > 0.0 {
+        let inv = (1.0 / n) as f32;
+        for v in x.iter_mut() {
+            *v *= inv;
+        }
+    }
+    n
+}
+
+/// Cosine similarity, clamped into [-1, 1]. Returns 0 if either vector is 0.
+#[inline]
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let na = norm2(a);
+    let nb = norm2(b);
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    (dot_f64(a, b) / (na * nb)).clamp(-1.0, 1.0)
+}
+
+/// Angular similarity `1 - acos(cos)/pi` — the quantity the paper plots in
+/// Figure 9 and the SimHash collision probability (eq. 14).
+#[inline]
+pub fn angular_similarity(a: &[f32], b: &[f32]) -> f64 {
+    1.0 - cosine(a, b).acos() / std::f64::consts::PI
+}
+
+/// `a - b` into `out`.
+#[inline]
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert!(a.len() == b.len() && b.len() == out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(Matrix::from_vec(2, 2, vec![1.0; 3]).is_err());
+        let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(m.get(1, 0), 3.0);
+        assert_eq!(m.row(0), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn matvec_matches_manual() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let x = [1.0, 0.5, -1.0];
+        let mut y = [0.0; 2];
+        m.matvec(&x, &mut y).unwrap();
+        assert_eq!(y, [1.0 + 1.0 - 3.0, 4.0 + 2.5 - 6.0]);
+        assert!(m.matvec(&[1.0], &mut y).is_err());
+    }
+
+    #[test]
+    fn push_row_grows() {
+        let mut m = Matrix::zeros(0, 0);
+        m.push_row(&[1.0, 2.0]).unwrap();
+        m.push_row(&[3.0, 4.0]).unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 2);
+        assert!(m.push_row(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, -5.0, 6.0];
+        assert_eq!(dot(&a, &b), 4.0 - 10.0 + 18.0);
+        let mut y = [1.0f32; 3];
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn normalize_unit_norm() {
+        let mut x = [3.0f32, 4.0];
+        let n = normalize(&mut x);
+        assert!((n - 5.0).abs() < 1e-6);
+        assert!((norm2(&x) - 1.0).abs() < 1e-6);
+        let mut z = [0.0f32; 4];
+        assert_eq!(normalize(&mut z), 0.0);
+    }
+
+    #[test]
+    fn cosine_bounds_and_orthogonal() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 1.0];
+        assert!(cosine(&a, &b).abs() < 1e-9);
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-9);
+        assert!((angular_similarity(&a, &a) - 1.0).abs() < 1e-9);
+        assert!((angular_similarity(&a, &b) - 0.5).abs() < 1e-9);
+        let c = [-1.0f32, 0.0];
+        assert!(angular_similarity(&a, &c).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_and_sub() {
+        let mut x = [1.0f32, -2.0];
+        scale(-3.0, &mut x);
+        assert_eq!(x, [-3.0, 6.0]);
+        let mut out = [0.0f32; 2];
+        sub(&[5.0, 5.0], &[2.0, 7.0], &mut out);
+        assert_eq!(out, [3.0, -2.0]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Foundational substrates: errors, PRNG, dense linear algebra, statistics.
+
+pub mod error;
+pub mod matrix;
+pub mod rng;
+pub mod stats;
+
+pub use error::{Error, Result};
+pub use matrix::Matrix;
+pub use rng::{Pcg64, Rng, SplitMix64};

@@ -1,0 +1,365 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The `rand` crate is not available in the offline build environment, so the
+//! library carries its own small, well-tested PRNG substrate:
+//!
+//! * [`SplitMix64`] — fast 64-bit state mixer, used to seed other generators
+//!   and to derive independent streams from a single experiment seed.
+//! * [`Pcg64`] — PCG-XSH-RR 64/32-based generator with 128-bit state; the
+//!   workhorse generator for all sampling in the library.
+//!
+//! Distribution helpers (uniform, Gaussian via Box–Muller, exponential,
+//! Pareto, Rademacher, Fisher–Yates shuffle) live on the [`Rng`] trait so the
+//! whole library is generic over the generator.
+
+/// Minimal RNG interface implemented by the generators in this module.
+pub trait Rng {
+    /// Next raw 64 random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Next 32 random bits.
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n). Uses Lemire-style rejection to avoid modulo
+    /// bias. `n` must be > 0.
+    #[inline]
+    fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0, "below(0) is undefined");
+        // Widening-multiply rejection sampling (Lemire 2019).
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal deviate (Box–Muller, no caching — branch-free and
+    /// stateless; costs two uniforms per call).
+    #[inline]
+    fn gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Exponential deviate with rate `lambda`.
+    #[inline]
+    fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                return -u.ln() / lambda;
+            }
+        }
+    }
+
+    /// Pareto (Type I) deviate with minimum `xm` and shape `alpha`, i.e.
+    /// `P(X > x) = (xm / x)^alpha` for `x > xm`. This is the power-law
+    /// distribution the paper's Lemma 1 analysis assumes for collision
+    /// probabilities / gradient norms.
+    #[inline]
+    fn pareto(&mut self, xm: f64, alpha: f64) -> f64 {
+        debug_assert!(xm > 0.0 && alpha > 0.0);
+        loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                return xm / u.powf(1.0 / alpha);
+            }
+        }
+    }
+
+    /// Rademacher deviate: ±1 with probability 1/2 each.
+    #[inline]
+    fn rademacher(&mut self) -> f64 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Bernoulli trial with success probability `p`.
+    #[inline]
+    fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (Floyd's algorithm). Returned
+    /// order is unspecified. Panics if k > n.
+    fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} distinct from {n}");
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.index(j + 1);
+            if chosen.contains(&t) {
+                chosen.push(j);
+            } else {
+                chosen.push(t);
+            }
+        }
+        chosen
+    }
+}
+
+/// SplitMix64: tiny, high-quality 64-bit mixer (Steele et al. 2014). Used to
+/// expand one user seed into independent generator seeds.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create from a raw seed.
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+}
+
+impl Rng for SplitMix64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSL-RR 128/64 (pcg64): 128-bit LCG state with an xorshift-rotate
+/// output function. Fast, statistically strong, tiny state.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ED051FC65DA44385DF649FCCF645;
+
+impl Pcg64 {
+    /// Seed the generator; `seed` selects the stream start, `stream` the
+    /// increment (sequence). Two generators with different streams are
+    /// independent for practical purposes.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed ^ 0xDEADBEEFCAFEF00D);
+        let s0 = sm.next_u64() as u128;
+        let s1 = sm.next_u64() as u128;
+        let mut sm2 = SplitMix64::new(stream.wrapping_add(0x1234_5678_9ABC_DEF0));
+        let i0 = sm2.next_u64() as u128;
+        let i1 = sm2.next_u64() as u128;
+        let mut g = Pcg64 {
+            state: (s0 << 64) | s1,
+            inc: ((i0 << 64) | i1) | 1, // must be odd
+        };
+        // Warm up past the seed correlation window.
+        g.next_u64();
+        g.next_u64();
+        g
+    }
+
+    /// Seed with stream 0 — the common case.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive a child generator with an independent stream. Used to hand
+    /// each pipeline worker / experiment arm its own reproducible stream.
+    pub fn fork(&mut self, stream: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64(), stream)
+    }
+}
+
+impl Rng for Pcg64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(7);
+        let mut b = SplitMix64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = SplitMix64::new(8);
+        assert_ne!(SplitMix64::new(7).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn pcg_streams_differ() {
+        let mut a = Pcg64::new(1, 0);
+        let mut b = Pcg64::new(1, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2, "streams should be independent, {same} collisions");
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut g = Pcg64::seeded(3);
+        for _ in 0..10_000 {
+            let x = g.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = g.next_f32();
+            assert!((0.0..1.0).contains(&y));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut g = Pcg64::seeded(11);
+        let n = 7u64;
+        let mut counts = [0usize; 7];
+        let trials = 70_000;
+        for _ in 0..trials {
+            counts[g.below(n) as usize] += 1;
+        }
+        let expect = trials as f64 / n as f64;
+        for &c in &counts {
+            assert!(
+                (c as f64 - expect).abs() < expect * 0.1,
+                "bucket count {c} too far from {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut g = Pcg64::seeded(5);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = g.gaussian();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "gaussian mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "gaussian var {var}");
+    }
+
+    #[test]
+    fn pareto_tail() {
+        let mut g = Pcg64::seeded(9);
+        let (xm, alpha) = (1.0, 2.0);
+        let n = 100_000;
+        let above2 = (0..n).filter(|_| g.pareto(xm, alpha) > 2.0).count();
+        // P(X > 2) = (1/2)^2 = 0.25
+        let frac = above2 as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "pareto tail {frac}");
+        // all samples >= xm
+        for _ in 0..1000 {
+            assert!(g.pareto(xm, alpha) >= xm);
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut g = Pcg64::seeded(13);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| g.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "exp mean {mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut g = Pcg64::seeded(17);
+        let mut xs: Vec<usize> = (0..100).collect();
+        g.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>(), "shuffle left input fixed");
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut g = Pcg64::seeded(19);
+        for _ in 0..100 {
+            let k = g.index(50);
+            let s = g.sample_indices(50, k);
+            assert_eq!(s.len(), k);
+            let mut dedup = s.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), k, "indices not distinct");
+            assert!(s.iter().all(|&i| i < 50));
+        }
+    }
+
+    #[test]
+    fn rademacher_balance() {
+        let mut g = Pcg64::seeded(23);
+        let n = 100_000;
+        let pos = (0..n).filter(|_| g.rademacher() > 0.0).count();
+        let frac = pos as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn fork_gives_distinct_streams() {
+        let mut root = Pcg64::seeded(42);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

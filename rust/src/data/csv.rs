@@ -1,0 +1,204 @@
+//! Minimal numeric-CSV reader/writer.
+//!
+//! The loader accepts the UCI-style layout the paper's datasets ship in
+//! (plain numeric CSV, configurable target column) so real data drops in if
+//! present; the writer emits the experiment result series consumed by
+//! EXPERIMENTS.md and external plotting.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use crate::core::error::{Error, Result};
+use crate::core::matrix::Matrix;
+use crate::data::dataset::{Dataset, Task};
+
+/// Which column holds the target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TargetColumn {
+    /// First column (YearPredictionMSD layout).
+    First,
+    /// Last column (Slice / UJIIndoorLoc layout).
+    Last,
+    /// Explicit zero-based index.
+    Index(usize),
+}
+
+/// Load a numeric CSV into a dataset. Blank lines are skipped; a first line
+/// containing any non-numeric cell is treated as a header and skipped.
+pub fn load_csv(path: &Path, target: TargetColumn, task: Task) -> Result<Dataset> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| Error::Io(format!("{}: {e}", path.display())))?;
+    let reader = std::io::BufReader::new(file);
+    let mut x = Matrix::zeros(0, 0);
+    let mut y = Vec::new();
+    let mut width: Option<usize> = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| Error::Io(format!("{}:{lineno}: {e}", path.display())))?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').map(|c| c.trim()).collect();
+        let parsed: std::result::Result<Vec<f32>, _> =
+            cells.iter().map(|c| c.parse::<f32>()).collect();
+        let vals = match parsed {
+            Ok(v) => v,
+            Err(_) if lineno == 0 => continue, // header
+            Err(e) => {
+                return Err(Error::Data(format!(
+                    "{}:{}: non-numeric cell: {e}",
+                    path.display(),
+                    lineno + 1
+                )))
+            }
+        };
+        if let Some(w) = width {
+            if vals.len() != w {
+                return Err(Error::Data(format!(
+                    "{}:{}: {} cells, expected {w}",
+                    path.display(),
+                    lineno + 1,
+                    vals.len()
+                )));
+            }
+        } else {
+            if vals.len() < 2 {
+                return Err(Error::Data("need at least 2 columns".into()));
+            }
+            width = Some(vals.len());
+        }
+        let ti = match target {
+            TargetColumn::First => 0,
+            TargetColumn::Last => vals.len() - 1,
+            TargetColumn::Index(i) => {
+                if i >= vals.len() {
+                    return Err(Error::Data(format!("target column {i} out of range")));
+                }
+                i
+            }
+        };
+        y.push(vals[ti]);
+        let feats: Vec<f32> = vals
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| *j != ti)
+            .map(|(_, &v)| v)
+            .collect();
+        x.push_row(&feats).map_err(|e| Error::Data(e.to_string()))?;
+    }
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "csv".into());
+    Dataset::new(name, x, y, task)
+}
+
+/// Incremental CSV writer for experiment series.
+pub struct CsvWriter {
+    out: BufWriter<std::fs::File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncating) with a header row.
+    pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = std::fs::File::create(path)
+            .map_err(|e| Error::Io(format!("{}: {e}", path.display())))?;
+        let mut out = BufWriter::new(f);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    /// Write one row of f64 cells (formatted compactly).
+    pub fn row(&mut self, cells: &[f64]) -> Result<()> {
+        if cells.len() != self.cols {
+            return Err(Error::Data(format!(
+                "csv row of {} cells, header had {}",
+                cells.len(),
+                self.cols
+            )));
+        }
+        let s: Vec<String> = cells.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.out, "{}", s.join(","))?;
+        Ok(())
+    }
+
+    /// Write one row of mixed string cells.
+    pub fn row_str(&mut self, cells: &[String]) -> Result<()> {
+        if cells.len() != self.cols {
+            return Err(Error::Data("csv row width mismatch".into()));
+        }
+        writeln!(self.out, "{}", cells.join(","))?;
+        Ok(())
+    }
+
+    /// Flush to disk.
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("lgd-csv-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_last_target() {
+        let p = tmpfile("rt.csv");
+        std::fs::write(&p, "a,b,y\n1,2,3\n4,5,6\n").unwrap();
+        let ds = load_csv(&p, TargetColumn::Last, Task::Regression).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.dim(), 2);
+        assert_eq!(ds.y, vec![3.0, 6.0]);
+        assert_eq!(ds.x.row(1), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn first_target_yearmsd_layout() {
+        let p = tmpfile("first.csv");
+        std::fs::write(&p, "2001,0.5,0.25\n1999,1.5,2.5\n").unwrap();
+        let ds = load_csv(&p, TargetColumn::First, Task::Regression).unwrap();
+        assert_eq!(ds.y, vec![2001.0, 1999.0]);
+        assert_eq!(ds.x.row(0), &[0.5, 0.25]);
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        let p = tmpfile("ragged.csv");
+        std::fs::write(&p, "1,2,3\n4,5\n").unwrap();
+        assert!(load_csv(&p, TargetColumn::Last, Task::Regression).is_err());
+    }
+
+    #[test]
+    fn non_numeric_mid_file_rejected() {
+        let p = tmpfile("bad.csv");
+        std::fs::write(&p, "1,2\n3,x\n").unwrap();
+        assert!(load_csv(&p, TargetColumn::Last, Task::Regression).is_err());
+    }
+
+    #[test]
+    fn writer_emits_header_and_rows() {
+        let p = tmpfile("w.csv");
+        {
+            let mut w = CsvWriter::create(&p, &["epoch", "loss"]).unwrap();
+            w.row(&[0.0, 1.5]).unwrap();
+            w.row(&[1.0, 0.75]).unwrap();
+            assert!(w.row(&[1.0]).is_err());
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "epoch,loss");
+        assert_eq!(lines.len(), 3);
+    }
+}

@@ -1,0 +1,151 @@
+//! In-memory dense dataset with train/test splits.
+
+use crate::core::error::{Error, Result};
+use crate::core::matrix::Matrix;
+use crate::core::rng::{Pcg64, Rng};
+
+/// Task type a dataset is meant for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// Real-valued targets (least squares).
+    Regression,
+    /// Binary labels in {−1, +1} (logistic regression).
+    Classification,
+}
+
+/// A dense supervised dataset: features `x` (n × d) and targets `y` (n).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Feature matrix, one row per example.
+    pub x: Matrix,
+    /// Targets (regression values or ±1 labels).
+    pub y: Vec<f32>,
+    /// Task type.
+    pub task: Task,
+    /// Human-readable name (experiment logs).
+    pub name: String,
+}
+
+impl Dataset {
+    /// Construct with validation.
+    pub fn new(name: impl Into<String>, x: Matrix, y: Vec<f32>, task: Task) -> Result<Self> {
+        if x.rows() != y.len() {
+            return Err(Error::Data(format!(
+                "{} feature rows but {} targets",
+                x.rows(),
+                y.len()
+            )));
+        }
+        Ok(Dataset { x, y, task, name: name.into() })
+    }
+
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Feature dimensionality.
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Example accessor.
+    pub fn example(&self, i: usize) -> (&[f32], f32) {
+        (self.x.row(i), self.y[i])
+    }
+
+    /// Split into (train, test) by shuffled indices; `train_frac` in (0,1).
+    pub fn split(&self, train_frac: f64, seed: u64) -> Result<(Dataset, Dataset)> {
+        if !(0.0..1.0).contains(&train_frac) || train_frac == 0.0 {
+            return Err(Error::Data(format!("bad train fraction {train_frac}")));
+        }
+        let n = self.len();
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut rng = Pcg64::new(seed, 0x53504c54); // "SPLT"
+        rng.shuffle(&mut idx);
+        let n_train = ((n as f64) * train_frac).round() as usize;
+        let n_train = n_train.clamp(1, n.saturating_sub(1).max(1));
+        let take = |ids: &[usize], tag: &str| -> Result<Dataset> {
+            let mut x = Matrix::zeros(0, 0);
+            let mut y = Vec::with_capacity(ids.len());
+            for &i in ids {
+                x.push_row(self.x.row(i)).map_err(|e| Error::Data(e.to_string()))?;
+                y.push(self.y[i]);
+            }
+            Dataset::new(format!("{}-{tag}", self.name), x, y, self.task)
+        };
+        Ok((take(&idx[..n_train], "train")?, take(&idx[n_train..], "test")?))
+    }
+
+    /// Subset by explicit indices (used by sharding).
+    pub fn subset(&self, ids: &[usize], tag: &str) -> Result<Dataset> {
+        let mut x = Matrix::zeros(0, 0);
+        let mut y = Vec::with_capacity(ids.len());
+        for &i in ids {
+            if i >= self.len() {
+                return Err(Error::Data(format!("subset index {i} out of {}", self.len())));
+            }
+            x.push_row(self.x.row(i)).map_err(|e| Error::Data(e.to_string()))?;
+            y.push(self.y[i]);
+        }
+        Dataset::new(format!("{}-{tag}", self.name), x, y, self.task)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize, d: usize) -> Dataset {
+        let mut x = Matrix::zeros(0, 0);
+        for i in 0..n {
+            let row: Vec<f32> = (0..d).map(|j| (i * d + j) as f32).collect();
+            x.push_row(&row).unwrap();
+        }
+        let y: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        Dataset::new("toy", x, y, Task::Regression).unwrap()
+    }
+
+    #[test]
+    fn new_validates_lengths() {
+        let x = Matrix::from_vec(2, 2, vec![0.0; 4]).unwrap();
+        assert!(Dataset::new("bad", x, vec![1.0; 3], Task::Regression).is_err());
+    }
+
+    #[test]
+    fn split_partitions_exactly() {
+        let ds = toy(100, 3);
+        let (tr, te) = ds.split(0.8, 7).unwrap();
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+        assert_eq!(tr.dim(), 3);
+        // every original target appears exactly once across the two splits
+        let mut all: Vec<f32> = tr.y.iter().chain(te.y.iter()).copied().collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(all, (0..100).map(|i| i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_is_seeded() {
+        let ds = toy(50, 2);
+        let (a, _) = ds.split(0.5, 1).unwrap();
+        let (b, _) = ds.split(0.5, 1).unwrap();
+        let (c, _) = ds.split(0.5, 2).unwrap();
+        assert_eq!(a.y, b.y);
+        assert_ne!(a.y, c.y);
+    }
+
+    #[test]
+    fn subset_checks_bounds() {
+        let ds = toy(10, 2);
+        assert!(ds.subset(&[0, 11], "s").is_err());
+        let s = ds.subset(&[3, 5, 7], "s").unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.y, vec![3.0, 5.0, 7.0]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Dataset substrate: representation, synthetic workload generators matched
+//! to the paper's Table 4, CSV I/O, §2.2 preprocessing, and sharding.
+
+pub mod csv;
+pub mod dataset;
+pub mod preprocess;
+pub mod seq;
+pub mod shard;
+pub mod synth;
+
+pub use dataset::{Dataset, Task};
+pub use preprocess::{preprocess, HashSpace, Preprocessed, PreprocessOptions};
+pub use synth::{paper_specs, SynthSpec};

@@ -1,0 +1,209 @@
+//! §2.1/§2.2 preprocessing: row normalisation, the hash-space embeddings for
+//! linear and logistic regression, optional centering, and query builders.
+//!
+//! Hash space vs. gradient space:
+//!
+//! * **linear regression** — store `v_i = [x_i, y_i]`, query
+//!   `q_t = [θ_t, −1]`; then `⟨q_t, v_i⟩ = θ_t·x_i − y_i`, whose absolute
+//!   value (times 2‖x_i‖) is the gradient norm (eq. 4).
+//! * **logistic regression** — store `v_i = y_i·x_i`, query `q_t = −θ_t`;
+//!   `⟨q_t, v_i⟩ = −y_iθ_t·x_i` is monotone in the gradient norm
+//!   `1/(e^{y_iθ·x_i}+1)` (eq. 11).
+//!
+//! The gradient itself is always computed on the *original* (normalised)
+//! features — the hash space only drives sampling.
+
+use crate::core::error::Result;
+use crate::core::matrix::{normalize, Matrix};
+use crate::data::dataset::{Dataset, Task};
+
+/// How raw examples are embedded into the hash space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HashSpace {
+    /// `[x_i, y_i]` with query `[θ, −1]` (linear regression, eq. 4).
+    LinRegAugmented,
+    /// `y_i · x_i` with query `−θ` (logistic regression, eq. 11).
+    LogRegSigned,
+}
+
+impl HashSpace {
+    /// Default hash space for a task.
+    pub fn for_task(task: Task) -> Self {
+        match task {
+            Task::Regression => HashSpace::LinRegAugmented,
+            Task::Classification => HashSpace::LogRegSigned,
+        }
+    }
+
+    /// Hash-space dimensionality given feature dimensionality `d`.
+    pub fn dim(&self, d: usize) -> usize {
+        match self {
+            HashSpace::LinRegAugmented => d + 1,
+            HashSpace::LogRegSigned => d,
+        }
+    }
+}
+
+/// A dataset prepared for LGD: normalised features plus the matrix of
+/// hash-space vectors that went into the LSH tables.
+#[derive(Debug, Clone)]
+pub struct Preprocessed {
+    /// The training dataset with unit-norm rows.
+    pub data: Dataset,
+    /// Hash-space vectors (one row per example) — what the tables index.
+    pub hashed: Matrix,
+    /// Hash-space used.
+    pub space: HashSpace,
+    /// Mean subtracted from stored vectors (empty when centering disabled).
+    pub center: Vec<f32>,
+    /// Original row norms before normalisation (diagnostics).
+    pub norms: Vec<f64>,
+}
+
+impl Preprocessed {
+    /// Build the query vector for parameter `theta` in this hash space.
+    /// When centering was applied to the stored vectors, the same shift is
+    /// applied to the query so cosine geometry stays consistent.
+    pub fn query(&self, theta: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        match self.space {
+            HashSpace::LinRegAugmented => {
+                out.extend_from_slice(theta);
+                out.push(-1.0);
+            }
+            HashSpace::LogRegSigned => {
+                out.extend(theta.iter().map(|v| -v));
+            }
+        }
+    }
+}
+
+/// Options for preprocessing.
+#[derive(Debug, Clone)]
+pub struct PreprocessOptions {
+    /// Center stored hash vectors at their mean (§2.2 "we centered the
+    /// data... to make the simhash query more efficient"). Off by default:
+    /// centering perturbs the exact-probability accounting, so the default
+    /// configuration keeps Thm 1 exact and centering is an ablation.
+    pub center: bool,
+}
+
+impl Default for PreprocessOptions {
+    fn default() -> Self {
+        PreprocessOptions { center: false }
+    }
+}
+
+/// Normalise features to unit norm and build hash-space vectors.
+pub fn preprocess(mut ds: Dataset, opts: &PreprocessOptions) -> Result<Preprocessed> {
+    let n = ds.len();
+    let d = ds.dim();
+    let space = HashSpace::for_task(ds.task);
+    let mut norms = Vec::with_capacity(n);
+    for i in 0..n {
+        let norm = normalize(ds.x.row_mut(i));
+        norms.push(norm);
+    }
+    let hd = space.dim(d);
+    let mut hashed = Matrix::zeros(n, hd);
+    for i in 0..n {
+        let (xi, yi) = ds.example(i);
+        let row = hashed.row_mut(i);
+        match space {
+            HashSpace::LinRegAugmented => {
+                row[..d].copy_from_slice(xi);
+                row[d] = yi;
+            }
+            HashSpace::LogRegSigned => {
+                for j in 0..d {
+                    row[j] = yi * xi[j];
+                }
+            }
+        }
+    }
+    let mut center = Vec::new();
+    if opts.center {
+        center = vec![0.0f32; hd];
+        for i in 0..n {
+            for (c, &v) in center.iter_mut().zip(hashed.row(i)) {
+                *c += v;
+            }
+        }
+        for c in center.iter_mut() {
+            *c /= n as f32;
+        }
+        for i in 0..n {
+            let row = hashed.row_mut(i);
+            for (v, &c) in row.iter_mut().zip(center.iter()) {
+                *v -= c;
+            }
+        }
+    }
+    Ok(Preprocessed { data: ds, hashed, space, center, norms })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::matrix::{dot_f64, norm2};
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn linreg_embedding_inner_product_is_residual() {
+        let ds = SynthSpec::power_law("t", 50, 8, 1).generate().unwrap();
+        let p = preprocess(ds, &PreprocessOptions::default()).unwrap();
+        let theta: Vec<f32> = (0..8).map(|j| 0.1 * j as f32).collect();
+        let mut q = Vec::new();
+        p.query(&theta, &mut q);
+        assert_eq!(q.len(), 9);
+        for i in 0..p.data.len() {
+            let (xi, yi) = p.data.example(i);
+            let residual = dot_f64(xi, &theta) - yi as f64;
+            let ip = dot_f64(p.hashed.row(i), &q);
+            assert!((ip - residual).abs() < 1e-5, "example {i}: {ip} vs {residual}");
+        }
+    }
+
+    #[test]
+    fn logreg_embedding_matches_eq11() {
+        let ds = SynthSpec {
+            task: Task::Classification,
+            ..SynthSpec::power_law("c", 40, 6, 2)
+        };
+        let ds = ds.generate().unwrap();
+        let p = preprocess(ds, &PreprocessOptions::default()).unwrap();
+        assert_eq!(p.hashed.cols(), 6);
+        let theta: Vec<f32> = vec![0.3; 6];
+        let mut q = Vec::new();
+        p.query(&theta, &mut q);
+        for i in 0..p.data.len() {
+            let (xi, yi) = p.data.example(i);
+            // ⟨q, v_i⟩ = −y_i θ·x_i
+            let want = -(yi as f64) * dot_f64(xi, &theta);
+            let got = dot_f64(p.hashed.row(i), &q);
+            assert!((got - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn features_unit_norm_after_preprocess() {
+        let ds = SynthSpec::uniform_control("u", 30, 5, 3).generate().unwrap();
+        let p = preprocess(ds, &PreprocessOptions::default()).unwrap();
+        for i in 0..p.data.len() {
+            assert!((norm2(p.data.x.row(i)) - 1.0).abs() < 1e-5);
+        }
+        assert_eq!(p.norms.len(), 30);
+    }
+
+    #[test]
+    fn centering_zeroes_the_mean() {
+        let ds = SynthSpec::power_law("t", 64, 8, 4).generate().unwrap();
+        let p = preprocess(ds, &PreprocessOptions { center: true }).unwrap();
+        assert_eq!(p.center.len(), 9);
+        let n = p.data.len();
+        for j in 0..p.hashed.cols() {
+            let mean: f64 = (0..n).map(|i| p.hashed.get(i, j) as f64).sum::<f64>() / n as f64;
+            assert!(mean.abs() < 1e-4, "col {j} mean {mean}");
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Hash-sharding of datasets across pipeline workers.
+//!
+//! The streaming coordinator partitions incoming records across parallel
+//! hash-build workers; each worker owns a shard of ids and inserts them into
+//! its slice of the L tables (table-parallel building). Rebalancing moves
+//! whole shards, never single records, so build workers stay cache-friendly.
+
+use crate::core::error::{Error, Result};
+
+/// A shard assignment: `shard_of[i]` = worker owning record i.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    shards: usize,
+    shard_of: Vec<u32>,
+    counts: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// Round-robin plan over `n` records and `shards` workers.
+    pub fn round_robin(n: usize, shards: usize) -> Result<Self> {
+        if shards == 0 {
+            return Err(Error::Data("zero shards".into()));
+        }
+        let shard_of: Vec<u32> = (0..n).map(|i| (i % shards) as u32).collect();
+        let mut counts = vec![0usize; shards];
+        for &s in &shard_of {
+            counts[s as usize] += 1;
+        }
+        Ok(ShardPlan { shards, shard_of, counts })
+    }
+
+    /// Multiplicative-hash plan (stable under reordering of the input).
+    pub fn hashed(n: usize, shards: usize) -> Result<Self> {
+        if shards == 0 {
+            return Err(Error::Data("zero shards".into()));
+        }
+        let shard_of: Vec<u32> = (0..n as u64)
+            .map(|i| {
+                let h = i.wrapping_mul(0x9E3779B97F4A7C15) >> 33;
+                (h % shards as u64) as u32
+            })
+            .collect();
+        let mut counts = vec![0usize; shards];
+        for &s in &shard_of {
+            counts[s as usize] += 1;
+        }
+        Ok(ShardPlan { shards, shard_of, counts })
+    }
+
+    /// Worker for record `i`.
+    pub fn shard_of(&self, i: usize) -> usize {
+        self.shard_of[i] as usize
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Records per shard.
+    pub fn counts(&self) -> &[usize] {
+        &self.counts
+    }
+
+    /// Ids owned by `shard`.
+    pub fn members(&self, shard: usize) -> Vec<usize> {
+        self.shard_of
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s as usize == shard)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Imbalance = max/mean shard size (1.0 is perfect).
+    pub fn imbalance(&self) -> f64 {
+        let max = *self.counts.iter().max().unwrap_or(&0) as f64;
+        let mean = self.shard_of.len() as f64 / self.shards as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Rebalance: move whole id ranges from the largest shard(s) to the
+    /// smallest until imbalance ≤ `target` (or no move helps). Returns moves
+    /// performed as (id, from, to).
+    pub fn rebalance(&mut self, target: f64) -> Vec<(usize, usize, usize)> {
+        let mut moves = Vec::new();
+        loop {
+            if self.imbalance() <= target {
+                break;
+            }
+            let (max_s, _) =
+                self.counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap();
+            let (min_s, _) =
+                self.counts.iter().enumerate().min_by_key(|(_, &c)| c).unwrap();
+            if self.counts[max_s] <= self.counts[min_s] + 1 {
+                break; // nothing useful to move
+            }
+            // move one record from max to min
+            if let Some(i) = self
+                .shard_of
+                .iter()
+                .position(|&s| s as usize == max_s)
+            {
+                self.shard_of[i] = min_s as u32;
+                self.counts[max_s] -= 1;
+                self.counts[min_s] += 1;
+                moves.push((i, max_s, min_s));
+            } else {
+                break;
+            }
+        }
+        moves
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_is_balanced() {
+        let p = ShardPlan::round_robin(100, 4).unwrap();
+        assert_eq!(p.counts(), &[25, 25, 25, 25]);
+        assert!((p.imbalance() - 1.0).abs() < 1e-9);
+        assert_eq!(p.shard_of(5), 1);
+    }
+
+    #[test]
+    fn hashed_covers_all_and_roughly_balances() {
+        let p = ShardPlan::hashed(10_000, 8).unwrap();
+        let total: usize = p.counts().iter().sum();
+        assert_eq!(total, 10_000);
+        assert!(p.imbalance() < 1.2, "imbalance {}", p.imbalance());
+    }
+
+    #[test]
+    fn members_partition_ids() {
+        let p = ShardPlan::hashed(500, 3).unwrap();
+        let mut all: Vec<usize> = (0..3).flat_map(|s| p.members(s)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..500).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rebalance_reduces_imbalance() {
+        // deliberately skewed: everything on shard 0
+        let mut p = ShardPlan::round_robin(60, 3).unwrap();
+        for s in p.shard_of.iter_mut() {
+            *s = 0;
+        }
+        p.counts = vec![60, 0, 0];
+        assert!(p.imbalance() > 2.9);
+        let moves = p.rebalance(1.1);
+        assert!(!moves.is_empty());
+        assert!(p.imbalance() <= 1.1, "imbalance {}", p.imbalance());
+        let total: usize = p.counts().iter().sum();
+        assert_eq!(total, 60);
+    }
+
+    #[test]
+    fn zero_shards_rejected() {
+        assert!(ShardPlan::round_robin(10, 0).is_err());
+        assert!(ShardPlan::hashed(10, 0).is_err());
+    }
+}

@@ -1,0 +1,60 @@
+//! Gradient estimators: the uniform SGD baseline and the paper's LGD
+//! (LSH-sampled) estimator, behind one trait so every optimizer and
+//! experiment treats them interchangeably — exactly the paper's framing
+//! ("the only difference in the gradient algorithm was the gradient
+//! estimator").
+
+pub mod lgd;
+pub mod oracle;
+pub mod uniform;
+pub mod variance;
+
+use crate::lsh::sampler::SampleCost;
+
+/// One weighted draw: the estimator of the full gradient is
+/// `weight · ∇f(x_index, θ)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WeightedDraw {
+    /// Index of the drawn example.
+    pub index: usize,
+    /// Importance weight making the single-sample estimator unbiased for
+    /// the *average* gradient: 1 for uniform sampling, `1/(p·N)` for LGD.
+    pub weight: f64,
+    /// Probability with which the example was drawn (1/N for uniform).
+    pub prob: f64,
+}
+
+/// Cumulative cost/diagnostic counters an estimator exposes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EstimatorStats {
+    /// Draws served.
+    pub draws: u64,
+    /// Uniform fallbacks (LGD only: all probed buckets empty).
+    pub fallbacks: u64,
+    /// Aggregate hash-lookup cost.
+    pub cost: SampleCost,
+}
+
+/// An adaptive (or not) sampler of training examples.
+pub trait GradientEstimator {
+    /// Draw one example given the current parameters.
+    fn draw(&mut self, theta: &[f32]) -> WeightedDraw;
+
+    /// Draw a minibatch of `m` examples (Appendix B.2 semantics for LGD).
+    fn draw_batch(&mut self, theta: &[f32], m: usize, out: &mut Vec<WeightedDraw>) {
+        out.clear();
+        for _ in 0..m {
+            out.push(self.draw(theta));
+        }
+    }
+
+    /// Cumulative counters.
+    fn stats(&self) -> EstimatorStats;
+
+    /// Estimator name for logs / CSV columns.
+    fn name(&self) -> &'static str;
+}
+
+pub use lgd::LgdEstimator;
+pub use oracle::OracleEstimator;
+pub use uniform::UniformEstimator;

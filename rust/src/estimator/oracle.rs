@@ -1,0 +1,193 @@
+//! The O(N)-per-iteration *oracle* adaptive estimator — the paper's
+//! chicken-and-egg baseline (§1.1).
+//!
+//! Samples exactly from the optimal distribution `w*_i ∝ ‖∇f(x_i, θ_t)‖`
+//! [Alain et al. 2015], recomputing every weight each draw because θ_t
+//! changed — precisely the O(N) maintenance cost the paper's whole
+//! contribution avoids. Included so the benchmarks can demonstrate the
+//! loop quantitatively: oracle draws cost N·d work, LGD draws cost O(d).
+//! Its estimates are minimum-variance (a useful lower-bound reference in
+//! the variance experiments).
+
+use crate::core::rng::{Pcg64, Rng};
+use crate::data::dataset::Dataset;
+use crate::estimator::{EstimatorStats, GradientEstimator, WeightedDraw};
+use crate::model::Model;
+
+/// Exact gradient-norm-proportional sampler (O(N·d) per draw).
+pub struct OracleEstimator<'a> {
+    ds: &'a Dataset,
+    model: Box<dyn Model>,
+    rng: Pcg64,
+    stats: EstimatorStats,
+    /// scratch: per-example norms + cumulative distribution
+    norms: Vec<f64>,
+}
+
+impl<'a> OracleEstimator<'a> {
+    /// Oracle over a dataset with its native model.
+    pub fn new(ds: &'a Dataset, model: Box<dyn Model>, seed: u64) -> Self {
+        OracleEstimator {
+            ds,
+            model,
+            rng: Pcg64::new(seed, 0x04AC1E),
+            stats: EstimatorStats::default(),
+            norms: vec![0.0; ds.len()],
+        }
+    }
+}
+
+impl<'a> GradientEstimator for OracleEstimator<'a> {
+    fn draw(&mut self, theta: &[f32]) -> WeightedDraw {
+        self.stats.draws += 1;
+        // The O(N) loop: recompute every gradient norm at the current θ.
+        let n = self.ds.len();
+        let mut total = 0.0f64;
+        for i in 0..n {
+            let (x, y) = self.ds.example(i);
+            let g = self.model.grad_norm(x, y, theta);
+            self.norms[i] = g;
+            total += g;
+        }
+        self.stats.cost.mults += (n * theta.len()) as f64;
+        if total <= 0.0 {
+            // all-zero gradients: any example works, weight 1
+            let i = self.rng.index(n);
+            return WeightedDraw { index: i, weight: 1.0, prob: 1.0 / n as f64 };
+        }
+        // inverse-CDF draw
+        let u = self.rng.next_f64() * total;
+        self.stats.cost.randoms += 1;
+        let mut acc = 0.0f64;
+        let mut idx = n - 1;
+        for i in 0..n {
+            acc += self.norms[i];
+            if u <= acc {
+                idx = i;
+                break;
+            }
+        }
+        let prob = self.norms[idx] / total;
+        // unbiased weight: (1/N) / p_i
+        WeightedDraw { index: idx, weight: 1.0 / (prob * n as f64), prob }
+    }
+
+    fn stats(&self) -> EstimatorStats {
+        self.stats
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::matrix::norm2;
+    use crate::data::preprocess::{preprocess, PreprocessOptions};
+    use crate::data::synth::SynthSpec;
+    use crate::estimator::variance::{empirical_trace, sgd_trace_closed_form};
+    use crate::estimator::UniformEstimator;
+    use crate::model::LinReg;
+
+    fn setup(n: usize, seed: u64) -> crate::data::preprocess::Preprocessed {
+        let ds = SynthSpec::power_law("o", n, 8, seed).generate().unwrap();
+        preprocess(ds, &PreprocessOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn draw_frequency_proportional_to_grad_norm() {
+        let pre = setup(50, 1);
+        let mut est = OracleEstimator::new(&pre.data, Box::new(LinReg), 3);
+        let theta: Vec<f32> = (0..8).map(|i| 0.1 * i as f32).collect();
+        let model = LinReg;
+        let trials = 40_000;
+        let mut counts = vec![0usize; 50];
+        for _ in 0..trials {
+            counts[est.draw(&theta).index] += 1;
+        }
+        let norms: Vec<f64> = (0..50)
+            .map(|i| {
+                let (x, y) = pre.data.example(i);
+                model.grad_norm(x, y, &theta)
+            })
+            .collect();
+        let total: f64 = norms.iter().sum();
+        for i in 0..50 {
+            let want = norms[i] / total;
+            let got = counts[i] as f64 / trials as f64;
+            if want > 0.02 {
+                assert!(
+                    (got - want).abs() / want < 0.15,
+                    "example {i}: freq {got:.4} vs optimal {want:.4}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_is_unbiased() {
+        let pre = setup(120, 5);
+        let mut est = OracleEstimator::new(&pre.data, Box::new(LinReg), 7);
+        let model = LinReg;
+        let theta = vec![0.05f32; 8];
+        let mut full = vec![0.0f32; 8];
+        model.full_grad(&pre.data, &theta, &mut full);
+        let mut acc = vec![0.0f64; 8];
+        let mut g = vec![0.0f32; 8];
+        let trials = 80_000;
+        for _ in 0..trials {
+            let dr = est.draw(&theta);
+            let (x, y) = pre.data.example(dr.index);
+            model.grad(x, y, &theta, &mut g);
+            for j in 0..8 {
+                acc[j] += dr.weight * g[j] as f64 / trials as f64;
+            }
+        }
+        let mut err = 0.0;
+        for j in 0..8 {
+            err += (acc[j] - full[j] as f64).powi(2);
+        }
+        assert!(
+            err.sqrt() / norm2(&full).max(1e-12) < 0.05,
+            "oracle biased: {err}"
+        );
+    }
+
+    /// The optimal distribution achieves the minimum variance — below
+    /// uniform SGD (and the benchmark shows it costs O(N) per draw).
+    #[test]
+    fn oracle_variance_below_sgd() {
+        let pre = setup(300, 9);
+        let model = LinReg;
+        let theta = vec![0.05f32; 8];
+        let mut oracle = OracleEstimator::new(&pre.data, Box::new(LinReg), 11);
+        let rep = empirical_trace(&mut oracle, &model, &pre.data, &theta, 60_000);
+        let sgd = sgd_trace_closed_form(&model, &pre.data, &theta);
+        assert!(
+            rep.trace_cov < sgd,
+            "oracle trace {} not below SGD {sgd}",
+            rep.trace_cov
+        );
+        // sanity: uniform empirical matches too
+        let mut uni = UniformEstimator::new(pre.data.len(), 13);
+        let uni_rep = empirical_trace(&mut uni, &model, &pre.data, &theta, 60_000);
+        assert!(rep.trace_cov < uni_rep.trace_cov);
+    }
+
+    /// Cost accounting: each oracle draw does N·d mult-equivalents — the
+    /// chicken-and-egg loop made concrete.
+    #[test]
+    fn oracle_cost_is_linear_in_n() {
+        let pre = setup(200, 13);
+        let mut est = OracleEstimator::new(&pre.data, Box::new(LinReg), 15);
+        let theta = vec![0.1f32; 8];
+        for _ in 0..10 {
+            est.draw(&theta);
+        }
+        let s = est.stats();
+        assert_eq!(s.draws, 10);
+        assert!((s.cost.mults - (10 * 200 * 8) as f64).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,73 @@
+//! The SGD baseline: uniform sampling with weight 1.
+
+use crate::core::rng::{Pcg64, Rng};
+use crate::estimator::{EstimatorStats, GradientEstimator, WeightedDraw};
+
+/// Uniform sampler over `n` examples — plain SGD's estimator. Costs one
+/// random number per draw (§2.2's cost baseline).
+pub struct UniformEstimator {
+    n: usize,
+    rng: Pcg64,
+    stats: EstimatorStats,
+}
+
+impl UniformEstimator {
+    /// Sampler over `n` examples.
+    pub fn new(n: usize, seed: u64) -> Self {
+        assert!(n > 0, "empty dataset");
+        UniformEstimator { n, rng: Pcg64::new(seed, 0x53474400), stats: EstimatorStats::default() }
+    }
+}
+
+impl GradientEstimator for UniformEstimator {
+    #[inline]
+    fn draw(&mut self, _theta: &[f32]) -> WeightedDraw {
+        self.stats.draws += 1;
+        self.stats.cost.randoms += 1;
+        WeightedDraw {
+            index: self.rng.index(self.n),
+            weight: 1.0,
+            prob: 1.0 / self.n as f64,
+        }
+    }
+
+    fn stats(&self) -> EstimatorStats {
+        self.stats
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draws_cover_range_uniformly() {
+        let mut e = UniformEstimator::new(10, 1);
+        let mut counts = [0usize; 10];
+        let trials = 50_000;
+        for _ in 0..trials {
+            let d = e.draw(&[]);
+            assert_eq!(d.weight, 1.0);
+            assert!((d.prob - 0.1).abs() < 1e-12);
+            counts[d.index] += 1;
+        }
+        for &c in &counts {
+            let f = c as f64 / trials as f64;
+            assert!((f - 0.1).abs() < 0.01, "freq {f}");
+        }
+        assert_eq!(e.stats().draws, trials as u64);
+        assert_eq!(e.stats().fallbacks, 0);
+    }
+
+    #[test]
+    fn batch_draw_has_m_entries() {
+        let mut e = UniformEstimator::new(5, 2);
+        let mut out = Vec::new();
+        e.draw_batch(&[], 16, &mut out);
+        assert_eq!(out.len(), 16);
+    }
+}

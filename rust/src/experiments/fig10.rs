@@ -1,0 +1,130 @@
+//! Figures 3/10 & 11 (plain) and 6/12 & 13 (AdaGrad): training/testing loss
+//! convergence of LGD vs SGD, both epoch-wise and wall-clock-wise, on the
+//! three regression workloads. One CSV per family; figures 10 vs 11 (and
+//! 12 vs 13) are the train vs test columns of the same runs.
+
+use crate::config::spec::{EstimatorKind, OptimizerKind, RunConfig};
+use crate::coordinator::trainer::{train, GradSource};
+use crate::core::error::Result;
+use crate::data::csv::CsvWriter;
+use crate::data::preprocess::{preprocess, PreprocessOptions};
+use crate::experiments::ExpOptions;
+use crate::optim::Schedule;
+
+/// Run the convergence family. `adagrad = false` → fig10/11 CSV,
+/// `adagrad = true` → fig12/13 CSV.
+pub fn run(opts: &ExpOptions, adagrad: bool) -> Result<()> {
+    let fname = if adagrad { "fig12_13.csv" } else { "fig10_11.csv" };
+    let path = opts.out_dir.join(fname);
+    let mut w = CsvWriter::create(
+        &path,
+        &[
+            "dataset",
+            "estimator",
+            "optimizer",
+            "iter",
+            "epoch",
+            "wall_secs",
+            "train_loss",
+            "test_loss",
+        ],
+    )?;
+    let epochs = if opts.quick { 3 } else { 8 };
+    // The paper sweeps 1e-5..1e-1 and picks the convergent rate; on the
+    // normalised synthetic workloads 0.05 (plain) / 0.1 (adagrad) converge
+    // for both estimators across all three datasets.
+    let lr = if adagrad { 0.1 } else { 0.05 };
+
+    for spec in crate::experiments::regression_specs(opts) {
+        let ds = spec.generate()?;
+        let (tr, te) = ds.split(0.9, opts.seed)?;
+        let pre = preprocess(tr, &PreprocessOptions::default())?;
+        for est in [EstimatorKind::Lgd, EstimatorKind::Sgd] {
+            let mut cfg = RunConfig::default();
+            cfg.name = format!("{}-{:?}", spec.name, est);
+            cfg.train.estimator = est;
+            cfg.train.optimizer =
+                if adagrad { OptimizerKind::AdaGrad } else { OptimizerKind::Sgd };
+            cfg.train.schedule = Schedule::Const(lr);
+            cfg.train.epochs = epochs;
+            cfg.train.seed = opts.seed ^ 0x10;
+            cfg.lsh.seed = opts.seed ^ 0x11;
+            if opts.quick {
+                cfg.lsh.l = 25;
+            }
+            let out = train(&cfg, &pre, &te, GradSource::Native)?;
+            for p in &out.curve {
+                w.row_str(&[
+                    spec.name.clone(),
+                    out.estimator.clone(),
+                    if adagrad { "adagrad".into() } else { "sgd-update".into() },
+                    p.iter.to_string(),
+                    format!("{}", p.epoch),
+                    format!("{}", p.wall),
+                    format!("{}", p.train_loss),
+                    format!("{}", p.test_loss),
+                ])?;
+            }
+            println!(
+                "[{}] {} {est:?}: loss {:.4} -> {:.4} in {:.2}s ({} iters, {} fallbacks)",
+                if adagrad { "fig12" } else { "fig10" },
+                spec.name,
+                out.curve.first().unwrap().train_loss,
+                out.curve.last().unwrap().train_loss,
+                out.wall_secs,
+                out.iterations,
+                out.est_stats.fallbacks,
+            );
+        }
+    }
+    w.flush()?;
+    println!("[{}] wrote {}", if adagrad { "fig12" } else { "fig10" }, path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smoke-scale reproduction check: at tiny scale both estimators must
+    /// converge stably and land in the same loss regime (the strict
+    /// LGD-faster claims are validated at full scale in EXPERIMENTS.md —
+    /// at a few hundred examples the adaptive-sampling signal is within
+    /// Monte-Carlo noise).
+    #[test]
+    fn lgd_converges_at_least_as_fast_epochwise() {
+        let dir = std::env::temp_dir().join("lgd-fig10-test");
+        let opts = ExpOptions {
+            out_dir: dir.clone(),
+            scale: 0.005,
+            quick: true,
+            seed: 7,
+            ..Default::default()
+        };
+        run(&opts, false).unwrap();
+        let text = std::fs::read_to_string(dir.join("fig10_11.csv")).unwrap();
+        // final train loss per (dataset, estimator)
+        let mut last: std::collections::BTreeMap<(String, String), f64> = Default::default();
+        for line in text.lines().skip(1) {
+            let c: Vec<&str> = line.split(',').collect();
+            last.insert((c[0].into(), c[1].into()), c[6].parse().unwrap());
+        }
+        // first-curve-point losses per dataset for the stability check
+        let mut first: std::collections::BTreeMap<(String, String), f64> = Default::default();
+        for line in text.lines().skip(1) {
+            let c: Vec<&str> = line.split(',').collect();
+            first.entry((c[0].into(), c[1].into())).or_insert(c[6].parse().unwrap());
+        }
+        let mut same_regime = 0;
+        for ds in ["yearmsd-like", "slice-like", "ujiindoor-like"] {
+            let lgd = last[&(ds.to_string(), "lgd".to_string())];
+            let sgd = last[&(ds.to_string(), "sgd".to_string())];
+            let lgd0 = first[&(ds.to_string(), "lgd".to_string())];
+            assert!(lgd < lgd0, "{ds}: LGD did not descend ({lgd0} -> {lgd})");
+            if lgd <= sgd * 1.6 {
+                same_regime += 1;
+            }
+        }
+        assert!(same_regime >= 2, "LGD should land in SGD's loss regime on ≥2/3 datasets");
+    }
+}

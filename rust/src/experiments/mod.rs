@@ -1,0 +1,88 @@
+//! Experiment drivers: one module per table/figure of the paper's
+//! evaluation, each regenerating the corresponding series as CSV under
+//! `results/` (see DESIGN.md §5 for the experiment index).
+
+pub mod fig10;
+pub mod fig5;
+pub mod fig9;
+pub mod sampling;
+pub mod table4;
+pub mod variance;
+pub mod variance_ablation;
+
+use std::path::PathBuf;
+
+use crate::core::error::{Error, Result};
+
+/// Options shared by all experiment drivers.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    /// Scale factor on the paper's dataset sizes.
+    pub scale: f64,
+    /// Output directory for CSV series.
+    pub out_dir: PathBuf,
+    /// Master seed.
+    pub seed: u64,
+    /// Quick mode: smaller datasets / fewer repeats (CI smoke).
+    pub quick: bool,
+    /// Artifacts dir override for PJRT-backed experiments.
+    pub artifacts: Option<PathBuf>,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            scale: 0.02,
+            out_dir: PathBuf::from("results"),
+            seed: 42,
+            quick: false,
+            artifacts: None,
+        }
+    }
+}
+
+/// Run an experiment by id. `all` runs everything except the PJRT-gated
+/// fig5 unless artifacts are present.
+pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
+    match id {
+        "table4" => table4::run(opts),
+        "fig9" => fig9::run(opts),
+        "fig10" | "fig11" => fig10::run(opts, false),
+        "fig12" | "fig13" => fig10::run(opts, true),
+        "variance" => variance::run(opts),
+        "variance-ablation" => variance_ablation::run(opts),
+        "sampling" => sampling::run(opts),
+        "fig5" => fig5::run(opts),
+        "all" => {
+            table4::run(opts)?;
+            fig9::run(opts)?;
+            fig10::run(opts, false)?;
+            fig10::run(opts, true)?;
+            variance::run(opts)?;
+            sampling::run(opts)?;
+            let artifacts = opts
+                .artifacts
+                .clone()
+                .unwrap_or_else(crate::runtime::default_artifacts_dir);
+            if artifacts.join("manifest.json").exists() {
+                fig5::run(opts)?;
+            } else {
+                println!("[all] skipping fig5: no artifacts at {}", artifacts.display());
+            }
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown experiment '{other}' (have: table4, fig9, fig10, fig11, fig12, fig13, \
+             variance, sampling, fig5, all)"
+        ))),
+    }
+}
+
+/// The three paper regression workloads at the configured scale.
+pub(crate) fn regression_specs(opts: &ExpOptions) -> Vec<crate::data::SynthSpec> {
+    let scale = if opts.quick { (opts.scale * 0.25).max(0.002) } else { opts.scale };
+    crate::data::paper_specs(scale, opts.seed)
+        .into_iter()
+        .take(3)
+        .collect()
+}

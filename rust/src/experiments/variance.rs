@@ -1,0 +1,135 @@
+//! Lemma 1 / §2.3 variance experiment: trace of the estimator covariance,
+//! LGD vs SGD, on power-law data (LGD should win) and on the uniform
+//! Gaussian control (parity predicted by the paper's "uniform data" case).
+
+use crate::config::spec::{EstimatorKind, RunConfig};
+use crate::coordinator::trainer::build_estimator;
+use crate::core::error::Result;
+use crate::core::matrix::axpy;
+use crate::data::csv::CsvWriter;
+use crate::data::preprocess::{preprocess, PreprocessOptions};
+use crate::data::SynthSpec;
+use crate::estimator::variance::{empirical_trace, lemma1_sides, sgd_trace_closed_form};
+use crate::experiments::ExpOptions;
+use crate::model::{LinReg, Model};
+
+/// Emit `variance.csv`: dataset, regime, sgd_trace_closed, sgd_trace_mc,
+/// lgd_trace_mc, lemma1_lhs, lemma1_rhs, lemma1_holds.
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let path = opts.out_dir.join("variance.csv");
+    let mut w = CsvWriter::create(
+        &path,
+        &[
+            "dataset",
+            "regime",
+            "sgd_trace_closed",
+            "sgd_trace_mc",
+            "lgd_trace_mc",
+            "lemma1_lhs",
+            "lemma1_rhs",
+            "lemma1_holds",
+        ],
+    )?;
+    let n = if opts.quick { 400 } else { 2000 };
+    let trials = if opts.quick { 30_000 } else { 150_000 };
+    let d = 16;
+    let cases = [
+        ("pareto", SynthSpec::power_law("pareto", n, d, opts.seed ^ 1)),
+        ("uniform", SynthSpec::uniform_control("uniform", n, d, opts.seed ^ 2)),
+    ];
+    for (regime, spec) in cases {
+        let ds = spec.generate()?;
+        let pre = preprocess(ds, &PreprocessOptions::default())?;
+        let model = LinReg;
+        // warm-up θ as in fig9
+        let mut theta = vec![0.0f32; d];
+        {
+            let mut cfg = RunConfig::default();
+            cfg.train.estimator = EstimatorKind::Sgd;
+            cfg.train.seed = opts.seed;
+            let mut est = build_estimator(&cfg, &pre)?;
+            let mut g = vec![0.0f32; d];
+            for _ in 0..(n / 4).max(50) {
+                let dr = est.draw(&theta);
+                let (x, y) = pre.data.example(dr.index);
+                model.grad(x, y, &theta, &mut g);
+                axpy(-0.05, &g, &mut theta);
+            }
+        }
+
+        let mut cfg = RunConfig::default();
+        cfg.train.seed = opts.seed ^ 0x7A;
+        cfg.train.estimator = EstimatorKind::Sgd;
+        let mut sgd = build_estimator(&cfg, &pre)?;
+        cfg.train.estimator = EstimatorKind::Lgd;
+        if opts.quick {
+            cfg.lsh.l = 25;
+        }
+        let mut lgd = build_estimator(&cfg, &pre)?;
+
+        let closed = sgd_trace_closed_form(&model, &pre.data, &theta);
+        let sgd_rep = empirical_trace(sgd.as_mut(), &model, &pre.data, &theta, trials);
+        let lgd_rep = empirical_trace(lgd.as_mut(), &model, &pre.data, &theta, trials);
+        let (lhs, rhs) = lemma1_sides(lgd.as_mut(), &model, &pre.data, &theta, trials);
+
+        w.row_str(&[
+            pre.data.name.clone(),
+            regime.to_string(),
+            format!("{closed}"),
+            format!("{}", sgd_rep.trace_cov),
+            format!("{}", lgd_rep.trace_cov),
+            format!("{lhs}"),
+            format!("{rhs}"),
+            (lhs < rhs).to_string(),
+        ])?;
+        println!(
+            "[variance] {regime}: SGD trace {:.4} vs LGD trace {:.4} (lemma1 holds: {})",
+            sgd_rep.trace_cov,
+            lgd_rep.trace_cov,
+            lhs < rhs
+        );
+    }
+    w.flush()?;
+    println!("[variance] wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pareto_regime_favours_lgd() {
+        let dir = std::env::temp_dir().join("lgd-variance-test");
+        let opts = ExpOptions {
+            out_dir: dir.clone(),
+            quick: true,
+            seed: 5,
+            ..Default::default()
+        };
+        run(&opts).unwrap();
+        let text = std::fs::read_to_string(dir.join("variance.csv")).unwrap();
+        let rows: Vec<Vec<String>> = text
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(String::from).collect())
+            .collect();
+        assert_eq!(rows.len(), 2);
+        // pareto row: lemma1 holds and LGD trace < SGD trace
+        let pareto = &rows[0];
+        assert_eq!(pareto[1], "pareto");
+        let sgd_mc: f64 = pareto[3].parse().unwrap();
+        let lgd_mc: f64 = pareto[4].parse().unwrap();
+        assert!(lgd_mc < sgd_mc, "pareto: LGD trace {lgd_mc} !< SGD {sgd_mc}");
+        assert_eq!(pareto[7], "true");
+        // uniform row: traces within ~35% of each other (parity regime)
+        let uni = &rows[1];
+        let sgd_u: f64 = uni[3].parse().unwrap();
+        let lgd_u: f64 = uni[4].parse().unwrap();
+        let ratio = lgd_u / sgd_u;
+        assert!(
+            (0.4..2.5).contains(&ratio),
+            "uniform regime should be near parity, ratio {ratio}"
+        );
+    }
+}

@@ -1,0 +1,98 @@
+//! Design-choice ablation: trace of the LGD estimator covariance across
+//! hasher family × mirroring × weight clipping × projection density,
+//! against the SGD baseline. This is the experiment that justifies the
+//! repo's default configuration (DESIGN.md §Perf) — the paper's formula
+//! probability `cp^K(1−cp^K)^{l−1}/|S_b|` assumes the exact angular
+//! collision law, which very sparse projections only approximate; the
+//! ablation quantifies what that approximation costs in estimator
+//! variance.
+
+use crate::config::spec::{EstimatorKind, RunConfig};
+use crate::coordinator::trainer::build_estimator;
+use crate::core::error::Result;
+use crate::core::matrix::axpy;
+use crate::data::csv::CsvWriter;
+use crate::data::preprocess::{preprocess, PreprocessOptions};
+use crate::data::SynthSpec;
+use crate::estimator::lgd::{LgdEstimator, LgdOptions};
+use crate::estimator::variance::empirical_trace;
+use crate::experiments::ExpOptions;
+use crate::lsh::srp::{DenseSrp, SparseSrp};
+use crate::model::{LinReg, Model};
+
+/// Emit `variance_ablation.csv`.
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let path = opts.out_dir.join("variance_ablation.csv");
+    let mut w = CsvWriter::create(
+        &path,
+        &["hasher", "density", "mirror", "clip", "lgd_trace", "sgd_trace", "ratio"],
+    )?;
+    let n = if opts.quick { 500 } else { 1500 };
+    let d = 24;
+    let trials = if opts.quick { 20_000 } else { 80_000 };
+    let ds = SynthSpec::power_law("ablate", n, d, opts.seed ^ 9).generate()?;
+    let pre = preprocess(ds, &PreprocessOptions::default())?;
+    let model = LinReg;
+
+    // warm-up θ
+    let mut theta = vec![0.0f32; d];
+    {
+        let mut cfg = RunConfig::default();
+        cfg.train.estimator = EstimatorKind::Sgd;
+        cfg.train.seed = opts.seed;
+        let mut est = build_estimator(&cfg, &pre)?;
+        let mut g = vec![0.0f32; d];
+        for _ in 0..(n / 4).max(50) {
+            let dr = est.draw(&theta);
+            let (x, y) = pre.data.example(dr.index);
+            model.grad(x, y, &theta, &mut g);
+            axpy(-0.05, &g, &mut theta);
+        }
+    }
+
+    // SGD baseline
+    let sgd_trace = {
+        let mut cfg = RunConfig::default();
+        cfg.train.estimator = EstimatorKind::Sgd;
+        cfg.train.seed = opts.seed ^ 2;
+        let mut sgd = build_estimator(&cfg, &pre)?;
+        empirical_trace(sgd.as_mut(), &model, &pre.data, &theta, trials).trace_cov
+    };
+
+    let hd = pre.hashed.cols();
+    let (k, l) = (5usize, if opts.quick { 25 } else { 50 });
+    let densities = [("dense", 1.0f64), ("sparse", 0.25), ("sparse", 1.0 / 30.0)];
+    for (fam, density) in densities {
+        for mirror in [true, false] {
+            for clip in [None, Some(5.0)] {
+                let o = LgdOptions { weight_clip: clip, max_probes: 0, query_refresh: 1, mirror };
+                let trace = if fam == "dense" {
+                    let h = DenseSrp::new(hd, k, l, opts.seed ^ 3);
+                    let mut e = LgdEstimator::new(&pre, h, opts.seed ^ 4, o)?;
+                    empirical_trace(&mut e, &model, &pre.data, &theta, trials).trace_cov
+                } else {
+                    let h = SparseSrp::new(hd, k, l, density, opts.seed ^ 3);
+                    let mut e = LgdEstimator::new(&pre, h, opts.seed ^ 4, o)?;
+                    empirical_trace(&mut e, &model, &pre.data, &theta, trials).trace_cov
+                };
+                w.row_str(&[
+                    fam.into(),
+                    format!("{density:.4}"),
+                    mirror.to_string(),
+                    clip.map(|c| c.to_string()).unwrap_or_else(|| "none".into()),
+                    format!("{trace:.6}"),
+                    format!("{sgd_trace:.6}"),
+                    format!("{:.3}", trace / sgd_trace),
+                ])?;
+                println!(
+                    "[ablation] {fam} density={density:.4} mirror={mirror} clip={clip:?}: \
+                     LGD trace {trace:.4} vs SGD {sgd_trace:.4} (ratio {:.2})",
+                    trace / sgd_trace
+                );
+            }
+        }
+    }
+    w.flush()?;
+    println!("[ablation] wrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! # LGD — LSH-sampled Stochastic Gradient Descent
+//!
+//! Production-quality reproduction of *"LSH-sampling Breaks the Computation
+//! Chicken-and-egg Loop in Adaptive Stochastic Gradient Estimation"*
+//! (Chen, Xu & Shrivastava, NeurIPS 2019).
+//!
+//! Three-layer architecture:
+//! * **L3 (this crate)** — the coordination system: LSH tables, the
+//!   Algorithm-1 sampler, unbiased estimators, optimizers, the streaming
+//!   data pipeline and the experiment drivers. Python never runs here.
+//! * **L2 (`python/compile/model.py`)** — JAX compute graphs, AOT-lowered
+//!   to HLO text under `artifacts/`.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels called by L2.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod data;
+pub mod estimator;
+pub mod experiments;
+pub mod lsh;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod testkit;
+
+pub use crate::core::error::{Error, Result};

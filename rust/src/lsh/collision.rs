@@ -1,0 +1,130 @@
+//! Collision-probability formulas and the sampling probability of
+//! Algorithm 1.
+//!
+//! For SimHash the per-bit collision probability between a stored vector
+//! `x` and the query `q` is (paper eq. 14)
+//!
+//! ```text
+//! cp(x, q) = 1 − acos( x·q / (‖x‖‖q‖) ) / π
+//! ```
+//!
+//! Algorithm 1 probes uniformly-random tables until it hits a non-empty
+//! bucket; if the accepted bucket was found at the `l`-th probe and has size
+//! `S`, the probability that a *specific* point `x` was returned is
+//!
+//! ```text
+//! p(x) = cp(x,q)^K · (1 − cp(x,q)^K)^(l−1) · 1/S
+//! ```
+//!
+//! which the LGD estimator inverts for unbiasedness (Thm 1).
+
+use crate::core::matrix::angular_similarity;
+
+/// SimHash per-bit collision probability (eq. 14), clamped to [ε, 1−ε] so
+/// importance weights stay finite even for near-antipodal pairs.
+#[inline]
+pub fn simhash_cp(x: &[f32], q: &[f32]) -> f64 {
+    angular_similarity(x, q).clamp(1e-9, 1.0 - 1e-9)
+}
+
+/// Probability that `x` lands in the same K-bit bucket as the query in one
+/// table: `cp^K` (K independent hyperplanes).
+#[inline]
+pub fn bucket_match_prob(cp: f64, k: usize) -> f64 {
+    cp.powi(k as i32)
+}
+
+/// Full Algorithm-1 sampling probability: the point matched the bucket of
+/// the `l`-th probed table, missed the previous `l−1`, and won the uniform
+/// within-bucket draw among `bucket_size` members.
+#[inline]
+pub fn sampling_probability(cp: f64, k: usize, probes: usize, bucket_size: usize) -> f64 {
+    debug_assert!(probes >= 1 && bucket_size >= 1);
+    let m = bucket_match_prob(cp, k);
+    m * (1.0 - m).powi(probes as i32 - 1) / bucket_size as f64
+}
+
+/// Collision probability for the *quadratic* hash space (§2.1): hashing
+/// `T(u) = vec(u uᵀ)` makes per-bit collision monotone in `(u·v)²`, i.e. in
+/// the absolute inner product. Given raw vectors `u`, `v`, this returns the
+/// per-bit cp of their quadratic expansions without materialising them:
+/// `cos(T(u), T(v)) = (u·v)² / (‖u‖²‖v‖²)`.
+#[inline]
+pub fn quadratic_cp(u: &[f32], v: &[f32]) -> f64 {
+    use crate::core::matrix::{dot_f64, norm2};
+    let nu = norm2(u);
+    let nv = norm2(v);
+    if nu == 0.0 || nv == 0.0 {
+        return 0.5;
+    }
+    let c = dot_f64(u, v) / (nu * nv);
+    let cos_t = (c * c).clamp(-1.0, 1.0);
+    (1.0 - cos_t.acos() / std::f64::consts::PI).clamp(1e-9, 1.0 - 1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cp_is_monotone_in_cosine() {
+        // construct pairs with increasing cosine
+        let q = [1.0f32, 0.0];
+        let angles = [2.8, 2.0, 1.2, 0.6, 0.1f32];
+        let mut last = 0.0;
+        for &a in &angles {
+            let x = [a.cos(), a.sin()];
+            let cp = simhash_cp(&x, &q);
+            assert!(cp > last, "cp {cp} not increasing");
+            last = cp;
+        }
+    }
+
+    #[test]
+    fn cp_bounds() {
+        let q = [1.0f32, 0.0];
+        assert!(simhash_cp(&[1.0, 0.0], &q) > 0.999);
+        assert!(simhash_cp(&[-1.0, 0.0], &q) < 0.001);
+        assert!((simhash_cp(&[0.0, 1.0], &q) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampling_probability_decomposes() {
+        let cp = 0.8;
+        let k = 5;
+        let m = bucket_match_prob(cp, k);
+        assert!((m - 0.8f64.powi(5)).abs() < 1e-12);
+        let p1 = sampling_probability(cp, k, 1, 4);
+        assert!((p1 - m / 4.0).abs() < 1e-12);
+        let p2 = sampling_probability(cp, k, 2, 4);
+        assert!((p2 - m * (1.0 - m) / 4.0).abs() < 1e-12);
+        assert!(p2 < p1);
+    }
+
+    #[test]
+    fn sampling_probability_valid_range() {
+        for &cp in &[0.01, 0.3, 0.5, 0.9, 0.999] {
+            for probes in 1..5 {
+                for s in [1usize, 3, 100] {
+                    let p = sampling_probability(cp, 5, probes, s);
+                    assert!(p > 0.0 && p <= 1.0, "p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quadratic_cp_monotone_in_abs_inner_product() {
+        let u = [1.0f32, 0.0];
+        // |cos| equal for ±θ — quadratic map must agree
+        let a = [0.6f32.cos(), 0.6f32.sin()];
+        let b = [0.6f32.cos(), -(0.6f32.sin())];
+        assert!((quadratic_cp(&u, &a) - quadratic_cp(&u, &b)).abs() < 1e-9);
+        // larger |inner product| ⇒ larger quadratic cp
+        let far = [1.4f32.cos(), 1.4f32.sin()];
+        assert!(quadratic_cp(&u, &a) > quadratic_cp(&u, &far));
+        // antipodal = identical under the quadratic map
+        let neg = [-1.0f32, 0.0];
+        assert!(quadratic_cp(&u, &neg) > 0.999);
+    }
+}

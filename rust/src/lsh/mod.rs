@@ -1,0 +1,15 @@
+//! Locality-sensitive hashing substrate: SimHash families (dense, sparse,
+//! implicit-quadratic), (K, L) tables, the Algorithm-1 sampler, and the
+//! collision-probability formulas LGD's unbiased estimator depends on.
+
+pub mod collision;
+pub mod quadratic;
+pub mod sampler;
+pub mod srp;
+pub mod tables;
+
+pub use collision::{bucket_match_prob, quadratic_cp, sampling_probability, simhash_cp};
+pub use quadratic::QuadraticSrp;
+pub use sampler::{Draw, LshSampler, SampleCost, Sampled};
+pub use srp::{DenseSrp, SparseSrp, SrpHasher};
+pub use tables::{LshTables, TableStats};

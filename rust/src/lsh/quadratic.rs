@@ -1,0 +1,220 @@
+//! The quadratic feature map `T(·)` of §2.1.
+//!
+//! The optimal weights involve an *absolute* inner product
+//! `|[θ,−1]·[x,y]|`, which plain SimHash cannot target (its collision law is
+//! monotone in the signed inner product). The paper's fix:
+//!
+//! ```text
+//! |a·b|² = (a·b)² = ⟨vec(a aᵀ), vec(b bᵀ)⟩ = ⟨T(a), T(b)⟩
+//! ```
+//!
+//! so hashing `T(x)` and querying `T(θ)` makes collisions monotone in the
+//! absolute inner product (square is monotone on ℝ≥0; composition of
+//! monotone maps is monotone).
+//!
+//! Materialising `T(u) ∈ R^{(d+1)²}` is quadratic in memory, so besides the
+//! explicit map (used in tests and for small d) this module provides
+//! [`QuadraticSrp`]: an SRP family acting on the *implicit* expansion — each
+//! hash bit is `sign(uᵀ M u)` with a sparse random ±1 matrix `M`, costing
+//! `nnz(M)` multiply-adds and never forming `T(u)`.
+
+use crate::core::rng::{Pcg64, Rng};
+use crate::lsh::srp::SrpHasher;
+
+/// Explicit quadratic expansion `T(u) = vec(u uᵀ)` (row-major).
+pub fn expand(u: &[f32]) -> Vec<f32> {
+    let d = u.len();
+    let mut out = Vec::with_capacity(d * d);
+    for i in 0..d {
+        for j in 0..d {
+            out.push(u[i] * u[j]);
+        }
+    }
+    out
+}
+
+/// Inner product in the expanded space, computed implicitly:
+/// `⟨T(a), T(b)⟩ = (a·b)²`.
+pub fn expanded_inner(a: &[f32], b: &[f32]) -> f64 {
+    let ip = crate::core::matrix::dot_f64(a, b);
+    ip * ip
+}
+
+/// Sparse symmetric-free random ±1 "matrix" acting as one hyperplane in the
+/// expanded space: a list of (i, j, sign) entries.
+#[derive(Debug, Clone, Default)]
+struct SparseQuadPlane {
+    ii: Vec<u32>,
+    jj: Vec<u32>,
+    sign: Vec<f32>,
+}
+
+impl SparseQuadPlane {
+    #[inline]
+    fn form(&self, u: &[f32]) -> f64 {
+        let mut s = 0.0f64;
+        for t in 0..self.ii.len() {
+            s += (self.sign[t] * u[self.ii[t] as usize] * u[self.jj[t] as usize]) as f64;
+        }
+        s
+    }
+}
+
+/// SRP over the implicit quadratic expansion: bit = `sign(uᵀ M u)` with
+/// sparse ±1 `M`. Equivalent to running [`super::srp::SparseSrp`] on
+/// `T(u)` without materialising it.
+#[derive(Debug, Clone)]
+pub struct QuadraticSrp {
+    dim: usize,
+    k: usize,
+    l: usize,
+    density: f64,
+    planes: Vec<SparseQuadPlane>,
+}
+
+impl QuadraticSrp {
+    /// Fresh family over raw dimension `dim` (expanded dim is `dim²`).
+    pub fn new(dim: usize, k: usize, l: usize, density: f64, seed: u64) -> Self {
+        assert!(k > 0 && k <= 32);
+        assert!(l > 0);
+        assert!(density > 0.0 && density <= 1.0);
+        let mut rng = Pcg64::new(seed, 0x5150_5f51); // "QP_Q"
+        let d2 = dim * dim;
+        let expect = ((d2 as f64 * density).ceil() as usize).max(1);
+        let mut planes = Vec::with_capacity(l * k);
+        for _ in 0..l * k {
+            let mut p = SparseQuadPlane::default();
+            // Sample expected-count entries (with replacement — duplicates
+            // merely double a coefficient, preserving sign-randomness).
+            for _ in 0..expect {
+                let e = rng.index(d2);
+                p.ii.push((e / dim) as u32);
+                p.jj.push((e % dim) as u32);
+                p.sign.push(if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 });
+            }
+            planes.push(p);
+        }
+        QuadraticSrp { dim, k, l, density, planes }
+    }
+}
+
+impl SrpHasher for QuadraticSrp {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn l(&self) -> usize {
+        self.l
+    }
+
+    #[inline]
+    fn code(&self, table: usize, x: &[f32]) -> u32 {
+        debug_assert_eq!(x.len(), self.dim);
+        let base = table * self.k;
+        let mut c = 0u32;
+        for b in 0..self.k {
+            let s = self.planes[base + b].form(x);
+            c = (c << 1) | (s >= 0.0) as u32;
+        }
+        c
+    }
+
+    fn mults_per_code(&self) -> f64 {
+        // two multiplies per sparse entry (sign·u_i·u_j)
+        2.0 * self.k as f64 * (self.dim * self.dim) as f64 * self.density
+    }
+
+    fn collision_prob(&self, x: &[f32], q: &[f32]) -> f64 {
+        // collision law of the expanded space: monotone in (x·q)², i.e. in
+        // the absolute inner product — the paper's T(·) fix for eq. 4
+        crate::lsh::collision::quadratic_cp(x, q)
+    }
+
+    fn collision_prob_normed(&self, x: &[f32], q: &[f32], nx: f64, nq: f64) -> f64 {
+        if nx == 0.0 || nq == 0.0 {
+            return 0.5;
+        }
+        let c = crate::core::matrix::dot_fast(x, q) as f64 / (nx * nq);
+        let cos_t = (c * c).clamp(-1.0, 1.0);
+        (1.0 - cos_t.acos() / std::f64::consts::PI).clamp(1e-9, 1.0 - 1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::matrix::{dot_f64, normalize};
+
+    #[test]
+    fn expand_matches_outer_product() {
+        let u = [1.0f32, 2.0, -3.0];
+        let t = expand(&u);
+        assert_eq!(t.len(), 9);
+        assert_eq!(t[0], 1.0); // u0*u0
+        assert_eq!(t[1], 2.0); // u0*u1
+        assert_eq!(t[5], -6.0); // u1*u2
+        assert_eq!(t[8], 9.0); // u2*u2
+    }
+
+    #[test]
+    fn expanded_inner_is_square_of_inner() {
+        let a = [0.5f32, -1.0, 2.0];
+        let b = [1.0f32, 3.0, 0.25];
+        let explicit = dot_f64(&expand(&a), &expand(&b));
+        let implicit = expanded_inner(&a, &b);
+        assert!((explicit - implicit).abs() < 1e-6);
+        let ip = dot_f64(&a, &b);
+        assert!((implicit - ip * ip).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quadratic_hash_sign_invariant() {
+        // T(u) = T(−u): codes must agree for antipodal inputs — exactly the
+        // property that makes |inner product| hashable.
+        let h = QuadraticSrp::new(8, 5, 6, 0.2, 42);
+        let mut rng = Pcg64::seeded(5);
+        for _ in 0..20 {
+            let mut u: Vec<f32> = (0..8).map(|_| rng.gaussian() as f32).collect();
+            normalize(&mut u);
+            let neg: Vec<f32> = u.iter().map(|v| -v).collect();
+            for t in 0..6 {
+                assert_eq!(h.code(t, &u), h.code(t, &neg), "quadratic hash not sign-invariant");
+            }
+        }
+    }
+
+    /// Collision rate of QuadraticSrp increases with |cos| — the monotone
+    /// adaptive-sampling property for the absolute inner product.
+    #[test]
+    fn quadratic_collisions_monotone_in_abs_cosine() {
+        let dim = 10;
+        let (k, l) = (1usize, 1500usize);
+        let h = QuadraticSrp::new(dim, k, l, 0.3, 9);
+        let mut rng = Pcg64::seeded(10);
+        let mut x: Vec<f32> = (0..dim).map(|_| rng.gaussian() as f32).collect();
+        normalize(&mut x);
+        // Build queries at decreasing |cosine| to x.
+        let mut rates = Vec::new();
+        for &blend in &[0.95f32, 0.6, 0.2] {
+            let mut q: Vec<f32> = (0..dim).map(|_| rng.gaussian() as f32).collect();
+            normalize(&mut q);
+            let mut y: Vec<f32> = (0..dim).map(|i| blend * x[i] + (1.0 - blend) * q[i]).collect();
+            normalize(&mut y);
+            let hits = (0..l).filter(|&t| h.code(t, &x) == h.code(t, &y)).count();
+            rates.push(hits as f64 / l as f64);
+        }
+        assert!(
+            rates[0] > rates[1] && rates[1] > rates[2],
+            "collision rates not monotone: {rates:?}"
+        );
+    }
+
+    #[test]
+    fn cost_model_scales_with_density() {
+        let a = QuadraticSrp::new(20, 5, 2, 0.1, 1);
+        let b = QuadraticSrp::new(20, 5, 2, 0.2, 1);
+        assert!(b.mults_per_code() > a.mults_per_code());
+    }
+}

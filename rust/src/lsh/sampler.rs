@@ -1,0 +1,431 @@
+//! Algorithm 1 — the LSH sampler — plus the Appendix B.2 minibatch variant
+//! and the §2.2.1 near-neighbor-query cost comparator.
+//!
+//! The sampler probes uniformly-random tables until it finds a non-empty
+//! bucket for the query, picks a uniform member of that bucket, and returns
+//! the member together with its *exact* sampling probability
+//! `p = cp^K (1−cp^K)^{l−1} / |S_b|` — the quantity LGD inverts for
+//! unbiasedness.
+
+use crate::core::matrix::Matrix;
+use crate::core::rng::{Pcg64, Rng};
+use crate::lsh::collision::sampling_probability;
+use crate::lsh::srp::SrpHasher;
+use crate::lsh::tables::LshTables;
+
+/// One sample drawn by Algorithm 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Draw {
+    /// Index of the sampled point in the hashed dataset.
+    pub index: usize,
+    /// Exact probability with which this point was returned.
+    pub prob: f64,
+    /// Number of tables probed before a non-empty bucket was found (`l`).
+    pub probes: usize,
+    /// Size of the accepted bucket (`|S_b|`).
+    pub bucket_size: usize,
+}
+
+/// Cost counters for one query — feeds the §2.2 running-time table.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SampleCost {
+    /// Meta-hash codes computed (one per probed table).
+    pub codes: usize,
+    /// Multiplication-equivalent work of those codes.
+    pub mults: f64,
+    /// Random numbers drawn.
+    pub randoms: usize,
+}
+
+/// Outcome of a sampling attempt.
+#[derive(Debug, Clone)]
+pub enum Sampled {
+    /// Normal path: a point with its probability.
+    Hit(Draw),
+    /// All probed buckets were empty (pathological K too large / tiny data);
+    /// the caller should fall back to a uniform draw. Counted by the
+    /// coordinator's metrics — with the paper's K=5 this is essentially
+    /// never hit.
+    Exhausted { probes: usize },
+}
+
+/// Cached query state for amortising hash computations across draws.
+///
+/// The query `[θ_t, −1]` drifts slowly between SGD steps, so its K-bit
+/// table codes can be reused for several draws ("stale query"). The
+/// sampling distribution is then the one *defined by the cached query*,
+/// whose probabilities we compute exactly — importance weighting keeps the
+/// estimator unbiased for any fixed proposal, so staleness costs nothing
+/// in expectation, only (slightly) in adaptivity. This is the same
+/// amortisation Appendix E applies to BERT representations, and it is what
+/// brings the per-iteration hash cost down to the paper's ~1.5× SGD.
+#[derive(Debug, Clone, Default)]
+pub struct QueryCache {
+    /// The query the codes were computed for.
+    pub query: Vec<f32>,
+    /// Lazily computed per-table codes of `query`.
+    codes: Vec<Option<u32>>,
+    /// Draws served since the last refresh.
+    pub age: usize,
+    /// ‖query‖ (precomputed at refresh for the cp hot path).
+    pub norm: f64,
+}
+
+impl QueryCache {
+    /// Replace the cached query (clears the codes).
+    pub fn refresh(&mut self, query: &[f32], l: usize) {
+        self.query.clear();
+        self.query.extend_from_slice(query);
+        self.codes.clear();
+        self.codes.resize(l, None);
+        self.age = 0;
+        self.norm = crate::core::matrix::norm2(query);
+    }
+
+    /// True if `refresh` has never been called.
+    pub fn is_empty(&self) -> bool {
+        self.query.is_empty()
+    }
+}
+
+/// The LSH sampler: borrows the tables and the hashed vectors (needed to
+/// compute exact collision probabilities at draw time).
+pub struct LshSampler<'a, H: SrpHasher> {
+    tables: &'a LshTables<H>,
+    /// Hashed vectors, row i = vector inserted with id i.
+    hashed: &'a Matrix,
+    /// Precomputed ‖row_i‖ (cp hot path).
+    norms: std::borrow::Cow<'a, [f64]>,
+    /// Probe cap: Algorithm 1 as written loops forever; we cap at
+    /// `max_probes` (default 4·L) and report `Exhausted`.
+    max_probes: usize,
+}
+
+impl<'a, H: SrpHasher> LshSampler<'a, H> {
+    /// Wrap tables + the matrix of the vectors that were inserted into them.
+    pub fn new(tables: &'a LshTables<H>, hashed: &'a Matrix) -> Self {
+        let norms: Vec<f64> =
+            (0..hashed.rows()).map(|i| crate::core::matrix::norm2(hashed.row(i))).collect();
+        Self::with_norms(tables, hashed, std::borrow::Cow::Owned(norms))
+    }
+
+    /// Construct with precomputed row norms (hot path: callers that build a
+    /// sampler per draw precompute norms once and lend them here).
+    pub fn with_norms(
+        tables: &'a LshTables<H>,
+        hashed: &'a Matrix,
+        norms: std::borrow::Cow<'a, [f64]>,
+    ) -> Self {
+        debug_assert_eq!(norms.len(), hashed.rows());
+        let max_probes = 4 * tables.hasher().l();
+        LshSampler { tables, hashed, norms, max_probes }
+    }
+
+    /// Override the probe cap.
+    pub fn with_max_probes(mut self, cap: usize) -> Self {
+        self.max_probes = cap.max(1);
+        self.max_probes = self.max_probes.max(1);
+        self
+    }
+
+    /// Algorithm 1. Returns the draw and accumulates cost counters.
+    pub fn sample(&self, query: &[f32], rng: &mut Pcg64, cost: &mut SampleCost) -> Sampled {
+        let l_tables = self.tables.hasher().l();
+        let k = self.tables.hasher().k();
+        let mut probes = 0usize;
+        loop {
+            probes += 1;
+            if probes > self.max_probes {
+                return Sampled::Exhausted { probes: probes - 1 };
+            }
+            // ti = random(1, L)
+            let ti = rng.index(l_tables);
+            cost.randoms += 1;
+            let bucket = self.tables.query_bucket(ti, query);
+            cost.codes += 1;
+            cost.mults += self.tables.hasher().mults_per_code();
+            if bucket.is_empty() {
+                continue;
+            }
+            // x = random element of the bucket
+            let pick = rng.index(bucket.len());
+            cost.randoms += 1;
+            let index = bucket[pick] as usize;
+            let cp = self.tables.hasher().collision_prob(self.hashed.row(index), query);
+            let prob = sampling_probability(cp, k, probes, bucket.len());
+            return Sampled::Hit(Draw { index, prob, probes, bucket_size: bucket.len() });
+        }
+    }
+
+    /// Algorithm 1 against a cached query: identical distribution to
+    /// [`Self::sample`] with `cache.query`, but table codes are computed at
+    /// most once per (cache refresh, table) — the §Perf amortisation.
+    pub fn sample_cached(
+        &self,
+        cache: &mut QueryCache,
+        rng: &mut Pcg64,
+        cost: &mut SampleCost,
+    ) -> Sampled {
+        debug_assert!(!cache.is_empty(), "QueryCache::refresh before sampling");
+        let l_tables = self.tables.hasher().l();
+        let k = self.tables.hasher().k();
+        let mut probes = 0usize;
+        cache.age += 1;
+        loop {
+            probes += 1;
+            if probes > self.max_probes {
+                return Sampled::Exhausted { probes: probes - 1 };
+            }
+            let ti = rng.index(l_tables);
+            cost.randoms += 1;
+            let code = match cache.codes[ti] {
+                Some(c) => c,
+                None => {
+                    let c = self.tables.hasher().code(ti, &cache.query);
+                    cost.codes += 1;
+                    cost.mults += self.tables.hasher().mults_per_code();
+                    cache.codes[ti] = Some(c);
+                    c
+                }
+            };
+            let bucket = self.tables.bucket(ti, code);
+            if bucket.is_empty() {
+                continue;
+            }
+            let pick = rng.index(bucket.len());
+            cost.randoms += 1;
+            let index = bucket[pick] as usize;
+            let cp = self.tables.hasher().collision_prob_normed(
+                self.hashed.row(index),
+                &cache.query,
+                self.norms[index],
+                cache.norm,
+            );
+            let prob = sampling_probability(cp, k, probes, bucket.len());
+            return Sampled::Hit(Draw { index, prob, probes, bucket_size: bucket.len() });
+        }
+    }
+
+    /// Appendix B.2 minibatch sampling: draw `m` points. If the first
+    /// non-empty bucket holds fewer than `m`, keep probing further tables
+    /// and drawing from their buckets. Draws within a bucket are *with
+    /// replacement* so each returned `Draw` carries an exact per-draw
+    /// probability (keeps Thm 1 unbiasedness for the mean-of-draws
+    /// estimator).
+    pub fn sample_batch(
+        &self,
+        query: &[f32],
+        m: usize,
+        rng: &mut Pcg64,
+        cost: &mut SampleCost,
+        out: &mut Vec<Draw>,
+    ) {
+        out.clear();
+        let l_tables = self.tables.hasher().l();
+        let k = self.tables.hasher().k();
+        let mut probes = 0usize;
+        while out.len() < m && probes < self.max_probes {
+            probes += 1;
+            let ti = rng.index(l_tables);
+            cost.randoms += 1;
+            let bucket = self.tables.query_bucket(ti, query);
+            cost.codes += 1;
+            cost.mults += self.tables.hasher().mults_per_code();
+            if bucket.is_empty() {
+                continue;
+            }
+            let want = m - out.len();
+            // B.2: take up to `want` from this bucket (with replacement).
+            let take = want.min(bucket.len().max(1));
+            for _ in 0..take {
+                let pick = rng.index(bucket.len());
+                cost.randoms += 1;
+                let index = bucket[pick] as usize;
+                let cp = self.tables.hasher().collision_prob(self.hashed.row(index), query);
+                let prob = sampling_probability(cp, k, probes, bucket.len());
+                out.push(Draw { index, prob, probes, bucket_size: bucket.len() });
+            }
+        }
+    }
+
+    /// §2.2.1 comparator: a full near-neighbor query — candidate generation
+    /// over all L buckets plus distance filtering. Returns the best
+    /// candidate and the number of candidate distance evaluations performed
+    /// (the cost LGD avoids). This is intentionally the *expensive* path.
+    pub fn nn_query(&self, query: &[f32]) -> (Option<usize>, usize) {
+        let cands = self.tables.candidate_union(query);
+        let evals = cands.len();
+        let mut best: Option<(usize, f64)> = None;
+        for id in cands {
+            let sim = crate::core::matrix::cosine(self.hashed.row(id as usize), query);
+            match best {
+                Some((_, s)) if s >= sim => {}
+                _ => best = Some((id as usize, sim)),
+            }
+        }
+        (best.map(|(i, _)| i), evals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::matrix::normalize;
+    use crate::lsh::srp::DenseSrp;
+
+    /// Build a small hashed dataset of unit vectors.
+    fn setup(n: usize, d: usize, k: usize, l: usize, seed: u64) -> (LshTables<DenseSrp>, Matrix) {
+        let mut rng = Pcg64::seeded(seed);
+        let mut m = Matrix::zeros(0, 0);
+        for _ in 0..n {
+            let mut v: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            normalize(&mut v);
+            m.push_row(&v).unwrap();
+        }
+        let h = DenseSrp::new(d, k, l, seed ^ 0xABCD);
+        let t = LshTables::build(h, (0..n).map(|i| m.row(i))).unwrap();
+        (t, m)
+    }
+
+    #[test]
+    fn sample_returns_valid_draw() {
+        let (t, m) = setup(200, 16, 4, 20, 1);
+        let s = LshSampler::new(&t, &m);
+        let mut rng = Pcg64::seeded(2);
+        let mut q: Vec<f32> = (0..16).map(|_| rng.gaussian() as f32).collect();
+        normalize(&mut q);
+        let mut cost = SampleCost::default();
+        for _ in 0..200 {
+            match s.sample(&q, &mut rng, &mut cost) {
+                Sampled::Hit(d) => {
+                    assert!(d.index < 200);
+                    assert!(d.prob > 0.0 && d.prob <= 1.0);
+                    assert!(d.probes >= 1);
+                    assert!(d.bucket_size >= 1);
+                }
+                Sampled::Exhausted { .. } => panic!("should not exhaust with K=4"),
+            }
+        }
+        assert!(cost.codes >= 200);
+        assert!(cost.randoms >= 400);
+    }
+
+    /// Exact-distribution check of the sampler implementation. Conditional
+    /// on a fixed table build, Algorithm 1 (probe uniformly random tables
+    /// with replacement until non-empty, then uniform within bucket) draws
+    /// point i with probability
+    /// `p_true(i) = (1/#nonempty) Σ_{t nonempty} 1{i ∈ B_t(q)} / |B_t(q)|`.
+    /// Empirical frequencies must match this enumeration. (Theorem 1's
+    /// formula-based probability is an *ensemble* quantity; its role in the
+    /// unbiased estimator is validated in `estimator::lgd` tests.)
+    #[test]
+    fn empirical_frequency_matches_exact_conditional_distribution() {
+        let (t, m) = setup(60, 8, 3, 16, 3);
+        let s = LshSampler::new(&t, &m);
+        let mut rng = Pcg64::seeded(4);
+        let mut q: Vec<f32> = (0..8).map(|_| rng.gaussian() as f32).collect();
+        normalize(&mut q);
+
+        // Enumerate the exact conditional distribution.
+        let mut p_true = vec![0.0f64; 60];
+        let mut nonempty = 0usize;
+        for ti in 0..16 {
+            let b = t.query_bucket(ti, &q);
+            if b.is_empty() {
+                continue;
+            }
+            nonempty += 1;
+            for &id in b {
+                p_true[id as usize] += 1.0 / b.len() as f64;
+            }
+        }
+        assert!(nonempty > 0);
+        for p in p_true.iter_mut() {
+            *p /= nonempty as f64;
+        }
+
+        let trials = 120_000;
+        let mut counts = vec![0usize; 60];
+        let mut cost = SampleCost::default();
+        for _ in 0..trials {
+            match s.sample(&q, &mut rng, &mut cost) {
+                Sampled::Hit(d) => counts[d.index] += 1,
+                Sampled::Exhausted { .. } => panic!("tables are non-empty"),
+            }
+        }
+        for i in 0..60 {
+            let freq = counts[i] as f64 / trials as f64;
+            let expect = p_true[i];
+            if expect == 0.0 {
+                assert_eq!(counts[i], 0, "point {i} drawn despite p_true = 0");
+            } else if expect > 0.005 {
+                let rel = (freq - expect).abs() / expect;
+                assert!(rel < 0.15, "point {i}: freq {freq:.5} vs exact {expect:.5}");
+            }
+        }
+    }
+
+    /// The headline *adaptivity* property: points similar to the query are
+    /// drawn more often than dissimilar ones.
+    #[test]
+    fn sampling_is_monotone_in_similarity() {
+        let (t, m) = setup(300, 12, 5, 30, 7);
+        let s = LshSampler::new(&t, &m);
+        let mut rng = Pcg64::seeded(8);
+        // query = a point of the dataset, so similarity varies widely
+        let q: Vec<f32> = m.row(0).to_vec();
+        let mut counts = vec![0usize; 300];
+        let mut cost = SampleCost::default();
+        for _ in 0..40_000 {
+            if let Sampled::Hit(d) = s.sample(&q, &mut rng, &mut cost) {
+                counts[d.index] += 1;
+            }
+        }
+        let sims: Vec<f64> = (0..300).map(|i| crate::core::matrix::cosine(m.row(i), &q)).collect();
+        let freqs: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+        let rho = crate::core::stats::spearman(&sims, &freqs);
+        assert!(rho > 0.4, "sampling frequency not monotone in similarity: rho={rho}");
+    }
+
+    #[test]
+    fn batch_sampling_returns_m_draws() {
+        let (t, m) = setup(100, 10, 3, 10, 9);
+        let s = LshSampler::new(&t, &m);
+        let mut rng = Pcg64::seeded(10);
+        let q: Vec<f32> = m.row(5).to_vec();
+        let mut cost = SampleCost::default();
+        let mut out = Vec::new();
+        s.sample_batch(&q, 32, &mut rng, &mut cost, &mut out);
+        assert_eq!(out.len(), 32);
+        for d in &out {
+            assert!(d.prob > 0.0 && d.prob <= 1.0);
+            assert!(d.index < 100);
+        }
+    }
+
+    #[test]
+    fn exhausted_on_empty_tables() {
+        let h = DenseSrp::new(4, 3, 5, 0);
+        let t: LshTables<DenseSrp> = LshTables::new(h);
+        let m = Matrix::zeros(0, 0);
+        let s = LshSampler::new(&t, &m).with_max_probes(8);
+        let mut rng = Pcg64::seeded(1);
+        let mut cost = SampleCost::default();
+        match s.sample(&[1.0, 0.0, 0.0, 0.0], &mut rng, &mut cost) {
+            Sampled::Exhausted { probes } => assert_eq!(probes, 8),
+            _ => panic!("must exhaust on empty tables"),
+        }
+    }
+
+    #[test]
+    fn nn_query_touches_more_candidates_than_sampling() {
+        let (t, m) = setup(500, 12, 4, 40, 11);
+        let s = LshSampler::new(&t, &m);
+        let q: Vec<f32> = m.row(42).to_vec();
+        let (best, evals) = s.nn_query(&q);
+        // The query point itself collides with itself in all 40 tables.
+        assert_eq!(best, Some(42), "nn query should find the identical point");
+        // §2.2.1: candidate generation is far more work than one probe.
+        assert!(evals > 10, "nn candidate set suspiciously small: {evals}");
+    }
+}

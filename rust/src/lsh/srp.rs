@@ -1,0 +1,466 @@
+//! Signed random projections (SimHash) — dense and sparse variants.
+//!
+//! A hasher owns `L × K` hyperplanes. Table `t`'s *meta-hash* of `x` is the
+//! K-bit code whose bit `b` is `sign(⟨w_{t,b}, x⟩) ≥ 0` (eq. 13 of the
+//! paper). Collision probability per bit is `1 − θ/π` (eq. 14), monotone in
+//! cosine similarity — the property LGD's monotone-sampling argument needs.
+//!
+//! The paper's running-time claim (§2.2) relies on *very sparse* random
+//! projections (density 1/30, ±1 entries): computing all `K` hash bits then
+//! costs `K·d·density ≈ d/6` multiplications — far below the `d`
+//! multiplications of a gradient update. [`SparseSrp`] implements exactly
+//! that cost model; [`DenseSrp`] is the reference implementation the sparse
+//! one is validated against.
+
+use crate::core::matrix::dot_f64;
+use crate::core::rng::{Pcg64, Rng};
+
+/// A family of `L` K-bit SimHash meta-hash functions over `R^dim`.
+pub trait SrpHasher: Send + Sync {
+    /// Input dimensionality.
+    fn dim(&self) -> usize;
+    /// Bits per table (meta-hash width). Must be ≤ 32.
+    fn k(&self) -> usize;
+    /// Number of tables.
+    fn l(&self) -> usize;
+    /// K-bit code of `x` under table `t`'s meta-hash.
+    fn code(&self, table: usize, x: &[f32]) -> u32;
+    /// Expected multiplications to compute one table's K-bit code — the
+    /// §2.2 cost model, reported by the sampling benchmarks.
+    fn mults_per_code(&self) -> f64;
+
+    /// Per-bit collision probability between a stored vector and a query
+    /// under THIS family's geometry. Linear SimHash families use the
+    /// angular law `1 − θ/π` (eq. 14); the quadratic family overrides this
+    /// with the law of the expanded space. The Algorithm-1 probability
+    /// (and therefore Thm 1's unbiased weights) must use this, not a fixed
+    /// formula.
+    fn collision_prob(&self, x: &[f32], q: &[f32]) -> f64 {
+        crate::lsh::collision::simhash_cp(x, q)
+    }
+
+    /// Collision probability given precomputed norms — the hot-path variant
+    /// (saves recomputing ‖x‖ and ‖q‖ on every draw). Same law as
+    /// [`Self::collision_prob`].
+    fn collision_prob_normed(&self, x: &[f32], q: &[f32], nx: f64, nq: f64) -> f64 {
+        if nx == 0.0 || nq == 0.0 {
+            return 0.5;
+        }
+        let cos = (crate::core::matrix::dot_fast(x, q) as f64 / (nx * nq)).clamp(-1.0, 1.0);
+        (1.0 - cos.acos() / std::f64::consts::PI).clamp(1e-9, 1.0 - 1e-9)
+    }
+
+    /// Codes for all L tables (preprocessing path).
+    fn codes_all(&self, x: &[f32], out: &mut Vec<u32>) {
+        out.clear();
+        for t in 0..self.l() {
+            out.push(self.code(t, x));
+        }
+    }
+}
+
+/// Dense SimHash: i.i.d. N(0,1) hyperplanes. Exact collision probability
+/// `1 − θ/π` per bit.
+#[derive(Debug, Clone)]
+pub struct DenseSrp {
+    dim: usize,
+    k: usize,
+    l: usize,
+    /// (l*k) × dim row-major plane matrix.
+    planes: Vec<f32>,
+}
+
+impl DenseSrp {
+    /// Draw a fresh family. Panics if `k > 32` or `k == 0`.
+    pub fn new(dim: usize, k: usize, l: usize, seed: u64) -> Self {
+        assert!(k > 0 && k <= 32, "meta-hash width k={k} must be in 1..=32");
+        assert!(l > 0, "need at least one table");
+        let mut rng = Pcg64::new(seed, 0x5250_5f44); // "RP_D"
+        let mut planes = vec![0.0f32; l * k * dim];
+        for v in planes.iter_mut() {
+            *v = rng.gaussian() as f32;
+        }
+        DenseSrp { dim, k, l, planes }
+    }
+
+    #[inline]
+    fn plane(&self, table: usize, bit: usize) -> &[f32] {
+        let r = table * self.k + bit;
+        &self.planes[r * self.dim..(r + 1) * self.dim]
+    }
+}
+
+impl SrpHasher for DenseSrp {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn l(&self) -> usize {
+        self.l
+    }
+
+    #[inline]
+    fn code(&self, table: usize, x: &[f32]) -> u32 {
+        debug_assert_eq!(x.len(), self.dim);
+        let mut c = 0u32;
+        for b in 0..self.k {
+            let s = dot_f64(self.plane(table, b), x);
+            c = (c << 1) | (s >= 0.0) as u32;
+        }
+        c
+    }
+
+    fn mults_per_code(&self) -> f64 {
+        (self.k * self.dim) as f64
+    }
+}
+
+/// One sparse ±1 projection row: indices whose coefficient is +1 / −1.
+#[derive(Debug, Clone, Default)]
+struct SparseRow {
+    pos: Vec<u32>,
+    neg: Vec<u32>,
+}
+
+impl SparseRow {
+    #[inline]
+    fn project(&self, x: &[f32]) -> f64 {
+        let mut s = 0.0f64;
+        for &i in &self.pos {
+            s += x[i as usize] as f64;
+        }
+        for &i in &self.neg {
+            s -= x[i as usize] as f64;
+        }
+        s
+    }
+
+    fn nnz(&self) -> usize {
+        self.pos.len() + self.neg.len()
+    }
+}
+
+/// Calibrated per-bit collision law: `cp` as a function of cosine
+/// similarity, measured empirically on the actual plane family.
+///
+/// Very sparse projections do NOT follow the dense angular law `1 − θ/π`:
+/// with ~3 nonzeros per plane the sign statistic is far from Gaussian and
+/// the collision probability is strongly compressed toward 1/2. Using the
+/// analytic law in Algorithm 1's probability then mis-weights draws by
+/// orders of magnitude (see `experiments::variance_ablation`). The curve
+/// below is estimated once at construction (synthetic pairs at controlled
+/// cosine, counting actual bit agreements over all K·L planes), smoothed to
+/// be monotone, and interpolated at query time — an O(1) lookup on top of
+/// the O(d) cosine the probability computation already needs.
+#[derive(Debug, Clone)]
+pub struct CalibCurve {
+    /// cp at bin centers over cos ∈ [−1, 1].
+    bins: Vec<f64>,
+}
+
+impl CalibCurve {
+    /// Number of cosine bins.
+    pub const BINS: usize = 41;
+
+    /// Evaluate by linear interpolation, clamped to (0, 1).
+    pub fn eval(&self, cos: f64) -> f64 {
+        let x = ((cos.clamp(-1.0, 1.0) + 1.0) / 2.0) * (Self::BINS - 1) as f64;
+        let lo = x.floor() as usize;
+        let hi = (lo + 1).min(Self::BINS - 1);
+        let w = x - lo as f64;
+        (self.bins[lo] * (1.0 - w) + self.bins[hi] * w).clamp(1e-9, 1.0 - 1e-9)
+    }
+}
+
+/// Very sparse random projections (Achlioptas / Li-Hastie-Church style):
+/// each coefficient is `+1` or `−1` with probability `density/2` each, `0`
+/// otherwise. Additions only — no multiplications — which is how the paper
+/// gets "d/30 multiplications in expectation for all hashes".
+#[derive(Debug, Clone)]
+pub struct SparseSrp {
+    dim: usize,
+    k: usize,
+    l: usize,
+    density: f64,
+    rows: Vec<SparseRow>,
+    calib: CalibCurve,
+}
+
+impl SparseSrp {
+    /// Draw a fresh sparse family with the given nonzero `density`
+    /// (paper default: 1/30). Each row is guaranteed ≥ 1 nonzero so no hash
+    /// bit is constant.
+    pub fn new(dim: usize, k: usize, l: usize, density: f64, seed: u64) -> Self {
+        assert!(k > 0 && k <= 32, "meta-hash width k={k} must be in 1..=32");
+        assert!(l > 0, "need at least one table");
+        assert!(density > 0.0 && density <= 1.0, "density {density} out of (0,1]");
+        let mut rng = Pcg64::new(seed, 0x5250_5f53); // "RP_S"
+        let mut rows = Vec::with_capacity(l * k);
+        for _ in 0..l * k {
+            let mut row = SparseRow::default();
+            for i in 0..dim {
+                if rng.bernoulli(density) {
+                    if rng.next_u64() & 1 == 0 {
+                        row.pos.push(i as u32);
+                    } else {
+                        row.neg.push(i as u32);
+                    }
+                }
+            }
+            if row.nnz() == 0 {
+                // Force one nonzero so the bit carries signal.
+                let i = rng.index(dim) as u32;
+                if rng.next_u64() & 1 == 0 {
+                    row.pos.push(i);
+                } else {
+                    row.neg.push(i);
+                }
+            }
+            rows.push(row);
+        }
+        let mut h = SparseSrp { dim, k, l, density, rows, calib: CalibCurve { bins: Vec::new() } };
+        h.calib = h.calibrate(&mut rng);
+        h
+    }
+
+    /// Measure this family's per-bit collision law: for each cosine bin,
+    /// draw synthetic pairs at that exact cosine and count actual sign
+    /// agreements over every plane in the family. A monotone (isotonic)
+    /// pass smooths Monte-Carlo noise. One-time cost ~1M adds.
+    fn calibrate(&self, rng: &mut Pcg64) -> CalibCurve {
+        let bins = CalibCurve::BINS;
+        let pairs_per_bin = 12usize;
+        let planes = &self.rows;
+        let mut curve = vec![0.0f64; bins];
+        for b in 0..bins {
+            let cos_t = -1.0 + 2.0 * b as f64 / (bins - 1) as f64;
+            let mut agree = 0u64;
+            let mut total = 0u64;
+            for _ in 0..pairs_per_bin {
+                // unit u and unit v with <u,v> = cos_t
+                let mut u: Vec<f32> = (0..self.dim).map(|_| rng.gaussian() as f32).collect();
+                crate::core::matrix::normalize(&mut u);
+                let mut w: Vec<f32> = (0..self.dim).map(|_| rng.gaussian() as f32).collect();
+                // orthogonalise w against u
+                let uw = crate::core::matrix::dot_f64(&u, &w);
+                for i in 0..self.dim {
+                    w[i] -= uw as f32 * u[i];
+                }
+                crate::core::matrix::normalize(&mut w);
+                let s = (1.0 - cos_t * cos_t).max(0.0).sqrt();
+                let v: Vec<f32> = (0..self.dim)
+                    .map(|i| (cos_t as f32) * u[i] + (s as f32) * w[i])
+                    .collect();
+                for p in planes.iter() {
+                    let su = p.project(&u) >= 0.0;
+                    let sv = p.project(&v) >= 0.0;
+                    agree += (su == sv) as u64;
+                    total += 1;
+                }
+            }
+            curve[b] = agree as f64 / total.max(1) as f64;
+        }
+        // isotonic (pool adjacent violators) to enforce monotonicity in cos
+        let mut level: Vec<f64> = Vec::new();
+        let mut weight: Vec<f64> = Vec::new();
+        for &c in &curve {
+            level.push(c);
+            weight.push(1.0);
+            while level.len() > 1 && level[level.len() - 2] > level[level.len() - 1] {
+                let (l1, w1) = (level.pop().unwrap(), weight.pop().unwrap());
+                let (l0, w0) = (level.pop().unwrap(), weight.pop().unwrap());
+                level.push((l0 * w0 + l1 * w1) / (w0 + w1));
+                weight.push(w0 + w1);
+            }
+        }
+        let mut bins_out = Vec::with_capacity(bins);
+        for (lv, wt) in level.iter().zip(&weight) {
+            for _ in 0..(*wt as usize) {
+                bins_out.push(*lv);
+            }
+        }
+        bins_out.resize(bins, *bins_out.last().unwrap_or(&0.5));
+        CalibCurve { bins: bins_out }
+    }
+
+    /// The calibrated collision curve (diagnostics / tests).
+    pub fn calibration(&self) -> &CalibCurve {
+        &self.calib
+    }
+
+    /// Paper-default family: density 1/30.
+    pub fn paper_default(dim: usize, k: usize, l: usize, seed: u64) -> Self {
+        Self::new(dim, k, l, 1.0 / 30.0, seed)
+    }
+
+    /// Mean nonzeros per row (diagnostic).
+    pub fn mean_nnz(&self) -> f64 {
+        self.rows.iter().map(|r| r.nnz()).sum::<usize>() as f64 / self.rows.len() as f64
+    }
+
+    /// Configured density.
+    pub fn density(&self) -> f64 {
+        self.density
+    }
+}
+
+impl SrpHasher for SparseSrp {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn l(&self) -> usize {
+        self.l
+    }
+
+    #[inline]
+    fn code(&self, table: usize, x: &[f32]) -> u32 {
+        debug_assert_eq!(x.len(), self.dim);
+        let base = table * self.k;
+        let mut c = 0u32;
+        for b in 0..self.k {
+            let s = self.rows[base + b].project(x);
+            c = (c << 1) | (s >= 0.0) as u32;
+        }
+        c
+    }
+
+    fn mults_per_code(&self) -> f64 {
+        // ±1 coefficients: additions only; we report the paper's accounting
+        // of "multiplication-equivalent" work = expected nnz touched.
+        self.k as f64 * self.dim as f64 * self.density
+    }
+
+    fn collision_prob(&self, x: &[f32], q: &[f32]) -> f64 {
+        // calibrated law of THIS family (see CalibCurve): O(d) cosine +
+        // O(1) lookup
+        self.calib.eval(crate::core::matrix::cosine(x, q))
+    }
+
+    fn collision_prob_normed(&self, x: &[f32], q: &[f32], nx: f64, nq: f64) -> f64 {
+        if nx == 0.0 || nq == 0.0 {
+            return 0.5;
+        }
+        let cos = (crate::core::matrix::dot_fast(x, q) as f64 / (nx * nq)).clamp(-1.0, 1.0);
+        self.calib.eval(cos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::matrix::angular_similarity;
+
+    fn random_unit(dim: usize, rng: &mut Pcg64) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..dim).map(|_| rng.gaussian() as f32).collect();
+        crate::core::matrix::normalize(&mut v);
+        v
+    }
+
+    #[test]
+    fn dense_code_is_deterministic_and_k_bits() {
+        let h = DenseSrp::new(16, 7, 3, 42);
+        let mut rng = Pcg64::seeded(1);
+        let x = random_unit(16, &mut rng);
+        for t in 0..3 {
+            let c1 = h.code(t, &x);
+            let c2 = h.code(t, &x);
+            assert_eq!(c1, c2);
+            assert!(c1 < (1 << 7));
+        }
+    }
+
+    #[test]
+    fn identical_vectors_always_collide() {
+        let h = SparseSrp::new(32, 5, 10, 0.3, 7);
+        let mut rng = Pcg64::seeded(2);
+        let x = random_unit(32, &mut rng);
+        for t in 0..10 {
+            assert_eq!(h.code(t, &x), h.code(t, &x.clone()));
+        }
+    }
+
+    #[test]
+    fn opposite_vectors_never_collide_dense() {
+        let h = DenseSrp::new(16, 5, 8, 3);
+        let mut rng = Pcg64::seeded(3);
+        let x = random_unit(16, &mut rng);
+        let negx: Vec<f32> = x.iter().map(|v| -v).collect();
+        for t in 0..8 {
+            // every bit flips under negation (unless a projection is exactly 0,
+            // which has measure zero) — codes are bitwise complements
+            let cx = h.code(t, &x);
+            let cn = h.code(t, &negx);
+            assert_eq!(cx ^ cn, (1 << 5) - 1);
+        }
+    }
+
+    /// Empirical per-bit collision rate matches 1 − θ/π for dense SRP.
+    #[test]
+    fn dense_collision_rate_matches_formula() {
+        let dim = 24;
+        let (k, l) = (1, 2000); // 2000 independent single-bit tables
+        let h = DenseSrp::new(dim, k, l, 11);
+        let mut rng = Pcg64::seeded(4);
+        for _ in 0..4 {
+            let x = random_unit(dim, &mut rng);
+            let mut y = random_unit(dim, &mut rng);
+            // Blend to get varied similarity levels.
+            for i in 0..dim {
+                y[i] = 0.7 * x[i] + 0.3 * y[i];
+            }
+            crate::core::matrix::normalize(&mut y);
+            let expect = angular_similarity(&x, &y);
+            let hits = (0..l).filter(|&t| h.code(t, &x) == h.code(t, &y)).count();
+            let rate = hits as f64 / l as f64;
+            assert!(
+                (rate - expect).abs() < 0.05,
+                "collision rate {rate} vs formula {expect}"
+            );
+        }
+    }
+
+    /// Sparse SRP approximates the same collision law (the ±1 variant of
+    /// SimHash, [27] in the paper).
+    #[test]
+    fn sparse_collision_rate_tracks_formula() {
+        let dim = 120;
+        let (k, l) = (1, 3000);
+        let h = SparseSrp::new(dim, k, l, 0.25, 13);
+        let mut rng = Pcg64::seeded(6);
+        let x = random_unit(dim, &mut rng);
+        let mut y: Vec<f32> = x.clone();
+        for v in y.iter_mut().take(40) {
+            *v += rng.gaussian() as f32 * 0.3;
+        }
+        crate::core::matrix::normalize(&mut y);
+        let expect = angular_similarity(&x, &y);
+        let hits = (0..l).filter(|&t| h.code(t, &x) == h.code(t, &y)).count();
+        let rate = hits as f64 / l as f64;
+        assert!(
+            (rate - expect).abs() < 0.08,
+            "sparse collision rate {rate} vs formula {expect}"
+        );
+    }
+
+    #[test]
+    fn sparse_cost_model_below_dense() {
+        let d = 90;
+        let dense = DenseSrp::new(d, 5, 4, 1);
+        let sparse = SparseSrp::paper_default(d, 5, 4, 1);
+        assert!(sparse.mults_per_code() < dense.mults_per_code() / 10.0);
+        // §2.2: all K hashes ≈ K·d/30 = d/6 "multiplications"
+        assert!((sparse.mults_per_code() - 5.0 * 90.0 / 30.0).abs() < 1e-9);
+        assert!(sparse.mean_nnz() >= 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn k_too_wide_panics() {
+        let _ = DenseSrp::new(4, 33, 1, 0);
+    }
+}

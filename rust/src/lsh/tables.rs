@@ -1,0 +1,372 @@
+//! The (K, L) hash-table structure of Appendix A.1 / Figure 7.
+//!
+//! `L` independent tables, each keyed by a K-bit meta-hash code, each bucket
+//! holding the *ids* of the stored points (never the vectors themselves —
+//! the paper stores pointers for memory efficiency; we store `u32` ids into
+//! the caller's dataset).
+//!
+//! Building the tables is the one-time preprocessing cost of LGD; queries
+//! and incremental inserts/removes are O(K·density·d) per table.
+
+use std::collections::HashMap;
+
+use crate::core::error::{Error, Result};
+use crate::lsh::srp::SrpHasher;
+
+/// Bucket storage for one table: direct-indexed array for small key spaces
+/// (K ≤ 12 — the paper's K=5 gives 32 buckets), HashMap beyond. The dense
+/// variant turns the per-probe bucket lookup into one array index — a
+/// measurable win on the Algorithm-1 hot path (§Perf).
+enum Buckets {
+    Dense(Vec<Vec<u32>>),
+    Map(HashMap<u32, Vec<u32>>),
+}
+
+impl Buckets {
+    fn new(k: usize) -> Self {
+        if k <= 12 {
+            Buckets::Dense((0..(1usize << k)).map(|_| Vec::new()).collect())
+        } else {
+            Buckets::Map(HashMap::new())
+        }
+    }
+
+    #[inline]
+    fn get(&self, code: u32) -> &[u32] {
+        match self {
+            Buckets::Dense(v) => v.get(code as usize).map(|b| b.as_slice()).unwrap_or(&[]),
+            Buckets::Map(m) => m.get(&code).map(|b| b.as_slice()).unwrap_or(&[]),
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, code: u32, id: u32) {
+        match self {
+            Buckets::Dense(v) => v[code as usize].push(id),
+            Buckets::Map(m) => m.entry(code).or_default().push(id),
+        }
+    }
+
+    fn remove_id(&mut self, code: u32, id: u32) -> bool {
+        let b = match self {
+            Buckets::Dense(v) => &mut v[code as usize],
+            Buckets::Map(m) => match m.get_mut(&code) {
+                Some(b) => b,
+                None => return false,
+            },
+        };
+        if let Some(pos) = b.iter().position(|&v| v == id) {
+            b.swap_remove(pos);
+            if b.is_empty() {
+                if let Buckets::Map(m) = self {
+                    m.remove(&code);
+                }
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    fn clear(&mut self) {
+        match self {
+            Buckets::Dense(v) => v.iter_mut().for_each(|b| b.clear()),
+            Buckets::Map(m) => m.clear(),
+        }
+    }
+
+    fn non_empty(&self) -> usize {
+        match self {
+            Buckets::Dense(v) => v.iter().filter(|b| !b.is_empty()).count(),
+            Buckets::Map(m) => m.len(),
+        }
+    }
+
+    fn for_each_bucket(&self, mut f: impl FnMut(&[u32])) {
+        match self {
+            Buckets::Dense(v) => v.iter().filter(|b| !b.is_empty()).for_each(|b| f(b)),
+            Buckets::Map(m) => m.values().for_each(|b| f(b)),
+        }
+    }
+}
+
+/// L hash tables over point ids.
+pub struct LshTables<H: SrpHasher> {
+    hasher: H,
+    /// tables[t] : code -> point ids
+    tables: Vec<Buckets>,
+    /// number of points inserted
+    len: usize,
+}
+
+/// Bucket-occupancy statistics (diagnostics + table-tuning experiments).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TableStats {
+    /// Total number of (non-empty) buckets across all tables.
+    pub buckets: usize,
+    /// Mean bucket size over non-empty buckets.
+    pub mean_bucket: f64,
+    /// Largest bucket size.
+    pub max_bucket: usize,
+    /// Fraction of the 2^K key space occupied, averaged over tables.
+    pub occupancy: f64,
+}
+
+impl<H: SrpHasher> LshTables<H> {
+    /// Empty tables wrapping `hasher`.
+    pub fn new(hasher: H) -> Self {
+        let l = hasher.l();
+        let k = hasher.k();
+        LshTables { hasher, tables: (0..l).map(|_| Buckets::new(k)).collect(), len: 0 }
+    }
+
+    /// Build from a set of row vectors (`rows[i]` inserted with id `i`).
+    pub fn build<'a, I>(hasher: H, rows: I) -> Result<Self>
+    where
+        I: IntoIterator<Item = &'a [f32]>,
+    {
+        let mut t = Self::new(hasher);
+        for (i, r) in rows.into_iter().enumerate() {
+            t.insert(i as u32, r)?;
+        }
+        Ok(t)
+    }
+
+    /// Insert a point id with its vector into every table.
+    pub fn insert(&mut self, id: u32, x: &[f32]) -> Result<()> {
+        if x.len() != self.hasher.dim() {
+            return Err(Error::Lsh(format!(
+                "insert dim {} into hasher dim {}",
+                x.len(),
+                self.hasher.dim()
+            )));
+        }
+        for t in 0..self.tables.len() {
+            let code = self.hasher.code(t, x);
+            self.tables[t].push(code, id);
+        }
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Insert a pre-computed (table, code) pair for `id`. Pipeline building
+    /// block: hash workers compute codes in parallel and a single owner
+    /// thread applies them. The caller is responsible for covering every
+    /// table exactly once per id; `finish_coded_inserts` sets the length.
+    #[inline]
+    pub fn insert_coded(&mut self, table: usize, code: u32, id: u32) {
+        self.tables[table].push(code, id);
+    }
+
+    /// Declare how many distinct ids were inserted via `insert_coded`.
+    pub fn finish_coded_inserts(&mut self, n: usize) {
+        self.len = n;
+    }
+
+    /// Remove a point id (requires the same vector it was inserted with).
+    /// Returns true if found in all tables.
+    pub fn remove(&mut self, id: u32, x: &[f32]) -> bool {
+        let mut found_everywhere = true;
+        for t in 0..self.tables.len() {
+            let code = self.hasher.code(t, x);
+            if !self.tables[t].remove_id(code, id) {
+                found_everywhere = false;
+            }
+        }
+        if found_everywhere && self.len > 0 {
+            self.len -= 1;
+        }
+        found_everywhere
+    }
+
+    /// Number of inserted points.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if no points inserted.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The wrapped hasher.
+    pub fn hasher(&self) -> &H {
+        &self.hasher
+    }
+
+    /// The bucket in table `t` matching the query (computes the query's
+    /// meta-hash for that table only — the Algorithm 1 cost model).
+    #[inline]
+    pub fn query_bucket(&self, t: usize, query: &[f32]) -> &[u32] {
+        let code = self.hasher.code(t, query);
+        self.bucket(t, code)
+    }
+
+    /// The bucket in table `t` under an explicit code.
+    #[inline]
+    pub fn bucket(&self, t: usize, code: u32) -> &[u32] {
+        self.tables[t].get(code)
+    }
+
+    /// Union of the query's buckets over all L tables, deduplicated — the
+    /// *near-neighbor candidate set* of Appendix A.1, used by the §2.2.1
+    /// cost comparison (this is exactly the work LGD avoids).
+    pub fn candidate_union(&self, query: &[f32]) -> Vec<u32> {
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for t in 0..self.tables.len() {
+            for &id in self.query_bucket(t, query) {
+                if seen.insert(id) {
+                    out.push(id);
+                }
+            }
+        }
+        out
+    }
+
+    /// Occupancy statistics.
+    pub fn stats(&self) -> TableStats {
+        let mut buckets = 0usize;
+        let mut total = 0usize;
+        let mut max_bucket = 0usize;
+        for t in &self.tables {
+            buckets += t.non_empty();
+            t.for_each_bucket(|b| {
+                total += b.len();
+                max_bucket = max_bucket.max(b.len());
+            });
+        }
+        let key_space = (1u64 << self.hasher.k()) as f64;
+        let occupancy = if self.tables.is_empty() {
+            0.0
+        } else {
+            self.tables.iter().map(|t| t.non_empty() as f64 / key_space).sum::<f64>()
+                / self.tables.len() as f64
+        };
+        TableStats {
+            buckets,
+            mean_bucket: if buckets == 0 { 0.0 } else { total as f64 / buckets as f64 },
+            max_bucket,
+            occupancy,
+        }
+    }
+
+    /// Rebuild all tables from scratch with new vectors (Appendix E: BERT
+    /// pooled representations drift during fine-tuning and are re-hashed
+    /// periodically). Ids are assigned 0..rows.len().
+    pub fn rebuild<'a, I>(&mut self, rows: I) -> Result<()>
+    where
+        I: IntoIterator<Item = &'a [f32]>,
+    {
+        for t in self.tables.iter_mut() {
+            t.clear();
+        }
+        self.len = 0;
+        for (i, r) in rows.into_iter().enumerate() {
+            self.insert(i as u32, r)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::{Pcg64, Rng};
+    use crate::lsh::srp::DenseSrp;
+
+    fn unit_rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..n)
+            .map(|_| {
+                let mut v: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                crate::core::matrix::normalize(&mut v);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_point_lands_in_every_table() {
+        let rows = unit_rows(50, 8, 1);
+        let h = DenseSrp::new(8, 4, 6, 2);
+        let t = LshTables::build(h, rows.iter().map(|r| r.as_slice())).unwrap();
+        assert_eq!(t.len(), 50);
+        let s = t.stats();
+        // all 50 ids per table
+        let total: usize = (0..6)
+            .map(|ti| {
+                (0..(1u32 << 4)).map(|c| t.bucket(ti, c).len()).sum::<usize>()
+            })
+            .sum();
+        assert_eq!(total, 50 * 6);
+        assert!(s.max_bucket >= 1);
+        assert!(s.occupancy > 0.0 && s.occupancy <= 1.0);
+    }
+
+    #[test]
+    fn query_self_always_finds_self() {
+        let rows = unit_rows(30, 12, 3);
+        let h = DenseSrp::new(12, 5, 8, 4);
+        let t = LshTables::build(h, rows.iter().map(|r| r.as_slice())).unwrap();
+        for (i, r) in rows.iter().enumerate() {
+            for ti in 0..8 {
+                let b = t.query_bucket(ti, r);
+                assert!(b.contains(&(i as u32)), "point {i} missing from its own bucket");
+            }
+        }
+    }
+
+    #[test]
+    fn insert_remove_roundtrip() {
+        let rows = unit_rows(20, 6, 5);
+        let h = DenseSrp::new(6, 3, 4, 6);
+        let mut t = LshTables::new(h);
+        for (i, r) in rows.iter().enumerate() {
+            t.insert(i as u32, r).unwrap();
+        }
+        assert_eq!(t.len(), 20);
+        assert!(t.remove(7, &rows[7]));
+        assert_eq!(t.len(), 19);
+        for ti in 0..4 {
+            assert!(!t.query_bucket(ti, &rows[7]).contains(&7));
+        }
+        // removing again fails cleanly
+        assert!(!t.remove(7, &rows[7]));
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let h = DenseSrp::new(6, 3, 2, 1);
+        let mut t = LshTables::new(h);
+        assert!(t.insert(0, &[1.0; 5]).is_err());
+    }
+
+    #[test]
+    fn candidate_union_dedups_and_contains_near() {
+        let rows = unit_rows(40, 10, 7);
+        let h = DenseSrp::new(10, 3, 12, 8);
+        let t = LshTables::build(h, rows.iter().map(|r| r.as_slice())).unwrap();
+        let cands = t.candidate_union(&rows[3]);
+        // the point itself must be a candidate (collides with itself in all tables)
+        assert!(cands.contains(&3));
+        let mut d = cands.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), cands.len(), "union must be deduplicated");
+    }
+
+    #[test]
+    fn rebuild_replaces_contents() {
+        let rows = unit_rows(10, 6, 9);
+        let rows2 = unit_rows(15, 6, 10);
+        let h = DenseSrp::new(6, 3, 4, 11);
+        let mut t = LshTables::build(h, rows.iter().map(|r| r.as_slice())).unwrap();
+        t.rebuild(rows2.iter().map(|r| r.as_slice())).unwrap();
+        assert_eq!(t.len(), 15);
+        for ti in 0..4 {
+            let b = t.query_bucket(ti, &rows2[14]);
+            assert!(b.contains(&14));
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! `lgd` — the LGD coordinator CLI.
+//!
+//! Subcommands:
+//! * `train --config run.toml` — run one training configuration.
+//! * `experiments --id <table4|fig9|fig10|fig11|fig12|fig13|variance|sampling|fig5|all>`
+//!   — regenerate a paper table/figure series into `results/`.
+//! * `gen-data --name <spec> --out file.csv` — dump a synthetic dataset.
+//! * `runtime-smoke` — load an AOT artifact, execute it, cross-check
+//!   against the native Rust gradient (three-layer health check).
+//! * `help` — this text.
+
+use std::path::PathBuf;
+
+use lgd::cli::Args;
+use lgd::config::spec::{Backend, RunConfig};
+use lgd::config::toml::TomlDoc;
+use lgd::coordinator::trainer::{train, GradSource};
+use lgd::core::error::{Error, Result};
+use lgd::data::csv::CsvWriter;
+use lgd::data::preprocess::{preprocess, PreprocessOptions};
+use lgd::experiments::ExpOptions;
+use lgd::runtime::Runtime;
+
+const USAGE: &str = "\
+lgd — LSH-sampled Stochastic Gradient Descent (paper reproduction)
+
+USAGE:
+  lgd train --config <run.toml> [--out <dir>]
+  lgd experiments --id <table4|fig9|fig10|fig11|fig12|fig13|variance|sampling|fig5|all>
+                  [--scale <f>] [--out <dir>] [--seed <n>] [--quick] [--artifacts <dir>]
+  lgd gen-data --name <yearmsd-like|slice-like|ujiindoor-like|pareto|uniform>
+               --out <file.csv> [--scale <f>] [--seed <n>]
+  lgd runtime-smoke [--artifacts <dir>]
+  lgd help
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "experiments" => cmd_experiments(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "runtime-smoke" => cmd_runtime_smoke(&args),
+        "" | "help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown subcommand '{other}'\n{USAGE}"))),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.allow(&["config", "out"])?;
+    let cfg_path = args.require("config")?;
+    let doc = TomlDoc::load(std::path::Path::new(&cfg_path))?;
+    let mut cfg = RunConfig::from_toml(&doc)?;
+    if let Some(out) = args.has("out").then(|| args.str_or("out", "results")) {
+        cfg.out_dir = PathBuf::from(out);
+    }
+
+    // dataset
+    let ds = build_dataset(&cfg.data.name, cfg.data.scale, cfg.data.seed)?;
+    let (tr, te) = ds.split(cfg.data.train_frac, cfg.data.seed)?;
+    let pre = preprocess(tr, &PreprocessOptions { center: cfg.lsh.center })?;
+
+    let outcome = match cfg.train.backend {
+        Backend::Native => train(&cfg, &pre, &te, GradSource::Native)?,
+        Backend::Pjrt => {
+            let mut rt = Runtime::new(&lgd::runtime::default_artifacts_dir())?;
+            train(&cfg, &pre, &te, GradSource::Pjrt(&mut rt))?
+        }
+    };
+
+    // write the curve
+    let path = cfg.out_dir.join(format!("{}.csv", cfg.name));
+    let mut w = CsvWriter::create(
+        &path,
+        &["iter", "epoch", "wall_secs", "train_loss", "test_loss"],
+    )?;
+    for p in &outcome.curve {
+        w.row(&[p.iter as f64, p.epoch, p.wall, p.train_loss, p.test_loss])?;
+    }
+    w.flush()?;
+    println!(
+        "run '{}' [{}]: {} iters in {:.3}s (preprocess {:.3}s), loss {:.5} -> {:.5}; curve -> {}",
+        cfg.name,
+        outcome.estimator,
+        outcome.iterations,
+        outcome.wall_secs,
+        outcome.preprocess_secs,
+        outcome.curve.first().unwrap().train_loss,
+        outcome.curve.last().unwrap().train_loss,
+        path.display()
+    );
+    Ok(())
+}
+
+fn build_dataset(name: &str, scale: f64, seed: u64) -> Result<lgd::data::Dataset> {
+    use lgd::data::SynthSpec;
+    let spec = match name {
+        "yearmsd-like" => SynthSpec::power_law("yearmsd-like", scaled(463_715, scale), 90, seed),
+        "slice-like" => SynthSpec::power_law("slice-like", scaled(53_500, scale), 385, seed),
+        "ujiindoor-like" => {
+            SynthSpec::power_law("ujiindoor-like", scaled(21_048, scale), 529, seed)
+        }
+        "pareto" => SynthSpec::power_law("pareto", scaled(50_000, scale), 32, seed),
+        "uniform" => SynthSpec::uniform_control("uniform", scaled(50_000, scale), 32, seed),
+        other => {
+            // fall back to CSV path
+            let p = std::path::Path::new(other);
+            if p.exists() {
+                return lgd::data::csv::load_csv(
+                    p,
+                    lgd::data::csv::TargetColumn::Last,
+                    lgd::data::Task::Regression,
+                );
+            }
+            return Err(Error::Config(format!("unknown dataset '{other}'")));
+        }
+    };
+    spec.generate()
+}
+
+fn scaled(n: usize, scale: f64) -> usize {
+    ((n as f64 * scale).round() as usize).max(64)
+}
+
+fn cmd_experiments(args: &Args) -> Result<()> {
+    args.allow(&["id", "scale", "out", "seed", "quick", "artifacts"])?;
+    let id = args.str_or("id", "all");
+    let opts = ExpOptions {
+        scale: args.f64_or("scale", 0.02)?,
+        out_dir: PathBuf::from(args.str_or("out", "results")),
+        seed: args.u64_or("seed", 42)?,
+        quick: args.has("quick"),
+        artifacts: {
+            let a = args.str_or("artifacts", "");
+            if a.is_empty() {
+                None
+            } else {
+                Some(PathBuf::from(a))
+            }
+        },
+    };
+    lgd::experiments::run(&id, &opts)
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    args.allow(&["name", "out", "scale", "seed"])?;
+    let name = args.require("name")?;
+    let out = PathBuf::from(args.require("out")?);
+    let ds = build_dataset(&name, args.f64_or("scale", 0.02)?, args.u64_or("seed", 42)?)?;
+    let mut header: Vec<String> = (0..ds.dim()).map(|j| format!("x{j}")).collect();
+    header.push("y".into());
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut w = CsvWriter::create(&out, &hrefs)?;
+    for i in 0..ds.len() {
+        let (x, y) = ds.example(i);
+        let mut row: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        row.push(y as f64);
+        w.row(&row)?;
+    }
+    w.flush()?;
+    println!("wrote {} rows x {} cols to {}", ds.len(), ds.dim() + 1, out.display());
+    Ok(())
+}
+
+fn cmd_runtime_smoke(args: &Args) -> Result<()> {
+    args.allow(&["artifacts"])?;
+    let dir = {
+        let a = args.str_or("artifacts", "");
+        if a.is_empty() {
+            lgd::runtime::default_artifacts_dir()
+        } else {
+            PathBuf::from(a)
+        }
+    };
+    let mut rt = Runtime::new(&dir)?;
+    println!("platform: {}", rt.platform());
+    println!("entries:  {}", rt.manifest().entries.len());
+
+    // Execute linreg_grad_b1_d90 and cross-check against the native model.
+    use lgd::model::{LinReg, Model};
+    use lgd::runtime::executor::{lit_f32, to_vec_f32};
+    let d = 90usize;
+    let x: Vec<f32> = (0..d).map(|i| ((i * 37 % 97) as f32 / 97.0) - 0.5).collect();
+    let y = 0.25f32;
+    let theta: Vec<f32> = (0..d).map(|i| ((i * 17 % 89) as f32 / 89.0) - 0.5).collect();
+    let args_lit = [
+        lit_f32(&x, &[1, d])?,
+        lit_f32(&[y], &[1])?,
+        lit_f32(&theta, &[d])?,
+        lit_f32(&[1.0], &[1])?,
+    ];
+    let outs = rt.execute("linreg_grad_b1_d90", &args_lit)?;
+    let got = to_vec_f32(&outs[0])?;
+    let mut want = vec![0.0f32; d];
+    LinReg.grad(&x, y, &theta, &mut want);
+    let mut max_err = 0.0f32;
+    for i in 0..d {
+        max_err = max_err.max((got[i] - want[i]).abs());
+    }
+    println!("linreg_grad_b1_d90 vs native: max |err| = {max_err:.2e}");
+    if max_err > 1e-4 {
+        return Err(Error::Runtime(format!("runtime smoke mismatch: {max_err}")));
+    }
+    println!("runtime-smoke OK");
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Least-squares regression: `f(x, θ) = (θ·x − y)²`.
+//!
+//! Gradient `∇f = 2(θ·x − y)·x`, with norm `2|θ·x − y|·‖x‖` — the absolute-
+//! inner-product form of eq. 4 that LGD's hash space targets.
+
+use crate::core::matrix::{dot_f64, norm2};
+use crate::model::Model;
+
+/// Least-squares model (no regularisation — matching the paper's "plain"
+/// comparisons; regularisation lives in the optimizer if needed).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LinReg;
+
+impl Model for LinReg {
+    #[inline]
+    fn loss(&self, x: &[f32], y: f32, theta: &[f32]) -> f64 {
+        let r = dot_f64(x, theta) - y as f64;
+        r * r
+    }
+
+    #[inline]
+    fn grad(&self, x: &[f32], y: f32, theta: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), out.len());
+        let r = (dot_f64(x, theta) - y as f64) as f32;
+        let c = 2.0 * r;
+        for i in 0..x.len() {
+            out[i] = c * x[i];
+        }
+    }
+
+    #[inline]
+    fn grad_norm(&self, x: &[f32], y: f32, theta: &[f32]) -> f64 {
+        2.0 * (dot_f64(x, theta) - y as f64).abs() * norm2(x)
+    }
+
+    fn name(&self) -> &'static str {
+        "linreg"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::matrix::normalize;
+    use crate::core::rng::{Pcg64, Rng};
+    use crate::data::dataset::{Dataset, Task};
+    use crate::core::matrix::Matrix;
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let m = LinReg;
+        let x = [0.3f32, -0.7, 0.2];
+        let y = 0.5f32;
+        let theta = [0.1f32, 0.4, -0.2];
+        let mut g = [0.0f32; 3];
+        m.grad(&x, y, &theta, &mut g);
+        let eps = 1e-3f32;
+        for i in 0..3 {
+            let mut tp = theta;
+            tp[i] += eps;
+            let mut tm = theta;
+            tm[i] -= eps;
+            let fd = (m.loss(&x, y, &tp) - m.loss(&x, y, &tm)) / (2.0 * eps as f64);
+            assert!((fd - g[i] as f64).abs() < 1e-3, "coord {i}: fd {fd} vs {}", g[i]);
+        }
+    }
+
+    #[test]
+    fn grad_norm_matches_explicit_gradient() {
+        let m = LinReg;
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..50 {
+            let x: Vec<f32> = (0..6).map(|_| rng.gaussian() as f32).collect();
+            let theta: Vec<f32> = (0..6).map(|_| rng.gaussian() as f32).collect();
+            let y = rng.gaussian() as f32;
+            let mut g = vec![0.0f32; 6];
+            m.grad(&x, y, &theta, &mut g);
+            let explicit = norm2(&g);
+            let closed = m.grad_norm(&x, y, &theta);
+            assert!((explicit - closed).abs() < 1e-4, "{explicit} vs {closed}");
+        }
+    }
+
+    #[test]
+    fn full_grad_is_mean_of_pointwise() {
+        let m = LinReg;
+        let mut x = Matrix::zeros(0, 0);
+        let mut rng = Pcg64::seeded(5);
+        let mut ys = Vec::new();
+        for _ in 0..10 {
+            let mut row: Vec<f32> = (0..4).map(|_| rng.gaussian() as f32).collect();
+            normalize(&mut row);
+            x.push_row(&row).unwrap();
+            ys.push(rng.gaussian() as f32);
+        }
+        let ds = Dataset::new("t", x, ys, Task::Regression).unwrap();
+        let theta = [0.2f32, -0.1, 0.3, 0.0];
+        let mut full = vec![0.0f32; 4];
+        m.full_grad(&ds, &theta, &mut full);
+        let mut acc = vec![0.0f64; 4];
+        let mut g = vec![0.0f32; 4];
+        for i in 0..ds.len() {
+            let (xi, yi) = ds.example(i);
+            m.grad(xi, yi, &theta, &mut g);
+            for j in 0..4 {
+                acc[j] += g[j] as f64 / 10.0;
+            }
+        }
+        for j in 0..4 {
+            assert!((full[j] as f64 - acc[j]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn zero_residual_zero_gradient() {
+        let m = LinReg;
+        let x = [1.0f32, 0.0];
+        let theta = [2.0f32, 5.0];
+        let y = 2.0f32; // θ·x = 2 = y
+        assert_eq!(m.loss(&x, y, &theta), 0.0);
+        assert_eq!(m.grad_norm(&x, y, &theta), 0.0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Logistic regression with ±1 labels:
+//! `f(x, θ) = ln(1 + e^{−y·θ·x})`, `∇f = −y·x·σ(−y·θ·x)`,
+//! `‖∇f‖ = ‖x‖ / (e^{y·θ·x} + 1)` (paper eq. 11).
+
+use crate::core::matrix::{dot_f64, norm2};
+use crate::model::Model;
+
+/// Binary logistic regression model.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LogReg;
+
+#[inline]
+fn log1p_exp(z: f64) -> f64 {
+    // ln(1 + e^z), overflow-safe
+    if z > 30.0 {
+        z
+    } else {
+        (1.0 + z.exp()).ln()
+    }
+}
+
+impl Model for LogReg {
+    #[inline]
+    fn loss(&self, x: &[f32], y: f32, theta: &[f32]) -> f64 {
+        debug_assert!(y == 1.0 || y == -1.0, "logreg labels must be ±1");
+        let m = y as f64 * dot_f64(x, theta);
+        log1p_exp(-m)
+    }
+
+    #[inline]
+    fn grad(&self, x: &[f32], y: f32, theta: &[f32], out: &mut [f32]) {
+        let m = y as f64 * dot_f64(x, theta);
+        // σ(−m) = 1/(1+e^m)
+        let s = (1.0 / (1.0 + m.exp())) as f32;
+        let c = -y * s;
+        for i in 0..x.len() {
+            out[i] = c * x[i];
+        }
+    }
+
+    #[inline]
+    fn grad_norm(&self, x: &[f32], y: f32, theta: &[f32]) -> f64 {
+        let m = y as f64 * dot_f64(x, theta);
+        norm2(x) / (m.exp() + 1.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "logreg"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::{Pcg64, Rng};
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let m = LogReg;
+        let x = [0.5f32, -0.25, 0.8];
+        let theta = [0.2f32, 0.3, -0.6];
+        for &y in &[1.0f32, -1.0] {
+            let mut g = [0.0f32; 3];
+            m.grad(&x, y, &theta, &mut g);
+            let eps = 1e-3f32;
+            for i in 0..3 {
+                let mut tp = theta;
+                tp[i] += eps;
+                let mut tm = theta;
+                tm[i] -= eps;
+                let fd = (m.loss(&x, y, &tp) - m.loss(&x, y, &tm)) / (2.0 * eps as f64);
+                assert!((fd - g[i] as f64).abs() < 1e-4, "y={y} coord {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn grad_norm_matches_eq11() {
+        let m = LogReg;
+        let mut rng = Pcg64::seeded(7);
+        for _ in 0..50 {
+            let x: Vec<f32> = (0..5).map(|_| rng.gaussian() as f32).collect();
+            let theta: Vec<f32> = (0..5).map(|_| rng.gaussian() as f32).collect();
+            let y = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+            let mut g = vec![0.0f32; 5];
+            m.grad(&x, y, &theta, &mut g);
+            assert!((norm2(&g) - m.grad_norm(&x, y, &theta)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn loss_decreases_with_margin() {
+        let m = LogReg;
+        let x = [1.0f32, 0.0];
+        // increasing positive margin ⇒ smaller loss
+        let l1 = m.loss(&x, 1.0, &[0.5, 0.0]);
+        let l2 = m.loss(&x, 1.0, &[1.5, 0.0]);
+        let l3 = m.loss(&x, 1.0, &[3.0, 0.0]);
+        assert!(l1 > l2 && l2 > l3);
+        // wrong-side prediction costs more than ln 2
+        assert!(m.loss(&x, -1.0, &[3.0, 0.0]) > (2.0f64).ln());
+    }
+
+    #[test]
+    fn overflow_safe_extreme_margins() {
+        let m = LogReg;
+        let x = [1.0f32];
+        let l = m.loss(&x, -1.0, &[100.0]);
+        assert!(l.is_finite() && (l - 100.0).abs() < 1e-6);
+        let g = m.grad_norm(&x, 1.0, &[100.0]);
+        assert!(g.is_finite() && g < 1e-20);
+    }
+}

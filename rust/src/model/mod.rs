@@ -1,0 +1,53 @@
+//! Native-Rust model math: least squares and logistic regression.
+//!
+//! These are the paper's two linear models (§2.1, §2.3 "LGD for Logistic
+//! Regression"). They serve three roles: the training hot path of the pure-
+//! Rust backend, the correctness oracle the PJRT artifacts are checked
+//! against, and the source of per-example gradient norms for the variance
+//! experiments.
+
+pub mod linreg;
+pub mod logreg;
+
+use crate::data::dataset::Dataset;
+
+/// A pointwise-differentiable model over (x, y) pairs.
+pub trait Model: Send + Sync {
+    /// Loss of a single example at `theta`.
+    fn loss(&self, x: &[f32], y: f32, theta: &[f32]) -> f64;
+
+    /// Gradient of the single-example loss into `out` (len = dim).
+    fn grad(&self, x: &[f32], y: f32, theta: &[f32], out: &mut [f32]);
+
+    /// L2 norm of the single-example gradient — computed *without* forming
+    /// the gradient (the closed forms of eq. 4 / eq. 11).
+    fn grad_norm(&self, x: &[f32], y: f32, theta: &[f32]) -> f64;
+
+    /// Mean loss over a dataset.
+    fn mean_loss(&self, ds: &Dataset, theta: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for i in 0..ds.len() {
+            let (x, y) = ds.example(i);
+            acc += self.loss(x, y, theta);
+        }
+        acc / ds.len().max(1) as f64
+    }
+
+    /// Full (average) gradient over a dataset into `out`.
+    fn full_grad(&self, ds: &Dataset, theta: &[f32], out: &mut [f32]) {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let n = ds.len().max(1) as f32;
+        let mut g = vec![0.0f32; theta.len()];
+        for i in 0..ds.len() {
+            let (x, y) = ds.example(i);
+            self.grad(x, y, theta, &mut g);
+            crate::core::matrix::axpy(1.0 / n, &g, out);
+        }
+    }
+
+    /// Model name for logs.
+    fn name(&self) -> &'static str;
+}
+
+pub use linreg::LinReg;
+pub use logreg::LogReg;

@@ -1,0 +1,95 @@
+//! AdaGrad (Duchi et al., [14] in the paper): dimension-specific adaptive
+//! learning rates from accumulated squared gradients. Used in the paper's
+//! Figure 6/12/13 comparisons (LGD+AdaGrad vs SGD+AdaGrad).
+
+use crate::optim::Optimizer;
+
+/// `θ_i ← θ_i − lr · g_i / (√(Σ g_i²) + ε)`.
+#[derive(Debug, Clone)]
+pub struct AdaGrad {
+    lr: f64,
+    eps: f64,
+    accum: Vec<f64>,
+}
+
+impl AdaGrad {
+    /// Standard constructor (`eps` = 1e-8).
+    pub fn new(lr: f64) -> Self {
+        AdaGrad { lr, eps: 1e-8, accum: Vec::new() }
+    }
+}
+
+impl Optimizer for AdaGrad {
+    #[inline]
+    fn step(&mut self, theta: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(theta.len(), grad.len());
+        if self.accum.len() != theta.len() {
+            self.accum = vec![0.0; theta.len()];
+        }
+        for i in 0..theta.len() {
+            let g = grad[i] as f64;
+            self.accum[i] += g * g;
+            theta[i] -= (self.lr * g / (self.accum[i].sqrt() + self.eps)) as f32;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.accum.clear();
+    }
+
+    fn name(&self) -> &'static str {
+        "adagrad"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        let mut o = AdaGrad::new(0.1);
+        let mut theta = [0.0f32, 0.0];
+        o.step(&mut theta, &[4.0, 0.5]);
+        // accum = g², so step = lr·g/|g| = lr·sign(g)
+        assert!((theta[0] + 0.1).abs() < 1e-5);
+        assert!((theta[1] + 0.1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn per_dimension_adaptivity() {
+        let mut o = AdaGrad::new(0.1);
+        let mut theta = [0.0f32, 0.0];
+        // dimension 0 sees large gradients repeatedly -> its effective lr shrinks
+        for _ in 0..50 {
+            o.step(&mut theta, &[10.0, 0.1]);
+        }
+        let before = theta;
+        o.step(&mut theta, &[10.0, 0.1]);
+        let step0 = (theta[0] - before[0]).abs();
+        let step1 = (theta[1] - before[1]).abs();
+        assert!(step0 < step1 * 1.01, "dim 0 step {step0} should not exceed dim 1 {step1}");
+    }
+
+    #[test]
+    fn reset_clears_accumulators() {
+        let mut o = AdaGrad::new(0.1);
+        let mut theta = [0.0f32];
+        o.step(&mut theta, &[100.0]);
+        o.reset();
+        let mut theta2 = [0.0f32];
+        o.step(&mut theta2, &[100.0]);
+        assert!((theta2[0] + 0.1).abs() < 1e-5, "after reset first step is lr-sized");
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut o = AdaGrad::new(0.5);
+        let mut theta = [3.0f32];
+        for _ in 0..500 {
+            let g = [2.0 * theta[0]];
+            o.step(&mut theta, &g);
+        }
+        assert!(theta[0].abs() < 0.05, "theta {}", theta[0]);
+    }
+}

@@ -1,0 +1,117 @@
+//! Adam optimizer — used by the paper's BERT fine-tuning experiments
+//! (§3.2, "Adam optimizer with initial learning rate 2e-5").
+
+use crate::optim::Optimizer;
+
+/// Adam with bias correction.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    lr: f64,
+    b1: f64,
+    b2: f64,
+    eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    /// Standard hyperparameters (β₁ = 0.9, β₂ = 0.999, ε = 1e-8).
+    pub fn new(lr: f64) -> Self {
+        Adam { lr, b1: 0.9, b2: 0.999, eps: 1e-8, m: Vec::new(), v: Vec::new(), t: 0 }
+    }
+
+    /// Fully parameterised constructor.
+    pub fn with_params(lr: f64, b1: f64, b2: f64, eps: f64) -> Self {
+        Adam { lr, b1, b2, eps, m: Vec::new(), v: Vec::new(), t: 0 }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, theta: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(theta.len(), grad.len());
+        if self.m.len() != theta.len() {
+            self.m = vec![0.0; theta.len()];
+            self.v = vec![0.0; theta.len()];
+        }
+        self.t += 1;
+        let b1t = 1.0 - self.b1.powi(self.t as i32);
+        let b2t = 1.0 - self.b2.powi(self.t as i32);
+        for i in 0..theta.len() {
+            let g = grad[i] as f64;
+            self.m[i] = self.b1 * self.m[i] + (1.0 - self.b1) * g;
+            self.v[i] = self.b2 * self.v[i] + (1.0 - self.b2) * g * g;
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            theta[i] -= (self.lr * mhat / (vhat.sqrt() + self.eps)) as f32;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.m.clear();
+        self.v.clear();
+        self.t = 0;
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        let mut o = Adam::new(0.01);
+        let mut theta = [0.0f32, 0.0];
+        o.step(&mut theta, &[5.0, -0.01]);
+        // bias-corrected first step ≈ lr·sign(g)
+        assert!((theta[0] + 0.01).abs() < 1e-4);
+        assert!((theta[1] - 0.01).abs() < 1e-4);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut o = Adam::new(0.05);
+        let mut theta = [4.0f32];
+        for _ in 0..2000 {
+            let g = [2.0 * theta[0]];
+            o.step(&mut theta, &g);
+        }
+        assert!(theta[0].abs() < 0.01, "theta {}", theta[0]);
+    }
+
+    #[test]
+    fn reset_restores_initial_behaviour() {
+        let mut o = Adam::new(0.01);
+        let mut t1 = [0.0f32];
+        o.step(&mut t1, &[1.0]);
+        o.reset();
+        let mut t2 = [0.0f32];
+        o.step(&mut t2, &[1.0]);
+        assert!((t1[0] - t2[0]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn momentum_smooths_oscillation() {
+        // alternating gradients: Adam's step magnitude shrinks as momentum cancels
+        let mut o = Adam::new(0.1);
+        let mut theta = [0.0f32];
+        let mut prev = theta[0];
+        let mut first_step = 0.0;
+        let mut last_step = 0.0;
+        for t in 0..100 {
+            let g = [if t % 2 == 0 { 1.0 } else { -1.0 }];
+            o.step(&mut theta, &g);
+            let s = (theta[0] - prev).abs();
+            if t == 0 {
+                first_step = s;
+            }
+            last_step = s;
+            prev = theta[0];
+        }
+        assert!(last_step < first_step, "momentum should damp alternating steps");
+    }
+}

@@ -1,0 +1,26 @@
+//! First-order optimizers. LGD is "not an alternative but a complement" to
+//! adaptive learning-rate methods (§2.2): every optimizer here consumes the
+//! (already importance-weighted) gradient estimate from *any*
+//! [`crate::estimator::GradientEstimator`].
+
+pub mod adagrad;
+pub mod adam;
+pub mod schedule;
+pub mod sgd;
+
+/// A stateful first-order update rule.
+pub trait Optimizer: Send {
+    /// Apply one update: `theta ← theta − step(grad)`.
+    fn step(&mut self, theta: &mut [f32], grad: &[f32]);
+
+    /// Reset internal state (accumulators, iteration counter).
+    fn reset(&mut self);
+
+    /// Name for logs.
+    fn name(&self) -> &'static str;
+}
+
+pub use adagrad::AdaGrad;
+pub use adam::Adam;
+pub use schedule::Schedule;
+pub use sgd::Sgd;

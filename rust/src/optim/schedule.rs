@@ -1,0 +1,78 @@
+//! Learning-rate schedules (§2.2 "LGD with Adaptive Learning Rate"): fixed,
+//! step decay and exponential decay — the schedules the paper cites [34] as
+//! empirically effective, all composable with any estimator.
+
+/// A learning-rate schedule: maps iteration t to a step size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// Constant step size.
+    Const(f64),
+    /// `base · drop^(t / every)` — step decay.
+    Step { base: f64, drop: f64, every: u64 },
+    /// `base · e^(−rate · t)` — exponential decay.
+    Exp { base: f64, rate: f64 },
+    /// `base / (1 + rate · t)` — inverse time decay (Robbins–Monro style).
+    InvTime { base: f64, rate: f64 },
+}
+
+impl Schedule {
+    /// Step size at iteration `t` (0-based).
+    #[inline]
+    pub fn at(&self, t: u64) -> f64 {
+        match *self {
+            Schedule::Const(lr) => lr,
+            Schedule::Step { base, drop, every } => {
+                base * drop.powi((t / every.max(1)) as i32)
+            }
+            Schedule::Exp { base, rate } => base * (-rate * t as f64).exp(),
+            Schedule::InvTime { base, rate } => base / (1.0 + rate * t as f64),
+        }
+    }
+
+    /// Initial step size.
+    pub fn base(&self) -> f64 {
+        match *self {
+            Schedule::Const(lr) => lr,
+            Schedule::Step { base, .. } => base,
+            Schedule::Exp { base, .. } => base,
+            Schedule::InvTime { base, .. } => base,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_is_flat() {
+        let s = Schedule::Const(0.1);
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(1_000_000), 0.1);
+    }
+
+    #[test]
+    fn step_decays_in_plateaus() {
+        let s = Schedule::Step { base: 1.0, drop: 0.5, every: 10 };
+        assert_eq!(s.at(0), 1.0);
+        assert_eq!(s.at(9), 1.0);
+        assert_eq!(s.at(10), 0.5);
+        assert_eq!(s.at(25), 0.25);
+    }
+
+    #[test]
+    fn exp_and_invtime_monotone() {
+        for s in [
+            Schedule::Exp { base: 0.5, rate: 0.01 },
+            Schedule::InvTime { base: 0.5, rate: 0.1 },
+        ] {
+            let mut last = f64::INFINITY;
+            for t in 0..100 {
+                let v = s.at(t);
+                assert!(v <= last && v > 0.0);
+                last = v;
+            }
+            assert_eq!(s.base(), 0.5);
+        }
+    }
+}

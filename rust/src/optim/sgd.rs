@@ -1,0 +1,80 @@
+//! Plain gradient-descent update with a learning-rate schedule (eq. 2).
+
+use crate::optim::{Optimizer, Schedule};
+
+/// `θ ← θ − η_t · g`.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    schedule: Schedule,
+    t: u64,
+}
+
+impl Sgd {
+    /// With an explicit schedule.
+    pub fn new(schedule: Schedule) -> Self {
+        Sgd { schedule, t: 0 }
+    }
+
+    /// Fixed learning rate.
+    pub fn constant(lr: f64) -> Self {
+        Self::new(Schedule::Const(lr))
+    }
+}
+
+impl Optimizer for Sgd {
+    #[inline]
+    fn step(&mut self, theta: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(theta.len(), grad.len());
+        let lr = self.schedule.at(self.t) as f32;
+        for i in 0..theta.len() {
+            theta[i] -= lr * grad[i];
+        }
+        self.t += 1;
+    }
+
+    fn reset(&mut self) {
+        self.t = 0;
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd-update"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_step_math() {
+        let mut o = Sgd::constant(0.5);
+        let mut theta = [1.0f32, -2.0];
+        o.step(&mut theta, &[2.0, 2.0]);
+        assert_eq!(theta, [0.0, -3.0]);
+    }
+
+    #[test]
+    fn schedule_advances() {
+        let mut o = Sgd::new(Schedule::Step { base: 1.0, drop: 0.5, every: 1 });
+        let mut theta = [0.0f32];
+        o.step(&mut theta, &[1.0]); // lr 1.0
+        o.step(&mut theta, &[1.0]); // lr 0.5
+        assert!((theta[0] + 1.5).abs() < 1e-6);
+        o.reset();
+        let mut theta2 = [0.0f32];
+        o.step(&mut theta2, &[1.0]);
+        assert!((theta2[0] + 1.0).abs() < 1e-6);
+    }
+
+    /// Converges on a trivial quadratic.
+    #[test]
+    fn converges_on_quadratic() {
+        let mut o = Sgd::constant(0.1);
+        let mut theta = [5.0f32];
+        for _ in 0..200 {
+            let g = [2.0 * theta[0]]; // d/dθ θ²
+            o.step(&mut theta, &g);
+        }
+        assert!(theta[0].abs() < 1e-3);
+    }
+}

@@ -1,0 +1,250 @@
+//! Artifact manifest: the ABI contract between the Python AOT pipeline and
+//! the Rust runtime. `python -m compile.aot` writes
+//! `artifacts/manifest.json`; this module parses and validates it.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::json::Json;
+use crate::core::error::{Error, Result};
+
+/// Element dtype of an argument/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    /// float32
+    F32,
+    /// int32
+    S32,
+    /// uint32
+    U32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "s32" => Ok(Dtype::S32),
+            "u32" => Ok(Dtype::U32),
+            other => Err(Error::Runtime(format!("unknown dtype '{other}'"))),
+        }
+    }
+}
+
+/// Shape + dtype of one argument or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    /// Dimensions (empty = scalar).
+    pub shape: Vec<usize>,
+    /// Element type.
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| Error::Runtime("spec missing shape".into()))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| Error::Runtime("bad dim".into())))
+            .collect::<Result<Vec<usize>>>()?;
+        let dtype = Dtype::parse(
+            j.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32"),
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One compiled entry point.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    /// HLO text file (relative to the artifacts dir).
+    pub file: String,
+    /// Argument specs, positional.
+    pub args: Vec<TensorSpec>,
+    /// Output specs (the HLO returns a tuple of these).
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The mini-BERT parameter ABI.
+#[derive(Debug, Clone)]
+pub struct BertAbi {
+    /// Parameter names, ABI order.
+    pub param_names: Vec<String>,
+    /// Parameter shapes, ABI order.
+    pub param_shapes: Vec<Vec<usize>>,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Sequence length.
+    pub max_t: usize,
+    /// Hidden width (pooled-representation dimension fed to LSH).
+    pub d_model: usize,
+    /// Number of classes.
+    pub n_classes: usize,
+    /// Initial-parameter npz file, when present.
+    pub init_file: Option<String>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+    /// Entry points by name.
+    pub entries: BTreeMap<String, EntrySpec>,
+    /// BERT ABI block.
+    pub bert: Option<BertAbi>,
+    /// SimHash (K, L) the simhash artifacts were compiled with.
+    pub simhash_kl: Option<(usize, usize)>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Runtime(format!("{}: {e} (run `make artifacts`)", path.display())))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        if j.get("format").and_then(|f| f.as_str()) != Some("hlo-text") {
+            return Err(Error::Runtime("manifest format must be 'hlo-text'".into()));
+        }
+        let mut entries = BTreeMap::new();
+        let eobj = j
+            .get("entries")
+            .and_then(|e| e.as_obj())
+            .ok_or_else(|| Error::Runtime("manifest missing entries".into()))?;
+        for (name, spec) in eobj {
+            let file = spec
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| Error::Runtime(format!("entry {name} missing file")))?
+                .to_string();
+            let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+                spec.get(key)
+                    .and_then(|a| a.as_arr())
+                    .ok_or_else(|| Error::Runtime(format!("entry {name} missing {key}")))?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySpec { file, args: parse_list("args")?, outputs: parse_list("outputs")? },
+            );
+        }
+        let bert = j.get("bert").and_then(|b| {
+            let names: Vec<String> = b
+                .get("param_names")?
+                .as_arr()?
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect();
+            let shapes: Vec<Vec<usize>> = b
+                .get("param_shapes")?
+                .as_arr()?
+                .iter()
+                .filter_map(|s| {
+                    s.as_arr()
+                        .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                })
+                .collect();
+            Some(BertAbi {
+                param_names: names,
+                param_shapes: shapes,
+                vocab: b.get("vocab")?.as_usize()?,
+                max_t: b.get("max_t")?.as_usize()?,
+                d_model: b.get("d_model")?.as_usize()?,
+                n_classes: b.get("n_classes")?.as_usize()?,
+                init_file: b.get("init_file").and_then(|f| f.as_str()).map(String::from),
+            })
+        });
+        let simhash_kl = j.get("simhash").and_then(|s| {
+            Some((s.get("k")?.as_usize()?, s.get("l")?.as_usize()?))
+        });
+        Ok(Manifest { dir: dir.to_path_buf(), entries, bert, simhash_kl })
+    }
+
+    /// Entry lookup with a helpful error.
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries.get(name).ok_or_else(|| {
+            Error::Runtime(format!(
+                "entry '{name}' not in manifest (have: {})",
+                self.entries.keys().cloned().collect::<Vec<_>>().join(", ")
+            ))
+        })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.entry(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "entries": {
+        "linreg_grad_b1_d90": {
+          "file": "linreg_grad_b1_d90.hlo.txt",
+          "args": [{"shape": [1, 90], "dtype": "f32"}, {"shape": [1], "dtype": "f32"},
+                   {"shape": [90], "dtype": "f32"}, {"shape": [1], "dtype": "f32"}],
+          "outputs": [{"shape": [90], "dtype": "f32"}]
+        }
+      },
+      "bert": {
+        "param_names": ["tok_emb"], "param_shapes": [[1024, 64]],
+        "vocab": 1024, "max_t": 32, "d_model": 64, "n_classes": 2,
+        "init_file": "bert_init.npz"
+      },
+      "simhash": {"k": 5, "l": 100}
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let e = m.entry("linreg_grad_b1_d90").unwrap();
+        assert_eq!(e.args.len(), 4);
+        assert_eq!(e.args[0].shape, vec![1, 90]);
+        assert_eq!(e.args[0].dtype, Dtype::F32);
+        assert_eq!(e.outputs[0].elements(), 90);
+        let b = m.bert.as_ref().unwrap();
+        assert_eq!(b.vocab, 1024);
+        assert_eq!(b.init_file.as_deref(), Some("bert_init.npz"));
+        assert_eq!(m.simhash_kl, Some((5, 100)));
+        assert!(m.entry("nope").is_err());
+        assert_eq!(
+            m.hlo_path("linreg_grad_b1_d90").unwrap(),
+            PathBuf::from("/tmp/a/linreg_grad_b1_d90.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_when_built() {
+        // Integration hook: if `make artifacts` has run, parse the result.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.entries.contains_key("linreg_grad_b1_d90"));
+            assert!(m.bert.is_some());
+        }
+    }
+}

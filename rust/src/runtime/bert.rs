@@ -1,0 +1,166 @@
+//! Mini-BERT fine-tuning session (Appendix E): parameters live as host
+//! vectors, gradients come from the `bert_grad_b32` artifact, the Adam
+//! update runs in Rust (L3 owns optimisation), and `pooled()` exposes the
+//! [CLS] representations the LSH tables index.
+
+use std::path::Path;
+
+use crate::core::error::{Error, Result};
+use crate::optim::{Adam, Optimizer};
+use crate::runtime::artifact::BertAbi;
+use crate::runtime::executor::{lit_f32, lit_i32, to_f32, to_vec_f32, Runtime};
+
+/// A fine-tuning session over the mini-BERT artifacts.
+pub struct BertSession {
+    abi: BertAbi,
+    /// Flat parameter buffers, ABI order.
+    params: Vec<Vec<f32>>,
+    /// One Adam state per parameter tensor.
+    opt: Vec<Adam>,
+    grad_batch: usize,
+    eval_batch: usize,
+}
+
+impl BertSession {
+    /// Load ABI + initial parameters from the artifacts directory.
+    pub fn new(rt: &mut Runtime, lr: f64) -> Result<Self> {
+        let abi = rt
+            .manifest()
+            .bert
+            .clone()
+            .ok_or_else(|| Error::Runtime("manifest has no bert block".into()))?;
+        let init_file = abi
+            .init_file
+            .clone()
+            .ok_or_else(|| Error::Runtime("manifest bert block has no init_file".into()))?;
+        let npz_path = rt.manifest().dir.join(&init_file);
+        let params = load_params_npz(&npz_path, &abi)?;
+        rt.load("bert_grad_b32")?;
+        rt.load("bert_logits_b64")?;
+        rt.load("bert_pooled_b64")?;
+        let opt = (0..params.len()).map(|_| Adam::new(lr)).collect();
+        Ok(BertSession { abi, params, opt, grad_batch: 32, eval_batch: 64 })
+    }
+
+    /// The parameter ABI.
+    pub fn abi(&self) -> &BertAbi {
+        &self.abi
+    }
+
+    /// Gradient batch size the artifact was compiled for.
+    pub fn grad_batch(&self) -> usize {
+        self.grad_batch
+    }
+
+    /// Eval/pooled batch size the artifacts were compiled for.
+    pub fn eval_batch(&self) -> usize {
+        self.eval_batch
+    }
+
+    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.params
+            .iter()
+            .zip(&self.abi.param_shapes)
+            .map(|(p, s)| lit_f32(p, s))
+            .collect()
+    }
+
+    /// One importance-weighted Adam step on a batch of `grad_batch`
+    /// sequences. Returns the (weighted) batch loss.
+    pub fn step(
+        &mut self,
+        rt: &mut Runtime,
+        ids: &[i32],
+        labels: &[i32],
+        weights: &[f32],
+    ) -> Result<f64> {
+        let b = self.grad_batch;
+        let t = self.abi.max_t;
+        if ids.len() != b * t || labels.len() != b || weights.len() != b {
+            return Err(Error::Runtime(format!(
+                "bert step shapes: ids {} labels {} weights {} for b={b} t={t}",
+                ids.len(),
+                labels.len(),
+                weights.len()
+            )));
+        }
+        let mut args = self.param_literals()?;
+        args.push(lit_i32(ids, &[b, t])?);
+        args.push(lit_i32(labels, &[b])?);
+        args.push(lit_f32(weights, &[b])?);
+        let outs = rt.execute("bert_grad_b32", &args)?;
+        let loss = to_f32(&outs[0])? as f64;
+        // outs[1..] are gradients in ABI order; Adam-update each tensor.
+        for (i, g) in outs[1..].iter().enumerate() {
+            let gv = to_vec_f32(g)?;
+            self.opt[i].step(&mut self.params[i], &gv);
+        }
+        Ok(loss)
+    }
+
+    /// Classifier logits for an eval batch (`eval_batch` sequences).
+    pub fn logits(&self, rt: &mut Runtime, ids: &[i32]) -> Result<Vec<f32>> {
+        let b = self.eval_batch;
+        let t = self.abi.max_t;
+        if ids.len() != b * t {
+            return Err(Error::Runtime(format!("bert logits: ids {} for b={b}", ids.len())));
+        }
+        let mut args = self.param_literals()?;
+        args.push(lit_i32(ids, &[b, t])?);
+        let outs = rt.execute("bert_logits_b64", &args)?;
+        to_vec_f32(&outs[0])
+    }
+
+    /// Pooled [CLS] representations for an eval batch — the hash-space
+    /// vectors of Appendix E.
+    pub fn pooled(&self, rt: &mut Runtime, ids: &[i32]) -> Result<Vec<f32>> {
+        let b = self.eval_batch;
+        let t = self.abi.max_t;
+        if ids.len() != b * t {
+            return Err(Error::Runtime(format!("bert pooled: ids {} for b={b}", ids.len())));
+        }
+        let mut args = self.param_literals()?;
+        args.push(lit_i32(ids, &[b, t])?);
+        let outs = rt.execute("bert_pooled_b64", &args)?;
+        to_vec_f32(&outs[0])
+    }
+
+    /// Total parameter count (diagnostics).
+    pub fn n_params(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+
+    /// Borrow one parameter tensor (flat) by ABI index.
+    pub fn param(&self, i: usize) -> &[f32] {
+        &self.params[i]
+    }
+}
+
+/// Load ABI-ordered parameters from the `bert_init.npz` written by aot.py
+/// (keys are `p{idx:03}_{name}`, so lexicographic order is ABI order).
+fn load_params_npz(path: &Path, abi: &BertAbi) -> Result<Vec<Vec<f32>>> {
+    use xla::FromRawBytes;
+    let mut named: Vec<(String, xla::Literal)> = xla::Literal::read_npz(path, &())
+        .map_err(|e| Error::Runtime(format!("read {}: {e}", path.display())))?;
+    named.sort_by(|a, b| a.0.cmp(&b.0));
+    if named.len() != abi.param_shapes.len() {
+        return Err(Error::Runtime(format!(
+            "{} params in npz, ABI wants {}",
+            named.len(),
+            abi.param_shapes.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(named.len());
+    for (i, (name, lit)) in named.iter().enumerate() {
+        let want: usize = abi.param_shapes[i].iter().product();
+        let v = to_vec_f32(lit)?;
+        if v.len() != want {
+            return Err(Error::Runtime(format!(
+                "param {i} ({name}): {} elements, ABI wants {want}",
+                v.len()
+            )));
+        }
+        out.push(v);
+    }
+    Ok(out)
+}

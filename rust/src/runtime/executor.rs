@@ -1,0 +1,150 @@
+//! PJRT executor: loads AOT HLO-text artifacts, compiles them once on the
+//! CPU client, and executes them from the L3 hot path with shape-checked
+//! literal arguments. Adapted from `/opt/xla-example/load_hlo/`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::core::error::{Error, Result};
+use crate::runtime::artifact::{Dtype, Manifest, TensorSpec};
+
+fn xerr(ctx: &str, e: xla::Error) -> Error {
+    Error::Runtime(format!("{ctx}: {e}"))
+}
+
+/// The PJRT runtime: one CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create from an artifacts directory (must contain `manifest.json`).
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| xerr("PjRtClient::cpu", e))?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    /// The parsed manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Ensure `entry` is compiled and cached. Returns compile time cost only
+    /// on first call.
+    pub fn load(&mut self, entry: &str) -> Result<()> {
+        if self.cache.contains_key(entry) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(entry)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| xerr(&format!("parse {}", path.display()), e))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| xerr(&format!("compile {entry}"), e))?;
+        self.cache.insert(entry.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute `entry` with positional literal arguments; returns the output
+    /// tuple as a vector of literals. Arguments are validated against the
+    /// manifest specs (count + element counts + dtype).
+    pub fn execute(&mut self, entry: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(entry)?;
+        let spec = self.manifest.entry(entry)?.clone();
+        if args.len() != spec.args.len() {
+            return Err(Error::Runtime(format!(
+                "{entry}: {} args given, manifest wants {}",
+                args.len(),
+                spec.args.len()
+            )));
+        }
+        for (i, (lit, want)) in args.iter().zip(&spec.args).enumerate() {
+            let n = lit.element_count();
+            if n != want.elements() {
+                return Err(Error::Runtime(format!(
+                    "{entry} arg {i}: {n} elements, manifest wants {} (shape {:?})",
+                    want.elements(),
+                    want.shape
+                )));
+            }
+        }
+        let exe = self.cache.get(entry).expect("loaded above");
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| xerr(&format!("execute {entry}"), e))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| xerr("to_literal_sync", e))?;
+        let outs = result.to_tuple().map_err(|e| xerr("to_tuple", e))?;
+        if outs.len() != spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{entry}: {} outputs, manifest wants {}",
+                outs.len(),
+                spec.outputs.len()
+            )));
+        }
+        Ok(outs)
+    }
+
+    /// Number of compiled executables held.
+    pub fn loaded(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(Error::Runtime(format!("lit_f32: {} values for shape {shape:?}", data.len())));
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| xerr("reshape", e))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(Error::Runtime(format!("lit_i32: {} values for shape {shape:?}", data.len())));
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| xerr("reshape", e))
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| xerr("to_vec<f32>", e))
+}
+
+/// Extract a u32 vector from a literal.
+pub fn to_vec_u32(lit: &xla::Literal) -> Result<Vec<u32>> {
+    lit.to_vec::<u32>().map_err(|e| xerr("to_vec<u32>", e))
+}
+
+/// Extract the first f32 (scalar outputs).
+pub fn to_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(|e| xerr("get_first_element", e))
+}
+
+/// Validate a spec/dtype pair (used by integration tests).
+pub fn dtype_matches(spec: &TensorSpec, dt: Dtype) -> bool {
+    spec.dtype == dt
+}

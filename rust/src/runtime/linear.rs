@@ -1,0 +1,130 @@
+//! PJRT-backed linear-model gradients: wraps the `linreg_*`/`logreg_*`
+//! artifacts so the trainer can execute the L1 Pallas kernels (lowered into
+//! the HLO) from the Rust hot path.
+
+use crate::core::error::{Error, Result};
+use crate::data::dataset::{Dataset, Task};
+use crate::runtime::executor::{lit_f32, to_f32, to_vec_f32, Runtime};
+
+/// A PJRT gradient/loss evaluator bound to one (batch, dim) entry pair.
+pub struct PjrtLinear {
+    grad_entry: String,
+    loss_entry: String,
+    batch: usize,
+    loss_batch: usize,
+    dim: usize,
+    // preallocated staging buffers
+    xb: Vec<f32>,
+    yb: Vec<f32>,
+    wb: Vec<f32>,
+}
+
+impl PjrtLinear {
+    /// Resolve entries for a task/batch/dim combination, e.g.
+    /// (`Regression`, 1, 90) → `linreg_grad_b1_d90` + `linreg_loss_b1024_d90`.
+    pub fn new(rt: &mut Runtime, task: Task, batch: usize, dim: usize) -> Result<Self> {
+        let prefix = match task {
+            Task::Regression => "linreg",
+            Task::Classification => "logreg",
+        };
+        let grad_entry = format!("{prefix}_grad_b{batch}_d{dim}");
+        let loss_batch = 1024;
+        let loss_entry = format!("{prefix}_loss_b{loss_batch}_d{dim}");
+        rt.load(&grad_entry)?;
+        rt.load(&loss_entry)?;
+        Ok(PjrtLinear {
+            grad_entry,
+            loss_entry,
+            batch,
+            loss_batch,
+            dim,
+            xb: vec![0.0; batch * dim],
+            yb: vec![0.0; batch],
+            wb: vec![0.0; batch],
+        })
+    }
+
+    /// Gradient estimate from a weighted batch of examples.
+    /// `idx.len()` must equal the compiled batch size.
+    pub fn grad(
+        &mut self,
+        rt: &mut Runtime,
+        ds: &Dataset,
+        idx: &[usize],
+        weights: &[f64],
+        theta: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        if idx.len() != self.batch || weights.len() != self.batch {
+            return Err(Error::Runtime(format!(
+                "batch {} vs compiled {}",
+                idx.len(),
+                self.batch
+            )));
+        }
+        if theta.len() != self.dim || out.len() != self.dim {
+            return Err(Error::Runtime("theta/out dim mismatch".into()));
+        }
+        for (r, &i) in idx.iter().enumerate() {
+            let (x, y) = ds.example(i);
+            self.xb[r * self.dim..(r + 1) * self.dim].copy_from_slice(x);
+            self.yb[r] = y;
+            self.wb[r] = weights[r] as f32;
+        }
+        let args = [
+            lit_f32(&self.xb, &[self.batch, self.dim])?,
+            lit_f32(&self.yb, &[self.batch])?,
+            lit_f32(theta, &[self.dim])?,
+            lit_f32(&self.wb, &[self.batch])?,
+        ];
+        let outs = rt.execute(&self.grad_entry, &args)?;
+        let g = to_vec_f32(&outs[0])?;
+        out.copy_from_slice(&g);
+        Ok(())
+    }
+
+    /// Mean loss over a dataset, chunked through the fixed-batch loss entry
+    /// (padding rows contribute zero residual for linreg; for logreg they
+    /// are corrected exactly via the ln(2) offset of zero-padded rows).
+    pub fn mean_loss(&mut self, rt: &mut Runtime, ds: &Dataset, theta: &[f32]) -> Result<f64> {
+        let n = ds.len();
+        let lb = self.loss_batch;
+        let mut total = 0.0f64;
+        let mut xbuf = vec![0.0f32; lb * self.dim];
+        let mut ybuf = vec![0.0f32; lb];
+        let mut i = 0usize;
+        while i < n {
+            let take = (n - i).min(lb);
+            for r in 0..take {
+                let (x, y) = ds.example(i + r);
+                xbuf[r * self.dim..(r + 1) * self.dim].copy_from_slice(x);
+                ybuf[r] = y;
+            }
+            // zero padding
+            for r in take..lb {
+                xbuf[r * self.dim..(r + 1) * self.dim].fill(0.0);
+                ybuf[r] = 0.0;
+            }
+            let args = [
+                lit_f32(&xbuf, &[lb, self.dim])?,
+                lit_f32(&ybuf, &[lb])?,
+                lit_f32(theta, &[self.dim])?,
+            ];
+            let outs = rt.execute(&self.loss_entry, &args)?;
+            let mean_chunk = to_f32(&outs[0])? as f64;
+            let mut sum_chunk = mean_chunk * lb as f64;
+            if ds.task == Task::Classification {
+                // zero-padded logreg rows contribute ln(1 + e^0) = ln 2 each
+                sum_chunk -= (lb - take) as f64 * (2.0f64).ln();
+            }
+            total += sum_chunk;
+            i += take;
+        }
+        Ok(total / n as f64)
+    }
+
+    /// Compiled batch size.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+}

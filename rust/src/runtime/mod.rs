@@ -1,0 +1,23 @@
+//! PJRT runtime bridge: manifest parsing, executable cache, and the
+//! model-specific sessions (linear models, mini-BERT) that execute the AOT
+//! HLO artifacts from the Rust hot path.
+
+pub mod artifact;
+pub mod bert;
+pub mod executor;
+pub mod linear;
+
+pub use artifact::{BertAbi, Dtype, EntrySpec, Manifest, TensorSpec};
+pub use bert::BertSession;
+pub use executor::{lit_f32, lit_i32, to_f32, to_vec_f32, to_vec_u32, Runtime};
+pub use linear::PjrtLinear;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$LGD_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("LGD_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

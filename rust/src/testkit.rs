@@ -1,0 +1,117 @@
+//! Mini property-based testing framework (proptest is unavailable offline).
+//!
+//! A property runs over many generated cases; on failure the reporting
+//! includes the case seed so it can be replayed deterministically:
+//!
+//! ```ignore
+//! prop(100, |rng| {
+//!     let n = rng.index(50) + 1;
+//!     ...assertions...
+//! });
+//! ```
+
+use crate::core::rng::Pcg64;
+
+/// Run `cases` generated test cases. Each case gets a fresh, seeded RNG;
+/// panics are caught and re-raised with the case seed attached.
+pub fn prop<F: Fn(&mut Pcg64) + std::panic::RefUnwindSafe>(cases: u64, f: F) {
+    let base = std::env::var("LGD_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg64::seeded(seed);
+            f(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed on case {case} (replay with LGD_PROP_SEED={base} \
+                 and case seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generators for common test inputs.
+pub mod gen {
+    use crate::core::matrix::{normalize, Matrix};
+    use crate::core::rng::{Pcg64, Rng};
+
+    /// Vector of gaussians.
+    pub fn vec_f32(rng: &mut Pcg64, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.gaussian() as f32).collect()
+    }
+
+    /// Unit-norm vector.
+    pub fn unit_vec(rng: &mut Pcg64, len: usize) -> Vec<f32> {
+        let mut v = vec_f32(rng, len);
+        normalize(&mut v);
+        v
+    }
+
+    /// Matrix of unit-norm rows.
+    pub fn unit_matrix(rng: &mut Pcg64, rows: usize, cols: usize) -> Matrix {
+        let mut m = Matrix::zeros(0, 0);
+        for _ in 0..rows {
+            m.push_row(&unit_vec(rng, cols)).unwrap();
+        }
+        m
+    }
+
+    /// Size in [lo, hi].
+    pub fn size(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        lo + rng.index(hi - lo + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+
+    #[test]
+    fn prop_passes_on_tautology() {
+        prop(50, |rng| {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn prop_reports_seed_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            prop(10, |rng| {
+                // fail when the first byte is even — will happen quickly
+                assert!(rng.next_u64() % 2 == 1, "even!");
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string>".into());
+        assert!(msg.contains("replay with LGD_PROP_SEED="), "msg: {msg}");
+    }
+
+    #[test]
+    fn generators_produce_valid_shapes() {
+        prop(20, |rng| {
+            let n = gen::size(rng, 1, 10);
+            let d = gen::size(rng, 1, 6);
+            let m = gen::unit_matrix(rng, n, d);
+            assert_eq!(m.rows(), n);
+            assert_eq!(m.cols(), d);
+            for i in 0..n {
+                let norm = crate::core::matrix::norm2(m.row(i));
+                assert!((norm - 1.0).abs() < 1e-4);
+            }
+        });
+    }
+}

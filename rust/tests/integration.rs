@@ -1,0 +1,237 @@
+//! Cross-module integration tests: full pipeline → estimator → trainer,
+//! property-based invariants via `testkit`, and PJRT runtime cross-checks
+//! (the runtime tests skip with a message when `make artifacts` hasn't run).
+
+use lgd::config::spec::{Backend, EstimatorKind, RunConfig};
+use lgd::coordinator::metrics::Metrics;
+use lgd::coordinator::pipeline::{streaming_build, PipelineConfig};
+use lgd::coordinator::trainer::{train, GradSource};
+use lgd::core::rng::Rng;
+use lgd::data::preprocess::{preprocess, PreprocessOptions};
+use lgd::data::SynthSpec;
+use lgd::estimator::lgd::{LgdEstimator, LgdOptions};
+use lgd::estimator::GradientEstimator;
+use lgd::lsh::srp::DenseSrp;
+use lgd::model::{LinReg, Model};
+use lgd::optim::Schedule;
+use lgd::testkit::{gen, prop};
+
+fn artifacts_available() -> Option<std::path::PathBuf> {
+    let dir = lgd::runtime::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime test: no artifacts at {}", dir.display());
+        None
+    }
+}
+
+/// End-to-end: synthetic data → streaming pipeline build → LGD estimator →
+/// manual training loop converges.
+#[test]
+fn pipeline_to_training_end_to_end() {
+    let ds = SynthSpec::power_law("e2e", 1200, 16, 3).generate().unwrap();
+    let hasher = DenseSrp::new(17, 4, 20, 5);
+    let metrics = Metrics::new();
+    let (pre, tables, report) =
+        streaming_build(ds, hasher, &PipelineConfig::default(), &metrics).unwrap();
+    assert_eq!(report.records, 1200);
+    let mut est = LgdEstimator::from_parts(&pre, tables, 7, LgdOptions::default());
+    let model = LinReg;
+    let mut theta = vec![0.0f32; 16];
+    let mut g = vec![0.0f32; 16];
+    let loss0 = model.mean_loss(&pre.data, &theta);
+    for _ in 0..3 * 1200 {
+        let dr = est.draw(&theta);
+        let (x, y) = pre.data.example(dr.index);
+        model.grad(x, y, &theta, &mut g);
+        let w = (dr.weight.min(5.0) * 0.05) as f32;
+        lgd::core::matrix::axpy(-w, &g, &mut theta);
+    }
+    let loss1 = model.mean_loss(&pre.data, &theta);
+    assert!(loss1 < loss0 * 0.8, "pipeline-fed LGD did not converge: {loss0} -> {loss1}");
+}
+
+/// Property: every LGD draw returns a valid index, a probability in (0, 1]
+/// and a positive weight, across random datasets and table shapes.
+#[test]
+fn prop_lgd_draws_always_valid() {
+    prop(15, |rng| {
+        let n = gen::size(rng, 30, 200);
+        let d = gen::size(rng, 4, 12);
+        let k = gen::size(rng, 2, 6);
+        let l = gen::size(rng, 4, 16);
+        let ds = SynthSpec::power_law("p", n, d, rng.next_u64()).generate().unwrap();
+        let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
+        let hasher = DenseSrp::new(pre.hashed.cols(), k, l, rng.next_u64());
+        let mut est =
+            LgdEstimator::new(&pre, hasher, rng.next_u64(), LgdOptions::default()).unwrap();
+        let theta = gen::vec_f32(rng, d);
+        for _ in 0..50 {
+            let dr = est.draw(&theta);
+            assert!(dr.index < n, "index {} out of {n}", dr.index);
+            assert!(dr.prob > 0.0 && dr.prob <= 1.0, "prob {}", dr.prob);
+            assert!(dr.weight > 0.0, "weight {}", dr.weight);
+        }
+    });
+}
+
+/// Property: the streaming pipeline preserves every record exactly once
+/// for any worker count / channel capacity.
+#[test]
+fn prop_pipeline_preserves_records() {
+    prop(10, |rng| {
+        let n = gen::size(rng, 20, 150);
+        let d = gen::size(rng, 3, 10);
+        let workers = gen::size(rng, 1, 6);
+        let cap = gen::size(rng, 1, 32);
+        let ds = SynthSpec::power_law("p", n, d, rng.next_u64()).generate().unwrap();
+        let hasher = DenseSrp::new(d + 1, 3, 8, rng.next_u64());
+        let metrics = Metrics::new();
+        let cfg = PipelineConfig { channel_cap: cap, hash_workers: workers };
+        let (pre, tables, report) = streaming_build(ds, hasher, &cfg, &metrics).unwrap();
+        assert_eq!(report.records, n);
+        assert_eq!(pre.data.len(), n);
+        assert_eq!(tables.len(), n);
+        // every id in every table exactly once
+        for t in 0..8 {
+            let mut seen = vec![0u32; n];
+            for code in 0..(1u32 << 3) {
+                for &id in tables.bucket(t, code) {
+                    seen[id as usize] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "table {t} lost/duplicated ids");
+        }
+    });
+}
+
+/// Property: trainer runs to completion and produces monotone iteration
+/// curves for random small configs.
+#[test]
+fn prop_trainer_curves_well_formed() {
+    prop(8, |rng| {
+        let n = gen::size(rng, 100, 400);
+        let ds = SynthSpec::power_law("p", n, 8, rng.next_u64()).generate().unwrap();
+        let (tr, te) = ds.split(0.8, rng.next_u64()).unwrap();
+        let pre = preprocess(tr, &PreprocessOptions::default()).unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.train.estimator = if rng.bernoulli(0.5) {
+            EstimatorKind::Lgd
+        } else {
+            EstimatorKind::Sgd
+        };
+        cfg.train.epochs = 1 + rng.index(3);
+        cfg.train.batch = 1 + rng.index(4);
+        cfg.train.schedule = Schedule::Const(0.02);
+        cfg.lsh.l = 10;
+        let out = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+        assert!(!out.curve.is_empty());
+        for w in out.curve.windows(2) {
+            assert!(w[1].iter > w[0].iter);
+            assert!(w[1].wall >= w[0].wall);
+        }
+        assert!(out.curve.iter().all(|p| p.train_loss.is_finite()));
+    });
+}
+
+/// PJRT backend gradient agrees with the native model along a short
+/// training run (three-layer integration).
+#[test]
+fn pjrt_trainer_matches_native_losses() {
+    let Some(dir) = artifacts_available() else { return };
+    let mut rt = lgd::runtime::Runtime::new(&dir).unwrap();
+    let ds = SynthSpec::power_law("pjrt", 800, 90, 11).generate().unwrap();
+    let (tr, te) = ds.split(0.9, 1).unwrap();
+    let pre = preprocess(tr, &PreprocessOptions::default()).unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.train.estimator = EstimatorKind::Sgd; // deterministic given seed
+    cfg.train.epochs = 1;
+    cfg.train.schedule = Schedule::Const(0.05);
+    cfg.train.backend = Backend::Pjrt;
+    cfg.lsh.l = 10;
+    let out_pjrt = train(&cfg, &pre, &te, GradSource::Pjrt(&mut rt)).unwrap();
+    cfg.train.backend = Backend::Native;
+    let out_native = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+    // same estimator seed → same sample sequence → same final loss to f32
+    // execution-order tolerance
+    let a = out_pjrt.curve.last().unwrap().train_loss;
+    let b = out_native.curve.last().unwrap().train_loss;
+    assert!(
+        (a - b).abs() / b.max(1e-9) < 1e-3,
+        "pjrt {a} vs native {b} diverged"
+    );
+}
+
+/// The simhash artifact reproduces the Rust DenseSrp bit layout — L1
+/// kernel vs L3 substrate agreement. (The artifact takes the planes as an
+/// argument, so we feed it the Rust family's planes.)
+#[test]
+fn simhash_artifact_matches_packing_contract() {
+    let Some(dir) = artifacts_available() else { return };
+    let mut rt = lgd::runtime::Runtime::new(&dir).unwrap();
+    let entry = "simhash_b64_d91_k5_l100";
+    if rt.manifest().entry(entry).is_err() {
+        eprintln!("skipping: no {entry} artifact");
+        return;
+    }
+    let (b, hd, k, l) = (64usize, 91usize, 5usize, 100usize);
+    let mut rng = lgd::core::rng::Pcg64::seeded(3);
+    let x: Vec<f32> = (0..b * hd).map(|_| rng.gaussian() as f32).collect();
+    let planes: Vec<f32> = (0..k * l * hd).map(|_| rng.gaussian() as f32).collect();
+    let args = [
+        lgd::runtime::executor::lit_f32(&x, &[b, hd]).unwrap(),
+        lgd::runtime::executor::lit_f32(&planes, &[k * l, hd]).unwrap(),
+    ];
+    let outs = rt.execute(entry, &args).unwrap();
+    let codes = lgd::runtime::executor::to_vec_u32(&outs[0]).unwrap();
+    assert_eq!(codes.len(), b * l);
+    // reference packing in rust: bit (t*K + b) of row → MSB-first K-bit code
+    for row in 0..4 {
+        for t in 0..l {
+            let mut want = 0u32;
+            for bit in 0..k {
+                let plane = &planes[(t * k + bit) * hd..(t * k + bit + 1) * hd];
+                let xr = &x[row * hd..(row + 1) * hd];
+                let dot: f64 = plane
+                    .iter()
+                    .zip(xr)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum();
+                want = (want << 1) | (dot >= 0.0) as u32;
+            }
+            assert_eq!(
+                codes[row * l + t],
+                want,
+                "row {row} table {t}: artifact code mismatch"
+            );
+        }
+    }
+}
+
+/// CLI smoke: parse → train → CSV out, through the public binary surface.
+#[test]
+fn config_driven_training_run() {
+    let dir = std::env::temp_dir().join("lgd-int-cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let toml = r#"
+name = "int"
+[data]
+name = "pareto"
+scale = 0.004
+[train]
+estimator = "lgd"
+lr = 0.05
+epochs = 2
+"#;
+    let doc = lgd::config::toml::TomlDoc::parse(toml).unwrap();
+    let cfg = RunConfig::from_toml(&doc).unwrap();
+    assert_eq!(cfg.name, "int");
+    assert_eq!(cfg.train.epochs, 2);
+    // run it
+    let ds = SynthSpec::power_law("pareto", 200, 32, cfg.data.seed).generate().unwrap();
+    let (tr, te) = ds.split(cfg.data.train_frac, cfg.data.seed).unwrap();
+    let pre = preprocess(tr, &PreprocessOptions { center: cfg.lsh.center }).unwrap();
+    let out = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+    assert!(out.curve.last().unwrap().train_loss.is_finite());
+}
