@@ -4,10 +4,47 @@
 //! artifacts are missing (`make artifacts`).
 
 use lgd::benchkit::{bb, Bench};
+use lgd::data::preprocess::{preprocess, PreprocessOptions};
+use lgd::data::SynthSpec;
+use lgd::estimator::lgd::{LgdEstimator, LgdOptions};
+use lgd::estimator::{GradientEstimator, ShardedLgdEstimator};
+use lgd::lsh::srp::DenseSrp;
 use lgd::runtime::executor::{lit_f32, lit_i32};
 use lgd::runtime::{BertSession, Runtime};
 
+/// Native sampling-engine runtime: single-structure vs sharded draw
+/// throughput. Runs regardless of PJRT artifact availability.
+fn bench_sharded_draws() {
+    let mut b = Bench::new("sampling engine runtime (native)");
+    let n = 20_000usize;
+    let d = 32usize;
+    let ds = SynthSpec::power_law("rt", n, d, 33).generate().unwrap();
+    let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
+    let hd = pre.hashed.cols();
+    let theta = vec![0.01f32; d];
+    let mut single =
+        LgdEstimator::new(&pre, DenseSrp::new(hd, 5, 25, 35), 37, LgdOptions::default()).unwrap();
+    b.bench("lgd_draw_n20k_shards1", || {
+        bb(single.draw(&theta));
+    });
+    for &s in &[2usize, 4] {
+        let mut sharded = ShardedLgdEstimator::new(
+            &pre,
+            DenseSrp::new(hd, 5, 25, 35),
+            37,
+            LgdOptions::default(),
+            s,
+        )
+        .unwrap();
+        b.bench(&format!("lgd_draw_n20k_shards{s}"), || {
+            bb(sharded.draw(&theta));
+        });
+    }
+    b.report();
+}
+
 fn main() {
+    bench_sharded_draws();
     let dir = lgd::runtime::default_artifacts_dir();
     if !dir.join("manifest.json").exists() {
         println!("bench_runtime: no artifacts at {} — run `make artifacts` first", dir.display());

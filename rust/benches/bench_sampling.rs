@@ -3,14 +3,21 @@
 //! near-neighbor query comparison. Regenerates the paper's running-time
 //! accounting on this machine.
 
+use std::time::Instant;
+
 use lgd::benchkit::{bb, Bench};
 use lgd::config::spec::{EstimatorKind, HasherKind, RunConfig};
+use lgd::coordinator::metrics::Metrics;
+use lgd::coordinator::pipeline::build_shard_tables;
 use lgd::coordinator::trainer::build_estimator;
 use lgd::core::matrix::axpy;
 use lgd::data::preprocess::{preprocess, PreprocessOptions};
+use lgd::data::shard::ShardPlan;
 use lgd::data::SynthSpec;
+use lgd::estimator::lgd::{LgdEstimator, LgdOptions};
+use lgd::estimator::{GradientEstimator, ShardedLgdEstimator};
 use lgd::lsh::sampler::LshSampler;
-use lgd::lsh::srp::SparseSrp;
+use lgd::lsh::srp::{DenseSrp, SparseSrp};
 use lgd::lsh::tables::LshTables;
 use lgd::model::{LinReg, Model};
 
@@ -67,6 +74,52 @@ fn main() {
             bb(sampler.nn_query(&q));
         });
     }
+    // Sharded sampling engine: one-time table-build cost over a 50k-point
+    // synthetic dataset — a single sequential build vs the concurrent
+    // per-shard build (same total rows inserted) — then draw throughput of
+    // the single structure vs the 4-shard mixture.
+    let n = 50_000usize;
+    let d = 32usize;
+    let ds = SynthSpec::power_law("shard", n, d, 21).generate().unwrap();
+    let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
+    let hd = pre.hashed.cols();
+    let hasher = DenseSrp::new(hd, 5, 50, 9);
+    let t0 = Instant::now();
+    let full = LshTables::build(hasher.clone(), (0..n).map(|i| pre.hashed.row(i))).unwrap();
+    let single = t0.elapsed().as_secs_f64();
+    bb(full.len());
+    b.record("table_build_n50k_L50_shards1", single * 1e9);
+    println!("\nsharded table build, n={n} L=50:");
+    println!("  shards=1  {single:.3}s (baseline)");
+    for &s in &[2usize, 4, 8] {
+        let plan = ShardPlan::round_robin(n, s).unwrap();
+        let m = Metrics::new();
+        let t0 = Instant::now();
+        let built = build_shard_tables(&pre.hashed, &plan, false, &hasher, &m).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        bb(built.len());
+        b.record(&format!("table_build_n50k_L50_shards{s}"), wall * 1e9);
+        println!("  shards={s}  {wall:.3}s  ({:.2}x vs single)", single / wall);
+    }
+
+    let theta = vec![0.01f32; d];
+    let mut lgd1 =
+        LgdEstimator::new(&pre, DenseSrp::new(hd, 5, 25, 11), 13, LgdOptions::default()).unwrap();
+    b.bench("lgd_draw_n50k_shards1", || {
+        bb(lgd1.draw(&theta));
+    });
+    let mut lgd4 = ShardedLgdEstimator::new(
+        &pre,
+        DenseSrp::new(hd, 5, 25, 11),
+        13,
+        LgdOptions::default(),
+        4,
+    )
+    .unwrap();
+    b.bench("lgd_draw_n50k_shards4", || {
+        bb(lgd4.draw(&theta));
+    });
+
     b.report();
     println!("\npaper claim: LGD iteration ~= 1.5x SGD iteration; check");
     println!("(lgd_draw + grad_update) / (sgd_draw + grad_update) per d above.");

@@ -80,6 +80,11 @@ impl Args {
         }
     }
 
+    /// Unsigned-size flag with default (e.g. `--shards 4`).
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(key, default as u64)? as usize)
+    }
+
     /// Is a bare switch present?
     pub fn has(&self, key: &str) -> bool {
         self.switches.iter().any(|s| s == key)
@@ -115,6 +120,8 @@ mod tests {
         assert_eq!(a.command, "train");
         assert_eq!(a.str_or("config", ""), "x.toml");
         assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+        assert_eq!(a.usize_or("seed", 0).unwrap(), 7);
+        assert_eq!(a.usize_or("shards", 1).unwrap(), 1);
         assert!(a.has("quick"));
         assert!(!a.has("verbose"));
     }

@@ -69,6 +69,10 @@ pub struct LshConfig {
     pub weight_clip: Option<f64>,
     /// Hasher seed.
     pub seed: u64,
+    /// Data shards for the parallel sampling engine: tables are built
+    /// concurrently (one worker per shard) and draws come from the exact
+    /// shard-mixture proposal. 1 = the single-threaded `LgdEstimator`.
+    pub shards: usize,
 }
 
 impl Default for LshConfig {
@@ -100,6 +104,7 @@ impl Default for LshConfig {
             mirror: true,
             weight_clip: Some(5.0),
             seed: 0x15A11,
+            shards: 1,
         }
     }
 }
@@ -209,6 +214,7 @@ impl RunConfig {
         cfg.lsh.center = doc.bool_or("lsh", "center", cfg.lsh.center)?;
         cfg.lsh.mirror = doc.bool_or("lsh", "mirror", cfg.lsh.mirror)?;
         cfg.lsh.seed = doc.int_or("lsh", "seed", cfg.lsh.seed as i64)? as u64;
+        cfg.lsh.shards = doc.int_or("lsh", "shards", cfg.lsh.shards as i64)? as usize;
         cfg.lsh.hasher = match doc.str_or("lsh", "hasher", "dense")?.as_str() {
             "dense" => HasherKind::Dense,
             "sparse" => HasherKind::Sparse,
@@ -274,6 +280,12 @@ impl RunConfig {
         if !(self.lsh.density > 0.0 && self.lsh.density <= 1.0) {
             return Err(Error::Config(format!("lsh.density = {} out of (0,1]", self.lsh.density)));
         }
+        if self.lsh.shards == 0 || self.lsh.shards > 4096 {
+            return Err(Error::Config(format!(
+                "lsh.shards = {} out of 1..=4096",
+                self.lsh.shards
+            )));
+        }
         if self.train.epochs == 0 || self.train.batch == 0 {
             return Err(Error::Config("train.epochs and train.batch must be positive".into()));
         }
@@ -306,6 +318,7 @@ mod tests {
         assert!((cfg.lsh.density - 1.0 / 30.0).abs() < 1e-12);
         assert_eq!(cfg.lsh.weight_clip, Some(5.0));
         assert!(cfg.lsh.mirror);
+        assert_eq!(cfg.lsh.shards, 1, "sharding is opt-in");
         assert_eq!(cfg.train.estimator, EstimatorKind::Lgd);
         assert_eq!(cfg.train.backend, Backend::Native);
     }
@@ -324,6 +337,7 @@ k = 7
 l = 10
 hasher = "dense"
 weight_clip = 8.0
+shards = 4
 [train]
 estimator = "sgd"
 optimizer = "adagrad"
@@ -342,6 +356,7 @@ backend = "pjrt"
         assert_eq!(cfg.lsh.k, 7);
         assert_eq!(cfg.lsh.hasher, HasherKind::Dense);
         assert_eq!(cfg.lsh.weight_clip, Some(8.0));
+        assert_eq!(cfg.lsh.shards, 4);
         assert_eq!(cfg.train.estimator, EstimatorKind::Sgd);
         assert_eq!(cfg.train.optimizer, OptimizerKind::AdaGrad);
         assert!(matches!(cfg.train.schedule, Schedule::Exp { .. }));
@@ -355,6 +370,7 @@ backend = "pjrt"
             "[lsh]\nk = 0",
             "[lsh]\nk = 40",
             "[lsh]\ndensity = 1.5",
+            "[lsh]\nshards = 0",
             "[train]\nepochs = 0",
             "[train]\nestimator = \"bogus\"",
             "[train]\nlr = -0.1",

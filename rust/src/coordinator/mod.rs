@@ -6,5 +6,7 @@ pub mod pipeline;
 pub mod trainer;
 
 pub use metrics::Metrics;
-pub use pipeline::{streaming_build, PipelineConfig, PipelineReport};
+pub use pipeline::{
+    build_shard_tables, streaming_build, PipelineConfig, PipelineReport, ShardTables,
+};
 pub use trainer::{build_estimator, train, CurvePoint, GradSource, TrainOutcome};

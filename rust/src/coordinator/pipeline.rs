@@ -19,6 +19,7 @@ use crate::core::matrix::{normalize, Matrix};
 use crate::coordinator::metrics::Metrics;
 use crate::data::dataset::Dataset;
 use crate::data::preprocess::{HashSpace, Preprocessed};
+use crate::data::shard::ShardPlan;
 use crate::lsh::srp::SrpHasher;
 use crate::lsh::tables::LshTables;
 
@@ -214,6 +215,94 @@ where
     Ok((pre, tables, report))
 }
 
+/// One shard of the sharded sampling engine: the slice of stored rows it
+/// owns, its copy of those vectors, their norms, and the LSH tables built
+/// over them. Row ids index the *virtual* stored matrix `[base; −base]`:
+/// id `i < n` is `base.row(i)`, id `i + n` is its negation (mirrored
+/// storage) — matching `LgdEstimator`'s stored-row layout.
+pub struct ShardTables<H: SrpHasher> {
+    /// Virtual stored-row id of each local row (local row j ↔ rows\[j\]).
+    pub rows: Vec<u32>,
+    /// Local copy of the owned vectors (row j = the vector of rows\[j\]).
+    pub stored: Matrix,
+    /// Precomputed ‖row‖ for the sampling hot path.
+    pub norms: Vec<f64>,
+    /// Tables over the local rows (bucket ids are local row indices).
+    pub tables: LshTables<H>,
+    /// Wall-clock seconds this shard's build took on its worker thread.
+    pub build_secs: f64,
+}
+
+/// Build per-shard LSH tables concurrently, one worker thread per shard
+/// (`std::thread::scope`). `base` holds one hash-space row per example
+/// (e.g. `Preprocessed::hashed`); `plan` partitions the examples, and each
+/// shard copies the rows of its member examples — plus their negations when
+/// `mirror`, materialized on the fly so the full mirrored matrix never
+/// exists (the peak-memory win of sharded builds). Every shard clones the
+/// same hasher, so query codes agree across shards and a single
+/// [`crate::lsh::sampler::QueryCache`] can serve all of them. Per-shard
+/// build time is recorded under the `pipeline.shard_build` timer and row
+/// counts under the `pipeline.shard_rows` counter.
+pub fn build_shard_tables<H>(
+    base: &Matrix,
+    plan: &ShardPlan,
+    mirror: bool,
+    hasher: &H,
+    metrics: &Metrics,
+) -> Result<Vec<ShardTables<H>>>
+where
+    H: SrpHasher + Clone,
+{
+    let n: usize = plan.counts().iter().sum();
+    if base.rows() != n {
+        return Err(Error::Pipeline(format!(
+            "shard plan covers {n} examples but base matrix has {} rows",
+            base.rows()
+        )));
+    }
+    let results: Vec<std::thread::Result<Result<ShardTables<H>>>> = thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(plan.shards());
+        for s in 0..plan.shards() {
+            let members = plan.members(s);
+            let h = hasher.clone();
+            handles.push(scope.spawn(move || -> Result<ShardTables<H>> {
+                let t0 = Instant::now();
+                let mut rows: Vec<u32> = members.iter().map(|&i| i as u32).collect();
+                let mut local = Matrix::zeros(0, 0);
+                for &i in &members {
+                    local.push_row(base.row(i)).map_err(|e| Error::Pipeline(e.to_string()))?;
+                }
+                if mirror {
+                    rows.extend(members.iter().map(|&i| (i + n) as u32));
+                    for &i in &members {
+                        let neg: Vec<f32> = base.row(i).iter().map(|v| -v).collect();
+                        local.push_row(&neg).map_err(|e| Error::Pipeline(e.to_string()))?;
+                    }
+                }
+                let norms: Vec<f64> =
+                    (0..local.rows()).map(|i| crate::core::matrix::norm2(local.row(i))).collect();
+                let tables = LshTables::build(h, (0..local.rows()).map(|i| local.row(i)))?;
+                Ok(ShardTables {
+                    rows,
+                    stored: local,
+                    norms,
+                    tables,
+                    build_secs: t0.elapsed().as_secs_f64(),
+                })
+            }));
+        }
+        handles.into_iter().map(|h| h.join()).collect()
+    });
+    let mut out = Vec::with_capacity(results.len());
+    for r in results {
+        let st = r.map_err(|_| Error::Pipeline("shard build worker panicked".into()))??;
+        metrics.observe("pipeline.shard_build", st.build_secs);
+        metrics.count("pipeline.shard_rows", st.rows.len() as u64);
+        out.push(st);
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,6 +388,77 @@ mod tests {
         let m = Metrics::new();
         let r = streaming_build(ds, hasher, &PipelineConfig::default(), &m);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn shard_build_partitions_all_rows() {
+        let ds = SynthSpec::power_law("s", 300, 10, 17).generate().unwrap();
+        let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
+        let hasher = DenseSrp::new(11, 4, 6, 19);
+        let plan = ShardPlan::round_robin(300, 4).unwrap();
+        let m = Metrics::new();
+        let shards = build_shard_tables(&pre.hashed, &plan, false, &hasher, &m).unwrap();
+        assert_eq!(shards.len(), 4);
+        let mut seen: Vec<u32> = shards.iter().flat_map(|s| s.rows.iter().copied()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..300u32).collect::<Vec<_>>(), "shards must partition the rows");
+        for s in &shards {
+            assert_eq!(s.tables.len(), s.rows.len());
+            assert_eq!(s.stored.rows(), s.rows.len());
+            assert_eq!(s.norms.len(), s.rows.len());
+        }
+        assert_eq!(m.counter("pipeline.shard_rows"), 300);
+        assert_eq!(m.timer("pipeline.shard_build").unwrap().0, 4);
+    }
+
+    /// shards = 1 reproduces the unsharded table build bucket-for-bucket.
+    #[test]
+    fn single_shard_matches_unsharded_build() {
+        let ds = SynthSpec::power_law("s", 200, 8, 21).generate().unwrap();
+        let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
+        let hasher = DenseSrp::new(9, 4, 8, 23);
+        let full = LshTables::build(hasher.clone(), (0..200).map(|i| pre.hashed.row(i))).unwrap();
+        let plan = ShardPlan::round_robin(200, 1).unwrap();
+        let m = Metrics::new();
+        let shards = build_shard_tables(&pre.hashed, &plan, false, &hasher, &m).unwrap();
+        assert_eq!(shards.len(), 1);
+        let st = &shards[0];
+        assert_eq!(st.rows, (0..200u32).collect::<Vec<_>>());
+        for t in 0..8 {
+            for code in 0..(1u32 << 4) {
+                let (a, b) = (full.bucket(t, code), st.tables.bucket(t, code));
+                assert_eq!(a, b, "table {t} code {code}");
+            }
+        }
+    }
+
+    /// Mirrored builds keep each example's row and its on-the-fly negation
+    /// on the same shard, and a plan/matrix row-count mismatch is rejected.
+    #[test]
+    fn mirrored_shard_build_owns_both_signs() {
+        let ds = SynthSpec::power_law("s", 60, 6, 27).generate().unwrap();
+        let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
+        let hasher = DenseSrp::new(7, 3, 5, 29);
+        let plan = ShardPlan::round_robin(60, 3).unwrap();
+        let m = Metrics::new();
+        let shards = build_shard_tables(&pre.hashed, &plan, true, &hasher, &m).unwrap();
+        for (s_idx, s) in shards.iter().enumerate() {
+            let cnt = s.rows.len() / 2;
+            assert_eq!(s.rows.len(), 2 * cnt);
+            for j in 0..cnt {
+                assert_eq!(s.rows[j + cnt] as usize, s.rows[j] as usize + 60);
+                assert_eq!(plan.shard_of(s.rows[j] as usize), s_idx);
+                for (a, b) in s.stored.row(j).iter().zip(s.stored.row(j + cnt)) {
+                    assert_eq!(*a, -*b, "mirror row must be the exact negation");
+                }
+            }
+        }
+        assert_eq!(m.counter("pipeline.shard_rows"), 120);
+        let short_plan = ShardPlan::round_robin(50, 3).unwrap();
+        assert!(
+            build_shard_tables(&pre.hashed, &short_plan, true, &hasher, &m).is_err(),
+            "plan/matrix row-count mismatch must be rejected"
+        );
     }
 
     /// The built tables must be usable by the LGD estimator end-to-end.

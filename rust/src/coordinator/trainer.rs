@@ -12,8 +12,9 @@ use crate::core::matrix::axpy;
 use crate::data::dataset::{Dataset, Task};
 use crate::data::preprocess::Preprocessed;
 use crate::estimator::lgd::{LgdEstimator, LgdOptions};
+use crate::estimator::sharded::ShardedLgdEstimator;
 use crate::estimator::{EstimatorStats, GradientEstimator, UniformEstimator, WeightedDraw};
-use crate::lsh::srp::{DenseSrp, SparseSrp};
+use crate::lsh::srp::{DenseSrp, SparseSrp, SrpHasher};
 use crate::lsh::QuadraticSrp;
 use crate::model::{LinReg, LogReg, Model};
 use crate::optim::{AdaGrad, Adam, Optimizer, Sgd};
@@ -50,8 +51,10 @@ pub struct TrainOutcome {
     pub iterations: u64,
     /// Estimator counters (draws, fallbacks, hash cost).
     pub est_stats: EstimatorStats,
-    /// Estimator name ("sgd"/"lgd").
+    /// Estimator name ("sgd"/"lgd"/"lgd-sharded").
     pub estimator: String,
+    /// Per-shard table-build seconds (empty unless `lsh.shards > 1`).
+    pub shard_build_secs: Vec<f64>,
 }
 
 /// Gradient execution source.
@@ -67,8 +70,40 @@ pub fn build_estimator<'a>(
     cfg: &RunConfig,
     pre: &'a Preprocessed,
 ) -> Result<Box<dyn GradientEstimator + 'a>> {
+    Ok(build_estimator_reported(cfg, pre)?.0)
+}
+
+/// Pick the single-structure `LgdEstimator` or, for `lsh.shards > 1`, the
+/// sharded engine; returns the per-shard build seconds alongside (empty for
+/// the unsharded estimators).
+fn lgd_boxed<'a, H>(
+    cfg: &RunConfig,
+    pre: &'a Preprocessed,
+    h: H,
+    opts: LgdOptions,
+) -> Result<(Box<dyn GradientEstimator + 'a>, Vec<f64>)>
+where
+    H: SrpHasher + Clone + 'a,
+{
+    if cfg.lsh.shards > 1 {
+        let est = ShardedLgdEstimator::new(pre, h, cfg.train.seed, opts, cfg.lsh.shards)?;
+        let secs = est.build_report().per_shard_secs.clone();
+        Ok((Box::new(est), secs))
+    } else {
+        Ok((Box::new(LgdEstimator::new(pre, h, cfg.train.seed, opts)?), Vec::new()))
+    }
+}
+
+/// [`build_estimator`] plus the per-shard build timings the sharded engine
+/// reports (fed into [`TrainOutcome::shard_build_secs`]).
+pub fn build_estimator_reported<'a>(
+    cfg: &RunConfig,
+    pre: &'a Preprocessed,
+) -> Result<(Box<dyn GradientEstimator + 'a>, Vec<f64>)> {
     match cfg.train.estimator {
-        EstimatorKind::Sgd => Ok(Box::new(UniformEstimator::new(pre.data.len(), cfg.train.seed))),
+        EstimatorKind::Sgd => {
+            Ok((Box::new(UniformEstimator::new(pre.data.len(), cfg.train.seed)), Vec::new()))
+        }
         EstimatorKind::Lgd => {
             let hd = pre.hashed.cols();
             let opts = LgdOptions {
@@ -80,16 +115,16 @@ pub fn build_estimator<'a>(
             match cfg.lsh.hasher {
                 HasherKind::Dense => {
                     let h = DenseSrp::new(hd, cfg.lsh.k, cfg.lsh.l, cfg.lsh.seed);
-                    Ok(Box::new(LgdEstimator::new(pre, h, cfg.train.seed, opts)?))
+                    lgd_boxed(cfg, pre, h, opts)
                 }
                 HasherKind::Sparse => {
                     let h = SparseSrp::new(hd, cfg.lsh.k, cfg.lsh.l, cfg.lsh.density, cfg.lsh.seed);
-                    Ok(Box::new(LgdEstimator::new(pre, h, cfg.train.seed, opts)?))
+                    lgd_boxed(cfg, pre, h, opts)
                 }
                 HasherKind::Quadratic => {
                     let h =
                         QuadraticSrp::new(hd, cfg.lsh.k, cfg.lsh.l, cfg.lsh.density, cfg.lsh.seed);
-                    Ok(Box::new(LgdEstimator::new(pre, h, cfg.train.seed, opts)?))
+                    lgd_boxed(cfg, pre, h, opts)
                 }
             }
         }
@@ -132,9 +167,10 @@ pub fn train(
         iters_per_epoch
     };
 
-    // One-time preprocessing: estimator construction builds the LSH tables.
+    // One-time preprocessing: estimator construction builds the LSH tables
+    // (concurrently per shard when `lsh.shards > 1`).
     let t0 = Instant::now();
-    let mut est = build_estimator(cfg, pre)?;
+    let (mut est, shard_build_secs) = build_estimator_reported(cfg, pre)?;
     let preprocess_secs = t0.elapsed().as_secs_f64();
 
     let mut opt = build_optimizer(cfg);
@@ -229,6 +265,7 @@ pub fn train(
         iterations: total_iters,
         est_stats: est.stats(),
         estimator: est.name().to_string(),
+        shard_build_secs,
     })
 }
 
@@ -280,6 +317,20 @@ mod tests {
         let last = out.curve.last().unwrap().train_loss;
         assert!(last < first * 0.8, "loss {first} -> {last}");
         assert!(out.est_stats.cost.codes > 0, "LGD must compute hashes");
+    }
+
+    #[test]
+    fn sharded_lgd_training_reduces_loss() {
+        let (pre, te) = setup(500, 10, 5);
+        let mut cfg = small_cfg(EstimatorKind::Lgd);
+        cfg.lsh.shards = 4;
+        let out = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+        assert_eq!(out.estimator, "lgd-sharded");
+        assert_eq!(out.shard_build_secs.len(), 4, "one build timing per shard");
+        let first = out.curve.first().unwrap().train_loss;
+        let last = out.curve.last().unwrap().train_loss;
+        assert!(last < first * 0.8, "loss {first} -> {last}");
+        assert!(out.est_stats.cost.codes > 0, "sharded LGD must compute hashes");
     }
 
     #[test]

@@ -374,6 +374,51 @@ mod tests {
         }
     }
 
+    /// Regression: the `Exhausted` → uniform fallback path must count
+    /// exactly one fallback per draw and return a valid uniform draw.
+    /// Empty tables (via `from_parts`) make every probe exhaust
+    /// deterministically.
+    #[test]
+    fn exhausted_fallback_counts_once_per_draw() {
+        let pre = setup(120, 8, 21);
+        let hd = pre.hashed.cols();
+        let hasher = DenseSrp::new(hd, 4, 6, 22);
+        let empty = crate::lsh::tables::LshTables::new(hasher);
+        let mut est = LgdEstimator::from_parts(&pre, empty, 23, LgdOptions::default());
+        let theta = vec![0.1f32; 8];
+        for i in 1..=200u64 {
+            let d = est.draw(&theta);
+            assert!(d.index < 120);
+            assert_eq!(d.weight, 1.0);
+            assert!((d.prob - 1.0 / 120.0).abs() < 1e-12);
+            assert_eq!(est.stats().fallbacks, i, "exactly one fallback per draw");
+        }
+        assert_eq!(est.stats().draws, 200);
+    }
+
+    /// Regression: `draw_batch`'s uniform top-up must never emit
+    /// out-of-range indices or non-positive weights, and counts one
+    /// fallback per topped-up draw.
+    #[test]
+    fn batch_topup_indices_and_weights_valid() {
+        let pre = setup(90, 6, 25);
+        let hd = pre.hashed.cols();
+        let hasher = DenseSrp::new(hd, 3, 8, 26);
+        let empty = crate::lsh::tables::LshTables::new(hasher);
+        let mut est = LgdEstimator::from_parts(&pre, empty, 27, LgdOptions::default());
+        let theta = vec![0.05f32; 6];
+        let mut out = Vec::new();
+        est.draw_batch(&theta, 48, &mut out);
+        assert_eq!(out.len(), 48);
+        for d in &out {
+            assert!(d.index < 90, "top-up produced out-of-range index {}", d.index);
+            assert!(d.weight > 0.0, "top-up produced zero weight");
+            assert!(d.prob > 0.0);
+        }
+        assert_eq!(est.stats().fallbacks, 48);
+        assert_eq!(est.stats().draws, 48);
+    }
+
     #[test]
     fn batch_draw_returns_m() {
         let pre = setup(150, 6, 15);

@@ -6,6 +6,7 @@
 
 pub mod lgd;
 pub mod oracle;
+pub mod sharded;
 pub mod uniform;
 pub mod variance;
 
@@ -57,4 +58,5 @@ pub trait GradientEstimator {
 
 pub use lgd::LgdEstimator;
 pub use oracle::OracleEstimator;
+pub use sharded::{ShardedBuildReport, ShardedLgdEstimator};
 pub use uniform::UniformEstimator;

@@ -1,0 +1,531 @@
+//! Sharded LGD: the parallel sampling engine.
+//!
+//! The dataset is partitioned across shards with
+//! [`crate::data::shard::ShardPlan`]; each shard owns the stored rows of its
+//! member examples (plus their mirrors) and its own [`LshTables`], built
+//! concurrently by [`crate::coordinator::pipeline::build_shard_tables`].
+//! Draws come from a *shard-mixture* proposal with exact probabilities:
+//!
+//! ```text
+//! p(row) = (R_s / R) · p_shard(row)
+//! ```
+//!
+//! where `R_s` is the shard's stored-row count, `R = Σ R_s`, and
+//! `p_shard` is the exact Algorithm-1 probability within the shard. The
+//! shard is picked ∝ its row count and Algorithm 1 runs inside it, so the
+//! mixture probability is known exactly and Theorem-1 unbiasedness carries
+//! over unchanged: `E[∇f / (p·R)]` is still the full average gradient.
+//!
+//! Every shard clones the *same* hasher family, so the query's K-bit table
+//! codes are identical across shards and one [`QueryCache`] amortises the
+//! hash cost for all of them. With `shards = 1` the engine reduces to
+//! [`LgdEstimator`] draw-for-draw under the same seed (tested below) — the
+//! knob is purely a scaling dial.
+
+use std::time::Instant;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pipeline::{build_shard_tables, ShardTables};
+use crate::core::error::Result;
+use crate::core::rng::{Pcg64, Rng};
+use crate::data::preprocess::Preprocessed;
+use crate::data::shard::ShardPlan;
+use crate::estimator::lgd::LgdOptions;
+use crate::estimator::{EstimatorStats, GradientEstimator, WeightedDraw};
+use crate::lsh::sampler::{LshSampler, QueryCache, SampleCost, Sampled};
+use crate::lsh::srp::SrpHasher;
+
+/// Timing/shape report of a sharded table build.
+#[derive(Debug, Clone)]
+pub struct ShardedBuildReport {
+    /// Per-shard build seconds (each measured on its own worker thread).
+    pub per_shard_secs: Vec<f64>,
+    /// End-to-end wall seconds of the concurrent build.
+    pub wall_secs: f64,
+    /// Stored rows per shard.
+    pub shard_rows: Vec<usize>,
+}
+
+/// LGD estimator over sharded tables: shard-mixture proposal with exact
+/// probabilities (see module docs).
+pub struct ShardedLgdEstimator<'a, H: SrpHasher> {
+    pre: &'a Preprocessed,
+    shards: Vec<ShardTables<H>>,
+    /// Exclusive prefix sums of per-shard row counts (shard pick ∝ rows).
+    cum_rows: Vec<usize>,
+    total_rows: usize,
+    rng: Pcg64,
+    opts: LgdOptions,
+    stats: EstimatorStats,
+    query: Vec<f32>,
+    cache: QueryCache,
+    report: ShardedBuildReport,
+}
+
+impl<'a, H: SrpHasher> ShardedLgdEstimator<'a, H> {
+    /// Partition `pre` into `shards` round-robin shards and build each
+    /// shard's tables concurrently. Records per-shard build timing into a
+    /// private registry; use [`Self::new_with_metrics`] to capture it.
+    pub fn new(
+        pre: &'a Preprocessed,
+        hasher: H,
+        seed: u64,
+        opts: LgdOptions,
+        shards: usize,
+    ) -> Result<Self>
+    where
+        H: Clone,
+    {
+        Self::new_with_metrics(pre, hasher, seed, opts, shards, &Metrics::new())
+    }
+
+    /// [`Self::new`], recording per-shard build time under the
+    /// `pipeline.shard_build` timer of `metrics`.
+    pub fn new_with_metrics(
+        pre: &'a Preprocessed,
+        hasher: H,
+        seed: u64,
+        opts: LgdOptions,
+        shards: usize,
+        metrics: &Metrics,
+    ) -> Result<Self>
+    where
+        H: Clone,
+    {
+        let n = pre.data.len();
+        let plan = ShardPlan::round_robin(n, shards)?;
+        let t0 = Instant::now();
+        let built = build_shard_tables(&pre.hashed, &plan, opts.mirror, &hasher, metrics)?;
+        let wall_secs = t0.elapsed().as_secs_f64();
+        Ok(Self::from_shards_inner(pre, built, seed, opts, wall_secs))
+    }
+
+    /// Wrap pre-built shards (e.g. from a streaming build). Each shard's
+    /// tables must index exactly its `stored` rows, and `rows` must map the
+    /// local rows into the virtual stored matrix `[pre.hashed; −pre.hashed]`
+    /// (row `i + N` = negation of row `i`) when `opts.mirror`, or plain
+    /// `pre.hashed` row ids otherwise.
+    pub fn from_shards(
+        pre: &'a Preprocessed,
+        shards: Vec<ShardTables<H>>,
+        seed: u64,
+        opts: LgdOptions,
+    ) -> Self {
+        Self::from_shards_inner(pre, shards, seed, opts, 0.0)
+    }
+
+    fn from_shards_inner(
+        pre: &'a Preprocessed,
+        shards: Vec<ShardTables<H>>,
+        seed: u64,
+        opts: LgdOptions,
+        wall_secs: f64,
+    ) -> Self {
+        let mut cum_rows = Vec::with_capacity(shards.len());
+        let mut total_rows = 0usize;
+        for s in &shards {
+            total_rows += s.stored.rows();
+            cum_rows.push(total_rows);
+        }
+        let report = ShardedBuildReport {
+            per_shard_secs: shards.iter().map(|s| s.build_secs).collect(),
+            wall_secs,
+            shard_rows: shards.iter().map(|s| s.stored.rows()).collect(),
+        };
+        ShardedLgdEstimator {
+            pre,
+            shards,
+            cum_rows,
+            total_rows,
+            // Same stream as LgdEstimator so shards = 1 is draw-for-draw
+            // identical under the same seed.
+            rng: Pcg64::new(seed, 0x4c474400),
+            opts,
+            stats: EstimatorStats::default(),
+            query: Vec::new(),
+            cache: QueryCache::default(),
+            report,
+        }
+    }
+
+    /// Build timing/shape report.
+    pub fn build_report(&self) -> &ShardedBuildReport {
+        &self.report
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard owning global stored row `r` (prefix-sum scan; shard counts
+    /// are tiny).
+    #[inline]
+    fn shard_of_row(&self, r: usize) -> usize {
+        for (s, &cum) in self.cum_rows.iter().enumerate() {
+            if r < cum {
+                return s;
+            }
+        }
+        self.cum_rows.len() - 1
+    }
+}
+
+impl<'a, H: SrpHasher> GradientEstimator for ShardedLgdEstimator<'a, H> {
+    fn draw(&mut self, theta: &[f32]) -> WeightedDraw {
+        self.stats.draws += 1;
+        let l_tables = self.shards[0].tables.hasher().l();
+        let refresh = if self.opts.query_refresh == 0 {
+            8 * l_tables
+        } else {
+            self.opts.query_refresh
+        };
+        if self.cache.is_empty() || self.cache.age >= refresh {
+            let mut query = std::mem::take(&mut self.query);
+            self.pre.query(theta, &mut query);
+            self.cache.refresh(&query, l_tables);
+            self.query = query;
+        }
+        // Shard ∝ stored rows. With one shard no randomness is consumed,
+        // keeping the draw stream identical to LgdEstimator.
+        let s = if self.shards.len() > 1 {
+            let r = self.rng.index(self.total_rows);
+            self.stats.cost.randoms += 1;
+            self.shard_of_row(r)
+        } else {
+            0
+        };
+        let shard = &self.shards[s];
+        let mut cost = SampleCost::default();
+        let mut cache = std::mem::take(&mut self.cache);
+        let sampler = {
+            let sp = LshSampler::with_norms(
+                &shard.tables,
+                &shard.stored,
+                std::borrow::Cow::Borrowed(&shard.norms),
+            );
+            if self.opts.max_probes > 0 {
+                sp.with_max_probes(self.opts.max_probes)
+            } else {
+                sp
+            }
+        };
+        let n = self.pre.data.len();
+        let out = match sampler.sample_cached(&mut cache, &mut self.rng, &mut cost) {
+            Sampled::Hit(d) => {
+                // Exact mixture probability: shard pick (R_s/R) × exact
+                // Algorithm-1 probability within the shard.
+                let frac = shard.stored.rows() as f64 / self.total_rows as f64;
+                let prob = d.prob * frac;
+                let w = 1.0 / (prob * self.total_rows as f64);
+                let weight = match self.opts.weight_clip {
+                    Some(c) => w.min(c),
+                    None => w,
+                };
+                let global = shard.rows[d.index] as usize;
+                let index = if global >= n { global - n } else { global };
+                WeightedDraw { index, weight, prob }
+            }
+            Sampled::Exhausted { .. } => {
+                // Same degenerate fallback as LgdEstimator: one uniform
+                // draw at weight 1, counted exactly once.
+                self.stats.fallbacks += 1;
+                WeightedDraw { index: self.rng.index(n), weight: 1.0, prob: 1.0 / n as f64 }
+            }
+        };
+        self.cache = cache;
+        self.stats.cost.codes += cost.codes;
+        self.stats.cost.mults += cost.mults;
+        self.stats.cost.randoms += cost.randoms;
+        out
+    }
+
+    /// Appendix-B.2 minibatch sampling over the shard mixture: one
+    /// row-proportional shard pick per requested draw (the multinomial
+    /// allocation), then each shard's batch sampler fills its quota with
+    /// replacement, so every returned draw carries its exact mixture
+    /// probability. Under-filled quotas (exhausted shards) top up with
+    /// uniform fallbacks, one counted fallback each. With `shards = 1`
+    /// this is `LgdEstimator::draw_batch` draw-for-draw.
+    fn draw_batch(&mut self, theta: &[f32], m: usize, out: &mut Vec<WeightedDraw>) {
+        out.clear();
+        let mut query = std::mem::take(&mut self.query);
+        self.pre.query(theta, &mut query);
+        let mut cost = SampleCost::default();
+        let mut want = vec![0usize; self.shards.len()];
+        if self.shards.len() > 1 {
+            for _ in 0..m {
+                let r = self.rng.index(self.total_rows);
+                cost.randoms += 1;
+                want[self.shard_of_row(r)] += 1;
+            }
+        } else {
+            want[0] = m;
+        }
+        let n = self.pre.data.len();
+        let mut batch = Vec::new();
+        for (s, &quota) in want.iter().enumerate() {
+            if quota == 0 {
+                continue;
+            }
+            let shard = &self.shards[s];
+            let sampler = {
+                let sp = LshSampler::with_norms(
+                    &shard.tables,
+                    &shard.stored,
+                    std::borrow::Cow::Borrowed(&shard.norms),
+                );
+                if self.opts.max_probes > 0 {
+                    sp.with_max_probes(self.opts.max_probes)
+                } else {
+                    sp
+                }
+            };
+            sampler.sample_batch(&query, quota, &mut self.rng, &mut cost, &mut batch);
+            let frac = shard.stored.rows() as f64 / self.total_rows as f64;
+            for d in &batch {
+                let prob = d.prob * frac;
+                let w = 1.0 / (prob * self.total_rows as f64);
+                let weight = match self.opts.weight_clip {
+                    Some(c) => w.min(c),
+                    None => w,
+                };
+                let global = shard.rows[d.index] as usize;
+                let index = if global >= n { global - n } else { global };
+                out.push(WeightedDraw { index, weight, prob });
+            }
+            for _ in batch.len()..quota {
+                self.stats.fallbacks += 1;
+                out.push(WeightedDraw {
+                    index: self.rng.index(n),
+                    weight: 1.0,
+                    prob: 1.0 / n as f64,
+                });
+            }
+        }
+        self.stats.draws += m as u64;
+        self.stats.cost.codes += cost.codes;
+        self.stats.cost.mults += cost.mults;
+        self.stats.cost.randoms += cost.randoms;
+        self.query = query;
+    }
+
+    fn stats(&self) -> EstimatorStats {
+        self.stats
+    }
+
+    fn name(&self) -> &'static str {
+        "lgd-sharded"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::matrix::Matrix;
+    use crate::data::preprocess::{preprocess, PreprocessOptions};
+    use crate::data::synth::SynthSpec;
+    use crate::estimator::lgd::LgdEstimator;
+    use crate::lsh::srp::DenseSrp;
+    use crate::lsh::tables::LshTables;
+    use crate::model::{LinReg, Model};
+
+    fn setup(n: usize, d: usize, seed: u64) -> Preprocessed {
+        let ds = SynthSpec::power_law("t", n, d, seed).generate().unwrap();
+        preprocess(ds, &PreprocessOptions::default()).unwrap()
+    }
+
+    /// The headline regression: `shards = 1` is LgdEstimator draw-for-draw
+    /// under the same seed — same indices, weights and probabilities.
+    #[test]
+    fn single_shard_matches_lgd_draw_for_draw() {
+        let pre = setup(300, 10, 31);
+        let hd = pre.hashed.cols();
+        let mut lgd =
+            LgdEstimator::new(&pre, DenseSrp::new(hd, 4, 16, 33), 35, LgdOptions::default())
+                .unwrap();
+        let mut sharded = ShardedLgdEstimator::new(
+            &pre,
+            DenseSrp::new(hd, 4, 16, 33),
+            35,
+            LgdOptions::default(),
+            1,
+        )
+        .unwrap();
+        let theta: Vec<f32> = (0..10).map(|j| 0.03 * (j as f32 - 4.0)).collect();
+        for i in 0..500 {
+            let a = lgd.draw(&theta);
+            let b = sharded.draw(&theta);
+            assert_eq!(a.index, b.index, "draw {i}: index diverged");
+            assert_eq!(a.weight, b.weight, "draw {i}: weight diverged");
+            assert_eq!(a.prob, b.prob, "draw {i}: prob diverged");
+        }
+        assert_eq!(lgd.stats().fallbacks, sharded.stats().fallbacks);
+    }
+
+    /// Theorem 1 for the shard mixture: averaged over the hash-function
+    /// ensemble, `weight · ∇f(x_draw)` is the full average gradient — the
+    /// same empirical-unbiasedness check `LgdEstimator` passes.
+    #[test]
+    fn sharded_estimator_is_unbiased_over_hash_ensemble() {
+        let pre = setup(400, 10, 1);
+        let hd = pre.hashed.cols();
+        let model = LinReg;
+        let theta: Vec<f32> = (0..10).map(|j| 0.05 * (j as f32 - 5.0)).collect();
+
+        let mut full = vec![0.0f32; 10];
+        model.full_grad(&pre.data, &theta, &mut full);
+        let full_norm = crate::core::matrix::norm2(&full);
+
+        let families = 60;
+        let draws_per = 4_000;
+        let mut acc = vec![0.0f64; 10];
+        let mut g = vec![0.0f32; 10];
+        let mut total = 0u64;
+        for f in 0..families {
+            let hasher = DenseSrp::new(hd, 4, 24, 500 + f as u64);
+            let mut est = ShardedLgdEstimator::new(
+                &pre,
+                hasher,
+                700 + f as u64,
+                LgdOptions::default(),
+                3,
+            )
+            .unwrap();
+            for _ in 0..draws_per {
+                let d = est.draw(&theta);
+                let (x, y) = pre.data.example(d.index);
+                model.grad(x, y, &theta, &mut g);
+                for j in 0..10 {
+                    acc[j] += d.weight * g[j] as f64;
+                }
+                total += 1;
+            }
+            assert_eq!(est.stats().fallbacks, 0, "fallbacks should not fire at K=4");
+        }
+        for a in acc.iter_mut() {
+            *a /= total as f64;
+        }
+        let mut err = 0.0f64;
+        for j in 0..10 {
+            err += (acc[j] - full[j] as f64).powi(2);
+        }
+        let rel = err.sqrt() / full_norm.max(1e-12);
+        assert!(rel < 0.15, "sharded LGD estimator biased: relative error {rel}");
+    }
+
+    /// Draws stay valid and the mixture actually reaches every shard.
+    #[test]
+    fn draws_valid_and_mixture_covers_all_shards() {
+        let pre = setup(240, 8, 41);
+        let hd = pre.hashed.cols();
+        let shards = 4usize;
+        let mut est = ShardedLgdEstimator::new(
+            &pre,
+            DenseSrp::new(hd, 3, 12, 43),
+            45,
+            LgdOptions::default(),
+            shards,
+        )
+        .unwrap();
+        assert_eq!(est.shards(), shards);
+        let rep = est.build_report().clone();
+        assert_eq!(rep.per_shard_secs.len(), shards);
+        assert_eq!(rep.shard_rows.iter().sum::<usize>(), 2 * 240, "mirrored rows");
+        let theta = vec![0.05f32; 8];
+        // round-robin: example i lives on shard i % 4
+        let mut hit = vec![false; shards];
+        for _ in 0..4_000 {
+            let d = est.draw(&theta);
+            assert!(d.index < 240);
+            assert!(d.prob > 0.0 && d.prob <= 1.0, "prob {}", d.prob);
+            assert!(d.weight > 0.0);
+            hit[d.index % shards] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "some shard never produced a draw: {hit:?}");
+    }
+
+    /// `shards = 1` batch draws are LgdEstimator::draw_batch draw-for-draw
+    /// under the same seed.
+    #[test]
+    fn single_shard_batch_matches_lgd() {
+        let pre = setup(200, 8, 61);
+        let hd = pre.hashed.cols();
+        let mut lgd =
+            LgdEstimator::new(&pre, DenseSrp::new(hd, 3, 10, 63), 65, LgdOptions::default())
+                .unwrap();
+        let mut sharded = ShardedLgdEstimator::new(
+            &pre,
+            DenseSrp::new(hd, 3, 10, 63),
+            65,
+            LgdOptions::default(),
+            1,
+        )
+        .unwrap();
+        let theta = vec![0.02f32; 8];
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for round in 0..5 {
+            lgd.draw_batch(&theta, 32, &mut a);
+            sharded.draw_batch(&theta, 32, &mut b);
+            assert_eq!(a, b, "batch round {round} diverged");
+        }
+        assert_eq!(lgd.stats().fallbacks, sharded.stats().fallbacks);
+    }
+
+    /// Sharded batch draws return exactly `m` valid weighted draws.
+    #[test]
+    fn sharded_batch_returns_m_valid_draws() {
+        let pre = setup(180, 8, 71);
+        let hd = pre.hashed.cols();
+        let mut est = ShardedLgdEstimator::new(
+            &pre,
+            DenseSrp::new(hd, 3, 10, 73),
+            75,
+            LgdOptions::default(),
+            3,
+        )
+        .unwrap();
+        let theta = vec![0.05f32; 8];
+        let mut out = Vec::new();
+        for _ in 0..4 {
+            est.draw_batch(&theta, 48, &mut out);
+            assert_eq!(out.len(), 48);
+            for d in &out {
+                assert!(d.index < 180);
+                assert!(d.prob > 0.0 && d.prob <= 1.0);
+                assert!(d.weight > 0.0);
+            }
+        }
+        assert_eq!(est.stats().draws, 4 * 48);
+    }
+
+    /// Exhaustion falls back to a uniform draw with weight 1, counted
+    /// exactly once per draw — deterministic via empty per-shard tables.
+    #[test]
+    fn exhausted_fallback_counts_once_per_draw() {
+        let pre = setup(100, 6, 51);
+        let hd = pre.hashed.cols();
+        let opts = LgdOptions { mirror: false, ..LgdOptions::default() };
+        let mut shards = Vec::new();
+        for s in 0..2 {
+            let mut stored = Matrix::zeros(0, 0);
+            let mut rows = Vec::new();
+            for i in (s..100).step_by(2) {
+                rows.push(i as u32);
+                stored.push_row(pre.hashed.row(i)).unwrap();
+            }
+            let norms: Vec<f64> =
+                (0..stored.rows()).map(|i| crate::core::matrix::norm2(stored.row(i))).collect();
+            let tables = LshTables::new(DenseSrp::new(hd, 3, 4, 53));
+            shards.push(ShardTables { rows, stored, norms, tables, build_secs: 0.0 });
+        }
+        let mut est = ShardedLgdEstimator::from_shards(&pre, shards, 55, opts);
+        let theta = vec![0.1f32; 6];
+        for i in 1..=150u64 {
+            let d = est.draw(&theta);
+            assert!(d.index < 100);
+            assert_eq!(d.weight, 1.0);
+            assert_eq!(est.stats().fallbacks, i, "exactly one fallback per draw");
+        }
+    }
+}

@@ -124,7 +124,6 @@ impl<'a, H: SrpHasher> LshSampler<'a, H> {
     /// Override the probe cap.
     pub fn with_max_probes(mut self, cap: usize) -> Self {
         self.max_probes = cap.max(1);
-        self.max_probes = self.max_probes.max(1);
         self
     }
 
@@ -235,8 +234,11 @@ impl<'a, H: SrpHasher> LshSampler<'a, H> {
                 continue;
             }
             let want = m - out.len();
-            // B.2: take up to `want` from this bucket (with replacement).
-            let take = want.min(bucket.len().max(1));
+            // B.2: draws are *with replacement*, so even a bucket smaller
+            // than `want` can satisfy the whole remaining request — capping
+            // at the bucket size would silently burn probes and trigger
+            // spurious uniform fallbacks upstream.
+            let take = want;
             for _ in 0..take {
                 let pick = rng.index(bucket.len());
                 cost.randoms += 1;
@@ -400,6 +402,51 @@ mod tests {
         for d in &out {
             assert!(d.prob > 0.0 && d.prob <= 1.0);
             assert!(d.index < 100);
+        }
+    }
+
+    /// Regression: with-replacement semantics mean one non-empty bucket —
+    /// however small — satisfies an arbitrarily large batch. Ten identical
+    /// points share one bucket; with a probe budget of 1 the old
+    /// `min(bucket.len())` cap could only return 10 of the 32 requested
+    /// draws.
+    #[test]
+    fn small_bucket_satisfies_large_batch_with_replacement() {
+        let mut m = Matrix::zeros(0, 0);
+        let v = {
+            let mut v = vec![1.0f32; 6];
+            normalize(&mut v);
+            v
+        };
+        for _ in 0..10 {
+            m.push_row(&v).unwrap();
+        }
+        let h = DenseSrp::new(6, 3, 4, 5);
+        let t = LshTables::build(h, (0..10).map(|i| m.row(i))).unwrap();
+        let s = LshSampler::new(&t, &m).with_max_probes(1);
+        let mut rng = Pcg64::seeded(6);
+        let mut cost = SampleCost::default();
+        let mut out = Vec::new();
+        s.sample_batch(&v, 32, &mut rng, &mut cost, &mut out);
+        assert_eq!(out.len(), 32, "one probe must fill the whole batch");
+        for d in &out {
+            assert!(d.index < 10);
+            assert!(d.prob > 0.0 && d.prob <= 1.0);
+            assert_eq!(d.bucket_size, 10);
+        }
+    }
+
+    #[test]
+    fn with_max_probes_floors_at_one() {
+        let (t, m) = setup(20, 6, 3, 4, 13);
+        let s = LshSampler::new(&t, &m).with_max_probes(0);
+        let mut rng = Pcg64::seeded(14);
+        let mut cost = SampleCost::default();
+        // cap of 0 is clamped to 1 probe, not an infinite loop or panic
+        let q: Vec<f32> = m.row(0).to_vec();
+        match s.sample(&q, &mut rng, &mut cost) {
+            Sampled::Hit(d) => assert_eq!(d.probes, 1),
+            Sampled::Exhausted { probes } => assert_eq!(probes, 1),
         }
     }
 

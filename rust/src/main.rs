@@ -25,7 +25,7 @@ const USAGE: &str = "\
 lgd — LSH-sampled Stochastic Gradient Descent (paper reproduction)
 
 USAGE:
-  lgd train --config <run.toml> [--out <dir>]
+  lgd train --config <run.toml> [--out <dir>] [--shards <n>]
   lgd experiments --id <table4|fig9|fig10|fig11|fig12|fig13|variance|sampling|fig5|all>
                   [--scale <f>] [--out <dir>] [--seed <n>] [--quick] [--artifacts <dir>]
   lgd gen-data --name <yearmsd-like|slice-like|ujiindoor-like|pareto|uniform>
@@ -58,12 +58,18 @@ fn run(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    args.allow(&["config", "out"])?;
+    args.allow(&["config", "out", "shards"])?;
     let cfg_path = args.require("config")?;
     let doc = TomlDoc::load(std::path::Path::new(&cfg_path))?;
     let mut cfg = RunConfig::from_toml(&doc)?;
     if let Some(out) = args.has("out").then(|| args.str_or("out", "results")) {
         cfg.out_dir = PathBuf::from(out);
+    }
+    // --shards overrides the config's [lsh] shards knob; an explicit
+    // out-of-range value (e.g. 0) is rejected by validation, not ignored.
+    if !args.str_or("shards", "").is_empty() {
+        cfg.lsh.shards = args.usize_or("shards", 1)?;
+        cfg.validate()?;
     }
 
     // dataset
@@ -100,6 +106,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         outcome.curve.last().unwrap().train_loss,
         path.display()
     );
+    if !outcome.shard_build_secs.is_empty() {
+        let slowest = outcome.shard_build_secs.iter().cloned().fold(0.0f64, f64::max);
+        println!(
+            "  sharded build: {} shards, slowest worker {:.3}s",
+            outcome.shard_build_secs.len(),
+            slowest
+        );
+    }
     Ok(())
 }
 

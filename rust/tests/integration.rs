@@ -52,6 +52,29 @@ fn pipeline_to_training_end_to_end() {
     assert!(loss1 < loss0 * 0.8, "pipeline-fed LGD did not converge: {loss0} -> {loss1}");
 }
 
+/// Sharded engine end-to-end: config-driven training with `lsh.shards = 4`
+/// selects the shard-mixture estimator, reports one build timing per shard,
+/// and still converges.
+#[test]
+fn sharded_training_end_to_end() {
+    let ds = SynthSpec::power_law("shard-e2e", 800, 12, 19).generate().unwrap();
+    let (tr, te) = ds.split(0.9, 3).unwrap();
+    let pre = preprocess(tr, &PreprocessOptions::default()).unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.train.estimator = EstimatorKind::Lgd;
+    cfg.train.epochs = 3;
+    cfg.train.schedule = Schedule::Const(0.05);
+    cfg.lsh.k = 4;
+    cfg.lsh.l = 16;
+    cfg.lsh.shards = 4;
+    let out = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+    assert_eq!(out.estimator, "lgd-sharded");
+    assert_eq!(out.shard_build_secs.len(), 4);
+    let first = out.curve.first().unwrap().train_loss;
+    let last = out.curve.last().unwrap().train_loss;
+    assert!(last < first * 0.9, "sharded training did not descend: {first} -> {last}");
+}
+
 /// Property: every LGD draw returns a valid index, a probability in (0, 1]
 /// and a positive weight, across random datasets and table shapes.
 #[test]
