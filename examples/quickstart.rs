@@ -39,7 +39,10 @@ fn main() -> lgd::Result<()> {
     }
 
     // 3. Print the per-epoch comparison.
-    println!("\n{:<8} {:>14} {:>14} {:>14} {:>14}", "epoch", "lgd train", "sgd train", "lgd test", "sgd test");
+    println!(
+        "\n{:<8} {:>14} {:>14} {:>14} {:>14}",
+        "epoch", "lgd train", "sgd train", "lgd test", "sgd test"
+    );
     let (lgd_r, sgd_r) = (&results[0], &results[1]);
     for (a, b) in lgd_r.curve.iter().zip(&sgd_r.curve) {
         println!(

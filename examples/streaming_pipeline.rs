@@ -1,72 +1,142 @@
 //! Streaming-pipeline demo: records flow Source → Preprocess → parallel
-//! Hash workers → Table owner under bounded-channel backpressure; the
-//! resulting tables feed the LGD estimator directly and training starts
-//! the moment the build finishes.
+//! Hash workers → Table owner under bounded-channel backpressure, then the
+//! *sharded* variant streams the same records straight into per-shard
+//! tables and keeps them live — a skewed arrival burst trips the
+//! rebalance threshold, examples migrate between shards, and the
+//! estimator's gradient quality is unchanged (Theorem-1 unbiasedness
+//! survives migration because the mixture weights R_s/R are recomputed at
+//! every step).
 //!
 //! ```bash
 //! cargo run --release --example streaming_pipeline
 //! ```
 
-use lgd::config::spec::{EstimatorKind, RunConfig};
 use lgd::coordinator::metrics::Metrics;
-use lgd::coordinator::pipeline::{streaming_build, PipelineConfig};
-use lgd::coordinator::trainer::GradSource;
+use lgd::coordinator::pipeline::{streaming_build, streaming_build_sharded, PipelineConfig};
+use lgd::data::preprocess::Preprocessed;
 use lgd::data::SynthSpec;
-use lgd::estimator::lgd::{LgdEstimator, LgdOptions};
-use lgd::lsh::srp::SparseSrp;
+use lgd::estimator::lgd::LgdOptions;
+use lgd::estimator::{GradientEstimator, ShardedLgdEstimator};
+use lgd::lsh::srp::DenseSrp;
+use lgd::model::{LinReg, Model};
+
+/// Quality of the estimator: relative error of the importance-weighted
+/// gradient estimate (averaged over `draws` draws) against the full
+/// average gradient — the Theorem-1 quantity.
+fn grad_rel_err(
+    est: &mut ShardedLgdEstimator<'_, DenseSrp>,
+    pre: &Preprocessed,
+    theta: &[f32],
+    draws: usize,
+) -> f64 {
+    let d = pre.data.dim();
+    let model = LinReg;
+    let mut full = vec![0.0f32; d];
+    model.full_grad(&pre.data, theta, &mut full);
+    let full_norm = lgd::core::matrix::norm2(&full).max(1e-12);
+    let mut acc = vec![0.0f64; d];
+    let mut g = vec![0.0f32; d];
+    for _ in 0..draws {
+        let dr = est.draw(theta);
+        let (x, y) = pre.data.example(dr.index);
+        model.grad(x, y, theta, &mut g);
+        for j in 0..d {
+            acc[j] += dr.weight * g[j] as f64;
+        }
+    }
+    let mut err = 0.0f64;
+    for j in 0..d {
+        err += (acc[j] / draws as f64 - full[j] as f64).powi(2);
+    }
+    err.sqrt() / full_norm
+}
 
 fn main() -> lgd::Result<()> {
     let n = 20_000;
-    let d = 90;
+    let d = 32;
     let spec = SynthSpec::power_law("stream", n, d, 3);
     let ds = spec.generate()?;
-    println!("streaming {} records (d={}) through the pipeline...", ds.len(), d);
-
     let metrics = Metrics::new();
-    let hasher = SparseSrp::paper_default(d + 1, 5, 100, 11);
+
+    // --- Phase 1: unsharded streaming build, hash-worker sweep. ---
+    println!("streaming {} records (d={d}) through the pipeline...", ds.len());
+    let hasher = DenseSrp::new(d + 1, 5, 50, 11);
     for workers in [1usize, 2, 4, 8] {
         let cfg = PipelineConfig { channel_cap: 256, hash_workers: workers };
-        let (_pre, _tables, report) =
-            streaming_build(ds.clone(), hasher.clone(), &cfg, &metrics)?;
+        let (_pre, _tables, report) = streaming_build(ds.clone(), hasher.clone(), &cfg, &metrics)?;
         println!(
             "  {workers} hash workers: {:>8.0} records/s ({:.3}s total)",
             report.throughput, report.wall_secs
         );
     }
 
-    // Build once more and train from the streamed tables.
+    // --- Phase 2: sharded streaming ingest → live estimator. ---
+    let shards = 4usize;
     let cfg = PipelineConfig::default();
-    let (pre, tables, report) = streaming_build(ds, hasher, &cfg, &metrics)?;
+    let (pre, built, report) =
+        streaming_build_sharded(ds, hasher.clone(), shards, true, &cfg, &metrics)?;
     println!(
-        "\nfinal build: {} records at {:.0} rec/s; table stats: {:?}",
-        report.records,
-        report.throughput,
-        tables.stats()
+        "\nsharded streaming ingest: {} records into {shards} shards at {:.0} rec/s",
+        report.records, report.throughput
+    );
+    let mut est = ShardedLgdEstimator::from_shards(&pre, built, 17, LgdOptions::default());
+    let theta: Vec<f32> = (0..d).map(|j| 0.02 * (j as f32 / d as f32 - 0.5)).collect();
+    let q0 = grad_rel_err(&mut est, &pre, &theta, 30_000);
+    println!("  estimator quality (balanced): gradient rel-err {q0:.4}");
+
+    // --- Phase 3: skewed arrivals → automatic rebalance. ---
+    // Simulate churn: the last quarter of the examples "leave" and later
+    // re-arrive in one hot shard (a skewed partition key). The threshold
+    // trips mid-burst and the set migrates examples back toward balance.
+    let burst = n / 4;
+    for id in (n - burst)..n {
+        est.remove(id)?;
+    }
+    est.set_rebalance_threshold(1.2);
+    println!("\nskewed re-arrival of {burst} records into shard 0 (threshold 1.2):");
+    let mut peak = 0.0f64;
+    for (i, id) in ((n - burst)..n).enumerate() {
+        est.shard_set_mut().insert_into(0, id, &pre.hashed)?;
+        peak = peak.max(est.shard_set().imbalance());
+        if (i + 1) % (burst / 5) == 0 {
+            let st = est.stats();
+            println!(
+                "  after {:>5} arrivals: imbalance {:.3} (peak {:.3}), {} migrated in {} passes",
+                i + 1,
+                est.shard_set().imbalance(),
+                peak,
+                st.migrations,
+                st.rebalances
+            );
+        }
+    }
+    let st = est.stats();
+    println!(
+        "  rebalancing total: {} examples migrated, {} passes, {:.3}s",
+        st.migrations, st.rebalances, st.rebalance_secs
+    );
+    println!("  per-shard examples: {:?}", est.shard_set().counts());
+
+    let q1 = grad_rel_err(&mut est, &pre, &theta, 30_000);
+    println!("  estimator quality (post-rebalance): gradient rel-err {q1:.4}");
+    println!(
+        "  quality unchanged: {q0:.4} -> {q1:.4} (mixture weights stay exact through \
+         migration)"
     );
 
-    // pipeline tables are unmirrored → cap the importance weights (see
-    // DESIGN.md §Deviations on the signed-residual tail)
-    let opts = LgdOptions { weight_clip: Some(5.0), ..LgdOptions::default() };
-    let mut est = LgdEstimator::from_parts(&pre, tables, 17, opts);
-    let mut run_cfg = RunConfig::default();
-    run_cfg.train.estimator = EstimatorKind::Sgd; // placeholder; we drive manually
-    // quick manual loop to show the streamed tables sampling adaptively
-    use lgd::estimator::GradientEstimator;
-    use lgd::model::{LinReg, Model};
+    // --- Phase 4: the rebalanced tables still train. ---
     let model = LinReg;
     let mut theta = vec![0.0f32; d];
     let mut g = vec![0.0f32; d];
     let loss0 = model.mean_loss(&pre.data, &theta);
-    for _ in 0..4 * pre.data.len() {
+    for _ in 0..2 * n {
         let dr = est.draw(&theta);
         let (x, y) = pre.data.example(dr.index);
         model.grad(x, y, &theta, &mut g);
-        lgd::core::matrix::axpy(-(0.05 * dr.weight) as f32, &g, &mut theta);
+        lgd::core::matrix::axpy(-(0.05 * dr.weight.min(5.0)) as f32, &g, &mut theta);
     }
     let loss1 = model.mean_loss(&pre.data, &theta);
-    println!("training on streamed tables: loss {loss0:.5} -> {loss1:.5} (4 epochs)");
+    println!("\ntraining on live sharded tables: loss {loss0:.5} -> {loss1:.5} (2 epochs)");
     println!("\nmetrics:\n{}", metrics.report());
-    let _ = run_cfg;
-    let _ = GradSource::Native; // silence unused-variant lint in docs builds
     Ok(())
 }

@@ -8,7 +8,7 @@ use std::time::Instant;
 use lgd::benchkit::{bb, Bench};
 use lgd::config::spec::{EstimatorKind, HasherKind, RunConfig};
 use lgd::coordinator::metrics::Metrics;
-use lgd::coordinator::pipeline::build_shard_tables;
+use lgd::coordinator::pipeline::{build_shard_tables, streaming_build_sharded, PipelineConfig};
 use lgd::coordinator::trainer::build_estimator;
 use lgd::core::matrix::axpy;
 use lgd::data::preprocess::{preprocess, PreprocessOptions};
@@ -58,15 +58,13 @@ fn main() {
         // Table build (one-time preprocessing).
         b.bench(&format!("table_build_n{n}_d{d}_L25"), || {
             let h = SparseSrp::paper_default(pre.hashed.cols(), 5, 25, 3);
-            let t =
-                LshTables::build(h, (0..pre.data.len()).map(|r| pre.hashed.row(r))).unwrap();
+            let t = LshTables::build(h, (0..pre.data.len()).map(|r| pre.hashed.row(r))).unwrap();
             bb(t.len());
         });
 
         // §2.2.1: full near-neighbor candidate query.
         let h = SparseSrp::paper_default(pre.hashed.cols(), 5, 100, 3);
-        let tables =
-            LshTables::build(h, (0..pre.data.len()).map(|r| pre.hashed.row(r))).unwrap();
+        let tables = LshTables::build(h, (0..pre.data.len()).map(|r| pre.hashed.row(r))).unwrap();
         let sampler = LshSampler::new(&tables, &pre.hashed);
         let mut q = Vec::new();
         pre.query(&theta, &mut q);
@@ -101,6 +99,29 @@ fn main() {
         b.record(&format!("table_build_n50k_L50_shards{s}"), wall * 1e9);
         println!("  shards={s}  {wall:.3}s  ({:.2}x vs single)", single / wall);
     }
+
+    // Streaming sharded ingest: same 4-shard tables built from a record
+    // stream (Source → Preprocess → per-shard workers) instead of a
+    // materialized matrix — the ingest-path cost of the live engine.
+    let stream_ds = SynthSpec::power_law("shard", n, d, 21).generate().unwrap();
+    let m = Metrics::new();
+    let t0 = Instant::now();
+    let (_pre_s, shards_s, rep) = streaming_build_sharded(
+        stream_ds,
+        hasher.clone(),
+        4,
+        false,
+        &PipelineConfig::default(),
+        &m,
+    )
+    .unwrap();
+    let stream_wall = t0.elapsed().as_secs_f64();
+    bb(shards_s.len());
+    b.record("streaming_sharded_build_n50k_L50_shards4", stream_wall * 1e9);
+    println!(
+        "  streaming 4-shard ingest: {stream_wall:.3}s ({:.0} records/s)",
+        rep.throughput
+    );
 
     let theta = vec![0.01f32; d];
     let mut lgd1 =

@@ -43,7 +43,8 @@ pub fn bb<T>(x: T) -> T {
 impl Bench {
     /// New group.
     pub fn new(group: &str) -> Self {
-        let mut b = Bench { group: group.to_string(), rows: Vec::new(), reps: 15, target_secs: 0.2 };
+        let mut b =
+            Bench { group: group.to_string(), rows: Vec::new(), reps: 15, target_secs: 0.2 };
         // Quick mode for CI: LGD_BENCH_FAST=1 shrinks the measurement.
         if std::env::var("LGD_BENCH_FAST").is_ok() {
             b.reps = 5;
@@ -86,8 +87,12 @@ impl Bench {
 
     /// Record an externally measured value (e.g. whole-run seconds).
     pub fn record(&mut self, name: &str, ns_per_iter: f64) {
-        self.rows
-            .push(BenchRow { name: name.to_string(), median_ns: ns_per_iter, p95_ns: ns_per_iter, iters: 1 });
+        self.rows.push(BenchRow {
+            name: name.to_string(),
+            median_ns: ns_per_iter,
+            p95_ns: ns_per_iter,
+            iters: 1,
+        });
     }
 
     /// Results so far.

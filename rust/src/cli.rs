@@ -116,7 +116,8 @@ mod tests {
 
     #[test]
     fn parses_subcommand_flags_switches() {
-        let a = Args::parse(&v(&["train", "--config", "x.toml", "--quick", "--seed", "7"])).unwrap();
+        let a = Args::parse(&v(&["train", "--config", "x.toml", "--quick", "--seed", "7"]))
+            .unwrap();
         assert_eq!(a.command, "train");
         assert_eq!(a.str_or("config", ""), "x.toml");
         assert_eq!(a.u64_or("seed", 0).unwrap(), 7);

@@ -6,5 +6,8 @@ pub mod spec;
 pub mod toml;
 
 pub use json::Json;
-pub use spec::{Backend, DataConfig, EstimatorKind, HasherKind, LshConfig, OptimizerKind, RunConfig, TrainConfig};
+pub use spec::{
+    Backend, DataConfig, EstimatorKind, HasherKind, LshConfig, OptimizerKind, RunConfig,
+    TrainConfig,
+};
 pub use toml::{TomlDoc, TomlValue};

@@ -73,6 +73,16 @@ pub struct LshConfig {
     /// concurrently (one worker per shard) and draws come from the exact
     /// shard-mixture proposal. 1 = the single-threaded `LgdEstimator`.
     pub shards: usize,
+    /// Live-shard rebalance trigger for the sharded engine: after a
+    /// streaming insert/remove pushes the per-shard example imbalance
+    /// (max/mean) above this, examples migrate between shard tables until
+    /// it is back under — the mixture weights `R_s/R` are recomputed so
+    /// draws stay exactly unbiased. 0 = rebalancing off (static builds
+    /// never need it); enabled values must be ≥ 1.0 (1.0 = keep shards
+    /// within one example of perfectly balanced) and require `shards > 1`
+    /// — validation rejects the knob on a single shard rather than
+    /// silently ignoring it.
+    pub rebalance_threshold: f64,
 }
 
 impl Default for LshConfig {
@@ -105,6 +115,7 @@ impl Default for LshConfig {
             weight_clip: Some(5.0),
             seed: 0x15A11,
             shards: 1,
+            rebalance_threshold: 0.0,
         }
     }
 }
@@ -215,6 +226,8 @@ impl RunConfig {
         cfg.lsh.mirror = doc.bool_or("lsh", "mirror", cfg.lsh.mirror)?;
         cfg.lsh.seed = doc.int_or("lsh", "seed", cfg.lsh.seed as i64)? as u64;
         cfg.lsh.shards = doc.int_or("lsh", "shards", cfg.lsh.shards as i64)? as usize;
+        cfg.lsh.rebalance_threshold =
+            doc.float_or("lsh", "rebalance_threshold", cfg.lsh.rebalance_threshold)?;
         cfg.lsh.hasher = match doc.str_or("lsh", "hasher", "dense")?.as_str() {
             "dense" => HasherKind::Dense,
             "sparse" => HasherKind::Sparse,
@@ -286,6 +299,19 @@ impl RunConfig {
                 self.lsh.shards
             )));
         }
+        let rt = self.lsh.rebalance_threshold;
+        if rt != 0.0 && !(rt.is_finite() && rt >= 1.0) {
+            return Err(Error::Config(format!(
+                "lsh.rebalance_threshold = {rt} must be 0 (off) or >= 1.0"
+            )));
+        }
+        if rt != 0.0 && self.lsh.shards == 1 {
+            return Err(Error::Config(
+                "lsh.rebalance_threshold requires lsh.shards > 1 (nothing to \
+                 rebalance with a single shard)"
+                    .into(),
+            ));
+        }
         if self.train.epochs == 0 || self.train.batch == 0 {
             return Err(Error::Config("train.epochs and train.batch must be positive".into()));
         }
@@ -319,6 +345,7 @@ mod tests {
         assert_eq!(cfg.lsh.weight_clip, Some(5.0));
         assert!(cfg.lsh.mirror);
         assert_eq!(cfg.lsh.shards, 1, "sharding is opt-in");
+        assert_eq!(cfg.lsh.rebalance_threshold, 0.0, "rebalancing is opt-in");
         assert_eq!(cfg.train.estimator, EstimatorKind::Lgd);
         assert_eq!(cfg.train.backend, Backend::Native);
     }
@@ -338,6 +365,7 @@ l = 10
 hasher = "dense"
 weight_clip = 8.0
 shards = 4
+rebalance_threshold = 1.5
 [train]
 estimator = "sgd"
 optimizer = "adagrad"
@@ -357,6 +385,7 @@ backend = "pjrt"
         assert_eq!(cfg.lsh.hasher, HasherKind::Dense);
         assert_eq!(cfg.lsh.weight_clip, Some(8.0));
         assert_eq!(cfg.lsh.shards, 4);
+        assert_eq!(cfg.lsh.rebalance_threshold, 1.5);
         assert_eq!(cfg.train.estimator, EstimatorKind::Sgd);
         assert_eq!(cfg.train.optimizer, OptimizerKind::AdaGrad);
         assert!(matches!(cfg.train.schedule, Schedule::Exp { .. }));
@@ -371,6 +400,9 @@ backend = "pjrt"
             "[lsh]\nk = 40",
             "[lsh]\ndensity = 1.5",
             "[lsh]\nshards = 0",
+            "[lsh]\nshards = 4\nrebalance_threshold = 0.5",
+            "[lsh]\nshards = 4\nrebalance_threshold = -1.0",
+            "[lsh]\nrebalance_threshold = 1.5",
             "[train]\nepochs = 0",
             "[train]\nestimator = \"bogus\"",
             "[train]\nlr = -0.1",

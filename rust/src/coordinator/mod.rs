@@ -7,6 +7,7 @@ pub mod trainer;
 
 pub use metrics::Metrics;
 pub use pipeline::{
-    build_shard_tables, streaming_build, PipelineConfig, PipelineReport, ShardTables,
+    build_shard_tables, streaming_build, streaming_build_sharded, PipelineConfig,
+    PipelineReport, ShardSet, ShardSetStats, ShardTables,
 };
 pub use trainer::{build_estimator, train, CurvePoint, GradSource, TrainOutcome};

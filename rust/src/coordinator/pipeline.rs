@@ -8,6 +8,18 @@
 //! needs locks. The result is bit-identical to the batch
 //! [`crate::data::preprocess::preprocess`] + [`LshTables::build`] path
 //! (tested below), so the trainer can consume either.
+//!
+//! The sharded engine has a streaming twin: [`streaming_build_sharded`]
+//! routes each incoming record's coded inserts to the per-shard tables of
+//! its [`ShardPlan`] owner (one worker thread per shard), producing shard
+//! tables byte-identical to the batch [`build_shard_tables`] layout — so
+//! the shard-mixture estimator draws identically over either build. After
+//! the build, [`ShardSet`] keeps the shards *live*: post-build
+//! `insert`/`remove` plus automatic [`ShardPlan::rebalance`]-driven
+//! migration when skewed growth pushes the shard imbalance past a
+//! configurable threshold (`lsh.rebalance_threshold`), with the exact
+//! mixture weights `R_s/R` recomputed after every mutation so Theorem-1
+//! unbiasedness holds at every point in the stream.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
@@ -64,6 +76,24 @@ struct CodedInsert {
     id: u32,
     table: u32,
     code: u32,
+}
+
+/// Hash-space embedding of one (already normalised) record — the single
+/// definition every streaming builder shares. Drift between the builders
+/// here would silently break their byte-identity with the batch
+/// [`crate::data::preprocess::preprocess`] path.
+fn embed_record(space: HashSpace, hd: usize, x: &[f32], y: f32) -> Vec<f32> {
+    let mut hv = Vec::with_capacity(hd);
+    match space {
+        HashSpace::LinRegAugmented => {
+            hv.extend_from_slice(x);
+            hv.push(y);
+        }
+        HashSpace::LogRegSigned => {
+            hv.extend(x.iter().map(|v| y * v));
+        }
+    }
+    hv
 }
 
 /// Run the streaming build: consumes `ds`, returns the preprocessed data,
@@ -129,17 +159,7 @@ where
         for mut rec in src_rx.iter() {
             let norm = normalize(&mut rec.x);
             norms.push(norm);
-            let mut hv = Vec::with_capacity(hd);
-            match space {
-                HashSpace::LinRegAugmented => {
-                    hv.extend_from_slice(&rec.x);
-                    hv.push(rec.y);
-                }
-                HashSpace::LogRegSigned => {
-                    hv.extend(rec.x.iter().map(|v| rec.y * v));
-                }
-            }
-            let hv = Arc::new(hv);
+            let hv = Arc::new(embed_record(space, hd, &rec.x, rec.y));
             for tx in &hash_txs {
                 tx.send(HashJob { id: rec.id, v: hv.clone() })
                     .map_err(|_| Error::Pipeline("hash worker hung up".into()))?;
@@ -303,6 +323,558 @@ where
     Ok(out)
 }
 
+/// Streaming *sharded* build: Source → Preprocess → per-shard table
+/// workers. Each incoming record is normalised and embedded once, then its
+/// coded inserts are routed to the [`ShardPlan`] owner's worker thread
+/// (round-robin plan, matching [`crate::estimator::ShardedLgdEstimator`]'s
+/// batch construction), which applies them through the
+/// `insert_coded`/`finish_coded_inserts` path of its private `LshTables` —
+/// no locks, one owner per table set. Mirror rows are appended after the
+/// stream drains so every shard's layout is `[base rows asc; mirrors asc]`,
+/// byte-identical to [`build_shard_tables`]: the shard-mixture estimator
+/// draws the same sequence over either build (tested below and in the
+/// integration suite). Parallelism is one worker per shard
+/// (`cfg.hash_workers` is not used here); `cfg.channel_cap` bounds every
+/// stage channel.
+pub fn streaming_build_sharded<H>(
+    ds: Dataset,
+    hasher: H,
+    shards: usize,
+    mirror: bool,
+    cfg: &PipelineConfig,
+    metrics: &Metrics,
+) -> Result<(Preprocessed, Vec<ShardTables<H>>, PipelineReport)>
+where
+    H: SrpHasher + Clone,
+{
+    let n = ds.len();
+    let d = ds.dim();
+    let task = ds.task;
+    let space = HashSpace::for_task(task);
+    let hd = space.dim(d);
+    if hasher.dim() != hd {
+        return Err(Error::Pipeline(format!(
+            "hasher dim {} but hash space needs {hd}",
+            hasher.dim()
+        )));
+    }
+    let plan = ShardPlan::round_robin(n, shards)?;
+    let name = ds.name.clone();
+    let t0 = Instant::now();
+
+    let (src_tx, src_rx) = sync_channel::<RawRecord>(cfg.channel_cap);
+    let mut shard_txs: Vec<SyncSender<HashJob>> = Vec::with_capacity(shards);
+    let mut shard_rxs: Vec<Receiver<HashJob>> = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let (tx, rx) = sync_channel::<HashJob>(cfg.channel_cap);
+        shard_txs.push(tx);
+        shard_rxs.push(rx);
+    }
+
+    type PreOut = Result<(Matrix, Vec<f32>, Matrix, Vec<f64>)>;
+    let plan_ref = &plan;
+    let hasher_ref = &hasher;
+    let (src_res, pre_res, worker_res) = thread::scope(|scope| {
+        // --- Source: stream the dataset out of this thread. ---
+        let src = scope.spawn(move || {
+            let mut rows = 0usize;
+            for i in 0..ds.len() {
+                let (x, y) = ds.example(i);
+                if src_tx.send(RawRecord { id: i as u32, x: x.to_vec(), y }).is_err() {
+                    break; // downstream died; it will report the error
+                }
+                rows += 1;
+            }
+            rows
+        });
+
+        // --- Preprocess: normalise + embed; route to the owning shard. ---
+        let pre = scope.spawn(move || -> PreOut {
+            let mut xmat = Matrix::zeros(0, 0);
+            let mut ys = Vec::new();
+            let mut hashed = Matrix::zeros(0, 0);
+            let mut norms = Vec::new();
+            for mut rec in src_rx.iter() {
+                let norm = normalize(&mut rec.x);
+                norms.push(norm);
+                let hv = Arc::new(embed_record(space, hd, &rec.x, rec.y));
+                let s = plan_ref.shard_of(rec.id as usize);
+                shard_txs[s]
+                    .send(HashJob { id: rec.id, v: hv.clone() })
+                    .map_err(|_| Error::Pipeline("shard worker hung up".into()))?;
+                xmat.push_row(&rec.x).map_err(|e| Error::Pipeline(e.to_string()))?;
+                ys.push(rec.y);
+                hashed.push_row(&hv).map_err(|e| Error::Pipeline(e.to_string()))?;
+            }
+            drop(shard_txs);
+            Ok((xmat, ys, hashed, norms))
+        });
+
+        // --- Shard workers: own their tables; coded inserts, no locks. ---
+        let mut handles = Vec::with_capacity(shards);
+        for rx in shard_rxs.into_iter() {
+            let h = hasher_ref.clone();
+            handles.push(scope.spawn(move || -> Result<ShardTables<H>> {
+                let tw = Instant::now();
+                let l = h.l();
+                let mut rows: Vec<u32> = Vec::new();
+                let mut local = Matrix::zeros(0, 0);
+                let mut norms: Vec<f64> = Vec::new();
+                let mut tables = LshTables::new(h.clone());
+                for job in rx.iter() {
+                    let j = rows.len();
+                    for t in 0..l {
+                        tables.insert_coded(t, h.code(t, &job.v), j as u32);
+                    }
+                    local.push_row(&job.v).map_err(|e| Error::Pipeline(e.to_string()))?;
+                    norms.push(crate::core::matrix::norm2(&job.v));
+                    rows.push(job.id);
+                }
+                // Mirrors go in *after* the stream drains, so bucket order
+                // matches the batch layout [base asc; mirrors asc] — the
+                // draw-for-draw guarantee against build_shard_tables.
+                if mirror {
+                    let c = rows.len();
+                    for j in 0..c {
+                        let neg: Vec<f32> = local.row(j).iter().map(|v| -v).collect();
+                        for t in 0..l {
+                            tables.insert_coded(t, h.code(t, &neg), (c + j) as u32);
+                        }
+                        local.push_row(&neg).map_err(|e| Error::Pipeline(e.to_string()))?;
+                        norms.push(crate::core::matrix::norm2(&neg));
+                        let base_id = rows[j];
+                        rows.push(base_id + n as u32);
+                    }
+                }
+                tables.finish_coded_inserts(local.rows());
+                Ok(ShardTables {
+                    rows,
+                    stored: local,
+                    norms,
+                    tables,
+                    build_secs: tw.elapsed().as_secs_f64(),
+                })
+            }));
+        }
+
+        (
+            src.join(),
+            pre.join(),
+            handles.into_iter().map(|w| w.join()).collect::<Vec<_>>(),
+        )
+    });
+
+    let rows = src_res.map_err(|_| Error::Pipeline("source panicked".into()))?;
+    let (xmat, ys, hashed, norms) =
+        pre_res.map_err(|_| Error::Pipeline("preprocess panicked".into()))??;
+    let mut built = Vec::with_capacity(shards);
+    for r in worker_res {
+        let st = r.map_err(|_| Error::Pipeline("shard worker panicked".into()))??;
+        metrics.observe("pipeline.shard_build", st.build_secs);
+        metrics.count("pipeline.shard_rows", st.rows.len() as u64);
+        built.push(st);
+    }
+    let mult = if mirror { 2 } else { 1 };
+    let total: usize = built.iter().map(|s| s.stored.rows()).sum();
+    if rows != n || total != rows * mult {
+        return Err(Error::Pipeline(format!(
+            "streamed {rows}/{n} records but shards store {total} rows (expected {})",
+            rows * mult
+        )));
+    }
+
+    let wall = t0.elapsed().as_secs_f64();
+    metrics.count("pipeline.records", rows as u64);
+    metrics.observe("pipeline.wall", wall);
+
+    let data = Dataset::new(name, xmat, ys, task).map_err(|e| Error::Pipeline(e.to_string()))?;
+    let pre = Preprocessed { data, hashed, space, center: Vec::new(), norms };
+    let report = PipelineReport {
+        records: rows,
+        wall_secs: wall,
+        throughput: rows as f64 / wall.max(1e-12),
+    };
+    Ok((pre, built, report))
+}
+
+/// Migration/rebalance counters of a live [`ShardSet`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ShardSetStats {
+    /// Examples moved between shards by rebalancing.
+    pub migrations: u64,
+    /// Rebalance passes that performed at least one migration.
+    pub rebalances: u64,
+    /// Wall seconds spent inside rebalance passes (including no-op checks).
+    pub rebalance_secs: f64,
+}
+
+/// A *live* partition of (a subset of) the `n` examples of a fixed backing
+/// hash-space matrix across shard tables.
+///
+/// Built shards ([`build_shard_tables`] or [`streaming_build_sharded`])
+/// stay mutable after construction: `insert` routes a new example's rows
+/// (base + mirror) into the least-loaded shard, `remove` evicts them, and
+/// whenever the base-row imbalance (max/mean) exceeds the configured
+/// threshold the set invokes [`ShardPlan::rebalance`] on its current
+/// membership and migrates the reported examples between shard tables via
+/// [`LshTables::remove`] + re-`insert`. Per-shard stored-row prefix sums
+/// (`R_s`, `R = Σ R_s`) are recomputed after every mutation, so the
+/// shard-mixture proposal `p = (R_s/R)·p_shard` stays exact and Theorem-1
+/// unbiasedness holds at every point of the stream.
+pub struct ShardSet<H: SrpHasher> {
+    shards: Vec<ShardTables<H>>,
+    /// Base-row count of the backing matrix; example ids live in `[0, n)`.
+    n: usize,
+    mirror: bool,
+    /// Rebalance when `imbalance() > threshold`; 0 / non-finite = never.
+    threshold: f64,
+    /// Example id → owning shard (-1 = not present).
+    loc: Vec<i32>,
+    /// Inclusive prefix sums of per-shard stored-row counts.
+    cum_rows: Vec<usize>,
+    total_rows: usize,
+    stats: ShardSetStats,
+}
+
+impl<H: SrpHasher> ShardSet<H> {
+    /// Build the per-shard tables for `plan` over `base` (concurrently, via
+    /// [`build_shard_tables`]) and wrap them as a live set.
+    pub fn build(
+        base: &Matrix,
+        plan: &ShardPlan,
+        mirror: bool,
+        hasher: &H,
+        threshold: f64,
+        metrics: &Metrics,
+    ) -> Result<Self>
+    where
+        H: Clone,
+    {
+        let shards = build_shard_tables(base, plan, mirror, hasher, metrics)?;
+        Ok(Self::from_shards(shards, base.rows(), mirror, threshold))
+    }
+
+    /// Wrap pre-built shards (batch or streaming). `n` is the base-row
+    /// count of the backing matrix; shard `rows` entries must be `id` (or
+    /// `id + n` for mirror rows), each present id owned by exactly one
+    /// shard, and `mirror` must describe how the shards were actually
+    /// built — a mismatch corrupts `counts()`/`present_len()` and any
+    /// later insert (debug-asserted below).
+    pub fn from_shards(
+        shards: Vec<ShardTables<H>>,
+        n: usize,
+        mirror: bool,
+        threshold: f64,
+    ) -> Self {
+        let mut loc = vec![-1i32; n];
+        let mut base_rows = 0usize;
+        let mut mirror_rows = 0usize;
+        for (s, st) in shards.iter().enumerate() {
+            for &r in &st.rows {
+                if (r as usize) < n {
+                    loc[r as usize] = s as i32;
+                    base_rows += 1;
+                } else {
+                    mirror_rows += 1;
+                }
+            }
+        }
+        debug_assert_eq!(
+            mirror_rows,
+            if mirror { base_rows } else { 0 },
+            "mirror flag does not match the shard layout ({base_rows} base rows, \
+             {mirror_rows} mirror rows)"
+        );
+        let mut set = ShardSet {
+            shards,
+            n,
+            mirror,
+            threshold,
+            loc,
+            cum_rows: Vec::new(),
+            total_rows: 0,
+            stats: ShardSetStats::default(),
+        };
+        set.refresh_cum();
+        set
+    }
+
+    fn refresh_cum(&mut self) {
+        self.cum_rows.clear();
+        self.total_rows = 0;
+        for s in &self.shards {
+            self.total_rows += s.stored.rows();
+            self.cum_rows.push(self.total_rows);
+        }
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard `s`.
+    pub fn shard(&self, s: usize) -> &ShardTables<H> {
+        &self.shards[s]
+    }
+
+    /// All shards.
+    pub fn shards(&self) -> &[ShardTables<H>] {
+        &self.shards
+    }
+
+    /// Unwrap into the shard tables.
+    pub fn into_shards(self) -> Vec<ShardTables<H>> {
+        self.shards
+    }
+
+    /// Total stored rows `R` across shards (2× present examples when
+    /// mirrored).
+    pub fn total_rows(&self) -> usize {
+        self.total_rows
+    }
+
+    /// Base-row count of the backing matrix.
+    pub fn base_len(&self) -> usize {
+        self.n
+    }
+
+    /// Number of examples currently present (Σ per-shard counts).
+    pub fn present_len(&self) -> usize {
+        let mult = if self.mirror { 2 } else { 1 };
+        self.total_rows / mult
+    }
+
+    /// Inclusive prefix sums of per-shard stored-row counts (the mixture's
+    /// `R_s` accumulation; `cum_rows()[last] == total_rows()`).
+    pub fn cum_rows(&self) -> &[usize] {
+        &self.cum_rows
+    }
+
+    /// Shard owning global stored row `r` (prefix-sum scan; shard counts
+    /// are tiny).
+    #[inline]
+    pub fn shard_of_row(&self, r: usize) -> usize {
+        for (s, &cum) in self.cum_rows.iter().enumerate() {
+            if r < cum {
+                return s;
+            }
+        }
+        self.cum_rows.len() - 1
+    }
+
+    /// Is example `id` currently stored?
+    pub fn contains(&self, id: usize) -> bool {
+        id < self.n && self.loc[id] >= 0
+    }
+
+    /// Shard owning example `id`, if present.
+    pub fn shard_of(&self, id: usize) -> Option<usize> {
+        if self.contains(id) {
+            Some(self.loc[id] as usize)
+        } else {
+            None
+        }
+    }
+
+    /// Present examples per shard (base rows only; mirrors excluded).
+    pub fn counts(&self) -> Vec<usize> {
+        let mult = if self.mirror { 2 } else { 1 };
+        self.shards.iter().map(|s| s.rows.len() / mult).collect()
+    }
+
+    /// Imbalance = max/mean present-example count (1.0 is perfect or
+    /// empty). Mirrors scale every shard equally, so base counts suffice.
+    pub fn imbalance(&self) -> f64 {
+        let counts = self.counts();
+        let max = *counts.iter().max().unwrap_or(&0) as f64;
+        let mean = counts.iter().sum::<usize>() as f64 / counts.len().max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Migration/rebalance counters.
+    pub fn stats(&self) -> ShardSetStats {
+        self.stats
+    }
+
+    /// Current rebalance trigger (0 / non-finite = disabled).
+    pub fn threshold(&self) -> f64 {
+        self.threshold
+    }
+
+    /// Set the rebalance trigger: rebalance whenever `imbalance()` exceeds
+    /// `t` after a mutation. 0 (or any non-finite / sub-1.0 value)
+    /// disables automatic rebalancing.
+    pub fn set_threshold(&mut self, t: f64) {
+        self.threshold = t;
+    }
+
+    /// Insert example `id` (hash row `base.row(id)` plus, when mirrored,
+    /// its negation) into the least-loaded shard (ties → lowest index).
+    /// Returns the chosen shard. Triggers an automatic rebalance when the
+    /// imbalance threshold is exceeded.
+    pub fn insert(&mut self, id: usize, base: &Matrix) -> Result<usize> {
+        let counts = self.counts();
+        let (s, _) = counts
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &c)| c)
+            .ok_or_else(|| Error::Data("shard set has zero shards".into()))?;
+        self.insert_into(s, id, base)?;
+        Ok(s)
+    }
+
+    /// Insert example `id` into a specific shard (skewed-arrival
+    /// simulations route through this). Errors if `id` is out of range or
+    /// already present.
+    pub fn insert_into(&mut self, shard: usize, id: usize, base: &Matrix) -> Result<()> {
+        if shard >= self.shards.len() {
+            return Err(Error::Data(format!(
+                "shard {shard} out of {}",
+                self.shards.len()
+            )));
+        }
+        if id >= self.n || base.rows() != self.n {
+            return Err(Error::Data(format!(
+                "example {id} out of base matrix with {} rows (set built over n = {})",
+                base.rows(),
+                self.n
+            )));
+        }
+        if self.loc[id] >= 0 {
+            return Err(Error::Data(format!("example {id} already present")));
+        }
+        self.push_rows(shard, id, base)?;
+        self.loc[id] = shard as i32;
+        self.refresh_cum();
+        self.maybe_rebalance(base)?;
+        Ok(())
+    }
+
+    /// Remove example `id` (base and mirror rows). Returns false if it was
+    /// not present. Triggers an automatic rebalance when the removal tips
+    /// the imbalance past the threshold.
+    pub fn remove(&mut self, id: usize, base: &Matrix) -> Result<bool> {
+        if id >= self.n || base.rows() != self.n {
+            return Err(Error::Data(format!(
+                "example {id} out of base matrix with {} rows (set built over n = {})",
+                base.rows(),
+                self.n
+            )));
+        }
+        let s = match self.loc[id] {
+            s if s >= 0 => s as usize,
+            _ => return Ok(false),
+        };
+        self.take_rows(s, id);
+        self.loc[id] = -1;
+        self.refresh_cum();
+        self.maybe_rebalance(base)?;
+        Ok(true)
+    }
+
+    /// Rebalance the present examples until `imbalance() ≤ target` (or no
+    /// move helps): builds a [`ShardPlan`] over the current membership,
+    /// asks it for the move list, and migrates each reported example's
+    /// rows between shard tables via [`LshTables::remove`] + re-`insert`.
+    /// Returns the number of examples migrated.
+    pub fn rebalance_to(&mut self, target: f64, base: &Matrix) -> Result<usize> {
+        let t0 = Instant::now();
+        let mut present: Vec<u32> = Vec::new();
+        let mut assign: Vec<u32> = Vec::new();
+        for id in 0..self.n {
+            if self.loc[id] >= 0 {
+                present.push(id as u32);
+                assign.push(self.loc[id] as u32);
+            }
+        }
+        let mut plan = ShardPlan::from_assignments(self.shards.len(), assign)?;
+        let moves = plan.rebalance(target.max(1.0));
+        for &(slot, from, to) in &moves {
+            let id = present[slot] as usize;
+            debug_assert_eq!(self.loc[id], from as i32, "plan/membership desync");
+            self.take_rows(from, id);
+            self.push_rows(to, id, base)?;
+            self.loc[id] = to as i32;
+        }
+        if !moves.is_empty() {
+            self.stats.rebalances += 1;
+            self.stats.migrations += moves.len() as u64;
+            self.refresh_cum();
+        }
+        self.stats.rebalance_secs += t0.elapsed().as_secs_f64();
+        Ok(moves.len())
+    }
+
+    fn maybe_rebalance(&mut self, base: &Matrix) -> Result<usize> {
+        if !(self.threshold.is_finite() && self.threshold >= 1.0) {
+            return Ok(0);
+        }
+        if self.imbalance() <= self.threshold {
+            return Ok(0);
+        }
+        self.rebalance_to(self.threshold, base)
+    }
+
+    /// Append example `id`'s stored rows at the end of `shard`.
+    fn push_rows(&mut self, shard: usize, id: usize, base: &Matrix) -> Result<()> {
+        let st = &mut self.shards[shard];
+        let v = base.row(id);
+        let j = st.stored.rows();
+        st.tables.insert(j as u32, v)?;
+        st.stored.push_row(v).map_err(|e| Error::Pipeline(e.to_string()))?;
+        st.norms.push(crate::core::matrix::norm2(v));
+        st.rows.push(id as u32);
+        if self.mirror {
+            let neg: Vec<f32> = v.iter().map(|x| -x).collect();
+            let jm = st.stored.rows();
+            st.tables.insert(jm as u32, &neg)?;
+            st.stored.push_row(&neg).map_err(|e| Error::Pipeline(e.to_string()))?;
+            st.norms.push(crate::core::matrix::norm2(&neg));
+            st.rows.push((id + self.n) as u32);
+        }
+        Ok(())
+    }
+
+    /// Remove every stored row of example `id` from shard `s` (base and,
+    /// when mirrored, the negation). Re-scans between removals because each
+    /// swap-remove may relocate the other row.
+    fn take_rows(&mut self, s: usize, id: usize) {
+        let st = &mut self.shards[s];
+        let mirror_id = id + self.n;
+        while let Some(j) = st
+            .rows
+            .iter()
+            .position(|&r| r as usize == id || r as usize == mirror_id)
+        {
+            Self::remove_local_row(st, j);
+        }
+    }
+
+    /// Swap-remove local row `j` of a shard: drop its table entries, move
+    /// the last row into its slot and rewrite that row's table id (bucket
+    /// ids are local row indices, so the moved row must be re-keyed).
+    fn remove_local_row(st: &mut ShardTables<H>, j: usize) {
+        let last = st.stored.rows() - 1;
+        let vj = st.stored.row(j).to_vec();
+        st.tables.remove(j as u32, &vj);
+        if j != last {
+            let vlast = st.stored.row(last).to_vec();
+            st.tables.remove(last as u32, &vlast);
+            st.tables
+                .insert(j as u32, &vlast)
+                .expect("re-keying a row that was already stored");
+        }
+        st.stored.swap_remove_row(j);
+        st.rows.swap_remove(j);
+        st.norms.swap_remove(j);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -461,6 +1033,180 @@ mod tests {
         );
     }
 
+    /// The streaming sharded build must reproduce the batch
+    /// `build_shard_tables` layout *byte-for-byte* — same row order, same
+    /// stored vectors, same norms and, crucially, the same bucket order
+    /// (uniform in-bucket picks make bucket order part of the draw stream).
+    #[test]
+    fn streaming_sharded_matches_batch_shard_tables() {
+        let ds = SynthSpec::power_law("ss", 240, 10, 31).generate().unwrap();
+        let hasher = DenseSrp::new(11, 4, 8, 33);
+        let pre_b = preprocess(ds.clone(), &PreprocessOptions::default()).unwrap();
+        let plan = ShardPlan::round_robin(240, 3).unwrap();
+        let m = Metrics::new();
+        for &mirror in &[false, true] {
+            let batch = build_shard_tables(&pre_b.hashed, &plan, mirror, &hasher, &m).unwrap();
+            let cfg = PipelineConfig { channel_cap: 8, hash_workers: 2 };
+            let (pre_s, streamed, rep) =
+                streaming_build_sharded(ds.clone(), hasher.clone(), 3, mirror, &cfg, &m)
+                    .unwrap();
+            assert_eq!(rep.records, 240);
+            assert_eq!(pre_b.hashed.as_slice(), pre_s.hashed.as_slice());
+            assert_eq!(pre_b.norms, pre_s.norms);
+            assert_eq!(batch.len(), streamed.len());
+            for (a, b) in batch.iter().zip(&streamed) {
+                assert_eq!(a.rows, b.rows, "mirror={mirror}: row order diverged");
+                assert_eq!(a.stored.as_slice(), b.stored.as_slice());
+                assert_eq!(a.norms, b.norms);
+                assert_eq!(a.tables.len(), b.tables.len());
+                for t in 0..8 {
+                    for code in 0..(1u32 << 4) {
+                        assert_eq!(
+                            a.tables.bucket(t, code),
+                            b.tables.bucket(t, code),
+                            "mirror={mirror} table {t} code {code}: bucket order must \
+                             match for draw-for-draw identity"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_sharded_dim_mismatch_fails_fast() {
+        let ds = SynthSpec::power_law("ss", 20, 6, 9).generate().unwrap();
+        let hasher = DenseSrp::new(6, 3, 4, 1); // should be 7 (augmented)
+        let m = Metrics::new();
+        let r = streaming_build_sharded(ds, hasher, 2, true, &PipelineConfig::default(), &m);
+        assert!(r.is_err());
+    }
+
+    /// Every shard's tables stay internally consistent: each local row id
+    /// appears exactly once per table, stored vectors are ± the base rows
+    /// they claim to be, and norms match.
+    fn check_set_integrity(set: &ShardSet<DenseSrp>, base: &Matrix) {
+        let n = set.base_len();
+        let mut seen = vec![0usize; n];
+        for s in 0..set.shard_count() {
+            let st = set.shard(s);
+            assert_eq!(st.rows.len(), st.stored.rows());
+            assert_eq!(st.rows.len(), st.norms.len());
+            assert_eq!(st.tables.len(), st.rows.len());
+            let l = st.tables.hasher().l();
+            let k = st.tables.hasher().k();
+            for t in 0..l {
+                let mut hits = vec![0usize; st.rows.len()];
+                for code in 0..(1u32 << k) {
+                    for &id in st.tables.bucket(t, code) {
+                        hits[id as usize] += 1;
+                    }
+                }
+                assert!(
+                    hits.iter().all(|&h| h == 1),
+                    "shard {s} table {t}: some local id lost or duplicated"
+                );
+            }
+            for (j, &r) in st.rows.iter().enumerate() {
+                let (ex, sign) =
+                    if (r as usize) < n { (r as usize, 1.0f32) } else { (r as usize - n, -1.0) };
+                for (a, b) in st.stored.row(j).iter().zip(base.row(ex)) {
+                    assert_eq!(*a, sign * *b, "shard {s} local row {j} vector corrupt");
+                }
+                let want = crate::core::matrix::norm2(st.stored.row(j));
+                assert_eq!(st.norms[j], want, "shard {s} local row {j} stale norm");
+                if (r as usize) < n {
+                    seen[r as usize] += 1;
+                    assert_eq!(set.shard_of(r as usize), Some(s));
+                }
+            }
+        }
+        let total: usize = (0..set.shard_count()).map(|s| set.shard(s).stored.rows()).sum();
+        assert_eq!(total, set.total_rows(), "stale prefix sums");
+        assert!(seen.iter().all(|&c| c <= 1), "example owned by two shards");
+    }
+
+    #[test]
+    fn shard_set_insert_remove_rebalance_keeps_tables_consistent() {
+        let ds = SynthSpec::power_law("live", 120, 8, 41).generate().unwrap();
+        let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
+        let hasher = DenseSrp::new(9, 3, 6, 43);
+        let plan = ShardPlan::round_robin(120, 3).unwrap();
+        let m = Metrics::new();
+        let mut set = ShardSet::build(&pre.hashed, &plan, true, &hasher, 0.0, &m).unwrap();
+        assert_eq!(set.total_rows(), 2 * 120);
+        assert!((set.imbalance() - 1.0).abs() < 1e-9);
+
+        // remove a block, then put a few back
+        for id in 0..30 {
+            assert!(set.remove(id, &pre.hashed).unwrap());
+            assert!(!set.contains(id));
+        }
+        assert!(!set.remove(5, &pre.hashed).unwrap(), "double remove must be clean");
+        for id in 0..10 {
+            set.insert(id, &pre.hashed).unwrap();
+        }
+        assert!(set.insert(3, &pre.hashed).is_err(), "duplicate insert rejected");
+        assert_eq!(set.counts().iter().sum::<usize>(), 100);
+        assert_eq!(set.total_rows(), 2 * 100);
+        check_set_integrity(&set, &pre.hashed);
+
+        // skew shard 0 hard with the still-absent ids, then rebalance
+        for id in 10..30 {
+            set.insert_into(0, id, &pre.hashed).unwrap();
+        }
+        assert!(set.imbalance() > 1.3, "skew failed: {}", set.imbalance());
+        let moved = set.rebalance_to(1.05, &pre.hashed).unwrap();
+        assert!(moved > 0);
+        assert!(set.imbalance() <= 1.06, "imbalance {}", set.imbalance());
+        assert_eq!(set.stats().migrations, moved as u64);
+        assert_eq!(set.stats().rebalances, 1);
+        assert_eq!(set.counts().iter().sum::<usize>(), 120);
+        check_set_integrity(&set, &pre.hashed);
+    }
+
+    /// Automatic rebalancing: a fully skewed arrival stream (everything
+    /// routed to shard 0) with a 1.3 threshold keeps the set balanced
+    /// without any manual intervention.
+    #[test]
+    fn shard_set_auto_rebalances_skewed_arrivals() {
+        let ds = SynthSpec::power_law("skew", 90, 6, 51).generate().unwrap();
+        let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
+        let hasher = DenseSrp::new(7, 3, 5, 53);
+        let shards: Vec<ShardTables<DenseSrp>> = (0..3)
+            .map(|_| ShardTables {
+                rows: Vec::new(),
+                stored: Matrix::zeros(0, 0),
+                norms: Vec::new(),
+                tables: LshTables::new(hasher.clone()),
+                build_secs: 0.0,
+            })
+            .collect();
+        let mut set = ShardSet::from_shards(shards, 90, true, 1.3);
+        for id in 0..90 {
+            set.insert_into(0, id, &pre.hashed).unwrap();
+        }
+        let counts = set.counts();
+        assert_eq!(counts.iter().sum::<usize>(), 90);
+        assert!(
+            set.imbalance() <= 1.3,
+            "auto rebalance left imbalance {} (counts {:?})",
+            set.imbalance(),
+            counts
+        );
+        assert!(set.stats().migrations > 0, "skewed arrivals must trigger migration");
+        assert!(set.stats().rebalances > 0);
+        check_set_integrity(&set, &pre.hashed);
+        // disabled threshold: mutations no longer migrate anything
+        set.set_threshold(0.0);
+        let before = set.stats().migrations;
+        for id in 0..30 {
+            set.remove(id, &pre.hashed).unwrap();
+        }
+        assert_eq!(set.stats().migrations, before, "disabled threshold must not migrate");
+        check_set_integrity(&set, &pre.hashed);
+    }
+
     /// The built tables must be usable by the LGD estimator end-to-end.
     #[test]
     fn streaming_tables_feed_lgd() {
@@ -469,8 +1215,7 @@ mod tests {
         let ds = SynthSpec::power_law("p", 300, 10, 11).generate().unwrap();
         let hasher = DenseSrp::new(11, 4, 12, 5);
         let m = Metrics::new();
-        let (pre, tables, _) =
-            streaming_build(ds, hasher, &PipelineConfig::default(), &m).unwrap();
+        let (pre, tables, _) = streaming_build(ds, hasher, &PipelineConfig::default(), &m).unwrap();
         let mut est = LgdEstimator::from_parts(&pre, tables, 13, LgdOptions::default());
         let theta = vec![0.05f32; 10];
         for _ in 0..500 {

@@ -86,7 +86,10 @@ where
     H: SrpHasher + Clone + 'a,
 {
     if cfg.lsh.shards > 1 {
-        let est = ShardedLgdEstimator::new(pre, h, cfg.train.seed, opts, cfg.lsh.shards)?;
+        let mut est = ShardedLgdEstimator::new(pre, h, cfg.train.seed, opts, cfg.lsh.shards)?;
+        if cfg.lsh.rebalance_threshold > 0.0 {
+            est.set_rebalance_threshold(cfg.lsh.rebalance_threshold);
+        }
         let secs = est.build_report().per_shard_secs.clone();
         Ok((Box::new(est), secs))
     } else {
@@ -211,7 +214,13 @@ pub fn train(
     };
 
     let (tr0, te0) = eval(&theta, &mut pjrt)?;
-    curve.push(CurvePoint { iter: 0, epoch: 0.0, wall: train_wall, train_loss: tr0, test_loss: te0 });
+    curve.push(CurvePoint {
+        iter: 0,
+        epoch: 0.0,
+        wall: train_wall,
+        train_loss: tr0,
+        test_loss: te0,
+    });
 
     for it in 1..=total_iters {
         let step_t = Instant::now();
@@ -324,6 +333,9 @@ mod tests {
         let (pre, te) = setup(500, 10, 5);
         let mut cfg = small_cfg(EstimatorKind::Lgd);
         cfg.lsh.shards = 4;
+        // exercise the config plumbing: a static training set starts (and
+        // stays) balanced, so the knob must be a no-op here
+        cfg.lsh.rebalance_threshold = 1.25;
         let out = train(&cfg, &pre, &te, GradSource::Native).unwrap();
         assert_eq!(out.estimator, "lgd-sharded");
         assert_eq!(out.shard_build_secs.len(), 4, "one build timing per shard");
@@ -331,6 +343,8 @@ mod tests {
         let last = out.curve.last().unwrap().train_loss;
         assert!(last < first * 0.8, "loss {first} -> {last}");
         assert!(out.est_stats.cost.codes > 0, "sharded LGD must compute hashes");
+        assert_eq!(out.est_stats.migrations, 0, "static training must not migrate");
+        assert_eq!(out.est_stats.rebalances, 0);
     }
 
     #[test]

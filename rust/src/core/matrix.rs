@@ -113,6 +113,20 @@ impl Matrix {
         self.rows += 1;
         Ok(())
     }
+
+    /// Remove row `i` by moving the last row into its place (O(cols), does
+    /// not preserve row order). Live shard tables use this for streaming
+    /// removals; the caller owns any external id ↔ row-index fix-up.
+    pub fn swap_remove_row(&mut self, i: usize) {
+        assert!(i < self.rows, "swap_remove_row({i}) of {} rows", self.rows);
+        let last = self.rows - 1;
+        if i != last {
+            let (head, tail) = self.data.split_at_mut(last * self.cols);
+            head[i * self.cols..(i + 1) * self.cols].copy_from_slice(&tail[..self.cols]);
+        }
+        self.data.truncate(last * self.cols);
+        self.rows -= 1;
+    }
 }
 
 /// Dot product with f64 accumulation.
@@ -248,6 +262,25 @@ mod tests {
         m.matvec(&x, &mut y).unwrap();
         assert_eq!(y, [1.0 + 1.0 - 3.0, 4.0 + 2.5 - 6.0]);
         assert!(m.matvec(&[1.0], &mut y).is_err());
+    }
+
+    #[test]
+    fn swap_remove_row_moves_last_into_place() {
+        let mut m = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        m.swap_remove_row(0);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.row(0), &[5.0, 6.0]);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        // removing the last row truncates without a move
+        m.swap_remove_row(1);
+        assert_eq!(m.rows(), 1);
+        assert_eq!(m.row(0), &[5.0, 6.0]);
+        // emptying keeps the width, so a same-width push still works
+        m.swap_remove_row(0);
+        assert_eq!(m.rows(), 0);
+        m.push_row(&[7.0, 8.0]).unwrap();
+        assert_eq!(m.row(0), &[7.0, 8.0]);
+        assert!(m.push_row(&[1.0]).is_err(), "width must persist through emptying");
     }
 
     #[test]

@@ -29,6 +29,26 @@ impl ShardPlan {
         Ok(ShardPlan { shards, shard_of, counts })
     }
 
+    /// Wrap an explicit assignment vector (`shard_of[i]` = shard owning
+    /// id `i`). Live resharding uses this to rebalance the *current*
+    /// membership of a mutated shard set; tests use it to construct
+    /// deliberately skewed plans.
+    pub fn from_assignments(shards: usize, shard_of: Vec<u32>) -> Result<Self> {
+        if shards == 0 {
+            return Err(Error::Data("zero shards".into()));
+        }
+        let mut counts = vec![0usize; shards];
+        for &s in &shard_of {
+            if s as usize >= shards {
+                return Err(Error::Data(format!(
+                    "assignment to shard {s} but only {shards} shards"
+                )));
+            }
+            counts[s as usize] += 1;
+        }
+        Ok(ShardPlan { shards, shard_of, counts })
+    }
+
     /// Multiplicative-hash plan (stable under reordering of the input).
     pub fn hashed(n: usize, shards: usize) -> Result<Self> {
         if shards == 0 {
@@ -92,10 +112,8 @@ impl ShardPlan {
             if self.imbalance() <= target {
                 break;
             }
-            let (max_s, _) =
-                self.counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap();
-            let (min_s, _) =
-                self.counts.iter().enumerate().min_by_key(|(_, &c)| c).unwrap();
+            let (max_s, _) = self.counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap();
+            let (min_s, _) = self.counts.iter().enumerate().min_by_key(|(_, &c)| c).unwrap();
             if self.counts[max_s] <= self.counts[min_s] + 1 {
                 break; // nothing useful to move
             }
@@ -165,5 +183,97 @@ mod tests {
     fn zero_shards_rejected() {
         assert!(ShardPlan::round_robin(10, 0).is_err());
         assert!(ShardPlan::hashed(10, 0).is_err());
+        assert!(ShardPlan::from_assignments(0, Vec::new()).is_err());
+    }
+
+    #[test]
+    fn from_assignments_validates_and_counts() {
+        let p = ShardPlan::from_assignments(3, vec![0, 2, 2, 1, 2]).unwrap();
+        assert_eq!(p.counts(), &[1, 1, 3]);
+        assert_eq!(p.shard_of(4), 2);
+        assert!(ShardPlan::from_assignments(2, vec![0, 2]).is_err(), "out-of-range shard");
+    }
+
+    /// Random, often heavily skewed assignment for the property tests.
+    fn random_assignment(rng: &mut crate::core::rng::Pcg64) -> (usize, Vec<u32>) {
+        use crate::core::rng::Rng;
+        let shards = 1 + rng.index(6);
+        // includes the degenerate n = 0, n < shards and shards = 1 cases
+        let n = rng.index(80);
+        let skew = rng.bernoulli(0.5);
+        let assign: Vec<u32> = (0..n)
+            .map(|_| {
+                if skew && rng.bernoulli(0.7) {
+                    0
+                } else {
+                    rng.index(shards) as u32
+                }
+            })
+            .collect();
+        (shards, assign)
+    }
+
+    /// Property: `rebalance` preserves the membership partition — every id
+    /// stays in exactly one shard, counts recount exactly and sum to n —
+    /// never increases `imbalance()`, and is a no-op (zero moves, identical
+    /// assignment) when the plan is already under target.
+    #[test]
+    fn prop_rebalance_preserves_partition_and_never_worsens() {
+        use crate::core::rng::Rng;
+        crate::testkit::prop(200, |rng| {
+            let (shards, assign) = random_assignment(rng);
+            let n = assign.len();
+            let mut p = ShardPlan::from_assignments(shards, assign.clone()).unwrap();
+            let before = p.imbalance();
+            let target = 1.0 + rng.next_f64() * 2.0;
+            let moves = p.rebalance(target);
+            // partition preserved: counts recount exactly and sum to n
+            assert_eq!(p.counts().iter().sum::<usize>(), n);
+            let mut recount = vec![0usize; shards];
+            for i in 0..n {
+                recount[p.shard_of(i)] += 1;
+            }
+            assert_eq!(&recount, p.counts());
+            let members_total: usize = (0..shards).map(|s| p.members(s).len()).sum();
+            assert_eq!(members_total, n, "members() must partition the ids");
+            // imbalance never increases
+            assert!(
+                p.imbalance() <= before + 1e-12,
+                "imbalance rose {before} -> {}",
+                p.imbalance()
+            );
+            // no-op when already under target
+            if before <= target {
+                assert!(moves.is_empty(), "under-target plan must not move ids");
+                for (i, &s) in assign.iter().enumerate() {
+                    assert_eq!(p.shard_of(i), s as usize, "no-op rebalance changed id {i}");
+                }
+            }
+        });
+    }
+
+    /// Property: rebalancing to target 1.0 reaches the fully balanced state
+    /// (max − min ≤ 1), and the reported move list replays exactly onto the
+    /// original assignment — the contract live shard migration relies on.
+    #[test]
+    fn prop_rebalance_to_one_fully_balances_and_moves_replay() {
+        crate::testkit::prop(120, |rng| {
+            let (shards, assign) = random_assignment(rng);
+            let n = assign.len();
+            let mut p = ShardPlan::from_assignments(shards, assign.clone()).unwrap();
+            let moves = p.rebalance(1.0);
+            let max = *p.counts().iter().max().unwrap();
+            let min = *p.counts().iter().min().unwrap();
+            assert!(max - min <= 1, "not fully balanced: counts {:?}", p.counts());
+            let mut replay = assign;
+            for &(id, from, to) in &moves {
+                assert_eq!(replay[id] as usize, from, "move reports wrong source shard");
+                assert!(to < shards);
+                replay[id] = to as u32;
+            }
+            for i in 0..n {
+                assert_eq!(replay[i] as usize, p.shard_of(i), "replayed moves diverge at {i}");
+            }
+        });
     }
 }

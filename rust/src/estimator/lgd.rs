@@ -87,7 +87,12 @@ fn stored_matrix(pre: &Preprocessed, mirror: bool) -> crate::core::matrix::Matri
 impl<'a, H: SrpHasher> LgdEstimator<'a, H> {
     /// Build tables over `pre.hashed` (the one-time preprocessing cost of
     /// LGD — measured and reported by the benchmarks).
-    pub fn new(pre: &'a Preprocessed, hasher: H, seed: u64, opts: LgdOptions) -> crate::core::error::Result<Self> {
+    pub fn new(
+        pre: &'a Preprocessed,
+        hasher: H,
+        seed: u64,
+        opts: LgdOptions,
+    ) -> crate::core::error::Result<Self> {
         let stored = stored_matrix(pre, opts.mirror);
         let tables = LshTables::build(hasher, (0..stored.rows()).map(|i| stored.row(i)))?;
         let stored_norms =
@@ -359,14 +364,9 @@ mod tests {
         let pre = setup(200, 8, 11);
         let hd = pre.hashed.cols();
         let hasher = DenseSrp::new(hd, 5, 16, 12);
-        let mut est =
-            LgdEstimator::new(
-                &pre,
-                hasher,
-                13,
-                LgdOptions { weight_clip: Some(2.0), max_probes: 0, query_refresh: 8, mirror: true },
-            )
-                .unwrap();
+        let opts =
+            LgdOptions { weight_clip: Some(2.0), max_probes: 0, query_refresh: 8, mirror: true };
+        let mut est = LgdEstimator::new(&pre, hasher, 13, opts).unwrap();
         let theta = vec![0.1f32; 8];
         for _ in 0..2000 {
             let d = est.draw(&theta);

@@ -34,6 +34,13 @@ pub struct EstimatorStats {
     pub fallbacks: u64,
     /// Aggregate hash-lookup cost.
     pub cost: SampleCost,
+    /// Examples migrated between shards by live rebalancing (sharded
+    /// engine only; 0 elsewhere).
+    pub migrations: u64,
+    /// Rebalance passes that moved at least one example.
+    pub rebalances: u64,
+    /// Wall seconds spent in rebalance passes.
+    pub rebalance_secs: f64,
 }
 
 /// An adaptive (or not) sampler of training examples.

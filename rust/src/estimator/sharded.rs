@@ -21,11 +21,19 @@
 //! hash cost for all of them. With `shards = 1` the engine reduces to
 //! [`LgdEstimator`] draw-for-draw under the same seed (tested below) — the
 //! knob is purely a scaling dial.
+//!
+//! The shards are *live*: they sit in a [`ShardSet`], so the estimator
+//! supports streaming [`ShardedLgdEstimator::insert`] /
+//! [`ShardedLgdEstimator::remove`] after the build, and — when
+//! `lsh.rebalance_threshold` enables it — automatic
+//! [`crate::data::shard::ShardPlan::rebalance`]-driven migration under
+//! skewed growth. `R_s/R` is recomputed after every mutation, so the
+//! mixture probability every draw reports stays exact throughout.
 
 use std::time::Instant;
 
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::pipeline::{build_shard_tables, ShardTables};
+use crate::coordinator::pipeline::{build_shard_tables, ShardSet, ShardTables};
 use crate::core::error::Result;
 use crate::core::rng::{Pcg64, Rng};
 use crate::data::preprocess::Preprocessed;
@@ -47,13 +55,13 @@ pub struct ShardedBuildReport {
 }
 
 /// LGD estimator over sharded tables: shard-mixture proposal with exact
-/// probabilities (see module docs).
+/// probabilities (see module docs). The shards live inside a
+/// [`ShardSet`], so the estimator also supports *streaming mutation* —
+/// [`Self::insert`]/[`Self::remove`]/[`Self::rebalance_to`] — with the
+/// mixture weights `R_s/R` recomputed after every change.
 pub struct ShardedLgdEstimator<'a, H: SrpHasher> {
     pre: &'a Preprocessed,
-    shards: Vec<ShardTables<H>>,
-    /// Exclusive prefix sums of per-shard row counts (shard pick ∝ rows).
-    cum_rows: Vec<usize>,
-    total_rows: usize,
+    set: ShardSet<H>,
     rng: Pcg64,
     opts: LgdOptions,
     stats: EstimatorStats,
@@ -121,22 +129,15 @@ impl<'a, H: SrpHasher> ShardedLgdEstimator<'a, H> {
         opts: LgdOptions,
         wall_secs: f64,
     ) -> Self {
-        let mut cum_rows = Vec::with_capacity(shards.len());
-        let mut total_rows = 0usize;
-        for s in &shards {
-            total_rows += s.stored.rows();
-            cum_rows.push(total_rows);
-        }
         let report = ShardedBuildReport {
             per_shard_secs: shards.iter().map(|s| s.build_secs).collect(),
             wall_secs,
             shard_rows: shards.iter().map(|s| s.stored.rows()).collect(),
         };
+        let set = ShardSet::from_shards(shards, pre.data.len(), opts.mirror, 0.0);
         ShardedLgdEstimator {
             pre,
-            shards,
-            cum_rows,
-            total_rows,
+            set,
             // Same stream as LgdEstimator so shards = 1 is draw-for-draw
             // identical under the same seed.
             rng: Pcg64::new(seed, 0x4c474400),
@@ -155,26 +156,80 @@ impl<'a, H: SrpHasher> ShardedLgdEstimator<'a, H> {
 
     /// Number of shards.
     pub fn shards(&self) -> usize {
-        self.shards.len()
+        self.set.shard_count()
     }
 
-    /// Shard owning global stored row `r` (prefix-sum scan; shard counts
-    /// are tiny).
-    #[inline]
-    fn shard_of_row(&self, r: usize) -> usize {
-        for (s, &cum) in self.cum_rows.iter().enumerate() {
-            if r < cum {
-                return s;
-            }
+    /// The live shard set backing the mixture (membership, imbalance,
+    /// migration counters).
+    pub fn shard_set(&self) -> &ShardSet<H> {
+        &self.set
+    }
+
+    /// Mutable access to the live shard set (e.g. to route a skewed
+    /// arrival with [`ShardSet::insert_into`]). All `ShardSet` mutators
+    /// maintain the prefix sums the mixture reads, so draws stay exact.
+    pub fn shard_set_mut(&mut self) -> &mut ShardSet<H> {
+        &mut self.set
+    }
+
+    /// Streaming insert: add example `id` of the backing `pre` to the
+    /// least-loaded shard (its hash row plus the mirror when enabled).
+    /// Returns the shard chosen. May trigger an automatic rebalance.
+    pub fn insert(&mut self, id: usize) -> Result<usize> {
+        self.set.insert(id, &self.pre.hashed)
+    }
+
+    /// Streaming remove: evict example `id` from its shard. Returns false
+    /// if it was not present. May trigger an automatic rebalance.
+    pub fn remove(&mut self, id: usize) -> Result<bool> {
+        self.set.remove(id, &self.pre.hashed)
+    }
+
+    /// Migrate examples between shards until the imbalance is ≤ `target`.
+    /// Returns the number of examples moved.
+    pub fn rebalance_to(&mut self, target: f64) -> Result<usize> {
+        self.set.rebalance_to(target, &self.pre.hashed)
+    }
+
+    /// Enable automatic rebalancing: after any insert/remove pushing the
+    /// base-row imbalance (max/mean) above `t`, shards migrate examples
+    /// until it is back under. 0 disables (the default).
+    pub fn set_rebalance_threshold(&mut self, t: f64) {
+        self.set.set_threshold(t);
+    }
+
+    /// Degenerate uniform fallback. While any example is present it is
+    /// restricted to the present membership, so streaming removals are
+    /// respected (evicted examples carry zero probability even on the
+    /// fallback path): a partial set picks a uniform *stored row* and maps
+    /// it back (each present example owns exactly one row, or two when
+    /// mirrored — uniform over present examples in O(shards), no rejection
+    /// loop). A full set is one uniform draw over all n, keeping the
+    /// `shards = 1` stream identical to `LgdEstimator`'s fallback. A
+    /// *fully drained* set has no valid support at all; rather than
+    /// panicking mid-training it deliberately degenerates to uniform over
+    /// all n (weight 1 — a plain SGD step), the documented escape hatch
+    /// `drained_set_falls_back_uniform` pins down.
+    fn uniform_fallback(&mut self) -> WeightedDraw {
+        self.stats.fallbacks += 1;
+        let n = self.pre.data.len();
+        let present = self.set.present_len();
+        if present == 0 || present == n {
+            return WeightedDraw { index: self.rng.index(n), weight: 1.0, prob: 1.0 / n as f64 };
         }
-        self.cum_rows.len() - 1
+        let r = self.rng.index(self.set.total_rows());
+        let s = self.set.shard_of_row(r);
+        let start = if s == 0 { 0 } else { self.set.cum_rows()[s - 1] };
+        let row = self.set.shard(s).rows[r - start] as usize;
+        let index = if row >= n { row - n } else { row };
+        WeightedDraw { index, weight: 1.0, prob: 1.0 / present as f64 }
     }
 }
 
 impl<'a, H: SrpHasher> GradientEstimator for ShardedLgdEstimator<'a, H> {
     fn draw(&mut self, theta: &[f32]) -> WeightedDraw {
         self.stats.draws += 1;
-        let l_tables = self.shards[0].tables.hasher().l();
+        let l_tables = self.set.shard(0).tables.hasher().l();
         let refresh = if self.opts.query_refresh == 0 {
             8 * l_tables
         } else {
@@ -186,16 +241,21 @@ impl<'a, H: SrpHasher> GradientEstimator for ShardedLgdEstimator<'a, H> {
             self.cache.refresh(&query, l_tables);
             self.query = query;
         }
+        // Streaming removals can drain the set entirely: degenerate
+        // uniform fallback, same as an exhausted probe.
+        if self.set.total_rows() == 0 {
+            return self.uniform_fallback();
+        }
         // Shard ∝ stored rows. With one shard no randomness is consumed,
         // keeping the draw stream identical to LgdEstimator.
-        let s = if self.shards.len() > 1 {
-            let r = self.rng.index(self.total_rows);
+        let s = if self.set.shard_count() > 1 {
+            let r = self.rng.index(self.set.total_rows());
             self.stats.cost.randoms += 1;
-            self.shard_of_row(r)
+            self.set.shard_of_row(r)
         } else {
             0
         };
-        let shard = &self.shards[s];
+        let shard = self.set.shard(s);
         let mut cost = SampleCost::default();
         let mut cache = std::mem::take(&mut self.cache);
         let sampler = {
@@ -211,33 +271,34 @@ impl<'a, H: SrpHasher> GradientEstimator for ShardedLgdEstimator<'a, H> {
             }
         };
         let n = self.pre.data.len();
-        let out = match sampler.sample_cached(&mut cache, &mut self.rng, &mut cost) {
+        let hit = match sampler.sample_cached(&mut cache, &mut self.rng, &mut cost) {
             Sampled::Hit(d) => {
                 // Exact mixture probability: shard pick (R_s/R) × exact
                 // Algorithm-1 probability within the shard.
-                let frac = shard.stored.rows() as f64 / self.total_rows as f64;
+                let frac = shard.stored.rows() as f64 / self.set.total_rows() as f64;
                 let prob = d.prob * frac;
-                let w = 1.0 / (prob * self.total_rows as f64);
+                let w = 1.0 / (prob * self.set.total_rows() as f64);
                 let weight = match self.opts.weight_clip {
                     Some(c) => w.min(c),
                     None => w,
                 };
                 let global = shard.rows[d.index] as usize;
                 let index = if global >= n { global - n } else { global };
-                WeightedDraw { index, weight, prob }
+                Some(WeightedDraw { index, weight, prob })
             }
-            Sampled::Exhausted { .. } => {
-                // Same degenerate fallback as LgdEstimator: one uniform
-                // draw at weight 1, counted exactly once.
-                self.stats.fallbacks += 1;
-                WeightedDraw { index: self.rng.index(n), weight: 1.0, prob: 1.0 / n as f64 }
-            }
+            // Same degenerate fallback as LgdEstimator (one uniform draw
+            // at weight 1, counted exactly once) — restricted to the
+            // present membership; resolved below, after the shard borrow.
+            Sampled::Exhausted { .. } => None,
         };
         self.cache = cache;
         self.stats.cost.codes += cost.codes;
         self.stats.cost.mults += cost.mults;
         self.stats.cost.randoms += cost.randoms;
-        out
+        match hit {
+            Some(d) => d,
+            None => self.uniform_fallback(),
+        }
     }
 
     /// Appendix-B.2 minibatch sampling over the shard mixture: one
@@ -249,26 +310,36 @@ impl<'a, H: SrpHasher> GradientEstimator for ShardedLgdEstimator<'a, H> {
     /// this is `LgdEstimator::draw_batch` draw-for-draw.
     fn draw_batch(&mut self, theta: &[f32], m: usize, out: &mut Vec<WeightedDraw>) {
         out.clear();
+        let n = self.pre.data.len();
+        // Drained set (streaming removals): all-uniform fallback batch.
+        if self.set.total_rows() == 0 {
+            for _ in 0..m {
+                let d = self.uniform_fallback();
+                out.push(d);
+            }
+            self.stats.draws += m as u64;
+            return;
+        }
         let mut query = std::mem::take(&mut self.query);
         self.pre.query(theta, &mut query);
         let mut cost = SampleCost::default();
-        let mut want = vec![0usize; self.shards.len()];
-        if self.shards.len() > 1 {
+        let mut want = vec![0usize; self.set.shard_count()];
+        if self.set.shard_count() > 1 {
             for _ in 0..m {
-                let r = self.rng.index(self.total_rows);
+                let r = self.rng.index(self.set.total_rows());
                 cost.randoms += 1;
-                want[self.shard_of_row(r)] += 1;
+                want[self.set.shard_of_row(r)] += 1;
             }
         } else {
             want[0] = m;
         }
-        let n = self.pre.data.len();
         let mut batch = Vec::new();
+        let mut short = 0usize;
         for (s, &quota) in want.iter().enumerate() {
             if quota == 0 {
                 continue;
             }
-            let shard = &self.shards[s];
+            let shard = self.set.shard(s);
             let sampler = {
                 let sp = LshSampler::with_norms(
                     &shard.tables,
@@ -282,10 +353,10 @@ impl<'a, H: SrpHasher> GradientEstimator for ShardedLgdEstimator<'a, H> {
                 }
             };
             sampler.sample_batch(&query, quota, &mut self.rng, &mut cost, &mut batch);
-            let frac = shard.stored.rows() as f64 / self.total_rows as f64;
+            let frac = shard.stored.rows() as f64 / self.set.total_rows() as f64;
             for d in &batch {
                 let prob = d.prob * frac;
-                let w = 1.0 / (prob * self.total_rows as f64);
+                let w = 1.0 / (prob * self.set.total_rows() as f64);
                 let weight = match self.opts.weight_clip {
                     Some(c) => w.min(c),
                     None => w,
@@ -294,14 +365,14 @@ impl<'a, H: SrpHasher> GradientEstimator for ShardedLgdEstimator<'a, H> {
                 let index = if global >= n { global - n } else { global };
                 out.push(WeightedDraw { index, weight, prob });
             }
-            for _ in batch.len()..quota {
-                self.stats.fallbacks += 1;
-                out.push(WeightedDraw {
-                    index: self.rng.index(n),
-                    weight: 1.0,
-                    prob: 1.0 / n as f64,
-                });
-            }
+            // B.2 exhaustion: remember the shortfall; the uniform top-ups
+            // go in after the loop (outside the shard borrow), restricted
+            // to the present membership like the single-draw fallback.
+            short += quota - batch.len();
+        }
+        for _ in 0..short {
+            let d = self.uniform_fallback();
+            out.push(d);
         }
         self.stats.draws += m as u64;
         self.stats.cost.codes += cost.codes;
@@ -311,7 +382,12 @@ impl<'a, H: SrpHasher> GradientEstimator for ShardedLgdEstimator<'a, H> {
     }
 
     fn stats(&self) -> EstimatorStats {
-        self.stats
+        let mut s = self.stats;
+        let live = self.set.stats();
+        s.migrations = live.migrations;
+        s.rebalances = live.rebalances;
+        s.rebalance_secs = live.rebalance_secs;
+        s
     }
 
     fn name(&self) -> &'static str {
@@ -497,6 +573,117 @@ mod tests {
             }
         }
         assert_eq!(est.stats().draws, 4 * 48);
+    }
+
+    /// Live mutation: draws stay valid (in-range index, exact positive
+    /// probability, no draws of removed examples) across an
+    /// insert/remove/rebalance stream, and the estimator reports the
+    /// migration counters.
+    #[test]
+    fn draws_stay_valid_across_live_mutation() {
+        let pre = setup(200, 8, 81);
+        let hd = pre.hashed.cols();
+        let mut est = ShardedLgdEstimator::new(
+            &pre,
+            DenseSrp::new(hd, 3, 10, 83),
+            85,
+            LgdOptions::default(),
+            4,
+        )
+        .unwrap();
+        let theta = vec![0.05f32; 8];
+        for id in 0..50 {
+            assert!(est.remove(id).unwrap());
+        }
+        for _ in 0..500 {
+            let d = est.draw(&theta);
+            assert!(d.index >= 50 && d.index < 200, "drew a removed example: {}", d.index);
+            assert!(d.prob > 0.0 && d.prob <= 1.0);
+            assert!(d.weight > 0.0);
+        }
+        assert_eq!(est.stats().fallbacks, 0, "dense buckets at K=3 must not exhaust");
+        // skew one shard, enable auto-rebalance, and stream the ids back in
+        est.set_rebalance_threshold(1.25);
+        for id in 0..50 {
+            est.shard_set_mut().insert_into(0, id, &pre.hashed).unwrap();
+        }
+        assert!(est.shard_set().imbalance() <= 1.25);
+        let st = est.stats();
+        assert!(st.migrations > 0, "skewed re-inserts must migrate");
+        assert!(st.rebalances > 0);
+        for _ in 0..500 {
+            let d = est.draw(&theta);
+            assert!(d.index < 200);
+            assert!(d.prob > 0.0 && d.prob <= 1.0);
+        }
+        let mut out = Vec::new();
+        est.draw_batch(&theta, 64, &mut out);
+        assert_eq!(out.len(), 64);
+        assert!(out.iter().all(|d| d.index < 200 && d.weight > 0.0));
+    }
+
+    /// Fallbacks respect live membership: even when probes exhaust (K far
+    /// too large for the data, one probe only), the uniform fallback must
+    /// never resurrect an evicted example.
+    #[test]
+    fn fallback_respects_live_membership() {
+        let pre = setup(120, 8, 97);
+        let hd = pre.hashed.cols();
+        let opts = LgdOptions { max_probes: 1, ..LgdOptions::default() };
+        let mut est =
+            ShardedLgdEstimator::new(&pre, DenseSrp::new(hd, 8, 4, 98), 99, opts, 3).unwrap();
+        for id in 0..40 {
+            assert!(est.remove(id).unwrap());
+        }
+        let theta = vec![0.05f32; 8];
+        for _ in 0..2000 {
+            let d = est.draw(&theta);
+            assert!(
+                d.index >= 40 && d.index < 120,
+                "draw returned evicted example {}",
+                d.index
+            );
+            assert!(d.prob > 0.0 && d.weight > 0.0);
+        }
+        let mut out = Vec::new();
+        est.draw_batch(&theta, 64, &mut out);
+        assert!(out.iter().all(|d| d.index >= 40 && d.index < 120));
+        assert!(
+            est.stats().fallbacks > 0,
+            "K=8 with a single probe must exhaust sometimes — test setup is wrong otherwise"
+        );
+    }
+
+    /// Removing everything degenerates to counted uniform fallbacks
+    /// instead of panicking, for both single and batch draws.
+    #[test]
+    fn drained_set_falls_back_uniform() {
+        let pre = setup(60, 6, 87);
+        let hd = pre.hashed.cols();
+        let mut est = ShardedLgdEstimator::new(
+            &pre,
+            DenseSrp::new(hd, 3, 6, 88),
+            89,
+            LgdOptions::default(),
+            2,
+        )
+        .unwrap();
+        for id in 0..60 {
+            assert!(est.remove(id).unwrap());
+        }
+        assert_eq!(est.shard_set().total_rows(), 0);
+        let theta = vec![0.1f32; 6];
+        for i in 1..=40u64 {
+            let d = est.draw(&theta);
+            assert!(d.index < 60);
+            assert_eq!(d.weight, 1.0);
+            assert_eq!(est.stats().fallbacks, i);
+        }
+        let mut out = Vec::new();
+        est.draw_batch(&theta, 16, &mut out);
+        assert_eq!(out.len(), 16);
+        assert_eq!(est.stats().fallbacks, 40 + 16);
+        assert!(out.iter().all(|d| d.index < 60 && d.weight == 1.0));
     }
 
     /// Exhaustion falls back to a uniform draw with weight 1, counted

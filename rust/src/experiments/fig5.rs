@@ -194,7 +194,8 @@ fn finetune(
         let (train_loss, _) = eval_subset(rt, &sess, ds, train_idx)?;
         let (test_loss, test_acc) = eval_subset(rt, &sess, ds, test_idx)?;
         println!(
-            "[fig5] {} epoch {}: train_loss {train_loss:.4} test_loss {test_loss:.4} acc {test_acc:.3} ({})",
+            "[fig5] {} epoch {}: train_loss {train_loss:.4} test_loss {test_loss:.4} \
+             acc {test_acc:.3} ({})",
             ds.name,
             epoch + 1,
             if use_lgd { "lgd" } else { "sgd" },

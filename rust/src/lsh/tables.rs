@@ -342,6 +342,76 @@ mod tests {
         assert!(t.insert(0, &[1.0; 5]).is_err());
     }
 
+    /// `remove` + re-`insert` round-trip: bucket membership, `len()` and
+    /// `stats()` all identical to a fresh build of the same rows. (Bucket
+    /// *order* may differ — removal swap-removes and re-insertion appends —
+    /// so membership is compared as sorted sets.)
+    #[test]
+    fn remove_reinsert_roundtrip_matches_fresh_build() {
+        let rows = unit_rows(40, 8, 21);
+        let h = DenseSrp::new(8, 4, 6, 22);
+        let fresh = LshTables::build(h.clone(), rows.iter().map(|r| r.as_slice())).unwrap();
+        let mut t = LshTables::build(h, rows.iter().map(|r| r.as_slice())).unwrap();
+        for &id in &[3u32, 17, 39, 0] {
+            assert!(t.remove(id, &rows[id as usize]));
+        }
+        assert_eq!(t.len(), 36);
+        for &id in &[0u32, 39, 17, 3] {
+            t.insert(id, &rows[id as usize]).unwrap();
+        }
+        assert_eq!(t.len(), fresh.len());
+        assert_eq!(t.stats(), fresh.stats());
+        for ti in 0..6 {
+            for code in 0..(1u32 << 4) {
+                let mut a = fresh.bucket(ti, code).to_vec();
+                let mut b = t.bucket(ti, code).to_vec();
+                a.sort_unstable();
+                b.sort_unstable();
+                assert_eq!(a, b, "table {ti} code {code}");
+            }
+        }
+    }
+
+    /// Property form of the round-trip over random shapes and removal
+    /// sets, including the empty-removal and remove-everything cases.
+    #[test]
+    fn prop_remove_reinsert_roundtrip() {
+        use crate::testkit::{gen, prop};
+        prop(25, |rng| {
+            let n = gen::size(rng, 1, 60);
+            let d = gen::size(rng, 3, 10);
+            let k = gen::size(rng, 2, 5);
+            let l = gen::size(rng, 2, 8);
+            let rows: Vec<Vec<f32>> = (0..n).map(|_| gen::unit_vec(rng, d)).collect();
+            let h = DenseSrp::new(d, k, l, rng.next_u64());
+            let fresh = LshTables::build(h.clone(), rows.iter().map(|r| r.as_slice())).unwrap();
+            let mut t = LshTables::build(h, rows.iter().map(|r| r.as_slice())).unwrap();
+            let kill: Vec<u32> = (0..n as u32).filter(|_| rng.bernoulli(0.4)).collect();
+            for &id in &kill {
+                assert!(t.remove(id, &rows[id as usize]));
+            }
+            assert_eq!(t.len(), n - kill.len());
+            if let Some(&id) = kill.first() {
+                assert!(!t.remove(id, &rows[id as usize]), "double remove must fail");
+                assert_eq!(t.len(), n - kill.len(), "failed remove must not change len");
+            }
+            for &id in kill.iter().rev() {
+                t.insert(id, &rows[id as usize]).unwrap();
+            }
+            assert_eq!(t.len(), fresh.len());
+            assert_eq!(t.stats(), fresh.stats());
+            for ti in 0..l {
+                for code in 0..(1u32 << k) {
+                    let mut a = fresh.bucket(ti, code as u32).to_vec();
+                    let mut b = t.bucket(ti, code as u32).to_vec();
+                    a.sort_unstable();
+                    b.sort_unstable();
+                    assert_eq!(a, b, "table {ti} code {code}");
+                }
+            }
+        });
+    }
+
     #[test]
     fn candidate_union_dedups_and_contains_near() {
         let rows = unit_rows(40, 10, 7);

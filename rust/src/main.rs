@@ -26,6 +26,7 @@ lgd — LSH-sampled Stochastic Gradient Descent (paper reproduction)
 
 USAGE:
   lgd train --config <run.toml> [--out <dir>] [--shards <n>]
+            [--rebalance-threshold <f>]
   lgd experiments --id <table4|fig9|fig10|fig11|fig12|fig13|variance|sampling|fig5|all>
                   [--scale <f>] [--out <dir>] [--seed <n>] [--quick] [--artifacts <dir>]
   lgd gen-data --name <yearmsd-like|slice-like|ujiindoor-like|pareto|uniform>
@@ -58,17 +59,22 @@ fn run(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    args.allow(&["config", "out", "shards"])?;
+    args.allow(&["config", "out", "shards", "rebalance-threshold"])?;
     let cfg_path = args.require("config")?;
     let doc = TomlDoc::load(std::path::Path::new(&cfg_path))?;
     let mut cfg = RunConfig::from_toml(&doc)?;
     if let Some(out) = args.has("out").then(|| args.str_or("out", "results")) {
         cfg.out_dir = PathBuf::from(out);
     }
-    // --shards overrides the config's [lsh] shards knob; an explicit
-    // out-of-range value (e.g. 0) is rejected by validation, not ignored.
+    // --shards / --rebalance-threshold override the config's [lsh] knobs;
+    // explicit out-of-range values (e.g. 0 shards) are rejected by
+    // validation, not ignored.
     if !args.str_or("shards", "").is_empty() {
         cfg.lsh.shards = args.usize_or("shards", 1)?;
+        cfg.validate()?;
+    }
+    if !args.str_or("rebalance-threshold", "").is_empty() {
+        cfg.lsh.rebalance_threshold = args.f64_or("rebalance-threshold", 0.0)?;
         cfg.validate()?;
     }
 
@@ -112,6 +118,14 @@ fn cmd_train(args: &Args) -> Result<()> {
             "  sharded build: {} shards, slowest worker {:.3}s",
             outcome.shard_build_secs.len(),
             slowest
+        );
+    }
+    if outcome.est_stats.migrations > 0 {
+        println!(
+            "  rebalancing: {} examples migrated in {} passes ({:.3}s)",
+            outcome.est_stats.migrations,
+            outcome.est_stats.rebalances,
+            outcome.est_stats.rebalance_secs
         );
     }
     Ok(())

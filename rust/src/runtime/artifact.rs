@@ -107,8 +107,9 @@ impl Manifest {
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .map_err(|e| Error::Runtime(format!("{}: {e} (run `make artifacts`)", path.display())))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!("{}: {e} (run `make artifacts`)", path.display()))
+        })?;
         Self::parse(&text, dir)
     }
 

@@ -4,13 +4,13 @@
 
 use lgd::config::spec::{Backend, EstimatorKind, RunConfig};
 use lgd::coordinator::metrics::Metrics;
-use lgd::coordinator::pipeline::{streaming_build, PipelineConfig};
+use lgd::coordinator::pipeline::{streaming_build, streaming_build_sharded, PipelineConfig};
 use lgd::coordinator::trainer::{train, GradSource};
 use lgd::core::rng::Rng;
 use lgd::data::preprocess::{preprocess, PreprocessOptions};
 use lgd::data::SynthSpec;
 use lgd::estimator::lgd::{LgdEstimator, LgdOptions};
-use lgd::estimator::GradientEstimator;
+use lgd::estimator::{GradientEstimator, ShardedLgdEstimator};
 use lgd::lsh::srp::DenseSrp;
 use lgd::model::{LinReg, Model};
 use lgd::optim::Schedule;
@@ -73,6 +73,155 @@ fn sharded_training_end_to_end() {
     let first = out.curve.first().unwrap().train_loss;
     let last = out.curve.last().unwrap().train_loss;
     assert!(last < first * 0.9, "sharded training did not descend: {first} -> {last}");
+}
+
+/// Sharded mirror of the pipeline's `streaming_matches_batch_path`: a
+/// streaming sharded ingest must be draw-for-draw identical to the batch
+/// `build_shard_tables` path under the same seed — single draws, batch
+/// draws, and fallback counters.
+#[test]
+fn streaming_sharded_matches_batch_draw_for_draw() {
+    let ds = SynthSpec::power_law("ss-e2e", 300, 10, 17).generate().unwrap();
+    let hasher = DenseSrp::new(11, 4, 12, 19);
+    let pre_b = preprocess(ds.clone(), &PreprocessOptions::default()).unwrap();
+    let mut batch =
+        ShardedLgdEstimator::new(&pre_b, hasher.clone(), 23, LgdOptions::default(), 4).unwrap();
+    let metrics = Metrics::new();
+    let (pre_s, shards, report) =
+        streaming_build_sharded(ds, hasher, 4, true, &PipelineConfig::default(), &metrics)
+            .unwrap();
+    assert_eq!(report.records, 300);
+    let mut stream = ShardedLgdEstimator::from_shards(&pre_s, shards, 23, LgdOptions::default());
+    let theta: Vec<f32> = (0..10).map(|j| 0.03 * (j as f32 - 5.0)).collect();
+    for i in 0..600 {
+        let a = batch.draw(&theta);
+        let b = stream.draw(&theta);
+        assert_eq!(a, b, "draw {i} diverged between batch and streaming builds");
+    }
+    let (mut xa, mut xb) = (Vec::new(), Vec::new());
+    for round in 0..4 {
+        batch.draw_batch(&theta, 32, &mut xa);
+        stream.draw_batch(&theta, 32, &mut xb);
+        assert_eq!(xa, xb, "batch round {round} diverged");
+    }
+    assert_eq!(batch.stats().fallbacks, stream.stats().fallbacks);
+}
+
+/// The Theorem-1 regression for *live* shards: after a scripted
+/// insert/remove/skew/rebalance sequence, ~50k seeded draws from the
+/// sharded estimator must match the recomputed exact per-example mixture
+/// probabilities. Conditional on the built tables and the query, shard `s`
+/// is picked with probability `R_s/R` and Algorithm 1 inside it returns
+/// local row `i` with probability `(1/#nonempty) Σ_t 1{i ∈ B_t}/|B_t|`
+/// (the same enumeration `lsh::sampler` validates for one structure).
+/// Migration bugs — stale prefix sums, dropped mirror rows, mis-keyed
+/// buckets — all show up as frequency/probability mismatches here.
+#[test]
+fn mixture_probabilities_exact_under_mutation() {
+    let n = 180usize;
+    let ds = SynthSpec::power_law("mix", n, 8, 91).generate().unwrap();
+    let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
+    let hd = pre.hashed.cols();
+    let mut est = ShardedLgdEstimator::new(
+        &pre,
+        DenseSrp::new(hd, 3, 12, 93),
+        95,
+        LgdOptions::default(),
+        3,
+    )
+    .unwrap();
+    // scripted stream: evict a block, re-admit some (least-loaded routing),
+    // force a skewed burst into shard 0 under an auto-rebalance threshold,
+    // then rebalance fully by hand
+    for id in 0..60 {
+        assert!(est.remove(id).unwrap());
+    }
+    for id in 0..20 {
+        est.insert(id).unwrap();
+    }
+    est.set_rebalance_threshold(1.2);
+    for id in 20..45 {
+        est.shard_set_mut().insert_into(0, id, &pre.hashed).unwrap();
+    }
+    est.rebalance_to(1.0).unwrap();
+    assert!(est.stats().migrations > 0, "the scripted skew must have migrated examples");
+
+    // exact per-example probabilities of the mutated mixture
+    let theta: Vec<f32> = (0..8).map(|j| 0.04 * (j as f32 - 3.0)).collect();
+    let mut q = Vec::new();
+    pre.query(&theta, &mut q);
+    let p: Vec<f64> = {
+        let set = est.shard_set();
+        let r_total = set.total_rows() as f64;
+        let mut p = vec![0.0f64; n];
+        for s in 0..set.shard_count() {
+            let st = set.shard(s);
+            if st.rows.is_empty() {
+                continue;
+            }
+            let l = st.tables.hasher().l();
+            let nonempty = (0..l).filter(|&t| !st.tables.query_bucket(t, &q).is_empty()).count();
+            assert!(nonempty > 0, "shard {s}: query hits no bucket — setup too sparse");
+            let frac = st.stored.rows() as f64 / r_total;
+            for t in 0..l {
+                let b = st.tables.query_bucket(t, &q);
+                if b.is_empty() {
+                    continue;
+                }
+                let w = frac / (nonempty as f64 * b.len() as f64);
+                for &local in b {
+                    let row = st.rows[local as usize] as usize;
+                    let ex = if row >= n { row - n } else { row };
+                    p[ex] += w;
+                }
+            }
+        }
+        p
+    };
+    let sum: f64 = p.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-9, "exact probabilities must sum to 1, got {sum}");
+    for id in 45..60 {
+        assert_eq!(p[id], 0.0, "evicted example {id} still carries probability mass");
+    }
+
+    // ~50k seeded draws → empirical frequencies
+    let m = 50_000usize;
+    let mut counts = vec![0u64; n];
+    for _ in 0..m {
+        let d = est.draw(&theta);
+        counts[d.index] += 1;
+    }
+    assert_eq!(est.stats().fallbacks, 0, "fallbacks would contaminate the distribution");
+    for id in 45..60 {
+        assert_eq!(counts[id], 0, "drew evicted example {id}");
+    }
+    // total-variation and chi-square bounds (seeded, deterministic)
+    let mut tv = 0.0f64;
+    let (mut chi2, mut cats) = (0.0f64, 0usize);
+    for i in 0..n {
+        let freq = counts[i] as f64 / m as f64;
+        tv += (freq - p[i]).abs();
+        let expect = p[i] * m as f64;
+        if expect >= 5.0 {
+            chi2 += (counts[i] as f64 - expect).powi(2) / expect;
+            cats += 1;
+        }
+    }
+    tv *= 0.5;
+    assert!(tv < 0.035, "total variation {tv:.4} too large for {m} draws");
+    let dof = cats.saturating_sub(1) as f64;
+    assert!(
+        chi2 < dof + 5.0 * (2.0 * dof).sqrt() + 10.0,
+        "chi-square {chi2:.1} vs dof {dof}: mixture sampling is biased"
+    );
+    // per-example relative check on the well-populated categories
+    for i in 0..n {
+        if p[i] > 0.005 {
+            let freq = counts[i] as f64 / m as f64;
+            let rel = (freq - p[i]).abs() / p[i];
+            assert!(rel < 0.15, "example {i}: freq {freq:.5} vs exact {:.5}", p[i]);
+        }
+    }
 }
 
 /// Property: every LGD draw returns a valid index, a probability in (0, 1]
