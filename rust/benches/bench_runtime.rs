@@ -13,34 +13,52 @@ use lgd::runtime::executor::{lit_f32, lit_i32};
 use lgd::runtime::{BertSession, Runtime};
 
 /// Native sampling-engine runtime: single-structure vs sharded draw
-/// throughput. Runs regardless of PJRT artifact availability.
+/// throughput, sealed CSR arena vs Vec buckets. Runs regardless of PJRT
+/// artifact availability and emits the machine-readable
+/// `BENCH_runtime.json` trajectory file.
 fn bench_sharded_draws() {
     let mut b = Bench::new("sampling engine runtime (native)");
     let n = 20_000usize;
     let d = 32usize;
     let ds = SynthSpec::power_law("rt", n, d, 33).generate().unwrap();
+    let t0 = std::time::Instant::now();
     let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
+    b.record("preprocess_n20k", t0.elapsed().as_secs_f64() * 1e9);
     let hd = pre.hashed.cols();
     let theta = vec![0.01f32; d];
-    let mut single =
-        LgdEstimator::new(&pre, DenseSrp::new(hd, 5, 25, 35), 37, LgdOptions::default()).unwrap();
-    b.bench("lgd_draw_n20k_shards1", || {
-        bb(single.draw(&theta));
-    });
-    for &s in &[2usize, 4] {
-        let mut sharded = ShardedLgdEstimator::new(
-            &pre,
-            DenseSrp::new(hd, 5, 25, 35),
-            37,
-            LgdOptions::default(),
-            s,
-        )
-        .unwrap();
-        b.bench(&format!("lgd_draw_n20k_shards{s}"), || {
-            bb(sharded.draw(&theta));
+    for sealed in [true, false] {
+        let tag = if sealed { "sealed" } else { "vec" };
+        let opts = LgdOptions { sealed, ..LgdOptions::default() };
+        let tb = std::time::Instant::now();
+        let mut single =
+            LgdEstimator::new(&pre, DenseSrp::new(hd, 5, 25, 35), 37, opts.clone()).unwrap();
+        b.record(&format!("table_build_n20k_{tag}"), tb.elapsed().as_secs_f64() * 1e9);
+        b.bench(&format!("lgd_draw_n20k_shards1_{tag}"), || {
+            bb(single.draw(&theta));
         });
+        let st = single.stats();
+        let draws = st.draws.max(1) as f64;
+        b.note(&format!("probes_per_draw_shards1_{tag}"), st.cost.probes as f64 / draws);
+        for &s in &[2usize, 4] {
+            let mut sharded = ShardedLgdEstimator::new(
+                &pre,
+                DenseSrp::new(hd, 5, 25, 35),
+                37,
+                opts.clone(),
+                s,
+            )
+            .unwrap();
+            b.bench(&format!("lgd_draw_n20k_shards{s}_{tag}"), || {
+                bb(sharded.draw(&theta));
+            });
+        }
     }
     b.report();
+    let json_path = lgd::benchkit::bench_json_path("BENCH_runtime.json");
+    match b.write_json(&json_path) {
+        Ok(()) => println!("wrote {}", json_path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", json_path.display()),
+    }
 }
 
 fn main() {

@@ -17,7 +17,7 @@ use lgd::data::SynthSpec;
 use lgd::estimator::lgd::{LgdEstimator, LgdOptions};
 use lgd::estimator::{GradientEstimator, ShardedLgdEstimator};
 use lgd::lsh::sampler::LshSampler;
-use lgd::lsh::srp::{DenseSrp, SparseSrp};
+use lgd::lsh::srp::{DenseSrp, SparseSrp, SrpHasher};
 use lgd::lsh::tables::LshTables;
 use lgd::model::{LinReg, Model};
 
@@ -141,7 +141,106 @@ fn main() {
         bb(lgd4.draw(&theta));
     });
 
+    // --- Fused vs per-row query hashing (paper config K=5, L=100, density
+    // 1/30): the same multiplication budget, one sequential CSC sweep vs
+    // L·K scattered sparse rows. The counters record the per-path mults so
+    // the trajectory file shows the cost-model parity; the timing rows show
+    // the locality win.
+    {
+        let hq = 91usize;
+        let q: Vec<f32> = (0..hq).map(|i| ((i * 37 % 97) as f32 / 97.0) - 0.5).collect();
+        let sparse = SparseSrp::paper_default(hq, 5, 100, 41);
+        let dense = DenseSrp::new(hq, 5, 100, 41);
+        let mut codes = Vec::new();
+        b.bench("hash_query_fused_sparse_d91_L100", || {
+            sparse.codes_all(&q, &mut codes);
+            bb(codes.len());
+        });
+        b.bench("hash_query_per_row_sparse_d91_L100", || {
+            let mut acc = 0u32;
+            for t in 0..100 {
+                acc ^= sparse.code(t, &q);
+            }
+            bb(acc);
+        });
+        b.bench("hash_query_fused_dense_d91_L100", || {
+            dense.codes_all(&q, &mut codes);
+            bb(codes.len());
+        });
+        b.bench("hash_query_per_row_dense_d91_L100", || {
+            let mut acc = 0u32;
+            for t in 0..100 {
+                acc ^= dense.code(t, &q);
+            }
+            bb(acc);
+        });
+        b.note("hash_sparse_mults_per_query_fused", sparse.mults_all());
+        b.note("hash_sparse_mults_per_query_per_row", 100.0 * sparse.mults_per_code());
+        b.note("hash_dense_mults_per_query_fused", dense.mults_all());
+        b.note("hash_dense_mults_per_query_per_row", 100.0 * dense.mults_per_code());
+    }
+
+    // --- Sealed CSR arena vs Vec buckets on the draw path: identical
+    // logical work (probe counters match draw-for-draw) — the arena wins on
+    // locality, and the counters prove the parity.
+    let mk_est = |sealed: bool| {
+        let opts = LgdOptions { sealed, ..LgdOptions::default() };
+        ShardedLgdEstimator::new(&pre, DenseSrp::new(hd, 5, 25, 11), 13, opts, 4).unwrap()
+    };
+    let mut sealed_est = mk_est(true);
+    let mut vec_est = mk_est(false);
+    b.bench("lgd_draw_n50k_shards4_sealed", || {
+        bb(sealed_est.draw(&theta));
+    });
+    b.bench("lgd_draw_n50k_shards4_vec", || {
+        bb(vec_est.draw(&theta));
+    });
+    let mut out = Vec::new();
+    b.bench("lgd_batch32_n50k_shards4_sealed", || {
+        sealed_est.draw_batch(&theta, 32, &mut out);
+        bb(out.len());
+    });
+    b.bench("lgd_batch32_n50k_shards4_vec", || {
+        vec_est.draw_batch(&theta, 32, &mut out);
+        bb(out.len());
+    });
+    for (tag, est) in [("sealed", &sealed_est), ("vec", &vec_est)] {
+        let st = est.stats();
+        let draws = st.draws.max(1) as f64;
+        b.note(&format!("bucket_probes_per_draw_{tag}"), st.cost.probes as f64 / draws);
+        b.note(&format!("hash_mults_per_draw_{tag}"), st.cost.mults / draws);
+    }
+
+    // --- Shared-query-code contract: one fused hash invocation per batch,
+    // zero per-table code() calls on the draw path, independent of shard
+    // count (measured via the hasher family's shared counters).
+    for shards in [1usize, 4] {
+        let hasher = DenseSrp::new(hd, 5, 25, 11);
+        let handle = hasher.clone();
+        let mut est =
+            ShardedLgdEstimator::new(&pre, hasher, 13, LgdOptions::default(), shards).unwrap();
+        let base = handle.hash_stats();
+        let batches = 50usize;
+        for _ in 0..batches {
+            est.draw_batch(&theta, 32, &mut out);
+        }
+        let s = handle.hash_stats();
+        b.note(
+            &format!("fused_hash_invocations_per_batch_shards{shards}"),
+            (s.fused_calls - base.fused_calls) as f64 / batches as f64,
+        );
+        b.note(
+            &format!("per_row_code_calls_on_draw_path_shards{shards}"),
+            (s.code_calls - base.code_calls) as f64,
+        );
+    }
+
     b.report();
+    let json_path = lgd::benchkit::bench_json_path("BENCH_sampling.json");
+    match b.write_json(&json_path) {
+        Ok(()) => println!("\nwrote {}", json_path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", json_path.display()),
+    }
     println!("\npaper claim: LGD iteration ~= 1.5x SGD iteration; check");
     println!("(lgd_draw + grad_update) / (sgd_draw + grad_update) per d above.");
 }

@@ -9,8 +9,12 @@
 //! Each benchmark is auto-calibrated (target ~0.4 s per measurement), runs
 //! `reps` measured batches and reports median/p95 ns per iteration.
 
+use std::collections::BTreeMap;
 use std::hint::black_box;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+use crate::config::json::Json;
 
 /// One benchmark result row.
 #[derive(Debug, Clone)]
@@ -29,6 +33,10 @@ pub struct BenchRow {
 pub struct Bench {
     group: String,
     rows: Vec<BenchRow>,
+    /// Named numeric counters attached to the group (mults/draw, probe
+    /// counts, hash invocations…) — the machine-readable side channel the
+    /// `BENCH_*.json` perf-trajectory files carry alongside timings.
+    notes: Vec<(String, f64)>,
     /// Measured batches per benchmark.
     pub reps: usize,
     /// Target seconds per measured batch during calibration.
@@ -43,8 +51,13 @@ pub fn bb<T>(x: T) -> T {
 impl Bench {
     /// New group.
     pub fn new(group: &str) -> Self {
-        let mut b =
-            Bench { group: group.to_string(), rows: Vec::new(), reps: 15, target_secs: 0.2 };
+        let mut b = Bench {
+            group: group.to_string(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+            reps: 15,
+            target_secs: 0.2,
+        };
         // Quick mode for CI: LGD_BENCH_FAST=1 shrinks the measurement.
         if std::env::var("LGD_BENCH_FAST").is_ok() {
             b.reps = 5;
@@ -100,7 +113,22 @@ impl Bench {
         &self.rows
     }
 
-    /// Print the group report (aligned table).
+    /// Attach a named numeric counter (overwrites an earlier note of the
+    /// same name, so loops can record their final value).
+    pub fn note(&mut self, name: &str, value: f64) {
+        if let Some(slot) = self.notes.iter_mut().find(|(n, _)| n == name) {
+            slot.1 = value;
+        } else {
+            self.notes.push((name.to_string(), value));
+        }
+    }
+
+    /// Notes so far.
+    pub fn notes(&self) -> &[(String, f64)] {
+        &self.notes
+    }
+
+    /// Print the group report (aligned table + counters).
     pub fn report(&self) {
         println!("\n== bench group: {} ==", self.group);
         println!("{:<44} {:>14} {:>14} {:>10}", "name", "median ns/it", "p95 ns/it", "iters");
@@ -110,7 +138,58 @@ impl Bench {
                 r.name, r.median_ns, r.p95_ns, r.iters
             );
         }
+        if !self.notes.is_empty() {
+            println!("{:<44} {:>14}", "counter", "value");
+            for (n, v) in &self.notes {
+                println!("{n:<44} {v:>14.3}");
+            }
+        }
     }
+
+    /// Serialize the group (rows + counters) as JSON — the machine-readable
+    /// perf-trajectory format future PRs regress against.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("group".to_string(), Json::Str(self.group.clone()));
+        root.insert("source".to_string(), Json::Str("measured".to_string()));
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(r.name.clone()));
+                m.insert("median_ns".to_string(), Json::Num(r.median_ns));
+                m.insert("p95_ns".to_string(), Json::Num(r.p95_ns));
+                m.insert("iters".to_string(), Json::Num(r.iters as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("rows".to_string(), Json::Arr(rows));
+        let mut notes = BTreeMap::new();
+        for (n, v) in &self.notes {
+            notes.insert(n.clone(), Json::Num(*v));
+        }
+        root.insert("counters".to_string(), Json::Obj(notes));
+        Json::Obj(root)
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string() + "\n")
+    }
+}
+
+/// Where a bench group's JSON report lands: `$LGD_BENCH_DIR` when set (CI
+/// artifact staging), else the repository root — benches run with the
+/// package directory as CWD, so this resolves the manifest dir's parent.
+pub fn bench_json_path(file_name: &str) -> PathBuf {
+    let dir = std::env::var("LGD_BENCH_DIR").map(PathBuf::from).unwrap_or_else(|_| {
+        Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(|p| p.to_path_buf())
+            .unwrap_or_else(|| PathBuf::from("."))
+    });
+    dir.join(file_name)
 }
 
 #[cfg(test)]
@@ -130,6 +209,35 @@ mod tests {
         let sleepy = b.bench("sleep", || std::thread::sleep(std::time::Duration::from_micros(50)));
         assert!(sleepy.median_ns > 10_000.0, "sleep measured {}", sleepy.median_ns);
         assert_eq!(b.rows().len(), 2);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        std::env::set_var("LGD_BENCH_FAST", "1");
+        let mut b = Bench::new("json");
+        b.record("whole_run", 1234.5);
+        b.note("mults_per_draw", 15.0);
+        b.note("mults_per_draw", 16.0); // overwrite, not duplicate
+        b.note("probes_per_draw", 1.25);
+        let j = b.to_json();
+        let back = crate::config::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("group").unwrap().as_str(), Some("json"));
+        let rows = back.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").unwrap().as_str(), Some("whole_run"));
+        let counters = back.get("counters").unwrap();
+        assert_eq!(counters.get("mults_per_draw").unwrap().as_f64(), Some(16.0));
+        assert_eq!(counters.get("probes_per_draw").unwrap().as_f64(), Some(1.25));
+        // write path: land in a temp dir via the env override
+        let dir = std::env::temp_dir().join("lgd-benchkit-json");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::env::set_var("LGD_BENCH_DIR", &dir);
+        let path = bench_json_path("BENCH_test.json");
+        assert_eq!(path, dir.join("BENCH_test.json"));
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::config::json::Json::parse(text.trim()).is_ok());
+        std::env::remove_var("LGD_BENCH_DIR");
     }
 
     #[test]

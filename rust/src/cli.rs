@@ -85,6 +85,17 @@ impl Args {
         Ok(self.u64_or(key, default as u64)? as usize)
     }
 
+    /// Boolean flag with default (e.g. `--sealed false`); accepts
+    /// true/false/1/0/on/off.
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.flags.get(key).map(|v| v.as_str()) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("on") => Ok(true),
+            Some("false") | Some("0") | Some("off") => Ok(false),
+            Some(v) => Err(Error::Config(format!("--{key}: bad bool '{v}'"))),
+        }
+    }
+
     /// Is a bare switch present?
     pub fn has(&self, key: &str) -> bool {
         self.switches.iter().any(|s| s == key)
@@ -132,7 +143,16 @@ mod tests {
         let a = Args::parse(&v(&["x", "--n", "abc"])).unwrap();
         assert!(a.u64_or("n", 0).is_err());
         assert!(a.f64_or("n", 0.0).is_err());
+        assert!(a.bool_or("n", true).is_err());
         assert!(a.require("missing").is_err());
+    }
+
+    #[test]
+    fn bool_flags_parse() {
+        let a = Args::parse(&v(&["x", "--sealed", "false", "--other", "1"])).unwrap();
+        assert!(!a.bool_or("sealed", true).unwrap());
+        assert!(a.bool_or("other", false).unwrap());
+        assert!(a.bool_or("absent", true).unwrap());
     }
 
     #[test]

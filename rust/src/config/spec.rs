@@ -83,6 +83,12 @@ pub struct LshConfig {
     /// — validation rejects the knob on a single shard rather than
     /// silently ignoring it.
     pub rebalance_threshold: f64,
+    /// Seal LSH tables into the CSR bucket arena after the build (O(1)
+    /// probe, cache-linear bucket reads on the draw path; live mutations
+    /// go through a delta overlay that rebalancing compacts). Draw-for-draw
+    /// identical to the Vec layout under the same seed — default on;
+    /// `sealed = false` A/Bs the layouts.
+    pub sealed: bool,
 }
 
 impl Default for LshConfig {
@@ -116,6 +122,7 @@ impl Default for LshConfig {
             seed: 0x15A11,
             shards: 1,
             rebalance_threshold: 0.0,
+            sealed: true,
         }
     }
 }
@@ -228,6 +235,7 @@ impl RunConfig {
         cfg.lsh.shards = doc.int_or("lsh", "shards", cfg.lsh.shards as i64)? as usize;
         cfg.lsh.rebalance_threshold =
             doc.float_or("lsh", "rebalance_threshold", cfg.lsh.rebalance_threshold)?;
+        cfg.lsh.sealed = doc.bool_or("lsh", "sealed", cfg.lsh.sealed)?;
         cfg.lsh.hasher = match doc.str_or("lsh", "hasher", "dense")?.as_str() {
             "dense" => HasherKind::Dense,
             "sparse" => HasherKind::Sparse,
@@ -346,6 +354,7 @@ mod tests {
         assert!(cfg.lsh.mirror);
         assert_eq!(cfg.lsh.shards, 1, "sharding is opt-in");
         assert_eq!(cfg.lsh.rebalance_threshold, 0.0, "rebalancing is opt-in");
+        assert!(cfg.lsh.sealed, "the CSR arena serves draws by default");
         assert_eq!(cfg.train.estimator, EstimatorKind::Lgd);
         assert_eq!(cfg.train.backend, Backend::Native);
     }
@@ -366,6 +375,7 @@ hasher = "dense"
 weight_clip = 8.0
 shards = 4
 rebalance_threshold = 1.5
+sealed = false
 [train]
 estimator = "sgd"
 optimizer = "adagrad"
@@ -386,6 +396,7 @@ backend = "pjrt"
         assert_eq!(cfg.lsh.weight_clip, Some(8.0));
         assert_eq!(cfg.lsh.shards, 4);
         assert_eq!(cfg.lsh.rebalance_threshold, 1.5);
+        assert!(!cfg.lsh.sealed);
         assert_eq!(cfg.train.estimator, EstimatorKind::Sgd);
         assert_eq!(cfg.train.optimizer, OptimizerKind::AdaGrad);
         assert!(matches!(cfg.train.schedule, Schedule::Exp { .. }));

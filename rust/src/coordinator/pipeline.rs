@@ -33,7 +33,7 @@ use crate::data::dataset::Dataset;
 use crate::data::preprocess::{HashSpace, Preprocessed};
 use crate::data::shard::ShardPlan;
 use crate::lsh::srp::SrpHasher;
-use crate::lsh::tables::LshTables;
+use crate::lsh::tables::{BucketRead, LshTables, TableStore};
 
 /// Pipeline tuning knobs.
 #[derive(Debug, Clone)]
@@ -248,9 +248,20 @@ pub struct ShardTables<H: SrpHasher> {
     /// Precomputed ‖row‖ for the sampling hot path.
     pub norms: Vec<f64>,
     /// Tables over the local rows (bucket ids are local row indices).
-    pub tables: LshTables<H>,
+    /// Builders produce the Vec layout; the estimator seals it into the
+    /// CSR arena when `lsh.sealed` is on.
+    pub tables: TableStore<H>,
     /// Wall-clock seconds this shard's build took on its worker thread.
     pub build_secs: f64,
+}
+
+impl<H: SrpHasher> ShardTables<H> {
+    /// Seal this shard's tables into the CSR bucket arena (no-op when
+    /// already sealed). Bucket order is preserved, so draws are unchanged.
+    pub fn seal(self) -> Self {
+        let ShardTables { rows, stored, norms, tables, build_secs } = self;
+        ShardTables { rows, stored, norms, tables: tables.seal(), build_secs }
+    }
 }
 
 /// Build per-shard LSH tables concurrently, one worker thread per shard
@@ -287,15 +298,17 @@ where
             let h = hasher.clone();
             handles.push(scope.spawn(move || -> Result<ShardTables<H>> {
                 let t0 = Instant::now();
-                let mut rows: Vec<u32> = members.iter().map(|&i| i as u32).collect();
+                let mut rows: Vec<u32> = members.to_vec();
                 let mut local = Matrix::zeros(0, 0);
-                for &i in &members {
-                    local.push_row(base.row(i)).map_err(|e| Error::Pipeline(e.to_string()))?;
+                for &i in members {
+                    local
+                        .push_row(base.row(i as usize))
+                        .map_err(|e| Error::Pipeline(e.to_string()))?;
                 }
                 if mirror {
-                    rows.extend(members.iter().map(|&i| (i + n) as u32));
-                    for &i in &members {
-                        let neg: Vec<f32> = base.row(i).iter().map(|v| -v).collect();
+                    rows.extend(members.iter().map(|&i| i + n as u32));
+                    for &i in members {
+                        let neg: Vec<f32> = base.row(i as usize).iter().map(|v| -v).collect();
                         local.push_row(&neg).map_err(|e| Error::Pipeline(e.to_string()))?;
                     }
                 }
@@ -306,7 +319,7 @@ where
                     rows,
                     stored: local,
                     norms,
-                    tables,
+                    tables: TableStore::Vec(tables),
                     build_secs: t0.elapsed().as_secs_f64(),
                 })
             }));
@@ -451,7 +464,7 @@ where
                     rows,
                     stored: local,
                     norms,
-                    tables,
+                    tables: TableStore::Vec(tables),
                     build_secs: tw.elapsed().as_secs_f64(),
                 })
             }));
@@ -530,6 +543,11 @@ pub struct ShardSet<H: SrpHasher> {
     threshold: f64,
     /// Example id → owning shard (-1 = not present).
     loc: Vec<i32>,
+    /// Virtual stored-row id (`id`, or `id + n` for mirrors) → local row
+    /// index inside its owning shard (u32::MAX = absent). The per-shard
+    /// member index that makes migration O(1) per id instead of an O(R_s)
+    /// `position` scan (ROADMAP rebalance-cost item).
+    row_pos: Vec<u32>,
     /// Inclusive prefix sums of per-shard stored-row counts.
     cum_rows: Vec<usize>,
     total_rows: usize,
@@ -567,10 +585,12 @@ impl<H: SrpHasher> ShardSet<H> {
         threshold: f64,
     ) -> Self {
         let mut loc = vec![-1i32; n];
+        let mut row_pos = vec![u32::MAX; 2 * n];
         let mut base_rows = 0usize;
         let mut mirror_rows = 0usize;
         for (s, st) in shards.iter().enumerate() {
-            for &r in &st.rows {
+            for (j, &r) in st.rows.iter().enumerate() {
+                row_pos[r as usize] = j as u32;
                 if (r as usize) < n {
                     loc[r as usize] = s as i32;
                     base_rows += 1;
@@ -591,6 +611,7 @@ impl<H: SrpHasher> ShardSet<H> {
             mirror,
             threshold,
             loc,
+            row_pos,
             cum_rows: Vec::new(),
             total_rows: 0,
             stats: ShardSetStats::default(),
@@ -752,6 +773,7 @@ impl<H: SrpHasher> ShardSet<H> {
         self.loc[id] = shard as i32;
         self.refresh_cum();
         self.maybe_rebalance(base)?;
+        self.maybe_compact(shard);
         Ok(())
     }
 
@@ -774,16 +796,33 @@ impl<H: SrpHasher> ShardSet<H> {
         self.loc[id] = -1;
         self.refresh_cum();
         self.maybe_rebalance(base)?;
+        self.maybe_compact(s);
         Ok(true)
     }
 
     /// Rebalance the present examples until `imbalance() ≤ target` (or no
     /// move helps): builds a [`ShardPlan`] over the current membership,
     /// asks it for the move list, and migrates each reported example's
-    /// rows between shard tables via [`LshTables::remove`] + re-`insert`.
+    /// rows between shard tables (O(1) per id via the member index).
+    /// After a rebalance that moved anything, sealed shard tables are
+    /// compacted — overlay entries fold back into the CSR arena.
     /// Returns the number of examples migrated.
     pub fn rebalance_to(&mut self, target: f64, base: &Matrix) -> Result<usize> {
         let t0 = Instant::now();
+        let target = target.max(1.0);
+        // Feasibility gate, O(shards): when the set is already under
+        // target, or no single move can help (max ≤ min + 1 — the target
+        // is unreachable), skip the O(n) membership scan entirely instead
+        // of burning a futile pass per mutation.
+        {
+            let counts = self.counts();
+            let max = *counts.iter().max().unwrap_or(&0);
+            let min = *counts.iter().min().unwrap_or(&0);
+            if self.imbalance() <= target || max <= min + 1 {
+                self.stats.rebalance_secs += t0.elapsed().as_secs_f64();
+                return Ok(0);
+            }
+        }
         let mut present: Vec<u32> = Vec::new();
         let mut assign: Vec<u32> = Vec::new();
         for id in 0..self.n {
@@ -793,18 +832,26 @@ impl<H: SrpHasher> ShardSet<H> {
             }
         }
         let mut plan = ShardPlan::from_assignments(self.shards.len(), assign)?;
-        let moves = plan.rebalance(target.max(1.0));
+        let moves = plan.rebalance(target);
+        let mut touched = vec![false; self.shards.len()];
         for &(slot, from, to) in &moves {
             let id = present[slot] as usize;
             debug_assert_eq!(self.loc[id], from as i32, "plan/membership desync");
             self.take_rows(from, id);
             self.push_rows(to, id, base)?;
             self.loc[id] = to as i32;
+            touched[from] = true;
+            touched[to] = true;
         }
         if !moves.is_empty() {
             self.stats.rebalances += 1;
             self.stats.migrations += moves.len() as u64;
             self.refresh_cum();
+            for (s, t) in touched.iter().enumerate() {
+                if *t {
+                    self.shards[s].tables.compact();
+                }
+            }
         }
         self.stats.rebalance_secs += t0.elapsed().as_secs_f64();
         Ok(moves.len())
@@ -820,6 +867,26 @@ impl<H: SrpHasher> ShardSet<H> {
         self.rebalance_to(self.threshold, base)
     }
 
+    /// Compact a sealed shard's delta overlay back into its arena once the
+    /// overlay outgrows a fixed fraction (1/8) of the table entries.
+    /// Balanced streaming churn never triggers a rebalance, so this is the
+    /// recovery path that keeps the sealed layout cache-linear under
+    /// long-running insert/remove streams; compaction cost O(R_s·L) is
+    /// amortised over the ≥ R_s·L/8 overlay-building mutations since the
+    /// last one. Order-preserving, so draws are unchanged. No-op on the
+    /// Vec layout (`overlay_len` is 0).
+    fn maybe_compact(&mut self, s: usize) {
+        let st = &mut self.shards[s];
+        let overlay = st.tables.overlay_len();
+        if overlay == 0 {
+            return;
+        }
+        let entries = st.rows.len() * st.tables.hasher().l();
+        if overlay * 8 > entries.max(64) {
+            st.tables.compact();
+        }
+    }
+
     /// Append example `id`'s stored rows at the end of `shard`.
     fn push_rows(&mut self, shard: usize, id: usize, base: &Matrix) -> Result<()> {
         let st = &mut self.shards[shard];
@@ -829,6 +896,7 @@ impl<H: SrpHasher> ShardSet<H> {
         st.stored.push_row(v).map_err(|e| Error::Pipeline(e.to_string()))?;
         st.norms.push(crate::core::matrix::norm2(v));
         st.rows.push(id as u32);
+        self.row_pos[id] = j as u32;
         if self.mirror {
             let neg: Vec<f32> = v.iter().map(|x| -x).collect();
             let jm = st.stored.rows();
@@ -836,29 +904,32 @@ impl<H: SrpHasher> ShardSet<H> {
             st.stored.push_row(&neg).map_err(|e| Error::Pipeline(e.to_string()))?;
             st.norms.push(crate::core::matrix::norm2(&neg));
             st.rows.push((id + self.n) as u32);
+            self.row_pos[id + self.n] = jm as u32;
         }
         Ok(())
     }
 
     /// Remove every stored row of example `id` from shard `s` (base and,
-    /// when mirrored, the negation). Re-scans between removals because each
-    /// swap-remove may relocate the other row.
+    /// when mirrored, the negation). O(1) lookups via the member index;
+    /// the mirror position is re-read after the first removal because the
+    /// swap-remove may have relocated it.
     fn take_rows(&mut self, s: usize, id: usize) {
-        let st = &mut self.shards[s];
-        let mirror_id = id + self.n;
-        while let Some(j) = st
-            .rows
-            .iter()
-            .position(|&r| r as usize == id || r as usize == mirror_id)
-        {
-            Self::remove_local_row(st, j);
+        let j = self.row_pos[id];
+        debug_assert_ne!(j, u32::MAX, "take_rows of an absent example");
+        self.remove_local_row(s, j as usize);
+        if self.mirror {
+            let jm = self.row_pos[id + self.n];
+            debug_assert_ne!(jm, u32::MAX, "mirror row missing from member index");
+            self.remove_local_row(s, jm as usize);
         }
     }
 
-    /// Swap-remove local row `j` of a shard: drop its table entries, move
+    /// Swap-remove local row `j` of shard `s`: drop its table entries, move
     /// the last row into its slot and rewrite that row's table id (bucket
-    /// ids are local row indices, so the moved row must be re-keyed).
-    fn remove_local_row(st: &mut ShardTables<H>, j: usize) {
+    /// ids are local row indices, so the moved row must be re-keyed), and
+    /// keep the member index in sync.
+    fn remove_local_row(&mut self, s: usize, j: usize) {
+        let st = &mut self.shards[s];
         let last = st.stored.rows() - 1;
         let vj = st.stored.row(j).to_vec();
         st.tables.remove(j as u32, &vj);
@@ -869,9 +940,14 @@ impl<H: SrpHasher> ShardSet<H> {
                 .insert(j as u32, &vlast)
                 .expect("re-keying a row that was already stored");
         }
+        self.row_pos[st.rows[j] as usize] = u32::MAX;
         st.stored.swap_remove_row(j);
         st.rows.swap_remove(j);
         st.norms.swap_remove(j);
+        if j < st.rows.len() {
+            // the previous last row now lives at j — re-point its index
+            self.row_pos[st.rows[j] as usize] = j as u32;
+        }
     }
 }
 
@@ -998,8 +1074,8 @@ mod tests {
         assert_eq!(st.rows, (0..200u32).collect::<Vec<_>>());
         for t in 0..8 {
             for code in 0..(1u32 << 4) {
-                let (a, b) = (full.bucket(t, code), st.tables.bucket(t, code));
-                assert_eq!(a, b, "table {t} code {code}");
+                let (a, b) = (full.bucket(t, code), st.tables.query_bucket_coded(t, code));
+                assert_eq!(a, b.to_vec(), "table {t} code {code}");
             }
         }
     }
@@ -1062,8 +1138,8 @@ mod tests {
                 for t in 0..8 {
                     for code in 0..(1u32 << 4) {
                         assert_eq!(
-                            a.tables.bucket(t, code),
-                            b.tables.bucket(t, code),
+                            a.tables.query_bucket_coded(t, code).to_vec(),
+                            b.tables.query_bucket_coded(t, code).to_vec(),
                             "mirror={mirror} table {t} code {code}: bucket order must \
                              match for draw-for-draw identity"
                         );
@@ -1098,7 +1174,7 @@ mod tests {
             for t in 0..l {
                 let mut hits = vec![0usize; st.rows.len()];
                 for code in 0..(1u32 << k) {
-                    for &id in st.tables.bucket(t, code) {
+                    for id in st.tables.query_bucket_coded(t, code).iter() {
                         hits[id as usize] += 1;
                     }
                 }
@@ -1108,6 +1184,10 @@ mod tests {
                 );
             }
             for (j, &r) in st.rows.iter().enumerate() {
+                assert_eq!(
+                    set.row_pos[r as usize], j as u32,
+                    "shard {s}: member index desynced for virtual row {r}"
+                );
                 let (ex, sign) =
                     if (r as usize) < n { (r as usize, 1.0f32) } else { (r as usize - n, -1.0) };
                 for (a, b) in st.stored.row(j).iter().zip(base.row(ex)) {
@@ -1178,7 +1258,7 @@ mod tests {
                 rows: Vec::new(),
                 stored: Matrix::zeros(0, 0),
                 norms: Vec::new(),
-                tables: LshTables::new(hasher.clone()),
+                tables: TableStore::Vec(LshTables::new(hasher.clone())),
                 build_secs: 0.0,
             })
             .collect();
@@ -1205,6 +1285,110 @@ mod tests {
         }
         assert_eq!(set.stats().migrations, before, "disabled threshold must not migrate");
         check_set_integrity(&set, &pre.hashed);
+    }
+
+    /// Unreachable targets exit the rebalance pass early (O(shards), no
+    /// membership scan, no moves) — the ROADMAP "futile re-pass" item. A
+    /// set at max ≤ min + 1 cannot improve, however strict the target.
+    #[test]
+    fn rebalance_unreachable_target_is_cheap_noop() {
+        let ds = SynthSpec::power_law("noop", 7, 6, 61).generate().unwrap();
+        let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
+        let hasher = DenseSrp::new(7, 3, 4, 63);
+        let plan = ShardPlan::round_robin(7, 3).unwrap(); // counts 3/2/2
+        let m = Metrics::new();
+        let mut set = ShardSet::build(&pre.hashed, &plan, true, &hasher, 0.0, &m).unwrap();
+        assert!(set.imbalance() > 1.0 + 1e-9, "3/2/2 must be imbalanced");
+        let moved = set.rebalance_to(1.0, &pre.hashed).unwrap();
+        assert_eq!(moved, 0, "max <= min + 1: no move can help");
+        assert_eq!(set.stats().rebalances, 0, "a no-op pass must not count as a rebalance");
+        assert_eq!(set.stats().migrations, 0);
+        // an aggressive auto-threshold on an unreachable set must not spin
+        set.set_threshold(1.0);
+        set.remove(0, &pre.hashed).unwrap();
+        set.insert(0, &pre.hashed).unwrap();
+        assert_eq!(set.stats().migrations, 0);
+        check_set_integrity(&set, &pre.hashed);
+    }
+
+    /// Sealed shard tables stay bucket-for-bucket identical to Vec-layout
+    /// shards through live insert/remove/rebalance, and rebalancing
+    /// compacts the overlay back into the arena.
+    #[test]
+    fn sealed_shard_set_matches_vec_through_mutation() {
+        let ds = SynthSpec::power_law("sealed-live", 90, 8, 71).generate().unwrap();
+        let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
+        let hasher = DenseSrp::new(9, 3, 6, 73);
+        let plan = ShardPlan::round_robin(90, 3).unwrap();
+        let m = Metrics::new();
+        let mut vec_set = ShardSet::build(&pre.hashed, &plan, true, &hasher, 0.0, &m).unwrap();
+        let sealed_shards: Vec<ShardTables<DenseSrp>> =
+            build_shard_tables(&pre.hashed, &plan, true, &hasher, &m)
+                .unwrap()
+                .into_iter()
+                .map(ShardTables::seal)
+                .collect();
+        let mut sealed_set = ShardSet::from_shards(sealed_shards, 90, true, 0.0);
+        let compare = |a: &ShardSet<DenseSrp>, b: &ShardSet<DenseSrp>| {
+            for s in 0..a.shard_count() {
+                let (x, y) = (a.shard(s), b.shard(s));
+                assert_eq!(x.rows, y.rows, "shard {s}: row order diverged");
+                for t in 0..6 {
+                    for code in 0..(1u32 << 3) {
+                        assert_eq!(
+                            x.tables.query_bucket_coded(t, code).to_vec(),
+                            y.tables.query_bucket_coded(t, code).to_vec(),
+                            "shard {s} table {t} code {code}"
+                        );
+                    }
+                }
+            }
+        };
+        compare(&vec_set, &sealed_set);
+        for id in 0..30 {
+            assert!(vec_set.remove(id, &pre.hashed).unwrap());
+            assert!(sealed_set.remove(id, &pre.hashed).unwrap());
+        }
+        for id in 0..30 {
+            vec_set.insert_into(0, id, &pre.hashed).unwrap();
+            sealed_set.insert_into(0, id, &pre.hashed).unwrap();
+        }
+        compare(&vec_set, &sealed_set);
+        let mv = vec_set.rebalance_to(1.05, &pre.hashed).unwrap();
+        let ms = sealed_set.rebalance_to(1.05, &pre.hashed).unwrap();
+        assert_eq!(mv, ms);
+        assert!(ms > 0, "the skew must migrate something");
+        compare(&vec_set, &sealed_set);
+        for s in 0..sealed_set.shard_count() {
+            if let TableStore::Sealed(t) = &sealed_set.shard(s).tables {
+                assert_eq!(t.overlay_len(), 0, "shard {s}: rebalance must compact the overlay");
+            } else {
+                panic!("shard {s} lost its sealed layout");
+            }
+        }
+        check_set_integrity(&vec_set, &pre.hashed);
+        // Balanced churn (no rebalance ever fires): the overlay-size
+        // trigger must keep every sealed shard's overlay bounded, while
+        // staying bucket-for-bucket identical to the Vec layout.
+        for round in 0..6 {
+            for id in 0..90 {
+                assert!(vec_set.remove(id, &pre.hashed).unwrap());
+                assert!(sealed_set.remove(id, &pre.hashed).unwrap());
+                vec_set.insert(id, &pre.hashed).unwrap();
+                sealed_set.insert(id, &pre.hashed).unwrap();
+            }
+            compare(&vec_set, &sealed_set);
+            for s in 0..sealed_set.shard_count() {
+                let st = sealed_set.shard(s);
+                let bound = (st.rows.len() * st.tables.hasher().l()).max(64) / 8;
+                assert!(
+                    st.tables.overlay_len() <= bound,
+                    "round {round} shard {s}: overlay {} exceeds churn bound {bound}",
+                    st.tables.overlay_len()
+                );
+            }
+        }
+        check_set_integrity(&sealed_set, &pre.hashed);
     }
 
     /// The built tables must be usable by the LGD estimator end-to-end.

@@ -114,6 +114,7 @@ pub fn build_estimator_reported<'a>(
                 max_probes: 0,
                 query_refresh: 0,
                 mirror: cfg.lsh.mirror,
+                sealed: cfg.lsh.sealed,
             };
             match cfg.lsh.hasher {
                 HasherKind::Dense => {
@@ -345,6 +346,27 @@ mod tests {
         assert!(out.est_stats.cost.codes > 0, "sharded LGD must compute hashes");
         assert_eq!(out.est_stats.migrations, 0, "static training must not migrate");
         assert_eq!(out.est_stats.rebalances, 0);
+    }
+
+    /// The `lsh.sealed` knob is a pure layout swap: training with the CSR
+    /// arena and with Vec buckets produces identical loss curves under the
+    /// same seed (draw-for-draw identity end-to-end through the trainer).
+    #[test]
+    fn sealed_knob_is_layout_only() {
+        let (pre, te) = setup(400, 8, 13);
+        let mut cfg = small_cfg(EstimatorKind::Lgd);
+        cfg.lsh.shards = 2;
+        assert!(cfg.lsh.sealed, "default on");
+        let sealed = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+        cfg.lsh.sealed = false;
+        let vecs = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+        assert_eq!(sealed.curve.len(), vecs.curve.len());
+        for (a, b) in sealed.curve.iter().zip(&vecs.curve) {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.train_loss, b.train_loss, "iter {}: layouts diverged", a.iter);
+            assert_eq!(a.test_loss, b.test_loss);
+        }
+        assert_eq!(sealed.est_stats.fallbacks, vecs.est_stats.fallbacks);
     }
 
     #[test]

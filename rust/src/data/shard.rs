@@ -7,15 +7,29 @@
 
 use crate::core::error::{Error, Result};
 
-/// A shard assignment: `shard_of[i]` = worker owning record i.
+/// A shard assignment: `shard_of[i]` = worker owning record i. Keeps
+/// per-shard member lists alongside the flat assignment so rebalancing
+/// moves are O(1) per migrated id (no O(n) `position` scan — the ROADMAP
+/// rebalance-cost item).
 #[derive(Debug, Clone)]
 pub struct ShardPlan {
     shards: usize,
     shard_of: Vec<u32>,
     counts: Vec<usize>,
+    /// Ids owned by each shard (insertion order; swap-mutated by
+    /// `rebalance`, so not sorted after moves).
+    members: Vec<Vec<u32>>,
 }
 
 impl ShardPlan {
+    fn build_members(shards: usize, shard_of: &[u32]) -> Vec<Vec<u32>> {
+        let mut members = vec![Vec::new(); shards];
+        for (i, &s) in shard_of.iter().enumerate() {
+            members[s as usize].push(i as u32);
+        }
+        members
+    }
+
     /// Round-robin plan over `n` records and `shards` workers.
     pub fn round_robin(n: usize, shards: usize) -> Result<Self> {
         if shards == 0 {
@@ -26,7 +40,8 @@ impl ShardPlan {
         for &s in &shard_of {
             counts[s as usize] += 1;
         }
-        Ok(ShardPlan { shards, shard_of, counts })
+        let members = Self::build_members(shards, &shard_of);
+        Ok(ShardPlan { shards, shard_of, counts, members })
     }
 
     /// Wrap an explicit assignment vector (`shard_of[i]` = shard owning
@@ -46,7 +61,8 @@ impl ShardPlan {
             }
             counts[s as usize] += 1;
         }
-        Ok(ShardPlan { shards, shard_of, counts })
+        let members = Self::build_members(shards, &shard_of);
+        Ok(ShardPlan { shards, shard_of, counts, members })
     }
 
     /// Multiplicative-hash plan (stable under reordering of the input).
@@ -64,7 +80,8 @@ impl ShardPlan {
         for &s in &shard_of {
             counts[s as usize] += 1;
         }
-        Ok(ShardPlan { shards, shard_of, counts })
+        let members = Self::build_members(shards, &shard_of);
+        Ok(ShardPlan { shards, shard_of, counts, members })
     }
 
     /// Worker for record `i`.
@@ -82,14 +99,10 @@ impl ShardPlan {
         &self.counts
     }
 
-    /// Ids owned by `shard`.
-    pub fn members(&self, shard: usize) -> Vec<usize> {
-        self.shard_of
-            .iter()
-            .enumerate()
-            .filter(|(_, &s)| s as usize == shard)
-            .map(|(i, _)| i)
-            .collect()
+    /// Ids owned by `shard` (O(1) — the maintained member list; ascending
+    /// for fresh plans, swap-mutated order after `rebalance`).
+    pub fn members(&self, shard: usize) -> &[u32] {
+        &self.members[shard]
     }
 
     /// Imbalance = max/mean shard size (1.0 is perfect).
@@ -103,9 +116,11 @@ impl ShardPlan {
         }
     }
 
-    /// Rebalance: move whole id ranges from the largest shard(s) to the
-    /// smallest until imbalance ≤ `target` (or no move helps). Returns moves
-    /// performed as (id, from, to).
+    /// Rebalance: move records from the largest shard(s) to the smallest
+    /// until imbalance ≤ `target` (or no move helps — `max ≤ min + 1`
+    /// breaks out immediately, so an unreachable target never burns a
+    /// pass). Each move pops the fullest shard's member list: O(1) per
+    /// migrated id. Returns moves performed as (id, from, to).
     pub fn rebalance(&mut self, target: f64) -> Vec<(usize, usize, usize)> {
         let mut moves = Vec::new();
         loop {
@@ -117,19 +132,16 @@ impl ShardPlan {
             if self.counts[max_s] <= self.counts[min_s] + 1 {
                 break; // nothing useful to move
             }
-            // move one record from max to min
-            if let Some(i) = self
-                .shard_of
-                .iter()
-                .position(|&s| s as usize == max_s)
-            {
-                self.shard_of[i] = min_s as u32;
-                self.counts[max_s] -= 1;
-                self.counts[min_s] += 1;
-                moves.push((i, max_s, min_s));
-            } else {
-                break;
-            }
+            // move the most recently listed record from max to min (O(1))
+            let id = match self.members[max_s].pop() {
+                Some(id) => id,
+                None => break,
+            };
+            self.shard_of[id as usize] = min_s as u32;
+            self.members[min_s].push(id);
+            self.counts[max_s] -= 1;
+            self.counts[min_s] += 1;
+            moves.push((id as usize, max_s, min_s));
         }
         moves
     }
@@ -158,25 +170,28 @@ mod tests {
     #[test]
     fn members_partition_ids() {
         let p = ShardPlan::hashed(500, 3).unwrap();
-        let mut all: Vec<usize> = (0..3).flat_map(|s| p.members(s)).collect();
+        let mut all: Vec<u32> = (0..3).flat_map(|s| p.members(s).iter().copied()).collect();
         all.sort_unstable();
-        assert_eq!(all, (0..500).collect::<Vec<_>>());
+        assert_eq!(all, (0..500u32).collect::<Vec<_>>());
     }
 
     #[test]
     fn rebalance_reduces_imbalance() {
         // deliberately skewed: everything on shard 0
-        let mut p = ShardPlan::round_robin(60, 3).unwrap();
-        for s in p.shard_of.iter_mut() {
-            *s = 0;
-        }
-        p.counts = vec![60, 0, 0];
+        let mut p = ShardPlan::from_assignments(3, vec![0u32; 60]).unwrap();
         assert!(p.imbalance() > 2.9);
         let moves = p.rebalance(1.1);
         assert!(!moves.is_empty());
         assert!(p.imbalance() <= 1.1, "imbalance {}", p.imbalance());
         let total: usize = p.counts().iter().sum();
         assert_eq!(total, 60);
+        // member lists track the moves exactly
+        for s in 0..3 {
+            assert_eq!(p.members(s).len(), p.counts()[s]);
+            for &id in p.members(s) {
+                assert_eq!(p.shard_of(id as usize), s, "member list desynced");
+            }
+        }
     }
 
     #[test]
@@ -236,6 +251,11 @@ mod tests {
             assert_eq!(&recount, p.counts());
             let members_total: usize = (0..shards).map(|s| p.members(s).len()).sum();
             assert_eq!(members_total, n, "members() must partition the ids");
+            for s in 0..shards {
+                for &id in p.members(s) {
+                    assert_eq!(p.shard_of(id as usize), s, "member list desynced after moves");
+                }
+            }
             // imbalance never increases
             assert!(
                 p.imbalance() <= before + 1e-12,

@@ -10,7 +10,7 @@ use crate::data::preprocess::Preprocessed;
 use crate::estimator::{EstimatorStats, GradientEstimator, WeightedDraw};
 use crate::lsh::sampler::{LshSampler, QueryCache, SampleCost, Sampled};
 use crate::lsh::srp::SrpHasher;
-use crate::lsh::tables::LshTables;
+use crate::lsh::tables::{BucketRead, LshTables, TableStore};
 
 /// Tuning knobs for the LGD estimator.
 #[derive(Debug, Clone)]
@@ -41,6 +41,12 @@ pub struct LgdOptions {
     /// `1/(p_row·2N)` preserves Thm 1. Default on; disable to reproduce the
     /// signed-residual pathology as an ablation.
     pub mirror: bool,
+    /// Seal the tables into the CSR bucket arena after the build
+    /// ([`crate::lsh::tables::SealedTables`]): O(1)-probe, cache-linear
+    /// bucket reads on the draw path. Draw-for-draw identical to the Vec
+    /// layout under the same seed (tested); default on — disable
+    /// (`lsh.sealed = false`) to A/B the layouts.
+    pub sealed: bool,
 }
 
 impl Default for LgdOptions {
@@ -50,6 +56,7 @@ impl Default for LgdOptions {
             max_probes: 0, // 0 = 4·L
             query_refresh: 0, // 0 = 8·L
             mirror: true,
+            sealed: true,
         }
     }
 }
@@ -57,7 +64,7 @@ impl Default for LgdOptions {
 /// LGD estimator over a preprocessed dataset.
 pub struct LgdEstimator<'a, H: SrpHasher> {
     pre: &'a Preprocessed,
-    tables: LshTables<H>,
+    tables: TableStore<H>,
     /// The vectors actually inserted into the tables: `pre.hashed` rows,
     /// followed by their negations when `opts.mirror` (2N rows; row i+N is
     /// −v_i and maps back to example i).
@@ -70,6 +77,8 @@ pub struct LgdEstimator<'a, H: SrpHasher> {
     query: Vec<f32>,
     cache: QueryCache,
     batch: Vec<crate::lsh::sampler::Draw>,
+    /// Reusable buffer for the per-batch fused query codes.
+    codes: Vec<u32>,
 }
 
 fn stored_matrix(pre: &Preprocessed, mirror: bool) -> crate::core::matrix::Matrix {
@@ -95,6 +104,11 @@ impl<'a, H: SrpHasher> LgdEstimator<'a, H> {
     ) -> crate::core::error::Result<Self> {
         let stored = stored_matrix(pre, opts.mirror);
         let tables = LshTables::build(hasher, (0..stored.rows()).map(|i| stored.row(i)))?;
+        let tables = if opts.sealed {
+            TableStore::Sealed(tables.seal())
+        } else {
+            TableStore::Vec(tables)
+        };
         let stored_norms =
             (0..stored.rows()).map(|i| crate::core::matrix::norm2(stored.row(i))).collect();
         Ok(LgdEstimator {
@@ -108,12 +122,14 @@ impl<'a, H: SrpHasher> LgdEstimator<'a, H> {
             query: Vec::new(),
             cache: QueryCache::default(),
             batch: Vec::new(),
+            codes: Vec::new(),
         })
     }
 
     /// Wrap *pre-built* tables (e.g. from the streaming pipeline) instead of
-    /// building them here. The tables must have been built over exactly
-    /// `pre.hashed` (no mirroring — the streaming pipeline inserts N rows).
+    /// building them here (sealing them per `opts.sealed`). The tables must
+    /// have been built over exactly `pre.hashed` (no mirroring — the
+    /// streaming pipeline inserts N rows).
     pub fn from_parts(
         pre: &'a Preprocessed,
         tables: LshTables<H>,
@@ -121,6 +137,11 @@ impl<'a, H: SrpHasher> LgdEstimator<'a, H> {
         opts: LgdOptions,
     ) -> Self {
         let opts = LgdOptions { mirror: false, ..opts };
+        let tables = if opts.sealed {
+            TableStore::Sealed(tables.seal())
+        } else {
+            TableStore::Vec(tables)
+        };
         let stored = pre.hashed.clone();
         let stored_norms =
             (0..stored.rows()).map(|i| crate::core::matrix::norm2(stored.row(i))).collect();
@@ -135,6 +156,7 @@ impl<'a, H: SrpHasher> LgdEstimator<'a, H> {
             query: Vec::new(),
             cache: QueryCache::default(),
             batch: Vec::new(),
+            codes: Vec::new(),
         }
     }
 
@@ -144,11 +166,11 @@ impl<'a, H: SrpHasher> LgdEstimator<'a, H> {
     }
 
     fn sampler<'s>(
-        tables: &'s LshTables<H>,
+        tables: &'s TableStore<H>,
         stored: &'s crate::core::matrix::Matrix,
         norms: &'s [f64],
         opts: &LgdOptions,
-    ) -> LshSampler<'s, H> {
+    ) -> LshSampler<'s, TableStore<H>> {
         let s = LshSampler::with_norms(tables, stored, std::borrow::Cow::Borrowed(norms));
         if opts.max_probes > 0 {
             s.with_max_probes(opts.max_probes)
@@ -191,13 +213,25 @@ impl<'a, H: SrpHasher> GradientEstimator for LgdEstimator<'a, H> {
         } else {
             self.opts.query_refresh
         };
+        let mut cost = SampleCost::default();
         if self.cache.is_empty() || self.cache.age >= refresh {
             let mut query = std::mem::take(&mut self.query);
             self.pre.query(theta, &mut query);
-            self.cache.refresh(&query, self.tables.hasher().l());
+            let l = self.tables.hasher().l();
+            if refresh >= l {
+                // Long window (default 8·L): nearly every table gets probed
+                // before the next refresh, so one fused codes_all sweep
+                // costs the same mults the lazy fill would pay — as one
+                // sequential pass (§2.2 cost model).
+                self.cache.refresh_fused(&query, self.tables.hasher(), &mut cost);
+            } else {
+                // Short window (e.g. query_refresh = 1): most tables are
+                // never probed before the refresh expires — lazy fill
+                // hashes only the probed ones.
+                self.cache.refresh(&query, l);
+            }
             self.query = query;
         }
-        let mut cost = SampleCost::default();
         let mut cache = std::mem::take(&mut self.cache);
         let sampler = Self::sampler(&self.tables, &self.stored, &self.stored_norms, &self.opts);
         let out = match sampler.sample_cached(&mut cache, &mut self.rng, &mut cost) {
@@ -216,9 +250,7 @@ impl<'a, H: SrpHasher> GradientEstimator for LgdEstimator<'a, H> {
             }
         };
         self.cache = cache;
-        self.stats.cost.codes += cost.codes;
-        self.stats.cost.mults += cost.mults;
-        self.stats.cost.randoms += cost.randoms;
+        self.stats.cost.absorb(&cost);
         out
     }
 
@@ -226,11 +258,19 @@ impl<'a, H: SrpHasher> GradientEstimator for LgdEstimator<'a, H> {
         out.clear();
         let mut query = std::mem::take(&mut self.query);
         let mut batch = std::mem::take(&mut self.batch);
+        let mut codes = std::mem::take(&mut self.codes);
         self.pre.query(theta, &mut query);
         let mut cost = SampleCost::default();
         {
+            // Hash the query once per batch (fused), then fill the whole
+            // batch through the coded sampler — probe-heavy batches no
+            // longer pay one code computation per probe.
+            let hasher = self.tables.hasher();
+            hasher.codes_all(&query, &mut codes);
+            cost.codes += hasher.l();
+            cost.mults += hasher.mults_all();
             let sampler = Self::sampler(&self.tables, &self.stored, &self.stored_norms, &self.opts);
-            sampler.sample_batch(&query, m, &mut self.rng, &mut cost, &mut batch);
+            sampler.sample_batch_coded(&codes, &query, m, &mut self.rng, &mut cost, &mut batch);
         }
         for d in &batch {
             out.push(WeightedDraw {
@@ -246,11 +286,10 @@ impl<'a, H: SrpHasher> GradientEstimator for LgdEstimator<'a, H> {
             out.push(WeightedDraw { index: self.rng.index(n), weight: 1.0, prob: 1.0 / n as f64 });
         }
         self.stats.draws += m as u64;
-        self.stats.cost.codes += cost.codes;
-        self.stats.cost.mults += cost.mults;
-        self.stats.cost.randoms += cost.randoms;
+        self.stats.cost.absorb(&cost);
         self.query = query;
         self.batch = batch;
+        self.codes = codes;
     }
 
     fn stats(&self) -> EstimatorStats {
@@ -364,8 +403,12 @@ mod tests {
         let pre = setup(200, 8, 11);
         let hd = pre.hashed.cols();
         let hasher = DenseSrp::new(hd, 5, 16, 12);
-        let opts =
-            LgdOptions { weight_clip: Some(2.0), max_probes: 0, query_refresh: 8, mirror: true };
+        let opts = LgdOptions {
+            weight_clip: Some(2.0),
+            max_probes: 0,
+            query_refresh: 8,
+            ..LgdOptions::default()
+        };
         let mut est = LgdEstimator::new(&pre, hasher, 13, opts).unwrap();
         let theta = vec![0.1f32; 8];
         for _ in 0..2000 {
@@ -417,6 +460,34 @@ mod tests {
         }
         assert_eq!(est.stats().fallbacks, 48);
         assert_eq!(est.stats().draws, 48);
+    }
+
+    /// The sealed CSR arena and the Vec layout produce identical draw
+    /// sequences under the same seed — single draws and batches.
+    #[test]
+    fn sealed_matches_unsealed_draw_for_draw() {
+        let pre = setup(250, 10, 61);
+        let hd = pre.hashed.cols();
+        let mk = |sealed: bool| {
+            let opts = LgdOptions { sealed, ..LgdOptions::default() };
+            LgdEstimator::new(&pre, DenseSrp::new(hd, 4, 14, 62), 63, opts).unwrap()
+        };
+        let mut a = mk(true);
+        let mut b = mk(false);
+        assert!(matches!(a.tables, TableStore::Sealed(_)));
+        assert!(matches!(b.tables, TableStore::Vec(_)));
+        let theta: Vec<f32> = (0..10).map(|j| 0.02 * (j as f32 - 4.0)).collect();
+        for i in 0..600 {
+            assert_eq!(a.draw(&theta), b.draw(&theta), "draw {i} diverged across layouts");
+        }
+        let (mut xa, mut xb) = (Vec::new(), Vec::new());
+        for round in 0..4 {
+            a.draw_batch(&theta, 32, &mut xa);
+            b.draw_batch(&theta, 32, &mut xb);
+            assert_eq!(xa, xb, "batch round {round} diverged across layouts");
+        }
+        assert_eq!(a.stats().fallbacks, b.stats().fallbacks);
+        assert_eq!(a.table_stats(), b.table_stats());
     }
 
     #[test]

@@ -17,8 +17,12 @@
 //! over unchanged: `E[∇f / (p·R)]` is still the full average gradient.
 //!
 //! Every shard clones the *same* hasher family, so the query's K-bit table
-//! codes are identical across shards and one [`QueryCache`] amortises the
-//! hash cost for all of them. With `shards = 1` the engine reduces to
+//! codes are identical across shards — the estimator therefore hashes each
+//! query **exactly once** (one fused `codes_all` sweep per cache refresh
+//! for single draws, one per batch) and hands the precomputed codes to
+//! every shard through [`QueryCache`] / the coded sampler entry points.
+//! No shard ever re-hashes, regardless of shard count (asserted via the
+//! hasher's invocation counters). With `shards = 1` the engine reduces to
 //! [`LgdEstimator`] draw-for-draw under the same seed (tested below) — the
 //! knob is purely a scaling dial.
 //!
@@ -42,6 +46,7 @@ use crate::estimator::lgd::LgdOptions;
 use crate::estimator::{EstimatorStats, GradientEstimator, WeightedDraw};
 use crate::lsh::sampler::{LshSampler, QueryCache, SampleCost, Sampled};
 use crate::lsh::srp::SrpHasher;
+use crate::lsh::tables::BucketRead;
 
 /// Timing/shape report of a sharded table build.
 #[derive(Debug, Clone)]
@@ -67,6 +72,9 @@ pub struct ShardedLgdEstimator<'a, H: SrpHasher> {
     stats: EstimatorStats,
     query: Vec<f32>,
     cache: QueryCache,
+    /// Reusable buffer for the per-batch fused query codes (shared by
+    /// every shard — the query is hashed exactly once per batch).
+    codes: Vec<u32>,
     report: ShardedBuildReport,
 }
 
@@ -134,6 +142,15 @@ impl<'a, H: SrpHasher> ShardedLgdEstimator<'a, H> {
             wall_secs,
             shard_rows: shards.iter().map(|s| s.stored.rows()).collect(),
         };
+        // `lsh.sealed`: flatten each shard's freshly built tables into the
+        // CSR arena. Bucket order is preserved, so draws are identical to
+        // the Vec layout (tested below); live mutation lands in the delta
+        // overlay and rebalancing compacts it.
+        let shards: Vec<ShardTables<H>> = if opts.sealed {
+            shards.into_iter().map(ShardTables::seal).collect()
+        } else {
+            shards
+        };
         let set = ShardSet::from_shards(shards, pre.data.len(), opts.mirror, 0.0);
         ShardedLgdEstimator {
             pre,
@@ -145,6 +162,7 @@ impl<'a, H: SrpHasher> ShardedLgdEstimator<'a, H> {
             stats: EstimatorStats::default(),
             query: Vec::new(),
             cache: QueryCache::default(),
+            codes: Vec::new(),
             report,
         }
     }
@@ -236,9 +254,21 @@ impl<'a, H: SrpHasher> GradientEstimator for ShardedLgdEstimator<'a, H> {
             self.opts.query_refresh
         };
         if self.cache.is_empty() || self.cache.age >= refresh {
+            // The cache is shared by every shard, so the query is hashed
+            // once per (window, table) regardless of shard count. Long
+            // windows (default 8·L) take one fused codes_all sweep — same
+            // mults the lazy fill would pay, one sequential pass; short
+            // windows (query_refresh < L) keep the lazy fill, which only
+            // hashes the tables actually probed before the window expires.
             let mut query = std::mem::take(&mut self.query);
             self.pre.query(theta, &mut query);
-            self.cache.refresh(&query, l_tables);
+            if refresh >= l_tables {
+                let mut rcost = SampleCost::default();
+                self.cache.refresh_fused(&query, self.set.shard(0).tables.hasher(), &mut rcost);
+                self.stats.cost.absorb(&rcost);
+            } else {
+                self.cache.refresh(&query, l_tables);
+            }
             self.query = query;
         }
         // Streaming removals can drain the set entirely: degenerate
@@ -292,9 +322,7 @@ impl<'a, H: SrpHasher> GradientEstimator for ShardedLgdEstimator<'a, H> {
             Sampled::Exhausted { .. } => None,
         };
         self.cache = cache;
-        self.stats.cost.codes += cost.codes;
-        self.stats.cost.mults += cost.mults;
-        self.stats.cost.randoms += cost.randoms;
+        self.stats.cost.absorb(&cost);
         match hit {
             Some(d) => d,
             None => self.uniform_fallback(),
@@ -321,8 +349,19 @@ impl<'a, H: SrpHasher> GradientEstimator for ShardedLgdEstimator<'a, H> {
             return;
         }
         let mut query = std::mem::take(&mut self.query);
+        let mut codes = std::mem::take(&mut self.codes);
         self.pre.query(theta, &mut query);
         let mut cost = SampleCost::default();
+        // The S×-redundancy fix: hash the query ONCE per batch (fused
+        // sweep) and hand the same codes to every shard's coded sampler —
+        // no shard re-hashes, and probe-heavy batches stop paying one code
+        // computation per probe.
+        {
+            let hasher = self.set.shard(0).tables.hasher();
+            hasher.codes_all(&query, &mut codes);
+            cost.codes += hasher.l();
+            cost.mults += hasher.mults_all();
+        }
         let mut want = vec![0usize; self.set.shard_count()];
         if self.set.shard_count() > 1 {
             for _ in 0..m {
@@ -352,7 +391,7 @@ impl<'a, H: SrpHasher> GradientEstimator for ShardedLgdEstimator<'a, H> {
                     sp
                 }
             };
-            sampler.sample_batch(&query, quota, &mut self.rng, &mut cost, &mut batch);
+            sampler.sample_batch_coded(&codes, &query, quota, &mut self.rng, &mut cost, &mut batch);
             let frac = shard.stored.rows() as f64 / self.set.total_rows() as f64;
             for d in &batch {
                 let prob = d.prob * frac;
@@ -375,10 +414,9 @@ impl<'a, H: SrpHasher> GradientEstimator for ShardedLgdEstimator<'a, H> {
             out.push(d);
         }
         self.stats.draws += m as u64;
-        self.stats.cost.codes += cost.codes;
-        self.stats.cost.mults += cost.mults;
-        self.stats.cost.randoms += cost.randoms;
+        self.stats.cost.absorb(&cost);
         self.query = query;
+        self.codes = codes;
     }
 
     fn stats(&self) -> EstimatorStats {
@@ -686,6 +724,94 @@ mod tests {
         assert!(out.iter().all(|d| d.index < 60 && d.weight == 1.0));
     }
 
+    /// Acceptance: sealed and unsealed sharded estimators produce
+    /// identical draw sequences under the same seed — single draws,
+    /// batches, and after a scripted insert/remove/rebalance burst
+    /// (overlay writes + post-rebalance compaction covered).
+    #[test]
+    fn sealed_matches_unsealed_draw_for_draw_with_mutation() {
+        let pre = setup(240, 10, 55);
+        let hd = pre.hashed.cols();
+        let mk = |sealed: bool| {
+            let opts = LgdOptions { sealed, ..LgdOptions::default() };
+            ShardedLgdEstimator::new(&pre, DenseSrp::new(hd, 3, 12, 56), 57, opts, 3).unwrap()
+        };
+        let mut a = mk(true);
+        let mut b = mk(false);
+        assert!(a.shard_set().shard(0).tables.is_sealed());
+        assert!(!b.shard_set().shard(0).tables.is_sealed());
+        let theta: Vec<f32> = (0..10).map(|j| 0.03 * (j as f32 - 5.0)).collect();
+        for i in 0..400 {
+            assert_eq!(a.draw(&theta), b.draw(&theta), "draw {i} diverged across layouts");
+        }
+        let (mut xa, mut xb) = (Vec::new(), Vec::new());
+        for round in 0..3 {
+            a.draw_batch(&theta, 32, &mut xa);
+            b.draw_batch(&theta, 32, &mut xb);
+            assert_eq!(xa, xb, "batch round {round} diverged across layouts");
+        }
+        // scripted mutation: evict a block, re-admit into one shard
+        // (overlay appends on the sealed side), then rebalance (compacts)
+        for id in 0..60 {
+            assert!(a.remove(id).unwrap());
+            assert!(b.remove(id).unwrap());
+        }
+        for id in 0..60 {
+            a.shard_set_mut().insert_into(0, id, &pre.hashed).unwrap();
+            b.shard_set_mut().insert_into(0, id, &pre.hashed).unwrap();
+        }
+        assert_eq!(a.rebalance_to(1.05).unwrap(), b.rebalance_to(1.05).unwrap());
+        for i in 0..400 {
+            assert_eq!(a.draw(&theta), b.draw(&theta), "post-mutation draw {i} diverged");
+        }
+        for round in 0..3 {
+            a.draw_batch(&theta, 32, &mut xa);
+            b.draw_batch(&theta, 32, &mut xb);
+            assert_eq!(xa, xb, "post-mutation batch round {round} diverged");
+        }
+        assert_eq!(a.stats().fallbacks, b.stats().fallbacks);
+    }
+
+    /// Acceptance: the estimator hashes each query exactly once per batch
+    /// (and once per refresh window for single draws), *regardless of
+    /// shard count* — asserted via the hasher family's shared invocation
+    /// counters. Per-table `code()` is never called on the draw path.
+    #[test]
+    fn query_hashed_once_regardless_of_shard_count() {
+        let pre = setup(200, 8, 65);
+        let hd = pre.hashed.cols();
+        let theta = vec![0.04f32; 8];
+        let mut per_shards = Vec::new();
+        for &shards in &[1usize, 4] {
+            let hasher = DenseSrp::new(hd, 3, 10, 66);
+            let handle = hasher.clone(); // clones share the counters
+            let mut est =
+                ShardedLgdEstimator::new(&pre, hasher, 67, LgdOptions::default(), shards).unwrap();
+            let after_build = handle.hash_stats();
+            assert_eq!(after_build.fused_calls, 0, "builds hash rows, not queries");
+            // batches: exactly one fused sweep per draw_batch call
+            let mut out = Vec::new();
+            for _ in 0..5 {
+                est.draw_batch(&theta, 16, &mut out);
+            }
+            // single draws: exactly one fused sweep per refresh window
+            for _ in 0..30 {
+                est.draw(&theta);
+            }
+            let s = handle.hash_stats();
+            assert_eq!(
+                s.code_calls, after_build.code_calls,
+                "{shards} shard(s): the draw path must never invoke per-table code()"
+            );
+            per_shards.push(s.fused_calls - after_build.fused_calls);
+        }
+        assert_eq!(
+            per_shards[0], per_shards[1],
+            "query hash invocations must not scale with shard count"
+        );
+        assert_eq!(per_shards[0], 5 + 1, "5 batches + 1 cache refresh");
+    }
+
     /// Exhaustion falls back to a uniform draw with weight 1, counted
     /// exactly once per draw — deterministic via empty per-shard tables.
     #[test]
@@ -703,7 +829,8 @@ mod tests {
             }
             let norms: Vec<f64> =
                 (0..stored.rows()).map(|i| crate::core::matrix::norm2(stored.row(i))).collect();
-            let tables = LshTables::new(DenseSrp::new(hd, 3, 4, 53));
+            let tables =
+                crate::lsh::tables::TableStore::Vec(LshTables::new(DenseSrp::new(hd, 3, 4, 53)));
             shards.push(ShardTables { rows, stored, norms, tables, build_secs: 0.0 });
         }
         let mut est = ShardedLgdEstimator::from_shards(&pre, shards, 55, opts);

@@ -65,7 +65,12 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
     for (fam, density) in densities {
         for mirror in [true, false] {
             for clip in [None, Some(5.0)] {
-                let o = LgdOptions { weight_clip: clip, max_probes: 0, query_refresh: 1, mirror };
+                let o = LgdOptions {
+                    weight_clip: clip,
+                    query_refresh: 1,
+                    mirror,
+                    ..LgdOptions::default()
+                };
                 let trace = if fam == "dense" {
                     let h = DenseSrp::new(hd, k, l, opts.seed ^ 3);
                     let mut e = LgdEstimator::new(&pre, h, opts.seed ^ 4, o)?;

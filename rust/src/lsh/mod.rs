@@ -11,5 +11,5 @@ pub mod tables;
 pub use collision::{bucket_match_prob, quadratic_cp, sampling_probability, simhash_cp};
 pub use quadratic::QuadraticSrp;
 pub use sampler::{Draw, LshSampler, SampleCost, Sampled};
-pub use srp::{DenseSrp, SparseSrp, SrpHasher};
-pub use tables::{LshTables, TableStats};
+pub use srp::{DenseSrp, HashStats, SparseSrp, SrpHasher};
+pub use tables::{BucketRead, BucketView, LshTables, SealedTables, TableStats, TableStore};

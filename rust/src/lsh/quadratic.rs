@@ -19,7 +19,7 @@
 //! `nnz(M)` multiply-adds and never forming `T(u)`.
 
 use crate::core::rng::{Pcg64, Rng};
-use crate::lsh::srp::SrpHasher;
+use crate::lsh::srp::{HashStats, SrpHasher};
 
 /// Explicit quadratic expansion `T(u) = vec(u uᵀ)` (row-major).
 pub fn expand(u: &[f32]) -> Vec<f32> {
@@ -70,6 +70,7 @@ pub struct QuadraticSrp {
     l: usize,
     density: f64,
     planes: Vec<SparseQuadPlane>,
+    counters: std::sync::Arc<crate::lsh::srp::HashCounters>,
 }
 
 impl QuadraticSrp {
@@ -94,7 +95,7 @@ impl QuadraticSrp {
             }
             planes.push(p);
         }
-        QuadraticSrp { dim, k, l, density, planes }
+        QuadraticSrp { dim, k, l, density, planes, counters: Default::default() }
     }
 }
 
@@ -112,6 +113,7 @@ impl SrpHasher for QuadraticSrp {
     #[inline]
     fn code(&self, table: usize, x: &[f32]) -> u32 {
         debug_assert_eq!(x.len(), self.dim);
+        self.counters.code.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let base = table * self.k;
         let mut c = 0u32;
         for b in 0..self.k {
@@ -124,6 +126,10 @@ impl SrpHasher for QuadraticSrp {
     fn mults_per_code(&self) -> f64 {
         // two multiplies per sparse entry (sign·u_i·u_j)
         2.0 * self.k as f64 * (self.dim * self.dim) as f64 * self.density
+    }
+
+    fn hash_stats(&self) -> HashStats {
+        self.counters.snapshot()
     }
 
     fn collision_prob(&self, x: &[f32], q: &[f32]) -> f64 {

@@ -11,7 +11,7 @@ use crate::core::matrix::Matrix;
 use crate::core::rng::{Pcg64, Rng};
 use crate::lsh::collision::sampling_probability;
 use crate::lsh::srp::SrpHasher;
-use crate::lsh::tables::LshTables;
+use crate::lsh::tables::BucketRead;
 
 /// One sample drawn by Algorithm 1.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -29,12 +29,27 @@ pub struct Draw {
 /// Cost counters for one query — feeds the §2.2 running-time table.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct SampleCost {
-    /// Meta-hash codes computed (one per probed table).
+    /// Meta-hash codes computed (lazily per probed table, or L at once on a
+    /// fused refresh).
     pub codes: usize,
     /// Multiplication-equivalent work of those codes.
     pub mults: f64,
     /// Random numbers drawn.
     pub randoms: usize,
+    /// Bucket probes performed (one table lookup each) — the sealed-vs-Vec
+    /// benchmarks report this alongside ns/draw to show the layouts do
+    /// identical logical work.
+    pub probes: usize,
+}
+
+impl SampleCost {
+    /// Fold another counter set into this one.
+    pub fn absorb(&mut self, other: &SampleCost) {
+        self.codes += other.codes;
+        self.mults += other.mults;
+        self.randoms += other.randoms;
+        self.probes += other.probes;
+    }
 }
 
 /// Outcome of a sampling attempt.
@@ -63,16 +78,20 @@ pub enum Sampled {
 pub struct QueryCache {
     /// The query the codes were computed for.
     pub query: Vec<f32>,
-    /// Lazily computed per-table codes of `query`.
+    /// Per-table codes of `query` (lazy via [`QueryCache::refresh`], eager
+    /// via [`QueryCache::refresh_fused`]).
     codes: Vec<Option<u32>>,
     /// Draws served since the last refresh.
     pub age: usize,
     /// ‖query‖ (precomputed at refresh for the cp hot path).
     pub norm: f64,
+    /// Reusable buffer for the fused refresh.
+    scratch: Vec<u32>,
 }
 
 impl QueryCache {
-    /// Replace the cached query (clears the codes).
+    /// Replace the cached query (clears the codes; they fill lazily, one
+    /// `code()` per first-probed table).
     pub fn refresh(&mut self, query: &[f32], l: usize) {
         self.query.clear();
         self.query.extend_from_slice(query);
@@ -82,16 +101,41 @@ impl QueryCache {
         self.norm = crate::core::matrix::norm2(query);
     }
 
+    /// Replace the cached query and compute **all** L codes eagerly in one
+    /// fused [`SrpHasher::codes_all`] sweep — same multiplications as the
+    /// lazy fill eventually pays, one sequential pass, exactly one hash
+    /// invocation per refresh no matter how many shards consult the cache.
+    /// The full sweep's cost is charged to `cost` here.
+    pub fn refresh_fused<H: SrpHasher>(
+        &mut self,
+        query: &[f32],
+        hasher: &H,
+        cost: &mut SampleCost,
+    ) {
+        self.query.clear();
+        self.query.extend_from_slice(query);
+        let mut codes = std::mem::take(&mut self.scratch);
+        hasher.codes_all(query, &mut codes);
+        self.codes.clear();
+        self.codes.extend(codes.iter().map(|&c| Some(c)));
+        self.scratch = codes;
+        self.age = 0;
+        self.norm = crate::core::matrix::norm2(query);
+        cost.codes += hasher.l();
+        cost.mults += hasher.mults_all();
+    }
+
     /// True if `refresh` has never been called.
     pub fn is_empty(&self) -> bool {
         self.query.is_empty()
     }
 }
 
-/// The LSH sampler: borrows the tables and the hashed vectors (needed to
-/// compute exact collision probabilities at draw time).
-pub struct LshSampler<'a, H: SrpHasher> {
-    tables: &'a LshTables<H>,
+/// The LSH sampler: borrows a bucket store (Vec-backed or sealed — any
+/// [`BucketRead`]) and the hashed vectors (needed to compute exact
+/// collision probabilities at draw time).
+pub struct LshSampler<'a, T: BucketRead> {
+    tables: &'a T,
     /// Hashed vectors, row i = vector inserted with id i.
     hashed: &'a Matrix,
     /// Precomputed ‖row_i‖ (cp hot path).
@@ -101,9 +145,9 @@ pub struct LshSampler<'a, H: SrpHasher> {
     max_probes: usize,
 }
 
-impl<'a, H: SrpHasher> LshSampler<'a, H> {
+impl<'a, T: BucketRead> LshSampler<'a, T> {
     /// Wrap tables + the matrix of the vectors that were inserted into them.
-    pub fn new(tables: &'a LshTables<H>, hashed: &'a Matrix) -> Self {
+    pub fn new(tables: &'a T, hashed: &'a Matrix) -> Self {
         let norms: Vec<f64> =
             (0..hashed.rows()).map(|i| crate::core::matrix::norm2(hashed.row(i))).collect();
         Self::with_norms(tables, hashed, std::borrow::Cow::Owned(norms))
@@ -112,7 +156,7 @@ impl<'a, H: SrpHasher> LshSampler<'a, H> {
     /// Construct with precomputed row norms (hot path: callers that build a
     /// sampler per draw precompute norms once and lend them here).
     pub fn with_norms(
-        tables: &'a LshTables<H>,
+        tables: &'a T,
         hashed: &'a Matrix,
         norms: std::borrow::Cow<'a, [f64]>,
     ) -> Self {
@@ -140,7 +184,9 @@ impl<'a, H: SrpHasher> LshSampler<'a, H> {
             // ti = random(1, L)
             let ti = rng.index(l_tables);
             cost.randoms += 1;
-            let bucket = self.tables.query_bucket(ti, query);
+            cost.probes += 1;
+            let code = self.tables.hasher().code(ti, query);
+            let bucket = self.tables.view(ti, code);
             cost.codes += 1;
             cost.mults += self.tables.hasher().mults_per_code();
             if bucket.is_empty() {
@@ -149,7 +195,46 @@ impl<'a, H: SrpHasher> LshSampler<'a, H> {
             // x = random element of the bucket
             let pick = rng.index(bucket.len());
             cost.randoms += 1;
-            let index = bucket[pick] as usize;
+            let index = bucket.get(pick) as usize;
+            let cp = self.tables.hasher().collision_prob(self.hashed.row(index), query);
+            let prob = sampling_probability(cp, k, probes, bucket.len());
+            return Sampled::Hit(Draw { index, prob, probes, bucket_size: bucket.len() });
+        }
+    }
+
+    /// Algorithm 1 with the query's per-table codes precomputed — the
+    /// shared-query-code contract: the estimator hashes the query once
+    /// (one fused `codes_all`) and passes the codes to every shard's
+    /// sampler. Code computation consumes no randomness, so this draws the
+    /// *identical* sequence to [`Self::sample`]/[`Self::sample_cached`]
+    /// under the same RNG state; hashing cost is accounted by the caller
+    /// at the fused pass, not here.
+    pub fn sample_coded(
+        &self,
+        codes: &[u32],
+        query: &[f32],
+        rng: &mut Pcg64,
+        cost: &mut SampleCost,
+    ) -> Sampled {
+        let l_tables = self.tables.hasher().l();
+        debug_assert_eq!(codes.len(), l_tables);
+        let k = self.tables.hasher().k();
+        let mut probes = 0usize;
+        loop {
+            probes += 1;
+            if probes > self.max_probes {
+                return Sampled::Exhausted { probes: probes - 1 };
+            }
+            let ti = rng.index(l_tables);
+            cost.randoms += 1;
+            cost.probes += 1;
+            let bucket = self.tables.view(ti, codes[ti]);
+            if bucket.is_empty() {
+                continue;
+            }
+            let pick = rng.index(bucket.len());
+            cost.randoms += 1;
+            let index = bucket.get(pick) as usize;
             let cp = self.tables.hasher().collision_prob(self.hashed.row(index), query);
             let prob = sampling_probability(cp, k, probes, bucket.len());
             return Sampled::Hit(Draw { index, prob, probes, bucket_size: bucket.len() });
@@ -177,6 +262,7 @@ impl<'a, H: SrpHasher> LshSampler<'a, H> {
             }
             let ti = rng.index(l_tables);
             cost.randoms += 1;
+            cost.probes += 1;
             let code = match cache.codes[ti] {
                 Some(c) => c,
                 None => {
@@ -187,13 +273,13 @@ impl<'a, H: SrpHasher> LshSampler<'a, H> {
                     c
                 }
             };
-            let bucket = self.tables.bucket(ti, code);
+            let bucket = self.tables.view(ti, code);
             if bucket.is_empty() {
                 continue;
             }
             let pick = rng.index(bucket.len());
             cost.randoms += 1;
-            let index = bucket[pick] as usize;
+            let index = bucket.get(pick) as usize;
             let cp = self.tables.hasher().collision_prob_normed(
                 self.hashed.row(index),
                 &cache.query,
@@ -227,7 +313,9 @@ impl<'a, H: SrpHasher> LshSampler<'a, H> {
             probes += 1;
             let ti = rng.index(l_tables);
             cost.randoms += 1;
-            let bucket = self.tables.query_bucket(ti, query);
+            cost.probes += 1;
+            let code = self.tables.hasher().code(ti, query);
+            let bucket = self.tables.view(ti, code);
             cost.codes += 1;
             cost.mults += self.tables.hasher().mults_per_code();
             if bucket.is_empty() {
@@ -242,7 +330,47 @@ impl<'a, H: SrpHasher> LshSampler<'a, H> {
             for _ in 0..take {
                 let pick = rng.index(bucket.len());
                 cost.randoms += 1;
-                let index = bucket[pick] as usize;
+                let index = bucket.get(pick) as usize;
+                let cp = self.tables.hasher().collision_prob(self.hashed.row(index), query);
+                let prob = sampling_probability(cp, k, probes, bucket.len());
+                out.push(Draw { index, prob, probes, bucket_size: bucket.len() });
+            }
+        }
+    }
+
+    /// [`Self::sample_batch`] with precomputed per-table codes — the batch
+    /// side of the shared-query-code contract. The caller hashes the query
+    /// once (fused) per batch; every shard's quota is then filled without
+    /// re-hashing, and probe-heavy batches stop paying one code per probe.
+    /// Identical RNG stream and draw sequence to `sample_batch`.
+    pub fn sample_batch_coded(
+        &self,
+        codes: &[u32],
+        query: &[f32],
+        m: usize,
+        rng: &mut Pcg64,
+        cost: &mut SampleCost,
+        out: &mut Vec<Draw>,
+    ) {
+        out.clear();
+        let l_tables = self.tables.hasher().l();
+        debug_assert_eq!(codes.len(), l_tables);
+        let k = self.tables.hasher().k();
+        let mut probes = 0usize;
+        while out.len() < m && probes < self.max_probes {
+            probes += 1;
+            let ti = rng.index(l_tables);
+            cost.randoms += 1;
+            cost.probes += 1;
+            let bucket = self.tables.view(ti, codes[ti]);
+            if bucket.is_empty() {
+                continue;
+            }
+            let want = m - out.len();
+            for _ in 0..want {
+                let pick = rng.index(bucket.len());
+                cost.randoms += 1;
+                let index = bucket.get(pick) as usize;
                 let cp = self.tables.hasher().collision_prob(self.hashed.row(index), query);
                 let prob = sampling_probability(cp, k, probes, bucket.len());
                 out.push(Draw { index, prob, probes, bucket_size: bucket.len() });
@@ -251,9 +379,10 @@ impl<'a, H: SrpHasher> LshSampler<'a, H> {
     }
 
     /// §2.2.1 comparator: a full near-neighbor query — candidate generation
-    /// over all L buckets plus distance filtering. Returns the best
-    /// candidate and the number of candidate distance evaluations performed
-    /// (the cost LGD avoids). This is intentionally the *expensive* path.
+    /// over all L buckets ([`BucketRead::candidate_union`]) plus distance
+    /// filtering. Returns the best candidate and the number of candidate
+    /// distance evaluations performed (the cost LGD avoids). This is
+    /// intentionally the *expensive* path.
     pub fn nn_query(&self, query: &[f32]) -> (Option<usize>, usize) {
         let cands = self.tables.candidate_union(query);
         let evals = cands.len();
@@ -274,6 +403,7 @@ mod tests {
     use super::*;
     use crate::core::matrix::normalize;
     use crate::lsh::srp::DenseSrp;
+    use crate::lsh::tables::LshTables;
 
     /// Build a small hashed dataset of unit vectors.
     fn setup(n: usize, d: usize, k: usize, l: usize, seed: u64) -> (LshTables<DenseSrp>, Matrix) {
@@ -434,6 +564,47 @@ mod tests {
             assert!(d.prob > 0.0 && d.prob <= 1.0);
             assert_eq!(d.bucket_size, 10);
         }
+    }
+
+    /// The coded entry points (precomputed fused codes) consume the same
+    /// RNG stream and return the same draws as the hashing paths — over
+    /// both the Vec layout and the sealed arena.
+    #[test]
+    fn coded_paths_match_uncoded_draw_for_draw() {
+        let (t, m) = setup(150, 10, 3, 12, 17);
+        let h = t.hasher().clone();
+        let sealed = {
+            let rebuilt = LshTables::build(h.clone(), (0..150).map(|i| m.row(i))).unwrap();
+            rebuilt.seal()
+        };
+        let mut q: Vec<f32> = m.row(9).to_vec();
+        q[0] += 0.05;
+        let mut codes = Vec::new();
+        h.codes_all(&q, &mut codes);
+
+        let s_vec = LshSampler::new(&t, &m);
+        let s_sealed = LshSampler::new(&sealed, &m);
+        let (mut r1, mut r2, mut r3) = (Pcg64::seeded(5), Pcg64::seeded(5), Pcg64::seeded(5));
+        let mut c = SampleCost::default();
+        for i in 0..300 {
+            let a = s_vec.sample(&q, &mut r1, &mut c);
+            let b = s_vec.sample_coded(&codes, &q, &mut r2, &mut c);
+            let d = s_sealed.sample_coded(&codes, &q, &mut r3, &mut c);
+            match (a, b, d) {
+                (Sampled::Hit(a), Sampled::Hit(b), Sampled::Hit(d)) => {
+                    assert_eq!(a, b, "draw {i}: coded path diverged");
+                    assert_eq!(a, d, "draw {i}: sealed coded path diverged");
+                }
+                _ => panic!("draw {i}: unexpected exhaustion"),
+            }
+        }
+        let (mut r1, mut r2, mut r3) = (Pcg64::seeded(9), Pcg64::seeded(9), Pcg64::seeded(9));
+        let (mut o1, mut o2, mut o3) = (Vec::new(), Vec::new(), Vec::new());
+        s_vec.sample_batch(&q, 64, &mut r1, &mut c, &mut o1);
+        s_vec.sample_batch_coded(&codes, &q, 64, &mut r2, &mut c, &mut o2);
+        s_sealed.sample_batch_coded(&codes, &q, 64, &mut r3, &mut c, &mut o3);
+        assert_eq!(o1, o2, "batch coded path diverged");
+        assert_eq!(o1, o3, "sealed batch coded path diverged");
     }
 
     #[test]

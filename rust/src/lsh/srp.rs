@@ -12,8 +12,42 @@
 //! that cost model; [`DenseSrp`] is the reference implementation the sparse
 //! one is validated against.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
 use crate::core::matrix::dot_f64;
 use crate::core::rng::{Pcg64, Rng};
+
+/// Cumulative hash-invocation counters of a hasher family. The counters
+/// are *shared across clones* (the sharded engine clones one family per
+/// shard; all clones report into one set), so the estimator-level contract
+/// "the query is hashed once per draw regardless of shard count" is
+/// directly observable.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HashStats {
+    /// Single-table `code()` invocations (per-row hashing path).
+    pub code_calls: u64,
+    /// Fused whole-query `codes_all` invocations — each computes all `L·K`
+    /// projections in one sequential pass.
+    pub fused_calls: u64,
+}
+
+/// Shared atomic cell behind [`HashStats`] (relaxed counters; clones of a
+/// family hold the same `Arc`).
+#[derive(Debug, Default)]
+pub(crate) struct HashCounters {
+    pub(crate) code: AtomicU64,
+    pub(crate) fused: AtomicU64,
+}
+
+impl HashCounters {
+    pub(crate) fn snapshot(&self) -> HashStats {
+        HashStats {
+            code_calls: self.code.load(Ordering::Relaxed),
+            fused_calls: self.fused.load(Ordering::Relaxed),
+        }
+    }
+}
 
 /// A family of `L` K-bit SimHash meta-hash functions over `R^dim`.
 pub trait SrpHasher: Send + Sync {
@@ -28,6 +62,19 @@ pub trait SrpHasher: Send + Sync {
     /// Expected multiplications to compute one table's K-bit code — the
     /// §2.2 cost model, reported by the sampling benchmarks.
     fn mults_per_code(&self) -> f64;
+
+    /// Multiplication-equivalent work of hashing one query against *all* L
+    /// tables. The fused `codes_all` pass does exactly this much arithmetic
+    /// (same mults as L independent `code()` calls, one sequential sweep).
+    fn mults_all(&self) -> f64 {
+        self.l() as f64 * self.mults_per_code()
+    }
+
+    /// Hash-invocation counters (shared across clones of this family; see
+    /// [`HashStats`]). Families without instrumentation report zeros.
+    fn hash_stats(&self) -> HashStats {
+        HashStats::default()
+    }
 
     /// Per-bit collision probability between a stored vector and a query
     /// under THIS family's geometry. Linear SimHash families use the
@@ -50,7 +97,13 @@ pub trait SrpHasher: Send + Sync {
         (1.0 - cos.acos() / std::f64::consts::PI).clamp(1e-9, 1.0 - 1e-9)
     }
 
-    /// Codes for all L tables (preprocessing path).
+    /// Codes for all L tables. The default walks the tables one `code()` at
+    /// a time; [`DenseSrp`] and [`SparseSrp`] override it with a *fused*
+    /// one-pass sweep (CSC layout over the input dimensions) that performs
+    /// the same multiplications with sequential memory access and is
+    /// bitwise-identical to the per-table path (tested below). This is the
+    /// entry point the estimators use to hash a query once per draw/batch
+    /// and share the codes across every shard.
     fn codes_all(&self, x: &[f32], out: &mut Vec<u32>) {
         out.clear();
         for t in 0..self.l() {
@@ -68,6 +121,11 @@ pub struct DenseSrp {
     l: usize,
     /// (l*k) × dim row-major plane matrix.
     planes: Vec<f32>,
+    /// dim × (l*k) transpose of `planes` — the CSC layout the fused
+    /// `codes_all` sweep walks sequentially (per input dimension, all L·K
+    /// plane coefficients are contiguous).
+    planes_t: Vec<f32>,
+    counters: Arc<HashCounters>,
 }
 
 impl DenseSrp {
@@ -80,7 +138,14 @@ impl DenseSrp {
         for v in planes.iter_mut() {
             *v = rng.gaussian() as f32;
         }
-        DenseSrp { dim, k, l, planes }
+        let lk = l * k;
+        let mut planes_t = vec![0.0f32; lk * dim];
+        for r in 0..lk {
+            for i in 0..dim {
+                planes_t[i * lk + r] = planes[r * dim + i];
+            }
+        }
+        DenseSrp { dim, k, l, planes, planes_t, counters: Arc::default() }
     }
 
     #[inline]
@@ -104,6 +169,7 @@ impl SrpHasher for DenseSrp {
     #[inline]
     fn code(&self, table: usize, x: &[f32]) -> u32 {
         debug_assert_eq!(x.len(), self.dim);
+        self.counters.code.fetch_add(1, Ordering::Relaxed);
         let mut c = 0u32;
         for b in 0..self.k {
             let s = dot_f64(self.plane(table, b), x);
@@ -115,30 +181,71 @@ impl SrpHasher for DenseSrp {
     fn mults_per_code(&self) -> f64 {
         (self.k * self.dim) as f64
     }
+
+    /// Fused one-pass sweep: one traversal of `x` accumulating all `L·K`
+    /// projections against the dim-major transpose, then one bit-pack pass.
+    /// Per plane row, the accumulation visits dimensions in the same
+    /// ascending order (and with the same f64 ops) as `dot_f64`, so the
+    /// codes are bitwise-identical to the per-table `code()` path.
+    fn codes_all(&self, x: &[f32], out: &mut Vec<u32>) {
+        debug_assert_eq!(x.len(), self.dim);
+        self.counters.fused.fetch_add(1, Ordering::Relaxed);
+        let lk = self.l * self.k;
+        let mut acc = vec![0.0f64; lk];
+        for (i, &xi) in x.iter().enumerate() {
+            let xi = xi as f64;
+            let col = &self.planes_t[i * lk..(i + 1) * lk];
+            for (a, &p) in acc.iter_mut().zip(col) {
+                *a += p as f64 * xi;
+            }
+        }
+        out.clear();
+        for t in 0..self.l {
+            let mut c = 0u32;
+            for b in 0..self.k {
+                c = (c << 1) | (acc[t * self.k + b] >= 0.0) as u32;
+            }
+            out.push(c);
+        }
+    }
+
+    fn hash_stats(&self) -> HashStats {
+        self.counters.snapshot()
+    }
 }
 
-/// One sparse ±1 projection row: indices whose coefficient is +1 / −1.
+/// One sparse ±1 projection row. Entries are `(dim_index << 1) | sign_bit`
+/// (sign bit 1 = −1 coefficient) in ascending dimension order — the
+/// *canonical* accumulation order shared by [`SparseRow::project`] and the
+/// fused CSC sweep of `codes_all`, which makes their floating-point sums
+/// (and therefore the codes) bitwise identical.
 #[derive(Debug, Clone, Default)]
 struct SparseRow {
-    pos: Vec<u32>,
-    neg: Vec<u32>,
+    entries: Vec<u32>,
 }
 
 impl SparseRow {
     #[inline]
+    fn push(&mut self, dim_index: u32, neg: bool) {
+        self.entries.push((dim_index << 1) | neg as u32);
+    }
+
+    #[inline]
     fn project(&self, x: &[f32]) -> f64 {
         let mut s = 0.0f64;
-        for &i in &self.pos {
-            s += x[i as usize] as f64;
-        }
-        for &i in &self.neg {
-            s -= x[i as usize] as f64;
+        for &e in &self.entries {
+            let v = x[(e >> 1) as usize] as f64;
+            if e & 1 == 0 {
+                s += v;
+            } else {
+                s -= v;
+            }
         }
         s
     }
 
     fn nnz(&self) -> usize {
-        self.pos.len() + self.neg.len()
+        self.entries.len()
     }
 }
 
@@ -185,7 +292,14 @@ pub struct SparseSrp {
     l: usize,
     density: f64,
     rows: Vec<SparseRow>,
+    /// CSC transpose of `rows`: `post[post_off[i]..post_off[i+1]]` lists
+    /// the plane rows touching input dimension `i` as
+    /// `(row << 1) | sign_bit`. The fused `codes_all` walks this once,
+    /// sequentially, accumulating all `L·K` projections.
+    post_off: Vec<u32>,
+    post: Vec<u32>,
     calib: CalibCurve,
+    counters: Arc<HashCounters>,
 }
 
 impl SparseSrp {
@@ -202,27 +316,54 @@ impl SparseSrp {
             let mut row = SparseRow::default();
             for i in 0..dim {
                 if rng.bernoulli(density) {
-                    if rng.next_u64() & 1 == 0 {
-                        row.pos.push(i as u32);
-                    } else {
-                        row.neg.push(i as u32);
-                    }
+                    row.push(i as u32, rng.next_u64() & 1 != 0);
                 }
             }
             if row.nnz() == 0 {
                 // Force one nonzero so the bit carries signal.
                 let i = rng.index(dim) as u32;
-                if rng.next_u64() & 1 == 0 {
-                    row.pos.push(i);
-                } else {
-                    row.neg.push(i);
-                }
+                row.push(i, rng.next_u64() & 1 != 0);
             }
             rows.push(row);
         }
-        let mut h = SparseSrp { dim, k, l, density, rows, calib: CalibCurve { bins: Vec::new() } };
+        let (post_off, post) = Self::transpose(dim, &rows);
+        let mut h = SparseSrp {
+            dim,
+            k,
+            l,
+            density,
+            rows,
+            post_off,
+            post,
+            calib: CalibCurve { bins: Vec::new() },
+            counters: Arc::default(),
+        };
         h.calib = h.calibrate(&mut rng);
         h
+    }
+
+    /// Build the CSC postings (dimension → plane rows touching it).
+    fn transpose(dim: usize, rows: &[SparseRow]) -> (Vec<u32>, Vec<u32>) {
+        let mut counts = vec![0u32; dim + 1];
+        for row in rows {
+            for &e in &row.entries {
+                counts[(e >> 1) as usize + 1] += 1;
+            }
+        }
+        for i in 0..dim {
+            counts[i + 1] += counts[i];
+        }
+        let post_off = counts.clone();
+        let mut cursor = counts;
+        let mut post = vec![0u32; *post_off.last().unwrap_or(&0) as usize];
+        for (r, row) in rows.iter().enumerate() {
+            for &e in &row.entries {
+                let d = (e >> 1) as usize;
+                post[cursor[d] as usize] = ((r as u32) << 1) | (e & 1);
+                cursor[d] += 1;
+            }
+        }
+        (post_off, post)
     }
 
     /// Measure this family's per-bit collision law: for each cosine bin,
@@ -320,6 +461,7 @@ impl SrpHasher for SparseSrp {
     #[inline]
     fn code(&self, table: usize, x: &[f32]) -> u32 {
         debug_assert_eq!(x.len(), self.dim);
+        self.counters.code.fetch_add(1, Ordering::Relaxed);
         let base = table * self.k;
         let mut c = 0u32;
         for b in 0..self.k {
@@ -333,6 +475,44 @@ impl SrpHasher for SparseSrp {
         // ±1 coefficients: additions only; we report the paper's accounting
         // of "multiplication-equivalent" work = expected nnz touched.
         self.k as f64 * self.dim as f64 * self.density
+    }
+
+    /// Fused one-pass sweep over the CSC postings: one sequential traversal
+    /// of the query accumulating all `L·K` sparse projections, then one
+    /// bit-pack pass — the §2.2 "d/30 multiplications for all hashes" cost
+    /// model with cache-linear access. Per plane row the terms arrive in
+    /// the same ascending-dimension order as [`SparseRow::project`] (zero
+    /// terms included), so codes are bitwise-identical to `code()`.
+    fn codes_all(&self, x: &[f32], out: &mut Vec<u32>) {
+        debug_assert_eq!(x.len(), self.dim);
+        self.counters.fused.fetch_add(1, Ordering::Relaxed);
+        let lk = self.l * self.k;
+        let mut acc = vec![0.0f64; lk];
+        for i in 0..self.dim {
+            let xi = x[i] as f64;
+            let lo = self.post_off[i] as usize;
+            let hi = self.post_off[i + 1] as usize;
+            for &e in &self.post[lo..hi] {
+                let a = &mut acc[(e >> 1) as usize];
+                if e & 1 == 0 {
+                    *a += xi;
+                } else {
+                    *a -= xi;
+                }
+            }
+        }
+        out.clear();
+        for t in 0..self.l {
+            let mut c = 0u32;
+            for b in 0..self.k {
+                c = (c << 1) | (acc[t * self.k + b] >= 0.0) as u32;
+            }
+            out.push(c);
+        }
+    }
+
+    fn hash_stats(&self) -> HashStats {
+        self.counters.snapshot()
     }
 
     fn collision_prob(&self, x: &[f32], q: &[f32]) -> f64 {
@@ -462,5 +642,73 @@ mod tests {
     #[should_panic]
     fn k_too_wide_panics() {
         let _ = DenseSrp::new(4, 33, 1, 0);
+    }
+
+    /// Fused `codes_all` is bitwise-identical to the per-table `code()`
+    /// path for the dense family, across random dims/k/l and queries
+    /// (including zero entries and non-unit vectors).
+    #[test]
+    fn prop_fused_codes_match_per_table_dense() {
+        crate::testkit::prop(40, |rng| {
+            let d = crate::testkit::gen::size(rng, 1, 40);
+            let k = crate::testkit::gen::size(rng, 1, 8);
+            let l = crate::testkit::gen::size(rng, 1, 12);
+            let h = DenseSrp::new(d, k, l, rng.next_u64());
+            let x: Vec<f32> = (0..d)
+                .map(|_| if rng.bernoulli(0.2) { 0.0 } else { (rng.gaussian() * 3.0) as f32 })
+                .collect();
+            let mut fused = Vec::new();
+            h.codes_all(&x, &mut fused);
+            let per_table: Vec<u32> = (0..l).map(|t| h.code(t, &x)).collect();
+            assert_eq!(fused, per_table, "dense fused codes diverged (d={d} k={k} l={l})");
+        });
+    }
+
+    /// Same bitwise identity for the sparse family — the canonical
+    /// interleaved entry order makes the CSC sweep replay `project`'s
+    /// float ops exactly.
+    #[test]
+    fn prop_fused_codes_match_per_table_sparse() {
+        crate::testkit::prop(40, |rng| {
+            let d = crate::testkit::gen::size(rng, 1, 60);
+            let k = crate::testkit::gen::size(rng, 1, 6);
+            let l = crate::testkit::gen::size(rng, 1, 10);
+            let density = 0.05 + rng.next_f64() * 0.5;
+            let h = SparseSrp::new(d, k, l, density, rng.next_u64());
+            let x: Vec<f32> = (0..d)
+                .map(|_| if rng.bernoulli(0.2) { 0.0 } else { (rng.gaussian() * 2.0) as f32 })
+                .collect();
+            let mut fused = Vec::new();
+            h.codes_all(&x, &mut fused);
+            let per_table: Vec<u32> = (0..l).map(|t| h.code(t, &x)).collect();
+            assert_eq!(fused, per_table, "sparse fused codes diverged (d={d} k={k} l={l})");
+        });
+    }
+
+    /// Hash-invocation counters: `code()` and fused `codes_all` count
+    /// separately, and clones of a family report into the same counters —
+    /// the property the sharded hash-once assertion builds on.
+    #[test]
+    fn hash_counters_shared_across_clones() {
+        let h = DenseSrp::new(8, 3, 5, 77);
+        let clone = h.clone();
+        let mut rng = Pcg64::seeded(7);
+        let x = random_unit(8, &mut rng);
+        assert_eq!(h.hash_stats(), HashStats::default());
+        let _ = h.code(0, &x);
+        let _ = clone.code(1, &x);
+        let mut out = Vec::new();
+        clone.codes_all(&x, &mut out);
+        let s = h.hash_stats();
+        assert_eq!(s.code_calls, 2, "one code() per call, shared across clones");
+        assert_eq!(s.fused_calls, 1, "fused sweep counts once, not per table");
+        assert_eq!(clone.hash_stats(), s);
+        // the default (unfused) codes_all of the quadratic family falls
+        // back to per-table code() calls and counts accordingly
+        let q = crate::lsh::QuadraticSrp::new(6, 2, 4, 0.3, 5);
+        let xq: Vec<f32> = random_unit(6, &mut rng);
+        let mut cq = Vec::new();
+        q.codes_all(&xq, &mut cq);
+        assert_eq!(q.hash_stats(), HashStats { code_calls: 4, fused_calls: 0 });
     }
 }

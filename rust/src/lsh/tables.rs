@@ -8,7 +8,7 @@
 //! Building the tables is the one-time preprocessing cost of LGD; queries
 //! and incremental inserts/removes are O(K·density·d) per table.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::core::error::{Error, Result};
 use crate::lsh::srp::SrpHasher;
@@ -16,16 +16,31 @@ use crate::lsh::srp::SrpHasher;
 /// Bucket storage for one table: direct-indexed array for small key spaces
 /// (K ≤ 12 — the paper's K=5 gives 32 buckets), HashMap beyond. The dense
 /// variant turns the per-probe bucket lookup into one array index — a
-/// measurable win on the Algorithm-1 hot path (§Perf).
+/// measurable win on the Algorithm-1 hot path (§Perf). The dense variant
+/// additionally keeps an incremental occupancy index (`occupied`/`pos`) so
+/// `non_empty()` is O(1) and bucket iteration — hence [`TableStats`] — is
+/// O(non-empty) instead of O(2^K) per call, cheap enough to sample inside
+/// the training loop.
 enum Buckets {
-    Dense(Vec<Vec<u32>>),
+    Dense {
+        slots: Vec<Vec<u32>>,
+        /// Codes whose slot is non-empty (unordered; swap-removed).
+        occupied: Vec<u32>,
+        /// code → index in `occupied` (u32::MAX = empty slot).
+        pos: Vec<u32>,
+    },
     Map(HashMap<u32, Vec<u32>>),
 }
 
 impl Buckets {
     fn new(k: usize) -> Self {
         if k <= 12 {
-            Buckets::Dense((0..(1usize << k)).map(|_| Vec::new()).collect())
+            let n = 1usize << k;
+            Buckets::Dense {
+                slots: (0..n).map(|_| Vec::new()).collect(),
+                occupied: Vec::new(),
+                pos: vec![u32::MAX; n],
+            }
         } else {
             Buckets::Map(HashMap::new())
         }
@@ -34,7 +49,9 @@ impl Buckets {
     #[inline]
     fn get(&self, code: u32) -> &[u32] {
         match self {
-            Buckets::Dense(v) => v.get(code as usize).map(|b| b.as_slice()).unwrap_or(&[]),
+            Buckets::Dense { slots, .. } => {
+                slots.get(code as usize).map(|b| b.as_slice()).unwrap_or(&[])
+            }
             Buckets::Map(m) => m.get(&code).map(|b| b.as_slice()).unwrap_or(&[]),
         }
     }
@@ -42,51 +59,181 @@ impl Buckets {
     #[inline]
     fn push(&mut self, code: u32, id: u32) {
         match self {
-            Buckets::Dense(v) => v[code as usize].push(id),
+            Buckets::Dense { slots, occupied, pos } => {
+                let slot = &mut slots[code as usize];
+                if slot.is_empty() {
+                    pos[code as usize] = occupied.len() as u32;
+                    occupied.push(code);
+                }
+                slot.push(id);
+            }
             Buckets::Map(m) => m.entry(code).or_default().push(id),
         }
     }
 
     fn remove_id(&mut self, code: u32, id: u32) -> bool {
-        let b = match self {
-            Buckets::Dense(v) => &mut v[code as usize],
-            Buckets::Map(m) => match m.get_mut(&code) {
-                Some(b) => b,
-                None => return false,
-            },
-        };
-        if let Some(pos) = b.iter().position(|&v| v == id) {
-            b.swap_remove(pos);
-            if b.is_empty() {
-                if let Buckets::Map(m) = self {
-                    m.remove(&code);
+        match self {
+            Buckets::Dense { slots, occupied, pos } => {
+                let slot = &mut slots[code as usize];
+                if let Some(p) = slot.iter().position(|&v| v == id) {
+                    slot.swap_remove(p);
+                    if slot.is_empty() {
+                        let at = pos[code as usize] as usize;
+                        occupied.swap_remove(at);
+                        if at < occupied.len() {
+                            pos[occupied[at] as usize] = at as u32;
+                        }
+                        pos[code as usize] = u32::MAX;
+                    }
+                    true
+                } else {
+                    false
                 }
             }
-            true
-        } else {
-            false
+            Buckets::Map(m) => {
+                let b = match m.get_mut(&code) {
+                    Some(b) => b,
+                    None => return false,
+                };
+                if let Some(p) = b.iter().position(|&v| v == id) {
+                    b.swap_remove(p);
+                    if b.is_empty() {
+                        m.remove(&code);
+                    }
+                    true
+                } else {
+                    false
+                }
+            }
         }
     }
 
     fn clear(&mut self) {
         match self {
-            Buckets::Dense(v) => v.iter_mut().for_each(|b| b.clear()),
+            Buckets::Dense { slots, occupied, pos } => {
+                slots.iter_mut().for_each(|b| b.clear());
+                occupied.clear();
+                pos.iter_mut().for_each(|p| *p = u32::MAX);
+            }
             Buckets::Map(m) => m.clear(),
         }
     }
 
     fn non_empty(&self) -> usize {
         match self {
-            Buckets::Dense(v) => v.iter().filter(|b| !b.is_empty()).count(),
+            Buckets::Dense { occupied, .. } => occupied.len(),
             Buckets::Map(m) => m.len(),
         }
     }
 
     fn for_each_bucket(&self, mut f: impl FnMut(&[u32])) {
         match self {
-            Buckets::Dense(v) => v.iter().filter(|b| !b.is_empty()).for_each(|b| f(b)),
+            Buckets::Dense { slots, occupied, .. } => {
+                occupied.iter().for_each(|&c| f(&slots[c as usize]))
+            }
             Buckets::Map(m) => m.values().for_each(|b| f(b)),
         }
+    }
+
+    /// Non-empty (code, bucket) pairs in ascending code order — the
+    /// deterministic layout `seal()` flattens.
+    fn sorted_buckets(&self) -> Vec<(u32, &[u32])> {
+        match self {
+            Buckets::Dense { slots, occupied, .. } => {
+                let mut codes: Vec<u32> = occupied.clone();
+                codes.sort_unstable();
+                codes.into_iter().map(|c| (c, slots[c as usize].as_slice())).collect()
+            }
+            Buckets::Map(m) => {
+                let mut codes: Vec<u32> = m.keys().copied().collect();
+                codes.sort_unstable();
+                codes.into_iter().map(|c| (c, m[&c].as_slice())).collect()
+            }
+        }
+    }
+}
+
+/// A borrowed view of one bucket. Sealed tables may split a live bucket
+/// across the CSR arena segment (`head`) and the delta overlay (`tail`);
+/// Vec-backed tables always have an empty tail. The effective bucket is the
+/// concatenation, and its element *order* is part of the draw stream
+/// (uniform in-bucket picks), so both backends maintain identical order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BucketView<'a> {
+    head: &'a [u32],
+    tail: &'a [u32],
+}
+
+impl<'a> BucketView<'a> {
+    /// View over an arena segment plus an overlay tail.
+    #[inline]
+    pub fn new(head: &'a [u32], tail: &'a [u32]) -> Self {
+        BucketView { head, tail }
+    }
+
+    /// Number of ids in the bucket.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.head.len() + self.tail.len()
+    }
+
+    /// True if the bucket holds no ids.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.head.is_empty() && self.tail.is_empty()
+    }
+
+    /// Id at position `i` of the effective bucket.
+    #[inline]
+    pub fn get(&self, i: usize) -> u32 {
+        if i < self.head.len() {
+            self.head[i]
+        } else {
+            self.tail[i - self.head.len()]
+        }
+    }
+
+    /// Ids in effective-bucket order.
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        self.head.iter().chain(self.tail.iter()).copied()
+    }
+
+    /// Materialise the effective bucket (tests/diagnostics).
+    pub fn to_vec(&self) -> Vec<u32> {
+        self.iter().collect()
+    }
+}
+
+/// Read-only bucket access — the surface [`crate::lsh::sampler::LshSampler`]
+/// draws through, implemented by the Vec-backed [`LshTables`], the CSR
+/// [`SealedTables`], and the [`TableStore`] dispatcher.
+pub trait BucketRead: Send + Sync {
+    /// The hash family keying the tables.
+    type H: SrpHasher;
+
+    /// The wrapped hasher.
+    fn hasher(&self) -> &Self::H;
+
+    /// The bucket of table `t` under an explicit (precomputed) code.
+    fn view(&self, t: usize, code: u32) -> BucketView<'_>;
+
+    /// Union of the query's buckets over all L tables, deduplicated in
+    /// first-seen order — the *near-neighbor candidate set* of Appendix
+    /// A.1, used by the §2.2.1 cost comparison (this is exactly the work
+    /// LGD avoids). Defined once here so every layout shares the same
+    /// candidate-set semantics.
+    fn candidate_union(&self, query: &[f32]) -> Vec<u32> {
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for t in 0..self.hasher().l() {
+            let code = self.hasher().code(t, query);
+            for id in self.view(t, code).iter() {
+                if seen.insert(id) {
+                    out.push(id);
+                }
+            }
+        }
+        out
     }
 }
 
@@ -208,22 +355,6 @@ impl<H: SrpHasher> LshTables<H> {
         self.tables[t].get(code)
     }
 
-    /// Union of the query's buckets over all L tables, deduplicated — the
-    /// *near-neighbor candidate set* of Appendix A.1, used by the §2.2.1
-    /// cost comparison (this is exactly the work LGD avoids).
-    pub fn candidate_union(&self, query: &[f32]) -> Vec<u32> {
-        let mut seen = std::collections::HashSet::new();
-        let mut out = Vec::new();
-        for t in 0..self.tables.len() {
-            for &id in self.query_bucket(t, query) {
-                if seen.insert(id) {
-                    out.push(id);
-                }
-            }
-        }
-        out
-    }
-
     /// Occupancy statistics.
     pub fn stats(&self) -> TableStats {
         let mut buckets = 0usize;
@@ -266,6 +397,466 @@ impl<H: SrpHasher> LshTables<H> {
             self.insert(i as u32, r)?;
         }
         Ok(())
+    }
+
+    /// Flatten into the CSR bucket arena (see [`SealedTables`]). Bucket
+    /// contents keep their exact order, so a sampler draws the identical
+    /// sequence over the sealed layout under the same seed.
+    pub fn seal(self) -> SealedTables<H> {
+        let k = self.hasher.k();
+        let sealed = self.tables.iter().map(|b| SealedTable::seal(k, b)).collect();
+        SealedTables { hasher: self.hasher, tables: sealed, len: self.len }
+    }
+}
+
+impl<H: SrpHasher> BucketRead for LshTables<H> {
+    type H = H;
+
+    fn hasher(&self) -> &H {
+        &self.hasher
+    }
+
+    #[inline]
+    fn view(&self, t: usize, code: u32) -> BucketView<'_> {
+        BucketView::new(self.tables[t].get(code), &[])
+    }
+}
+
+/// One table of the sealed layout: a CSR arena (sorted code index +
+/// offsets + one contiguous id slab) plus a small delta overlay for
+/// post-seal mutation.
+///
+/// *Probe path*: `slot_of[code]` (direct index, K ≤ 12) or a binary search
+/// of `codes`, then one offset lookup into the slab — a cache-linear read
+/// of the whole bucket, vs two pointer chases through `Vec<Vec<u32>>`.
+///
+/// *Mutation*: live inserts refill arena slack first and spill to the
+/// overlay only when a slot is full (or absent); removals replay
+/// `Vec::swap_remove` on the *effective* bucket (arena live prefix ++
+/// overlay), so the sealed layout stays element-for-element identical to
+/// the Vec layout under any mutation sequence — the draw-for-draw
+/// guarantee. Invariant: a code with overlay entries has a full arena slot
+/// (or none), because inserts prefer arena slack.
+struct SealedTable {
+    /// code → slot for K ≤ 12 (u32::MAX = no slot); empty when the
+    /// binary-searched `codes` index is used instead.
+    slot_of: Vec<u32>,
+    /// slot → code, ascending (the sorted code index).
+    codes: Vec<u32>,
+    /// Arena offsets per slot (`codes.len() + 1` entries).
+    offsets: Vec<u32>,
+    /// Live prefix length of each slot (≤ sealed capacity; removals shrink
+    /// it, re-inserts refill it before anything spills to the overlay).
+    live: Vec<u32>,
+    /// The contiguous id slab.
+    ids: Vec<u32>,
+    /// Delta overlay (BTreeMap for deterministic iteration).
+    overlay: BTreeMap<u32, Vec<u32>>,
+}
+
+impl SealedTable {
+    fn seal(k: usize, buckets: &Buckets) -> SealedTable {
+        let sorted = buckets.sorted_buckets();
+        let mut codes = Vec::with_capacity(sorted.len());
+        let mut offsets = Vec::with_capacity(sorted.len() + 1);
+        let mut live = Vec::with_capacity(sorted.len());
+        let mut ids = Vec::new();
+        offsets.push(0u32);
+        for (code, bucket) in &sorted {
+            codes.push(*code);
+            ids.extend_from_slice(bucket);
+            live.push(bucket.len() as u32);
+            offsets.push(ids.len() as u32);
+        }
+        let mut t = SealedTable {
+            slot_of: if k <= 12 { vec![u32::MAX; 1 << k] } else { Vec::new() },
+            codes,
+            offsets,
+            live,
+            ids,
+            overlay: BTreeMap::new(),
+        };
+        t.rebuild_slot_of();
+        t
+    }
+
+    fn rebuild_slot_of(&mut self) {
+        if self.slot_of.is_empty() {
+            return;
+        }
+        self.slot_of.iter_mut().for_each(|s| *s = u32::MAX);
+        for (s, &code) in self.codes.iter().enumerate() {
+            self.slot_of[code as usize] = s as u32;
+        }
+    }
+
+    #[inline]
+    fn slot(&self, code: u32) -> Option<usize> {
+        if !self.slot_of.is_empty() {
+            match self.slot_of.get(code as usize) {
+                Some(&s) if s != u32::MAX => Some(s as usize),
+                _ => None,
+            }
+        } else {
+            self.codes.binary_search(&code).ok()
+        }
+    }
+
+    #[inline]
+    fn view(&self, code: u32) -> BucketView<'_> {
+        let head = match self.slot(code) {
+            Some(s) => {
+                let off = self.offsets[s] as usize;
+                &self.ids[off..off + self.live[s] as usize]
+            }
+            None => &[],
+        };
+        let tail = self.overlay.get(&code).map(|v| v.as_slice()).unwrap_or(&[]);
+        BucketView::new(head, tail)
+    }
+
+    fn push(&mut self, code: u32, id: u32) {
+        if let Some(s) = self.slot(code) {
+            let cap = (self.offsets[s + 1] - self.offsets[s]) as usize;
+            let live = self.live[s] as usize;
+            if live < cap {
+                debug_assert!(
+                    !self.overlay.contains_key(&code),
+                    "arena slack with a live overlay breaks Vec-order emulation"
+                );
+                self.ids[self.offsets[s] as usize + live] = id;
+                self.live[s] += 1;
+                return;
+            }
+        }
+        self.overlay.entry(code).or_default().push(id);
+    }
+
+    /// `Vec::swap_remove` on the effective bucket (arena ++ overlay).
+    fn remove_id(&mut self, code: u32, id: u32) -> bool {
+        if let Some(s) = self.slot(code) {
+            let off = self.offsets[s] as usize;
+            let live = self.live[s] as usize;
+            if let Some(p) = self.ids[off..off + live].iter().position(|&v| v == id) {
+                if let Some(tail) = self.overlay.get_mut(&code) {
+                    // overlay non-empty ⇒ arena full: the effective last
+                    // element lives in the overlay; move it into the hole
+                    let last = tail.pop().expect("overlay vecs are never empty");
+                    if tail.is_empty() {
+                        self.overlay.remove(&code);
+                    }
+                    self.ids[off + p] = last;
+                } else {
+                    self.ids.swap(off + p, off + live - 1);
+                    self.live[s] -= 1;
+                }
+                return true;
+            }
+        }
+        if let Some(tail) = self.overlay.get_mut(&code) {
+            if let Some(q) = tail.iter().position(|&v| v == id) {
+                tail.swap_remove(q);
+                if tail.is_empty() {
+                    self.overlay.remove(&code);
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Fold the overlay (and any removal slack) back into a fresh arena.
+    /// Effective bucket order is preserved, so draws are unchanged.
+    fn compact(&mut self) {
+        let mut buckets: Vec<(u32, Vec<u32>)> = Vec::with_capacity(self.codes.len());
+        let mut overlay = std::mem::take(&mut self.overlay);
+        for (s, &code) in self.codes.iter().enumerate() {
+            let off = self.offsets[s] as usize;
+            let mut v = self.ids[off..off + self.live[s] as usize].to_vec();
+            if let Some(tail) = overlay.remove(&code) {
+                v.extend(tail);
+            }
+            if !v.is_empty() {
+                buckets.push((code, v));
+            }
+        }
+        buckets.extend(overlay);
+        buckets.sort_unstable_by_key(|(c, _)| *c);
+        self.codes.clear();
+        self.offsets.clear();
+        self.live.clear();
+        self.ids.clear();
+        self.offsets.push(0);
+        for (code, v) in &buckets {
+            self.codes.push(*code);
+            self.ids.extend_from_slice(v);
+            self.live.push(v.len() as u32);
+            self.offsets.push(self.ids.len() as u32);
+        }
+        self.rebuild_slot_of();
+    }
+
+    /// Effective non-empty buckets: arena slots with a live prefix plus
+    /// overlay-only codes. O(non-empty + overlay).
+    fn for_each_bucket(&self, mut f: impl FnMut(usize)) -> usize {
+        let mut non_empty = 0usize;
+        for (s, &code) in self.codes.iter().enumerate() {
+            let n = self.live[s] as usize + self.overlay.get(&code).map(|v| v.len()).unwrap_or(0);
+            if n > 0 {
+                non_empty += 1;
+                f(n);
+            }
+        }
+        for (&code, tail) in &self.overlay {
+            if self.slot(code).is_none() {
+                non_empty += 1;
+                f(tail.len());
+            }
+        }
+        non_empty
+    }
+
+    fn overlay_ids(&self) -> usize {
+        self.overlay.values().map(|v| v.len()).sum()
+    }
+}
+
+/// The sealed (K, L) structure: every table flattened into a CSR bucket
+/// arena for O(1)-probe, cache-linear reads on the Algorithm-1 draw path,
+/// with a delta overlay absorbing live mutation (see [`SealedTable`]).
+/// Produced by [`LshTables::seal`]; [`Self::compact`] folds the overlay
+/// back into a fresh arena (the shard set calls it after rebalancing).
+pub struct SealedTables<H: SrpHasher> {
+    hasher: H,
+    tables: Vec<SealedTable>,
+    len: usize,
+}
+
+impl<H: SrpHasher> SealedTables<H> {
+    /// Number of points stored.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if no points are stored.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The wrapped hasher.
+    pub fn hasher(&self) -> &H {
+        &self.hasher
+    }
+
+    /// Insert a point id into every table (lands in arena slack or the
+    /// delta overlay — same observable bucket sequence as the Vec layout).
+    pub fn insert(&mut self, id: u32, x: &[f32]) -> Result<()> {
+        if x.len() != self.hasher.dim() {
+            return Err(Error::Lsh(format!(
+                "insert dim {} into hasher dim {}",
+                x.len(),
+                self.hasher.dim()
+            )));
+        }
+        for t in 0..self.tables.len() {
+            let code = self.hasher.code(t, x);
+            self.tables[t].push(code, id);
+        }
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Remove a point id (requires the vector it was inserted with).
+    /// Returns true if found in all tables — same contract as
+    /// [`LshTables::remove`].
+    pub fn remove(&mut self, id: u32, x: &[f32]) -> bool {
+        let mut found_everywhere = true;
+        for t in 0..self.tables.len() {
+            let code = self.hasher.code(t, x);
+            if !self.tables[t].remove_id(code, id) {
+                found_everywhere = false;
+            }
+        }
+        if found_everywhere && self.len > 0 {
+            self.len -= 1;
+        }
+        found_everywhere
+    }
+
+    /// Fold every table's overlay back into its arena (post-rebalance
+    /// compaction). Bucket order — and therefore the draw stream — is
+    /// unchanged.
+    pub fn compact(&mut self) {
+        for t in self.tables.iter_mut() {
+            t.compact();
+        }
+    }
+
+    /// Total ids currently living in delta overlays (diagnostics; 0 right
+    /// after `seal()`/`compact()`).
+    pub fn overlay_len(&self) -> usize {
+        self.tables.iter().map(|t| t.overlay_ids()).sum()
+    }
+
+    /// The bucket matching the query in table `t`.
+    pub fn query_bucket(&self, t: usize, query: &[f32]) -> BucketView<'_> {
+        let code = self.hasher.code(t, query);
+        self.tables[t].view(code)
+    }
+
+    /// Occupancy statistics — one O(non-empty) walk per table, like the
+    /// Vec layout (cheap enough to sample inside the training loop).
+    pub fn stats(&self) -> TableStats {
+        let mut buckets = 0usize;
+        let mut total = 0usize;
+        let mut max_bucket = 0usize;
+        let key_space = (1u64 << self.hasher.k()) as f64;
+        let mut occupancy_sum = 0.0f64;
+        for t in &self.tables {
+            let non_empty = t.for_each_bucket(|n| {
+                total += n;
+                max_bucket = max_bucket.max(n);
+            });
+            buckets += non_empty;
+            occupancy_sum += non_empty as f64 / key_space;
+        }
+        let occupancy = if self.tables.is_empty() {
+            0.0
+        } else {
+            occupancy_sum / self.tables.len() as f64
+        };
+        TableStats {
+            buckets,
+            mean_bucket: if buckets == 0 { 0.0 } else { total as f64 / buckets as f64 },
+            max_bucket,
+            occupancy,
+        }
+    }
+}
+
+impl<H: SrpHasher> BucketRead for SealedTables<H> {
+    type H = H;
+
+    fn hasher(&self) -> &H {
+        &self.hasher
+    }
+
+    #[inline]
+    fn view(&self, t: usize, code: u32) -> BucketView<'_> {
+        self.tables[t].view(code)
+    }
+}
+
+/// Either table layout behind one API — the field type of
+/// [`crate::coordinator::pipeline::ShardTables`] and the estimators, so the
+/// `lsh.sealed` knob can swap layouts without touching the draw logic.
+pub enum TableStore<H: SrpHasher> {
+    /// Vec-of-Vec buckets — the mutable build layout.
+    Vec(LshTables<H>),
+    /// CSR bucket arena + delta overlay — the draw-optimised layout.
+    Sealed(SealedTables<H>),
+}
+
+impl<H: SrpHasher> TableStore<H> {
+    /// Seal a Vec-backed store into the CSR arena (no-op when already
+    /// sealed).
+    pub fn seal(self) -> Self {
+        match self {
+            TableStore::Vec(t) => TableStore::Sealed(t.seal()),
+            sealed => sealed,
+        }
+    }
+
+    /// Is this the sealed layout?
+    pub fn is_sealed(&self) -> bool {
+        matches!(self, TableStore::Sealed(_))
+    }
+
+    /// Number of points stored.
+    pub fn len(&self) -> usize {
+        match self {
+            TableStore::Vec(t) => t.len(),
+            TableStore::Sealed(t) => t.len(),
+        }
+    }
+
+    /// True if no points are stored.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Insert a point id with its vector into every table.
+    pub fn insert(&mut self, id: u32, x: &[f32]) -> Result<()> {
+        match self {
+            TableStore::Vec(t) => t.insert(id, x),
+            TableStore::Sealed(t) => t.insert(id, x),
+        }
+    }
+
+    /// Remove a point id. Returns true if found in all tables.
+    pub fn remove(&mut self, id: u32, x: &[f32]) -> bool {
+        match self {
+            TableStore::Vec(t) => t.remove(id, x),
+            TableStore::Sealed(t) => t.remove(id, x),
+        }
+    }
+
+    /// Fold overlays back into the arena (no-op for the Vec layout).
+    pub fn compact(&mut self) {
+        if let TableStore::Sealed(t) = self {
+            t.compact();
+        }
+    }
+
+    /// Ids currently living in delta overlays (0 for the Vec layout and
+    /// for a freshly sealed/compacted arena).
+    pub fn overlay_len(&self) -> usize {
+        match self {
+            TableStore::Vec(_) => 0,
+            TableStore::Sealed(t) => t.overlay_len(),
+        }
+    }
+
+    /// Occupancy statistics.
+    pub fn stats(&self) -> TableStats {
+        match self {
+            TableStore::Vec(t) => t.stats(),
+            TableStore::Sealed(t) => t.stats(),
+        }
+    }
+
+    /// The bucket in table `t` under an explicit (shared, precomputed)
+    /// code — the estimator↔shard contract: the estimator hashes the query
+    /// once and every shard probes through this.
+    #[inline]
+    pub fn query_bucket_coded(&self, t: usize, code: u32) -> BucketView<'_> {
+        self.view(t, code)
+    }
+
+    /// The bucket matching `query` in table `t` (hashes the query for that
+    /// table — tests/diagnostics; the draw path uses precomputed codes).
+    pub fn query_bucket(&self, t: usize, query: &[f32]) -> BucketView<'_> {
+        let code = self.hasher().code(t, query);
+        self.view(t, code)
+    }
+}
+
+impl<H: SrpHasher> BucketRead for TableStore<H> {
+    type H = H;
+
+    fn hasher(&self) -> &H {
+        match self {
+            TableStore::Vec(t) => t.hasher(),
+            TableStore::Sealed(t) => t.hasher(),
+        }
+    }
+
+    #[inline]
+    fn view(&self, t: usize, code: u32) -> BucketView<'_> {
+        match self {
+            TableStore::Vec(inner) => inner.view(t, code),
+            TableStore::Sealed(inner) => inner.view(t, code),
+        }
     }
 }
 
@@ -438,5 +1029,145 @@ mod tests {
             let b = t.query_bucket(ti, &rows2[14]);
             assert!(b.contains(&14));
         }
+    }
+
+    /// Dense occupancy index: `non_empty` (and therefore `stats()`) stays
+    /// exact through interleaved inserts/removes — the incremental counter
+    /// must match a from-scratch recount at every step.
+    #[test]
+    fn prop_dense_occupancy_index_matches_recount() {
+        use crate::testkit::{gen, prop};
+        prop(25, |rng| {
+            let k = gen::size(rng, 2, 6);
+            let mut b = Buckets::new(k);
+            let mut reference: std::collections::HashMap<u32, Vec<u32>> =
+                std::collections::HashMap::new();
+            for id in 0..60u32 {
+                let code = rng.index(1 << k) as u32;
+                b.push(code, id);
+                reference.entry(code).or_default().push(id);
+            }
+            for id in 0..60u32 {
+                if rng.bernoulli(0.5) {
+                    let code = *reference
+                        .iter()
+                        .find(|(_, v)| v.contains(&id))
+                        .map(|(c, _)| c)
+                        .unwrap();
+                    assert!(b.remove_id(code, id));
+                    let v = reference.get_mut(&code).unwrap();
+                    v.retain(|&x| x != id);
+                    if v.is_empty() {
+                        reference.remove(&code);
+                    }
+                }
+                assert_eq!(b.non_empty(), reference.len(), "occupancy counter drifted");
+            }
+            let mut walked = 0usize;
+            b.for_each_bucket(|bucket| {
+                assert!(!bucket.is_empty(), "for_each_bucket visited an empty slot");
+                walked += 1;
+            });
+            assert_eq!(walked, reference.len());
+        });
+    }
+
+    /// `seal()` preserves every bucket's exact content order, and the
+    /// sealed `stats()` agree with the Vec layout's.
+    #[test]
+    fn seal_preserves_buckets_and_stats() {
+        let rows = unit_rows(80, 10, 31);
+        let h = DenseSrp::new(10, 4, 7, 32);
+        let t = LshTables::build(h.clone(), rows.iter().map(|r| r.as_slice())).unwrap();
+        let sealed = LshTables::build(h, rows.iter().map(|r| r.as_slice())).unwrap().seal();
+        assert_eq!(sealed.len(), t.len());
+        assert_eq!(sealed.overlay_len(), 0);
+        assert_eq!(sealed.stats(), t.stats());
+        for ti in 0..7 {
+            for code in 0..(1u32 << 4) {
+                assert_eq!(
+                    sealed.view(ti, code).to_vec(),
+                    t.bucket(ti, code).to_vec(),
+                    "table {ti} code {code}: sealed bucket diverged"
+                );
+            }
+        }
+    }
+
+    /// The delta overlay replays `Vec::swap_remove` semantics exactly:
+    /// after any interleaving of inserts and removes, every sealed bucket
+    /// equals the Vec-layout bucket *element for element* (order included —
+    /// the draw-for-draw requirement), and compaction at a random point
+    /// changes nothing but drains the overlay.
+    #[test]
+    fn prop_sealed_mutation_matches_vec_layout_exactly() {
+        use crate::testkit::{gen, prop};
+        prop(20, |rng| {
+            let n = gen::size(rng, 10, 50);
+            let d = gen::size(rng, 4, 8);
+            let k = gen::size(rng, 2, 4);
+            let l = gen::size(rng, 2, 6);
+            let rows: Vec<Vec<f32>> = (0..2 * n).map(|_| gen::unit_vec(rng, d)).collect();
+            let h = DenseSrp::new(d, k, l, rng.next_u64());
+            let mut vecs =
+                LshTables::build(h.clone(), rows[..n].iter().map(|r| r.as_slice())).unwrap();
+            let mut sealed =
+                LshTables::build(h, rows[..n].iter().map(|r| r.as_slice())).unwrap().seal();
+            let mut present: Vec<u32> = (0..n as u32).collect();
+            let mut absent: Vec<u32> = (n as u32..2 * n as u32).collect();
+            for step in 0..40 {
+                let do_insert = present.is_empty() || (!absent.is_empty() && rng.bernoulli(0.5));
+                if do_insert {
+                    let id = absent.swap_remove(rng.index(absent.len()));
+                    vecs.insert(id, &rows[id as usize]).unwrap();
+                    sealed.insert(id, &rows[id as usize]).unwrap();
+                    present.push(id);
+                } else {
+                    let id = present.swap_remove(rng.index(present.len()));
+                    assert!(vecs.remove(id, &rows[id as usize]));
+                    assert!(sealed.remove(id, &rows[id as usize]));
+                    absent.push(id);
+                }
+                if step == 20 {
+                    sealed.compact();
+                    assert_eq!(sealed.overlay_len(), 0, "compact must drain the overlay");
+                }
+                assert_eq!(sealed.len(), vecs.len());
+                for ti in 0..l {
+                    for code in 0..(1u32 << k) {
+                        assert_eq!(
+                            sealed.view(ti, code).to_vec(),
+                            vecs.bucket(ti, code).to_vec(),
+                            "step {step} table {ti} code {code}: order diverged"
+                        );
+                    }
+                }
+            }
+            assert_eq!(sealed.stats(), vecs.stats());
+        });
+    }
+
+    /// TableStore dispatch: seal round-trip, coded probe and mutation all
+    /// agree across the two layouts.
+    #[test]
+    fn table_store_layouts_agree() {
+        let rows = unit_rows(40, 8, 51);
+        let h = DenseSrp::new(8, 3, 5, 52);
+        let built = LshTables::build(h, rows.iter().map(|r| r.as_slice())).unwrap();
+        let mut store = TableStore::Vec(built);
+        assert!(!store.is_sealed());
+        let stats_vec = store.stats();
+        store = store.seal();
+        assert!(store.is_sealed());
+        assert_eq!(store.len(), 40);
+        assert_eq!(store.stats(), stats_vec);
+        assert!(store.remove(7, &rows[7]));
+        store.insert(7, &rows[7]).unwrap();
+        store.compact();
+        assert_eq!(store.len(), 40);
+        let hasher_code = store.hasher().code(2, &rows[3]);
+        let v = store.query_bucket_coded(2, hasher_code);
+        assert!(v.iter().any(|id| id == 3), "coded probe lost the point's own bucket");
+        assert_eq!(v.to_vec(), store.query_bucket(2, &rows[3]).to_vec());
     }
 }

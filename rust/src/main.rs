@@ -26,7 +26,7 @@ lgd — LSH-sampled Stochastic Gradient Descent (paper reproduction)
 
 USAGE:
   lgd train --config <run.toml> [--out <dir>] [--shards <n>]
-            [--rebalance-threshold <f>]
+            [--rebalance-threshold <f>] [--sealed <true|false>]
   lgd experiments --id <table4|fig9|fig10|fig11|fig12|fig13|variance|sampling|fig5|all>
                   [--scale <f>] [--out <dir>] [--seed <n>] [--quick] [--artifacts <dir>]
   lgd gen-data --name <yearmsd-like|slice-like|ujiindoor-like|pareto|uniform>
@@ -59,7 +59,7 @@ fn run(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    args.allow(&["config", "out", "shards", "rebalance-threshold"])?;
+    args.allow(&["config", "out", "shards", "rebalance-threshold", "sealed"])?;
     let cfg_path = args.require("config")?;
     let doc = TomlDoc::load(std::path::Path::new(&cfg_path))?;
     let mut cfg = RunConfig::from_toml(&doc)?;
@@ -77,6 +77,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.lsh.rebalance_threshold = args.f64_or("rebalance-threshold", 0.0)?;
         cfg.validate()?;
     }
+    // --sealed overrides the [lsh] sealed knob (CSR arena vs Vec buckets).
+    cfg.lsh.sealed = args.bool_or("sealed", cfg.lsh.sealed)?;
 
     // dataset
     let ds = build_dataset(&cfg.data.name, cfg.data.scale, cfg.data.seed)?;

@@ -12,6 +12,7 @@ use lgd::data::SynthSpec;
 use lgd::estimator::lgd::{LgdEstimator, LgdOptions};
 use lgd::estimator::{GradientEstimator, ShardedLgdEstimator};
 use lgd::lsh::srp::DenseSrp;
+use lgd::lsh::tables::BucketRead;
 use lgd::model::{LinReg, Model};
 use lgd::optim::Schedule;
 use lgd::testkit::{gen, prop};
@@ -118,18 +119,26 @@ fn streaming_sharded_matches_batch_draw_for_draw() {
 /// buckets — all show up as frequency/probability mismatches here.
 #[test]
 fn mixture_probabilities_exact_under_mutation() {
+    mixture_gate(false);
+}
+
+/// The same Theorem-1 gate against the **sealed** CSR-arena layout — the
+/// one that actually serves draws by default — so exactness is enforced on
+/// the arena + delta-overlay + compaction path, not just the Vec layout.
+#[test]
+fn mixture_probabilities_exact_under_mutation_sealed() {
+    mixture_gate(true);
+}
+
+fn mixture_gate(sealed: bool) {
     let n = 180usize;
     let ds = SynthSpec::power_law("mix", n, 8, 91).generate().unwrap();
     let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
     let hd = pre.hashed.cols();
-    let mut est = ShardedLgdEstimator::new(
-        &pre,
-        DenseSrp::new(hd, 3, 12, 93),
-        95,
-        LgdOptions::default(),
-        3,
-    )
-    .unwrap();
+    let opts = LgdOptions { sealed, ..LgdOptions::default() };
+    let mut est =
+        ShardedLgdEstimator::new(&pre, DenseSrp::new(hd, 3, 12, 93), 95, opts, 3).unwrap();
+    assert_eq!(est.shard_set().shard(0).tables.is_sealed(), sealed);
     // scripted stream: evict a block, re-admit some (least-loaded routing),
     // force a skewed burst into shard 0 under an auto-rebalance threshold,
     // then rebalance fully by hand
@@ -169,7 +178,7 @@ fn mixture_probabilities_exact_under_mutation() {
                     continue;
                 }
                 let w = frac / (nonempty as f64 * b.len() as f64);
-                for &local in b {
+                for local in b.iter() {
                     let row = st.rows[local as usize] as usize;
                     let ex = if row >= n { row - n } else { row };
                     p[ex] += w;
