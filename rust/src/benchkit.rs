@@ -179,6 +179,60 @@ impl Bench {
     }
 }
 
+/// Outcome of a counter-regression diff between a freshly emitted bench
+/// JSON and a committed baseline (see [`gate_counters`]).
+#[derive(Debug, Default)]
+pub struct GateOutcome {
+    /// Work counters present in both files and gated.
+    pub compared: usize,
+    /// Counters present in both but advisory (timing-/machine-dependent).
+    pub advisory: usize,
+    /// Baseline counters missing from the fresh file (renamed/retired).
+    pub skipped: usize,
+    /// Human-readable regression descriptions; empty = gate passes.
+    pub failures: Vec<String>,
+}
+
+/// Timing-/machine-dependent counters: reported but never gating. Work
+/// counters (mults/draw, probes/draw, fused invocations/batch, …) stay
+/// deterministic under fixed seeds, so they gate.
+fn advisory_counter(name: &str) -> bool {
+    ["per_sec", "rate", "secs", "_ns", "stall", "hit", "throughput"]
+        .iter()
+        .any(|t| name.contains(t))
+}
+
+/// Diff `fresh` against `baseline`: every *work* counter present in both
+/// `counters` maps must not regress — lower is better, within `tol`
+/// relative tolerance, and an exactly-zero baseline (e.g. "per-row code()
+/// calls on the draw path") must stay zero. Timing rows are ignored and
+/// advisory counters never fail the gate; baseline counters absent from
+/// the fresh file are skipped (reported), so analytic-seed baselines and
+/// measured runs interoperate.
+pub fn gate_counters(fresh: &Json, baseline: &Json, tol: f64) -> GateOutcome {
+    let mut out = GateOutcome::default();
+    let empty = BTreeMap::new();
+    let base = baseline.get("counters").and_then(|c| c.as_obj()).unwrap_or(&empty);
+    let new = fresh.get("counters").and_then(|c| c.as_obj()).unwrap_or(&empty);
+    for (name, bv) in base {
+        let Some(b) = bv.as_f64() else { continue };
+        let Some(f) = new.get(name).and_then(|v| v.as_f64()) else {
+            out.skipped += 1;
+            continue;
+        };
+        if advisory_counter(name) {
+            out.advisory += 1;
+            continue;
+        }
+        out.compared += 1;
+        let limit = if b == 0.0 { 1e-9 } else { b * (1.0 + tol) + 1e-9 };
+        if f > limit {
+            out.failures.push(format!("{name}: fresh {f} exceeds baseline {b} (tol {tol})"));
+        }
+    }
+    out
+}
+
 /// Where a bench group's JSON report lands: `$LGD_BENCH_DIR` when set (CI
 /// artifact staging), else the repository root — benches run with the
 /// package directory as CWD, so this resolves the manifest dir's parent.
@@ -238,6 +292,38 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(crate::config::json::Json::parse(text.trim()).is_ok());
         std::env::remove_var("LGD_BENCH_DIR");
+    }
+
+    #[test]
+    fn counter_gate_flags_only_real_regressions() {
+        let baseline = Json::parse(
+            r#"{"group":"g","counters":{"mults_per_draw":100.0,"probes_per_draw":1.25,
+                "per_row_code_calls":0,"draws_per_sec_sync":5000.0,"queue_stalls_async":9,
+                "retired_counter":7}}"#,
+        )
+        .unwrap();
+        // within tolerance + advisory blowups + retired counter: passes
+        let ok = Json::parse(
+            r#"{"group":"g","counters":{"mults_per_draw":105.0,"probes_per_draw":1.25,
+                "per_row_code_calls":0,"draws_per_sec_sync":1.0,"queue_stalls_async":99999}}"#,
+        )
+        .unwrap();
+        let out = gate_counters(&ok, &baseline, 0.1);
+        assert!(out.failures.is_empty(), "{:?}", out.failures);
+        assert_eq!(out.compared, 3, "three work counters gate");
+        assert_eq!(out.advisory, 2, "per_sec + stall counters are advisory");
+        assert_eq!(out.skipped, 1, "retired counter skipped");
+        // a work-counter regression fails: more mults/draw and a formerly
+        // zero counter going nonzero
+        let bad = Json::parse(
+            r#"{"group":"g","counters":{"mults_per_draw":150.0,"probes_per_draw":1.25,
+                "per_row_code_calls":4}}"#,
+        )
+        .unwrap();
+        let out = gate_counters(&bad, &baseline, 0.1);
+        assert_eq!(out.failures.len(), 2, "{:?}", out.failures);
+        assert!(out.failures.iter().any(|f| f.contains("mults_per_draw")));
+        assert!(out.failures.iter().any(|f| f.contains("per_row_code_calls")));
     }
 
     #[test]

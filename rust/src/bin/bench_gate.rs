@@ -1,0 +1,62 @@
+//! `bench_gate` — the bench-counter regression gate.
+//!
+//! Diffs a freshly emitted `BENCH_*.json` perf-trajectory file against the
+//! committed baseline and fails (exit 1) when a *work* counter regressed:
+//! mults/draw, probes/draw, fused hash invocations/batch and friends are
+//! deterministic under fixed seeds, so "more work per draw" is a real
+//! regression, not noise. Timing rows and advisory counters (draws/sec,
+//! stall/hit counts, anything machine-dependent) are reported but never
+//! gate. CI stashes the committed baselines before the bench smoke
+//! overwrites them, then runs:
+//!
+//! ```text
+//! bench_gate --fresh BENCH_sampling.json --baseline /tmp/baseline_sampling.json
+//! ```
+
+use std::path::Path;
+use std::process::exit;
+
+use lgd::benchkit::gate_counters;
+use lgd::cli::Args;
+use lgd::config::json::Json;
+use lgd::core::error::{Error, Result};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(true) => {}
+        Ok(false) => exit(1),
+        Err(e) => {
+            eprintln!("error: {e}");
+            exit(2);
+        }
+    }
+}
+
+fn load(path: &str) -> Result<Json> {
+    let text = std::fs::read_to_string(Path::new(path))
+        .map_err(|e| Error::Io(format!("{path}: {e}")))?;
+    Json::parse(text.trim())
+}
+
+fn run(argv: &[String]) -> Result<bool> {
+    let args = Args::parse(argv)?;
+    args.allow(&["fresh", "baseline", "tolerance"])?;
+    let fresh_path = args.require("fresh")?;
+    let base_path = args.require("baseline")?;
+    let tol = args.f64_or("tolerance", 0.1)?;
+    let fresh = load(&fresh_path)?;
+    let baseline = load(&base_path)?;
+    let out = gate_counters(&fresh, &baseline, tol);
+    println!(
+        "bench_gate {fresh_path} vs {base_path}: {} gated, {} advisory, {} skipped",
+        out.compared, out.advisory, out.skipped
+    );
+    for f in &out.failures {
+        println!("REGRESSION {f}");
+    }
+    if out.failures.is_empty() {
+        println!("counter gate OK (timing rows advisory)");
+    }
+    Ok(out.failures.is_empty())
+}

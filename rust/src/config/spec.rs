@@ -89,6 +89,20 @@ pub struct LshConfig {
     /// identical to the Vec layout under the same seed — default on;
     /// `sealed = false` A/Bs the layouts.
     pub sealed: bool,
+    /// Async pipelined draw engine (`coordinator::draw_engine`): 0 =
+    /// synchronous draws (default — byte-identical to the pre-engine
+    /// behavior), 1 = one pipelined sampler thread whose stream is
+    /// draw-for-draw identical to the synchronous path, >= 2 = one
+    /// dedicated sampler worker per shard feeding bounded candidate
+    /// queues, mixed into exact shard-mixture batches while the trainer's
+    /// gradient step runs. Note the knob selects a *mode*, not a thread
+    /// count: every value >= 2 is equivalent — sampler parallelism tracks
+    /// the shard count (each shard's queue has a single writer).
+    pub async_workers: usize,
+    /// Bound on the engine's pre-drawn work, in draws (per-shard candidate
+    /// queue capacity; assembled batches are capped at `queue_depth /
+    /// batch`). Must be >= 1; irrelevant when `async_workers = 0`.
+    pub queue_depth: usize,
 }
 
 impl Default for LshConfig {
@@ -123,6 +137,8 @@ impl Default for LshConfig {
             shards: 1,
             rebalance_threshold: 0.0,
             sealed: true,
+            async_workers: 0,
+            queue_depth: 1024,
         }
     }
 }
@@ -236,6 +252,9 @@ impl RunConfig {
         cfg.lsh.rebalance_threshold =
             doc.float_or("lsh", "rebalance_threshold", cfg.lsh.rebalance_threshold)?;
         cfg.lsh.sealed = doc.bool_or("lsh", "sealed", cfg.lsh.sealed)?;
+        cfg.lsh.async_workers =
+            doc.int_or("lsh", "async_workers", cfg.lsh.async_workers as i64)? as usize;
+        cfg.lsh.queue_depth = doc.int_or("lsh", "queue_depth", cfg.lsh.queue_depth as i64)? as usize;
         cfg.lsh.hasher = match doc.str_or("lsh", "hasher", "dense")?.as_str() {
             "dense" => HasherKind::Dense,
             "sparse" => HasherKind::Sparse,
@@ -320,6 +339,18 @@ impl RunConfig {
                     .into(),
             ));
         }
+        if self.lsh.async_workers > 1024 {
+            return Err(Error::Config(format!(
+                "lsh.async_workers = {} out of 0..=1024",
+                self.lsh.async_workers
+            )));
+        }
+        if self.lsh.queue_depth == 0 || self.lsh.queue_depth > (1 << 20) {
+            return Err(Error::Config(format!(
+                "lsh.queue_depth = {} out of 1..=2^20",
+                self.lsh.queue_depth
+            )));
+        }
         if self.train.epochs == 0 || self.train.batch == 0 {
             return Err(Error::Config("train.epochs and train.batch must be positive".into()));
         }
@@ -355,6 +386,8 @@ mod tests {
         assert_eq!(cfg.lsh.shards, 1, "sharding is opt-in");
         assert_eq!(cfg.lsh.rebalance_threshold, 0.0, "rebalancing is opt-in");
         assert!(cfg.lsh.sealed, "the CSR arena serves draws by default");
+        assert_eq!(cfg.lsh.async_workers, 0, "async serving is opt-in");
+        assert_eq!(cfg.lsh.queue_depth, 1024);
         assert_eq!(cfg.train.estimator, EstimatorKind::Lgd);
         assert_eq!(cfg.train.backend, Backend::Native);
     }
@@ -376,6 +409,8 @@ weight_clip = 8.0
 shards = 4
 rebalance_threshold = 1.5
 sealed = false
+async_workers = 4
+queue_depth = 256
 [train]
 estimator = "sgd"
 optimizer = "adagrad"
@@ -397,6 +432,8 @@ backend = "pjrt"
         assert_eq!(cfg.lsh.shards, 4);
         assert_eq!(cfg.lsh.rebalance_threshold, 1.5);
         assert!(!cfg.lsh.sealed);
+        assert_eq!(cfg.lsh.async_workers, 4);
+        assert_eq!(cfg.lsh.queue_depth, 256);
         assert_eq!(cfg.train.estimator, EstimatorKind::Sgd);
         assert_eq!(cfg.train.optimizer, OptimizerKind::AdaGrad);
         assert!(matches!(cfg.train.schedule, Schedule::Exp { .. }));
@@ -414,6 +451,8 @@ backend = "pjrt"
             "[lsh]\nshards = 4\nrebalance_threshold = 0.5",
             "[lsh]\nshards = 4\nrebalance_threshold = -1.0",
             "[lsh]\nrebalance_threshold = 1.5",
+            "[lsh]\nqueue_depth = 0",
+            "[lsh]\nasync_workers = 2000",
             "[train]\nepochs = 0",
             "[train]\nestimator = \"bogus\"",
             "[train]\nlr = -0.1",

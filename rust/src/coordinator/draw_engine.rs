@@ -1,0 +1,729 @@
+//! Asynchronous pipelined draw engine: per-shard sampler workers, bounded
+//! draw queues, and overlap of sampling with gradient compute.
+//!
+//! The paper's wall-clock argument (§2.2) needs the sampler to cost no more
+//! per iteration than uniform sampling. The synchronous
+//! [`ShardedLgdEstimator`] already makes each draw cheap, but the trainer
+//! still *stalls* on every `draw_batch` while shards probe on the caller's
+//! thread. This module retires that stall: a session pins the shard set,
+//! hashes the query **once** (fused `codes_all`), and keeps bounded queues
+//! of pre-drawn candidates warm so the next batch is (usually) ready the
+//! moment the previous gradient step finishes.
+//!
+//! Two worker modes, selected by [`DrawEngineConfig::workers`]:
+//!
+//! * `workers == 1` — **replay mode**: one sampler thread runs the *exact*
+//!   synchronous batch algorithm ([`mixture_draw_batch`], the same function
+//!   `draw_batch` delegates to) against the estimator's own RNG, pushing
+//!   assembled batches into a bounded queue. The draw stream is identical
+//!   to the synchronous path draw-for-draw by construction (tested), and
+//!   the RNG is handed back so synchronous draws can continue the stream
+//!   seamlessly after the session.
+//! * `workers >= 2` — **per-shard mode**: every non-empty shard gets a
+//!   dedicated sampler worker that continuously pre-draws Algorithm-1
+//!   candidates through the sealed/coded fast path into its own bounded
+//!   ring buffer (its RNG stream is derived per shard, so the assembled
+//!   stream is deterministic under a fixed seed regardless of thread
+//!   timing). A mixer thread assembles exact shard-mixture batches: each
+//!   draw picks a shard `∝ R_s` (the multinomial allocation), pops that
+//!   shard's next candidate, and attaches the exact mixture probability
+//!   `p = (R_s/R)·p_shard` — Theorem-1 unbiasedness is preserved
+//!   draw-for-draw, and the 50k-draw statistical gate runs against this
+//!   path in CI (`mixture_probabilities_exact_async`).
+//!
+//! **Staleness contract.** Candidates are tagged with the shard set's
+//! [`generation`](crate::coordinator::pipeline::ShardSet::generation) at
+//! draw time; the mixer refuses to serve a candidate from an older
+//! generation. Sessions borrow the estimator mutably, so mutations
+//! (`insert`/`remove`/`rebalance_to`) can only happen *between* sessions —
+//! each session boundary is a queue flush plus a fused re-hash of the
+//! (possibly new) query, and the generation tag makes the "never serve
+//! dead rows" invariant checkable end-to-end rather than merely implied by
+//! the borrow checker.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::thread;
+
+use crate::coordinator::pipeline::ShardSet;
+use crate::core::error::{Error, Result};
+use crate::core::rng::{Pcg64, Rng};
+use crate::estimator::lgd::LgdOptions;
+use crate::estimator::sharded::{
+    mixture_draw_batch, mixture_weigh, shard_sampler, uniform_fallback_from,
+    ShardedLgdEstimator,
+};
+use crate::estimator::{EstimatorStats, WeightedDraw};
+use crate::lsh::sampler::{SampleCost, Sampled};
+use crate::lsh::srp::SrpHasher;
+use crate::lsh::tables::BucketRead;
+
+/// Tuning knobs of the async draw engine (`lsh.async_workers`,
+/// `lsh.queue_depth`).
+#[derive(Debug, Clone)]
+pub struct DrawEngineConfig {
+    /// Sampler parallelism. 0 is *not* valid here — it selects the
+    /// synchronous path upstream and [`run_session`] rejects it. 1 =
+    /// replay mode (single sampler thread, stream identical to the
+    /// synchronous path); >= 2 = one dedicated worker per non-empty shard.
+    pub workers: usize,
+    /// Bound on pre-drawn work, measured in draws: each per-shard
+    /// candidate queue holds at most this many candidates, and at most
+    /// `max(1, queue_depth / m)` assembled batches wait for the consumer.
+    pub queue_depth: usize,
+}
+
+impl Default for DrawEngineConfig {
+    fn default() -> Self {
+        DrawEngineConfig { workers: 1, queue_depth: 1024 }
+    }
+}
+
+/// What one [`run_session`] did.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SessionReport {
+    /// Batches delivered to the consumer.
+    pub batches: usize,
+    /// Draws assembled by the sampling side (>= batches · m when the
+    /// consumer bailed early; prefetch keeps running until shutdown).
+    pub draws: u64,
+    /// Batches that were ready the moment the consumer asked.
+    pub prefetch_hits: u64,
+    /// Batch requests that had to wait on an empty queue.
+    pub queue_stalls: u64,
+    /// Candidates discarded because their generation tag was stale
+    /// (structurally 0 while sessions hold the estimator borrow; the
+    /// counter exists so the invariant is *observed*, not assumed).
+    pub stale_drops: u64,
+    /// Effective sampler worker threads the session ran.
+    pub workers: usize,
+    /// Shard-set generation the session served.
+    pub generation: u64,
+}
+
+/// Bounded MPSC ring buffer on `Mutex` + `Condvar` — the zero-dep draw
+/// queue of the engine. Blocking `push`/`pop` with close semantics, plus
+/// hit/stall counters on the pop side (did the consumer wait?).
+pub struct DrawQueue<T> {
+    inner: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+struct QueueState<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+    hits: u64,
+    stalls: u64,
+}
+
+impl<T> DrawQueue<T> {
+    /// New queue holding at most `cap` items (floored at 1).
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        DrawQueue {
+            inner: Mutex::new(QueueState {
+                buf: VecDeque::with_capacity(cap),
+                cap,
+                closed: false,
+                hits: 0,
+                stalls: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Blocking push. Returns false (dropping `v`) if the queue is closed.
+    pub fn push(&self, v: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        while g.buf.len() >= g.cap && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.buf.push_back(v);
+        drop(g);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop. Returns `None` once the queue is closed *and*
+    /// drained. Counts a prefetch hit when an item was already waiting and
+    /// a stall when this call had to block first.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        let mut waited = false;
+        loop {
+            if let Some(v) = g.buf.pop_front() {
+                if waited {
+                    g.stalls += 1;
+                } else {
+                    g.hits += 1;
+                }
+                drop(g);
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if g.closed {
+                return None;
+            }
+            waited = true;
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue: producers' `push` returns false, consumers drain
+    /// the buffer then get `None`. Idempotent.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Items currently buffered.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    /// True when nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (prefetch hits, stalls) observed on the pop side so far.
+    pub fn counters(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.hits, g.stalls)
+    }
+}
+
+/// Closes a queue when dropped — shutdown stays correct on every exit
+/// path, including panics in the consumer's callback or the mixer.
+struct CloseGuard<'q, T>(&'q DrawQueue<T>);
+
+impl<T> Drop for CloseGuard<'_, T> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// One pre-drawn Algorithm-1 candidate from a shard worker.
+struct Candidate {
+    gen: u64,
+    res: Sampled,
+}
+
+/// One assembled shard-mixture batch.
+struct TaggedBatch {
+    gen: u64,
+    draws: Vec<WeightedDraw>,
+}
+
+/// Serve one mixture draw from shard `s`'s pre-drawn candidate stream:
+/// pop the next live-generation candidate (stale tags are dropped and
+/// counted, never served) and attach the exact mixture probability
+/// `p = (R_s/R)·p_shard`; an exhausted probe — or a dead worker — becomes
+/// the same membership-aware uniform fallback as the synchronous path.
+#[allow(clippy::too_many_arguments)]
+fn serve_candidate<H: SrpHasher>(
+    set: &ShardSet<H>,
+    opts: &LgdOptions,
+    n: usize,
+    s: usize,
+    gen: u64,
+    q: &DrawQueue<Candidate>,
+    rng: &mut Pcg64,
+    st: &mut EstimatorStats,
+    stale: &mut u64,
+) -> WeightedDraw {
+    let res = loop {
+        match q.pop() {
+            Some(c) if c.gen == gen => break Some(c.res),
+            Some(_) => *stale += 1,
+            None => break None,
+        }
+    };
+    match res {
+        Some(Sampled::Hit(d)) => mixture_weigh(set, s, &d, opts, n),
+        Some(Sampled::Exhausted { .. }) | None => {
+            uniform_fallback_from(set, n, rng, &mut st.fallbacks)
+        }
+    }
+}
+
+/// Pop batches off `q` and hand them to the consumer callback until
+/// `steps` batches were delivered, the callback asks to stop, or the
+/// producing side died. Closes `q` on every exit path (unblocking
+/// producers) and returns the number of batches consumed.
+fn consume_batches<F>(
+    q: &DrawQueue<TaggedBatch>,
+    gen: u64,
+    steps: usize,
+    on_batch: &mut F,
+) -> usize
+where
+    F: FnMut(usize, &[WeightedDraw]) -> bool,
+{
+    let guard = CloseGuard(q);
+    let mut consumed = 0usize;
+    for step in 0..steps {
+        match q.pop() {
+            Some(b) => {
+                debug_assert_eq!(b.gen, gen, "stale batch crossed a session boundary");
+                let go = on_batch(step, &b.draws);
+                consumed += 1;
+                if !go {
+                    break;
+                }
+            }
+            None => break,
+        }
+    }
+    drop(guard);
+    consumed
+}
+
+/// Run one pipelined serving session: `steps` batches of `m` draws against
+/// the query built from `theta`, assembled ahead of the consumer by the
+/// engine's sampler threads. `on_batch(step, draws)` runs on the calling
+/// thread — while it computes (the gradient step, in the trainer), the
+/// next batch is already being assembled. Return `false` from the callback
+/// to stop early.
+///
+/// The query is frozen for the whole session (hashed once, fused); the
+/// estimator's RNG and counters are taken over for the session and handed
+/// back merged, so `est.stats()` stays exact — per-worker costs are
+/// accumulated locally and merged on join, never racing. With
+/// `cfg.workers == 1` the delivered stream is draw-for-draw identical to
+/// calling the synchronous `draw_batch` the same number of times.
+///
+/// **Early-stop caveat:** the stream/RNG-continuation guarantees hold for
+/// *fully consumed* sessions (the normal case — the trainer stops early
+/// only when aborting on an error). After a callback-initiated stop, the
+/// sampler side may have assembled up to a queue's worth of extra batches
+/// before noticing the close; the handed-back RNG position and the draw
+/// counters reflect all *assembled* work, which can depend on thread
+/// timing. `SessionReport::draws` vs `batches · m` exposes the overshoot.
+pub fn run_session<H, F>(
+    est: &mut ShardedLgdEstimator<'_, H>,
+    cfg: &DrawEngineConfig,
+    theta: &[f32],
+    m: usize,
+    steps: usize,
+    mut on_batch: F,
+) -> Result<SessionReport>
+where
+    H: SrpHasher,
+    F: FnMut(usize, &[WeightedDraw]) -> bool,
+{
+    if cfg.workers == 0 {
+        return Err(Error::Config(
+            "draw engine needs async workers >= 1 (0 selects the synchronous path)".into(),
+        ));
+    }
+    if m == 0 || steps == 0 {
+        return Ok(SessionReport::default());
+    }
+    let parts = est.engine_parts();
+    let set = parts.set;
+    let opts = &parts.opts;
+    let n = parts.pre.data.len();
+    let gen = set.generation();
+
+    // Fused query hash, once per session — every worker probes through
+    // these codes; no thread ever re-hashes. A drained set skips the hash
+    // (the mixer serves membership-aware uniform fallbacks instead).
+    let mut query = Vec::new();
+    let mut codes = Vec::new();
+    let mut session_cost = SampleCost::default();
+    if set.total_rows() > 0 {
+        parts.pre.query(theta, &mut query);
+        let hasher = set.shard(0).tables.hasher();
+        hasher.codes_all(&query, &mut codes);
+        session_cost.codes += hasher.l();
+        session_cost.mults += hasher.mults_all();
+    }
+    let query = &query;
+    let codes = &codes;
+
+    let batch_depth = (cfg.queue_depth / m).max(1);
+    let batch_q: DrawQueue<TaggedBatch> = DrawQueue::new(batch_depth);
+
+    let report = if cfg.workers == 1 {
+        // --- Replay mode: one sampler thread, the exact sync stream. ---
+        let prod_rng = parts.rng.clone();
+        let (prod_res, consumed) = thread::scope(|scope| {
+            let q = &batch_q;
+            let producer = scope.spawn(move || {
+                let _guard = CloseGuard(q);
+                let mut rng = prod_rng;
+                let mut st = EstimatorStats::default();
+                let mut scratch = Vec::new();
+                for _ in 0..steps {
+                    let mut out = Vec::with_capacity(m);
+                    mixture_draw_batch(
+                        set,
+                        n,
+                        opts,
+                        codes,
+                        query,
+                        m,
+                        &mut rng,
+                        &mut st,
+                        &mut scratch,
+                        &mut out,
+                    );
+                    if !q.push(TaggedBatch { gen, draws: out }) {
+                        break;
+                    }
+                }
+                (rng, st)
+            });
+            let consumed = consume_batches(&batch_q, gen, steps, &mut on_batch);
+            (producer.join(), consumed)
+        });
+        let (rng_back, prod_stats) =
+            prod_res.map_err(|_| Error::Pipeline("draw-engine sampler thread panicked".into()))?;
+        *parts.rng = rng_back;
+        let draws = prod_stats.draws;
+        parts.stats.merge_draws(&prod_stats);
+        SessionReport { batches: consumed, draws, stale_drops: 0, workers: 1, ..Default::default() }
+    } else {
+        // --- Per-shard mode: a dedicated sampler worker per non-empty
+        // shard feeds its own bounded queue; the mixer multinomially
+        // assembles exact mixture batches from the queues. ---
+        let session_seed = parts.rng.next_u64();
+        let mixer_rng = parts.rng.clone();
+        let shard_count = set.shard_count();
+        // Per-shard candidate capacity: the configured bound, but never
+        // more than the whole session's demand — workers free-run until
+        // their queue closes, so the capacity is also the bound on
+        // over-drawn (wasted) candidates per shard at session end.
+        let cand_cap = cfg.queue_depth.min(steps * m);
+        let cand_qs: Vec<DrawQueue<Candidate>> =
+            (0..shard_count).map(|_| DrawQueue::new(cand_cap)).collect();
+        let cand_qs = &cand_qs;
+        let (mixer_res, worker_res, consumed) = thread::scope(|scope| {
+            let bq = &batch_q;
+            let mut workers = Vec::new();
+            for s in 0..shard_count {
+                if set.shard(s).stored.rows() == 0 {
+                    continue;
+                }
+                workers.push(scope.spawn(move || {
+                    let _guard = CloseGuard(&cand_qs[s]);
+                    let sampler = shard_sampler(set.shard(s), opts);
+                    // Per-shard RNG stream derived from (session, shard):
+                    // candidate streams — and therefore the assembled
+                    // mixture — are deterministic under a fixed seed no
+                    // matter how threads interleave or how many workers
+                    // the knob requested.
+                    let mut rng = Pcg64::new(session_seed, 0x5748_5244 ^ s as u64);
+                    let mut cost = SampleCost::default();
+                    loop {
+                        let res = sampler.sample_coded(codes, query, &mut rng, &mut cost);
+                        if !cand_qs[s].push(Candidate { gen, res }) {
+                            break;
+                        }
+                    }
+                    cost
+                }));
+            }
+            let mixer = scope.spawn(move || {
+                let _bguard = CloseGuard(bq);
+                let cguards: Vec<CloseGuard<'_, Candidate>> =
+                    cand_qs.iter().map(CloseGuard).collect();
+                let mut rng = mixer_rng;
+                let mut st = EstimatorStats::default();
+                let mut stale = 0u64;
+                for _ in 0..steps {
+                    let mut out = Vec::with_capacity(m);
+                    for _ in 0..m {
+                        if set.total_rows() == 0 {
+                            out.push(uniform_fallback_from(set, n, &mut rng, &mut st.fallbacks));
+                            continue;
+                        }
+                        // Multinomial shard pick ∝ stored rows — the same
+                        // allocation rule as the synchronous mixture.
+                        let s = if shard_count > 1 {
+                            let r = rng.index(set.total_rows());
+                            st.cost.randoms += 1;
+                            set.shard_of_row(r)
+                        } else {
+                            0
+                        };
+                        let d = serve_candidate(
+                            set, opts, n, s, gen, &cand_qs[s], &mut rng, &mut st, &mut stale,
+                        );
+                        out.push(d);
+                    }
+                    st.draws += m as u64;
+                    if !bq.push(TaggedBatch { gen, draws: out }) {
+                        break;
+                    }
+                }
+                drop(cguards);
+                (rng, st, stale)
+            });
+            let consumed = consume_batches(&batch_q, gen, steps, &mut on_batch);
+            let mixer_res = mixer.join();
+            let worker_res: Vec<thread::Result<SampleCost>> =
+                workers.into_iter().map(|w| w.join()).collect();
+            (mixer_res, worker_res, consumed)
+        });
+        let (rng_back, mixer_stats, stale) =
+            mixer_res.map_err(|_| Error::Pipeline("draw-engine mixer thread panicked".into()))?;
+        *parts.rng = rng_back;
+        let mut spawned = 0usize;
+        let mut prefetch_cost = SampleCost::default();
+        for r in worker_res {
+            let c = r.map_err(|_| Error::Pipeline("draw-engine shard worker panicked".into()))?;
+            prefetch_cost.absorb(&c);
+            spawned += 1;
+        }
+        let draws = mixer_stats.draws;
+        parts.stats.merge_draws(&mixer_stats);
+        // Prefetch work (including over-drawn candidates the session never
+        // consumed) is real sampling cost — merged per worker, no racing.
+        parts.stats.cost.absorb(&prefetch_cost);
+        SessionReport {
+            batches: consumed,
+            draws,
+            stale_drops: stale,
+            workers: spawned,
+            ..Default::default()
+        }
+    };
+
+    parts.stats.cost.absorb(&session_cost);
+    let (hits, stalls) = batch_q.counters();
+    parts.stats.prefetch_hits += hits;
+    parts.stats.queue_stalls += stalls;
+    Ok(SessionReport { prefetch_hits: hits, queue_stalls: stalls, generation: gen, ..report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::preprocess::{preprocess, Preprocessed, PreprocessOptions};
+    use crate::data::synth::SynthSpec;
+    use crate::estimator::lgd::LgdOptions;
+    use crate::estimator::GradientEstimator;
+    use crate::lsh::srp::DenseSrp;
+
+    fn setup(n: usize, d: usize, seed: u64) -> Preprocessed {
+        let ds = SynthSpec::power_law("ae", n, d, seed).generate().unwrap();
+        preprocess(ds, &PreprocessOptions::default()).unwrap()
+    }
+
+    fn mk(pre: &Preprocessed, shards: usize) -> ShardedLgdEstimator<'_, DenseSrp> {
+        let hd = pre.hashed.cols();
+        let h = DenseSrp::new(hd, 3, 12, 101);
+        ShardedLgdEstimator::new(pre, h, 103, LgdOptions::default(), shards).unwrap()
+    }
+
+    #[test]
+    fn queue_is_fifo_bounded_and_closable() {
+        let q: DrawQueue<u32> = DrawQueue::new(4);
+        assert!(q.is_empty());
+        for i in 0..4 {
+            assert!(q.push(i));
+        }
+        assert_eq!(q.len(), 4);
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i), "FIFO order");
+        }
+        assert!(q.push(9));
+        q.close();
+        assert!(!q.push(10), "push after close must fail");
+        assert_eq!(q.pop(), Some(9), "close drains buffered items first");
+        assert_eq!(q.pop(), None);
+        let (hits, stalls) = q.counters();
+        assert_eq!(hits + stalls, 5, "every successful pop is a hit or a stall");
+    }
+
+    #[test]
+    fn queue_capacity_blocks_producer_until_popped() {
+        let q: DrawQueue<u32> = DrawQueue::new(1);
+        thread::scope(|scope| {
+            let h = scope.spawn(|| {
+                // second push blocks until the main thread pops
+                assert!(q.push(1));
+                assert!(q.push(2));
+            });
+            assert_eq!(q.pop(), Some(1));
+            assert_eq!(q.pop(), Some(2));
+            h.join().unwrap();
+        });
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn zero_workers_is_rejected() {
+        let pre = setup(60, 6, 7);
+        let mut est = mk(&pre, 2);
+        let cfg = DrawEngineConfig { workers: 0, queue_depth: 8 };
+        assert!(run_session(&mut est, &cfg, &[0.1; 6], 8, 2, |_, _| true).is_err());
+    }
+
+    /// The determinism gate: with a fixed seed and `workers = 1`, the
+    /// async engine's draw stream is identical to the synchronous
+    /// `draw_batch` stream — and the RNG hand-back means synchronous draws
+    /// continue the very same stream after the session.
+    #[test]
+    fn async_single_worker_matches_sync_draw_stream() {
+        let pre = setup(240, 8, 31);
+        let mut sync = mk(&pre, 3);
+        let mut async_ = mk(&pre, 3);
+        let theta: Vec<f32> = (0..8).map(|j| 0.03 * (j as f32 - 3.0)).collect();
+        let (m, steps) = (32usize, 6usize);
+        let mut want = Vec::new();
+        let mut got = Vec::new();
+        let mut out = Vec::new();
+        for _ in 0..steps {
+            sync.draw_batch(&theta, m, &mut out);
+            want.extend(out.iter().copied());
+        }
+        let cfg = DrawEngineConfig { workers: 1, queue_depth: 64 };
+        let rep = run_session(&mut async_, &cfg, &theta, m, steps, |_, draws| {
+            got.extend(draws.iter().copied());
+            true
+        })
+        .unwrap();
+        assert_eq!(rep.batches, steps);
+        assert_eq!(rep.draws, (m * steps) as u64);
+        assert_eq!(rep.workers, 1);
+        assert_eq!(want, got, "async workers=1 must replay the sync stream");
+        // cost parity (the multi-thread counter satellite): randoms,
+        // probes, fallbacks and draws all match the sequential path; only
+        // hashing differs (once per session vs once per batch — the win).
+        let (ss, aa) = (sync.stats(), async_.stats());
+        assert_eq!(ss.draws, aa.draws);
+        assert_eq!(ss.fallbacks, aa.fallbacks);
+        assert_eq!(ss.cost.randoms, aa.cost.randoms);
+        assert_eq!(ss.cost.probes, aa.cost.probes);
+        // L = 12: sync hashes once per batch, async once per session
+        assert_eq!(aa.cost.codes + 12 * (steps - 1), ss.cost.codes);
+        assert_eq!(aa.prefetch_hits + aa.queue_stalls, steps as u64);
+        // the RNG was handed back: sync and async continue identically
+        sync.draw_batch(&theta, m, &mut out);
+        let mut out2 = Vec::new();
+        async_.draw_batch(&theta, m, &mut out2);
+        assert_eq!(out, out2, "post-session sync draws diverged");
+    }
+
+    /// Per-shard mode (`workers >= 2`): the assembled stream is valid,
+    /// deterministic under a fixed seed (thread timing cannot change it),
+    /// and independent of the requested worker count beyond the shard
+    /// count (one dedicated worker per shard).
+    #[test]
+    fn async_per_shard_stream_deterministic_and_valid() {
+        let pre = setup(180, 8, 47);
+        let theta = vec![0.05f32; 8];
+        let (m, steps) = (25usize, 8usize);
+        let run = |workers: usize| {
+            let mut est = mk(&pre, 3);
+            let mut got = Vec::new();
+            let cfg = DrawEngineConfig { workers, queue_depth: 64 };
+            let rep = run_session(&mut est, &cfg, &theta, m, steps, |_, draws| {
+                got.extend(draws.iter().copied());
+                true
+            })
+            .unwrap();
+            assert_eq!(rep.batches, steps);
+            assert_eq!(rep.stale_drops, 0);
+            assert_eq!(rep.workers, 3, "one dedicated worker per shard");
+            assert_eq!(est.stats().draws, (m * steps) as u64);
+            (got, est.stats())
+        };
+        let (a, sa) = run(3);
+        let (b, _) = run(3);
+        assert_eq!(a, b, "fixed seed must pin the per-shard stream exactly");
+        let (c, _) = run(8);
+        assert_eq!(a, c, "worker counts beyond the shard count are clamped");
+        assert_eq!(sa.fallbacks, 0, "dense K=3 buckets must not exhaust");
+        for d in &a {
+            assert!(d.index < 180);
+            assert!(d.prob > 0.0 && d.prob <= 1.0);
+            assert!(d.weight > 0.0);
+        }
+        assert!(sa.cost.probes as usize >= m * steps, "prefetch work must be accounted");
+    }
+
+    /// Session boundaries are the mutation points: after removals the next
+    /// session must never serve dead rows (generation bumped, queues
+    /// flushed by construction), in both worker modes.
+    #[test]
+    fn sessions_across_mutation_never_serve_dead_rows() {
+        for workers in [1usize, 4] {
+            let pre = setup(150, 8, 59);
+            let mut est = mk(&pre, 3);
+            let theta = vec![0.04f32; 8];
+            let cfg = DrawEngineConfig { workers, queue_depth: 32 };
+            let g0 = est.shard_set().generation();
+            run_session(&mut est, &cfg, &theta, 16, 4, |_, draws| {
+                assert!(draws.iter().all(|d| d.index < 150));
+                true
+            })
+            .unwrap();
+            for id in 0..50 {
+                assert!(est.remove(id).unwrap());
+            }
+            assert!(est.shard_set().generation() > g0, "mutations must bump the generation");
+            let rep = run_session(&mut est, &cfg, &theta, 16, 6, |_, draws| {
+                for d in draws {
+                    assert!(
+                        d.index >= 50 && d.index < 150,
+                        "workers={workers}: served dead row {}",
+                        d.index
+                    );
+                }
+                true
+            })
+            .unwrap();
+            assert_eq!(rep.batches, 6);
+        }
+    }
+
+    /// A fully drained set degenerates to counted uniform fallbacks
+    /// (weight 1) instead of hanging or panicking — per-shard mode spawns
+    /// no workers and the mixer serves the fallbacks.
+    #[test]
+    fn drained_set_serves_uniform_fallbacks() {
+        let pre = setup(40, 6, 71);
+        let mut est = mk(&pre, 2);
+        for id in 0..40 {
+            assert!(est.remove(id).unwrap());
+        }
+        for workers in [1usize, 2] {
+            let cfg = DrawEngineConfig { workers, queue_depth: 16 };
+            let before = est.stats().fallbacks;
+            let rep = run_session(&mut est, &cfg, &[0.1; 6], 8, 3, |_, draws| {
+                assert_eq!(draws.len(), 8);
+                assert!(draws.iter().all(|d| d.index < 40 && d.weight == 1.0));
+                true
+            })
+            .unwrap();
+            assert_eq!(rep.batches, 3);
+            assert_eq!(est.stats().fallbacks - before, 24);
+        }
+    }
+
+    /// Early consumer stop shuts the pipeline down cleanly in both modes
+    /// (no deadlock, no panic), and the engine reports what was consumed.
+    #[test]
+    fn early_stop_shuts_down_cleanly() {
+        let pre = setup(120, 6, 83);
+        for workers in [1usize, 3] {
+            let mut est = mk(&pre, 3);
+            let cfg = DrawEngineConfig { workers, queue_depth: 16 };
+            let rep = run_session(&mut est, &cfg, &[0.05; 6], 8, 100, |step, _| step < 2).unwrap();
+            assert_eq!(rep.batches, 3, "steps 0,1 continue, step 2 stops");
+        }
+    }
+}

@@ -1,10 +1,12 @@
-//! L3 coordination: the training driver, the streaming ingestion pipeline
-//! and the metrics registry.
+//! L3 coordination: the training driver, the streaming ingestion pipeline,
+//! the asynchronous pipelined draw engine and the metrics registry.
 
+pub mod draw_engine;
 pub mod metrics;
 pub mod pipeline;
 pub mod trainer;
 
+pub use draw_engine::{run_session, DrawEngineConfig, DrawQueue, SessionReport};
 pub use metrics::Metrics;
 pub use pipeline::{
     build_shard_tables, streaming_build, streaming_build_sharded, PipelineConfig,

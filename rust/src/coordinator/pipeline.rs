@@ -551,6 +551,12 @@ pub struct ShardSet<H: SrpHasher> {
     /// Inclusive prefix sums of per-shard stored-row counts.
     cum_rows: Vec<usize>,
     total_rows: usize,
+    /// Mutation epoch: bumped by every membership change (insert, remove,
+    /// rebalance migration). The async draw engine tags pre-drawn
+    /// candidates with the generation they were sampled under and refuses
+    /// to serve a candidate from an older generation — the invalidation
+    /// contract that makes "mutations never serve dead rows" checkable.
+    generation: u64,
     stats: ShardSetStats,
 }
 
@@ -614,6 +620,7 @@ impl<H: SrpHasher> ShardSet<H> {
             row_pos,
             cum_rows: Vec::new(),
             total_rows: 0,
+            generation: 0,
             stats: ShardSetStats::default(),
         };
         set.refresh_cum();
@@ -722,6 +729,14 @@ impl<H: SrpHasher> ShardSet<H> {
         self.stats
     }
 
+    /// Current mutation generation: strictly increases across every
+    /// membership change (insert, remove, rebalance that migrated). Draws
+    /// pre-computed under generation `g` are only valid while
+    /// `generation() == g` — the async engine's staleness contract.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
     /// Current rebalance trigger (0 / non-finite = disabled).
     pub fn threshold(&self) -> f64 {
         self.threshold
@@ -771,6 +786,7 @@ impl<H: SrpHasher> ShardSet<H> {
         }
         self.push_rows(shard, id, base)?;
         self.loc[id] = shard as i32;
+        self.generation += 1;
         self.refresh_cum();
         self.maybe_rebalance(base)?;
         self.maybe_compact(shard);
@@ -794,6 +810,7 @@ impl<H: SrpHasher> ShardSet<H> {
         };
         self.take_rows(s, id);
         self.loc[id] = -1;
+        self.generation += 1;
         self.refresh_cum();
         self.maybe_rebalance(base)?;
         self.maybe_compact(s);
@@ -846,6 +863,7 @@ impl<H: SrpHasher> ShardSet<H> {
         if !moves.is_empty() {
             self.stats.rebalances += 1;
             self.stats.migrations += moves.len() as u64;
+            self.generation += 1;
             self.refresh_cum();
             for (s, t) in touched.iter().enumerate() {
                 if *t {

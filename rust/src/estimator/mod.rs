@@ -41,6 +41,26 @@ pub struct EstimatorStats {
     pub rebalances: u64,
     /// Wall seconds spent in rebalance passes.
     pub rebalance_secs: f64,
+    /// Async draw engine: batches that were already assembled when the
+    /// consumer asked for them (the pipeline kept ahead of compute).
+    pub prefetch_hits: u64,
+    /// Async draw engine: batch requests that had to wait on an empty
+    /// queue (sampling was the bottleneck at that moment).
+    pub queue_stalls: u64,
+}
+
+impl EstimatorStats {
+    /// Fold the *draw-path* counters of a worker/session accumulator into
+    /// this one (draws, fallbacks, sample cost, queue counters). Shard
+    /// migration counters are set-level state, not per-worker work, so they
+    /// are deliberately not summed here.
+    pub fn merge_draws(&mut self, other: &EstimatorStats) {
+        self.draws += other.draws;
+        self.fallbacks += other.fallbacks;
+        self.cost.absorb(&other.cost);
+        self.prefetch_hits += other.prefetch_hits;
+        self.queue_stalls += other.queue_stalls;
+    }
 }
 
 /// An adaptive (or not) sampler of training examples.

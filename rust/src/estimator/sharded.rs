@@ -44,9 +44,9 @@ use crate::data::preprocess::Preprocessed;
 use crate::data::shard::ShardPlan;
 use crate::estimator::lgd::LgdOptions;
 use crate::estimator::{EstimatorStats, GradientEstimator, WeightedDraw};
-use crate::lsh::sampler::{LshSampler, QueryCache, SampleCost, Sampled};
+use crate::lsh::sampler::{Draw, LshSampler, QueryCache, SampleCost, Sampled};
 use crate::lsh::srp::SrpHasher;
-use crate::lsh::tables::BucketRead;
+use crate::lsh::tables::{BucketRead, TableStore};
 
 /// Timing/shape report of a sharded table build.
 #[derive(Debug, Clone)]
@@ -57,6 +57,153 @@ pub struct ShardedBuildReport {
     pub wall_secs: f64,
     /// Stored rows per shard.
     pub shard_rows: Vec<usize>,
+}
+
+/// Borrow bundle the async draw engine
+/// ([`crate::coordinator::draw_engine`]) works through: the frozen shard
+/// set shared by every sampler worker, plus the mutable estimator state
+/// (RNG, counters) the session takes over and hands back.
+pub(crate) struct EngineParts<'s, 'a, H: SrpHasher> {
+    pub(crate) set: &'s ShardSet<H>,
+    pub(crate) pre: &'a Preprocessed,
+    pub(crate) opts: LgdOptions,
+    pub(crate) rng: &'s mut Pcg64,
+    pub(crate) stats: &'s mut EstimatorStats,
+}
+
+/// Per-shard Algorithm-1 sampler over a shard's tables/stored rows, with
+/// the probe cap from `opts` — the single construction shared by the
+/// single-draw path, the batch core and the async engine's workers.
+pub(crate) fn shard_sampler<'s, H: SrpHasher>(
+    shard: &'s ShardTables<H>,
+    opts: &LgdOptions,
+) -> LshSampler<'s, TableStore<H>> {
+    let sp = LshSampler::with_norms(
+        &shard.tables,
+        &shard.stored,
+        std::borrow::Cow::Borrowed(&shard.norms),
+    );
+    if opts.max_probes > 0 {
+        sp.with_max_probes(opts.max_probes)
+    } else {
+        sp
+    }
+}
+
+/// Fold one raw within-shard draw into its exact-mixture weighted draw:
+/// `p = (R_s/R)·p_shard`, Theorem-1 weight `1/(p·R)` (optionally
+/// clipped), mirror rows folded back to their example id. THE single
+/// definition of the mixture math — the synchronous single/batch paths
+/// and the async mixer all call this, so the sync-vs-async draw-for-draw
+/// and unbiasedness contracts cannot drift apart.
+pub(crate) fn mixture_weigh<H: SrpHasher>(
+    set: &ShardSet<H>,
+    s: usize,
+    d: &Draw,
+    opts: &LgdOptions,
+    n: usize,
+) -> WeightedDraw {
+    let shard = set.shard(s);
+    let frac = shard.stored.rows() as f64 / set.total_rows() as f64;
+    let prob = d.prob * frac;
+    let w = 1.0 / (prob * set.total_rows() as f64);
+    let weight = match opts.weight_clip {
+        Some(c) => w.min(c),
+        None => w,
+    };
+    let global = shard.rows[d.index] as usize;
+    let index = if global >= n { global - n } else { global };
+    WeightedDraw { index, weight, prob }
+}
+
+/// Membership-aware degenerate uniform fallback over a (possibly partial)
+/// shard set — the single definition shared by the synchronous estimator
+/// and the async draw engine's mixer. See
+/// [`ShardedLgdEstimator::uniform_fallback`] for the semantics; `n` is the
+/// base example count of the backing matrix.
+pub(crate) fn uniform_fallback_from<H: SrpHasher>(
+    set: &ShardSet<H>,
+    n: usize,
+    rng: &mut Pcg64,
+    fallbacks: &mut u64,
+) -> WeightedDraw {
+    *fallbacks += 1;
+    let present = set.present_len();
+    if present == 0 || present == n {
+        return WeightedDraw { index: rng.index(n), weight: 1.0, prob: 1.0 / n as f64 };
+    }
+    let r = rng.index(set.total_rows());
+    let s = set.shard_of_row(r);
+    let start = if s == 0 { 0 } else { set.cum_rows()[s - 1] };
+    let row = set.shard(s).rows[r - start] as usize;
+    let index = if row >= n { row - n } else { row };
+    WeightedDraw { index, weight: 1.0, prob: 1.0 / present as f64 }
+}
+
+/// The Appendix-B.2 shard-mixture minibatch core: multinomial shard
+/// allocation (∝ stored rows), per-shard B.2 batch sampling through the
+/// precomputed query `codes`, exact mixture probabilities
+/// `p = (R_s/R)·p_shard`, and membership-aware uniform top-ups for
+/// exhausted quotas. This is the *single* definition of the batch draw
+/// stream: [`ShardedLgdEstimator::draw_batch`] delegates here, and so does
+/// the async draw engine's single-worker replay mode — which is what makes
+/// `async_workers = 1` draw-for-draw identical to the synchronous path by
+/// construction. Query hashing is the caller's job (`codes` is unused on a
+/// drained set); `stats` receives draws/fallbacks/cost.
+pub(crate) fn mixture_draw_batch<H: SrpHasher>(
+    set: &ShardSet<H>,
+    n: usize,
+    opts: &LgdOptions,
+    codes: &[u32],
+    query: &[f32],
+    m: usize,
+    rng: &mut Pcg64,
+    stats: &mut EstimatorStats,
+    scratch: &mut Vec<Draw>,
+    out: &mut Vec<WeightedDraw>,
+) {
+    out.clear();
+    // Drained set (streaming removals): all-uniform fallback batch.
+    if set.total_rows() == 0 {
+        for _ in 0..m {
+            let d = uniform_fallback_from(set, n, rng, &mut stats.fallbacks);
+            out.push(d);
+        }
+        stats.draws += m as u64;
+        return;
+    }
+    let mut cost = SampleCost::default();
+    let mut want = vec![0usize; set.shard_count()];
+    if set.shard_count() > 1 {
+        for _ in 0..m {
+            let r = rng.index(set.total_rows());
+            cost.randoms += 1;
+            want[set.shard_of_row(r)] += 1;
+        }
+    } else {
+        want[0] = m;
+    }
+    let mut short = 0usize;
+    for (s, &quota) in want.iter().enumerate() {
+        if quota == 0 {
+            continue;
+        }
+        let sampler = shard_sampler(set.shard(s), opts);
+        sampler.sample_batch_coded(codes, query, quota, rng, &mut cost, scratch);
+        for d in scratch.iter() {
+            out.push(mixture_weigh(set, s, d, opts, n));
+        }
+        // B.2 exhaustion: remember the shortfall; the uniform top-ups go
+        // in after the loop, restricted to the present membership like the
+        // single-draw fallback.
+        short += quota - scratch.len();
+    }
+    for _ in 0..short {
+        let d = uniform_fallback_from(set, n, rng, &mut stats.fallbacks);
+        out.push(d);
+    }
+    stats.draws += m as u64;
+    stats.cost.absorb(&cost);
 }
 
 /// LGD estimator over sharded tables: shard-mixture proposal with exact
@@ -75,6 +222,8 @@ pub struct ShardedLgdEstimator<'a, H: SrpHasher> {
     /// Reusable buffer for the per-batch fused query codes (shared by
     /// every shard — the query is hashed exactly once per batch).
     codes: Vec<u32>,
+    /// Reusable per-shard raw-draw buffer for the batch core.
+    batch: Vec<Draw>,
     report: ShardedBuildReport,
 }
 
@@ -163,7 +312,25 @@ impl<'a, H: SrpHasher> ShardedLgdEstimator<'a, H> {
             query: Vec::new(),
             cache: QueryCache::default(),
             codes: Vec::new(),
+            batch: Vec::new(),
             report,
+        }
+    }
+
+    /// The preprocessed dataset backing this estimator.
+    pub fn preprocessed(&self) -> &'a Preprocessed {
+        self.pre
+    }
+
+    /// Split the estimator into the borrow bundle the async draw engine
+    /// drives a session through.
+    pub(crate) fn engine_parts(&mut self) -> EngineParts<'_, 'a, H> {
+        EngineParts {
+            set: &self.set,
+            pre: self.pre,
+            opts: self.opts.clone(),
+            rng: &mut self.rng,
+            stats: &mut self.stats,
         }
     }
 
@@ -229,18 +396,8 @@ impl<'a, H: SrpHasher> ShardedLgdEstimator<'a, H> {
     /// all n (weight 1 — a plain SGD step), the documented escape hatch
     /// `drained_set_falls_back_uniform` pins down.
     fn uniform_fallback(&mut self) -> WeightedDraw {
-        self.stats.fallbacks += 1;
         let n = self.pre.data.len();
-        let present = self.set.present_len();
-        if present == 0 || present == n {
-            return WeightedDraw { index: self.rng.index(n), weight: 1.0, prob: 1.0 / n as f64 };
-        }
-        let r = self.rng.index(self.set.total_rows());
-        let s = self.set.shard_of_row(r);
-        let start = if s == 0 { 0 } else { self.set.cum_rows()[s - 1] };
-        let row = self.set.shard(s).rows[r - start] as usize;
-        let index = if row >= n { row - n } else { row };
-        WeightedDraw { index, weight: 1.0, prob: 1.0 / present as f64 }
+        uniform_fallback_from(&self.set, n, &mut self.rng, &mut self.stats.fallbacks)
     }
 }
 
@@ -285,37 +442,14 @@ impl<'a, H: SrpHasher> GradientEstimator for ShardedLgdEstimator<'a, H> {
         } else {
             0
         };
-        let shard = self.set.shard(s);
         let mut cost = SampleCost::default();
         let mut cache = std::mem::take(&mut self.cache);
-        let sampler = {
-            let sp = LshSampler::with_norms(
-                &shard.tables,
-                &shard.stored,
-                std::borrow::Cow::Borrowed(&shard.norms),
-            );
-            if self.opts.max_probes > 0 {
-                sp.with_max_probes(self.opts.max_probes)
-            } else {
-                sp
-            }
-        };
+        let sampler = shard_sampler(self.set.shard(s), &self.opts);
         let n = self.pre.data.len();
         let hit = match sampler.sample_cached(&mut cache, &mut self.rng, &mut cost) {
-            Sampled::Hit(d) => {
-                // Exact mixture probability: shard pick (R_s/R) × exact
-                // Algorithm-1 probability within the shard.
-                let frac = shard.stored.rows() as f64 / self.set.total_rows() as f64;
-                let prob = d.prob * frac;
-                let w = 1.0 / (prob * self.set.total_rows() as f64);
-                let weight = match self.opts.weight_clip {
-                    Some(c) => w.min(c),
-                    None => w,
-                };
-                let global = shard.rows[d.index] as usize;
-                let index = if global >= n { global - n } else { global };
-                Some(WeightedDraw { index, weight, prob })
-            }
+            // Exact mixture probability: shard pick (R_s/R) × exact
+            // Algorithm-1 probability within the shard.
+            Sampled::Hit(d) => Some(mixture_weigh(&self.set, s, &d, &self.opts, n)),
             // Same degenerate fallback as LgdEstimator (one uniform draw
             // at weight 1, counted exactly once) — restricted to the
             // present membership; resolved below, after the shard borrow.
@@ -337,86 +471,37 @@ impl<'a, H: SrpHasher> GradientEstimator for ShardedLgdEstimator<'a, H> {
     /// uniform fallbacks, one counted fallback each. With `shards = 1`
     /// this is `LgdEstimator::draw_batch` draw-for-draw.
     fn draw_batch(&mut self, theta: &[f32], m: usize, out: &mut Vec<WeightedDraw>) {
-        out.clear();
         let n = self.pre.data.len();
-        // Drained set (streaming removals): all-uniform fallback batch.
-        if self.set.total_rows() == 0 {
-            for _ in 0..m {
-                let d = self.uniform_fallback();
-                out.push(d);
-            }
-            self.stats.draws += m as u64;
-            return;
-        }
         let mut query = std::mem::take(&mut self.query);
         let mut codes = std::mem::take(&mut self.codes);
-        self.pre.query(theta, &mut query);
-        let mut cost = SampleCost::default();
-        // The S×-redundancy fix: hash the query ONCE per batch (fused
-        // sweep) and hand the same codes to every shard's coded sampler —
-        // no shard re-hashes, and probe-heavy batches stop paying one code
-        // computation per probe.
-        {
+        let mut scratch = std::mem::take(&mut self.batch);
+        if self.set.total_rows() > 0 {
+            self.pre.query(theta, &mut query);
+            // The S×-redundancy fix: hash the query ONCE per batch (fused
+            // sweep) and hand the same codes to every shard's coded
+            // sampler — no shard re-hashes, and probe-heavy batches stop
+            // paying one code computation per probe. A drained set skips
+            // the hash entirely (the core serves uniform fallbacks).
             let hasher = self.set.shard(0).tables.hasher();
             hasher.codes_all(&query, &mut codes);
-            cost.codes += hasher.l();
-            cost.mults += hasher.mults_all();
+            self.stats.cost.codes += hasher.l();
+            self.stats.cost.mults += hasher.mults_all();
         }
-        let mut want = vec![0usize; self.set.shard_count()];
-        if self.set.shard_count() > 1 {
-            for _ in 0..m {
-                let r = self.rng.index(self.set.total_rows());
-                cost.randoms += 1;
-                want[self.set.shard_of_row(r)] += 1;
-            }
-        } else {
-            want[0] = m;
-        }
-        let mut batch = Vec::new();
-        let mut short = 0usize;
-        for (s, &quota) in want.iter().enumerate() {
-            if quota == 0 {
-                continue;
-            }
-            let shard = self.set.shard(s);
-            let sampler = {
-                let sp = LshSampler::with_norms(
-                    &shard.tables,
-                    &shard.stored,
-                    std::borrow::Cow::Borrowed(&shard.norms),
-                );
-                if self.opts.max_probes > 0 {
-                    sp.with_max_probes(self.opts.max_probes)
-                } else {
-                    sp
-                }
-            };
-            sampler.sample_batch_coded(&codes, &query, quota, &mut self.rng, &mut cost, &mut batch);
-            let frac = shard.stored.rows() as f64 / self.set.total_rows() as f64;
-            for d in &batch {
-                let prob = d.prob * frac;
-                let w = 1.0 / (prob * self.set.total_rows() as f64);
-                let weight = match self.opts.weight_clip {
-                    Some(c) => w.min(c),
-                    None => w,
-                };
-                let global = shard.rows[d.index] as usize;
-                let index = if global >= n { global - n } else { global };
-                out.push(WeightedDraw { index, weight, prob });
-            }
-            // B.2 exhaustion: remember the shortfall; the uniform top-ups
-            // go in after the loop (outside the shard borrow), restricted
-            // to the present membership like the single-draw fallback.
-            short += quota - batch.len();
-        }
-        for _ in 0..short {
-            let d = self.uniform_fallback();
-            out.push(d);
-        }
-        self.stats.draws += m as u64;
-        self.stats.cost.absorb(&cost);
+        mixture_draw_batch(
+            &self.set,
+            n,
+            &self.opts,
+            &codes,
+            &query,
+            m,
+            &mut self.rng,
+            &mut self.stats,
+            &mut scratch,
+            out,
+        );
         self.query = query;
         self.codes = codes;
+        self.batch = scratch;
     }
 
     fn stats(&self) -> EstimatorStats {

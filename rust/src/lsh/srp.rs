@@ -711,4 +711,31 @@ mod tests {
         q.codes_all(&xq, &mut cq);
         assert_eq!(q.hash_stats(), HashStats { code_calls: 4, fused_calls: 0 });
     }
+
+    /// The counters are exact under the multi-threaded draw path: clones
+    /// hashing concurrently on many threads lose no updates (atomics, not
+    /// a data race) — the invariant the async draw engine's shared-query
+    /// assertions and the bench counters rely on.
+    #[test]
+    fn hash_counters_exact_under_parallel_hashing() {
+        let h = DenseSrp::new(12, 3, 6, 5);
+        let mut rng = Pcg64::seeded(9);
+        let x = random_unit(12, &mut rng);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let hc = h.clone();
+                let xr = &x;
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    for t in 0..25 {
+                        let _ = hc.code(t % 6, xr);
+                        hc.codes_all(xr, &mut out);
+                    }
+                });
+            }
+        });
+        let s = h.hash_stats();
+        assert_eq!(s.code_calls, 8 * 25, "no lost code() updates under parallel hashing");
+        assert_eq!(s.fused_calls, 8 * 25, "no lost fused updates under parallel hashing");
+    }
 }

@@ -27,6 +27,7 @@ lgd — LSH-sampled Stochastic Gradient Descent (paper reproduction)
 USAGE:
   lgd train --config <run.toml> [--out <dir>] [--shards <n>]
             [--rebalance-threshold <f>] [--sealed <true|false>]
+            [--async-workers <n>] [--queue-depth <n>]
   lgd experiments --id <table4|fig9|fig10|fig11|fig12|fig13|variance|sampling|fig5|all>
                   [--scale <f>] [--out <dir>] [--seed <n>] [--quick] [--artifacts <dir>]
   lgd gen-data --name <yearmsd-like|slice-like|ujiindoor-like|pareto|uniform>
@@ -59,7 +60,10 @@ fn run(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    args.allow(&["config", "out", "shards", "rebalance-threshold", "sealed"])?;
+    args.allow(&[
+        "config", "out", "shards", "rebalance-threshold", "sealed", "async-workers",
+        "queue-depth",
+    ])?;
     let cfg_path = args.require("config")?;
     let doc = TomlDoc::load(std::path::Path::new(&cfg_path))?;
     let mut cfg = RunConfig::from_toml(&doc)?;
@@ -79,6 +83,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     // --sealed overrides the [lsh] sealed knob (CSR arena vs Vec buckets).
     cfg.lsh.sealed = args.bool_or("sealed", cfg.lsh.sealed)?;
+    // --async-workers / --queue-depth override the async draw engine
+    // knobs (0 workers = synchronous draws, the default).
+    if !args.str_or("async-workers", "").is_empty() {
+        cfg.lsh.async_workers = args.usize_or("async-workers", 0)?;
+        cfg.validate()?;
+    }
+    if !args.str_or("queue-depth", "").is_empty() {
+        cfg.lsh.queue_depth = args.usize_or("queue-depth", 1024)?;
+        cfg.validate()?;
+    }
 
     // dataset
     let ds = build_dataset(&cfg.data.name, cfg.data.scale, cfg.data.seed)?;
@@ -120,6 +134,14 @@ fn cmd_train(args: &Args) -> Result<()> {
             "  sharded build: {} shards, slowest worker {:.3}s",
             outcome.shard_build_secs.len(),
             slowest
+        );
+    }
+    if outcome.estimator == "lgd-async" {
+        let st = &outcome.est_stats;
+        let served = st.prefetch_hits + st.queue_stalls;
+        println!(
+            "  async serving: {} of {} batches prefetched ({} stalls)",
+            st.prefetch_hits, served, st.queue_stalls
         );
     }
     if outcome.est_stats.migrations > 0 {

@@ -3,6 +3,7 @@
 //! (the runtime tests skip with a message when `make artifacts` hasn't run).
 
 use lgd::config::spec::{Backend, EstimatorKind, RunConfig};
+use lgd::coordinator::draw_engine::{run_session, DrawEngineConfig};
 use lgd::coordinator::metrics::Metrics;
 use lgd::coordinator::pipeline::{streaming_build, streaming_build_sharded, PipelineConfig};
 use lgd::coordinator::trainer::{train, GradSource};
@@ -130,6 +131,82 @@ fn mixture_probabilities_exact_under_mutation_sealed() {
     mixture_gate(true);
 }
 
+/// Exact per-example probabilities of the current mixture, conditional on
+/// the built tables and the query from `theta`: shard `s` is picked with
+/// probability `R_s/R` and Algorithm 1 inside it returns local row `i`
+/// with probability `(1/#nonempty) Σ_t 1{i ∈ B_t}/|B_t|` (the same
+/// enumeration `lsh::sampler` validates for one structure).
+fn exact_mixture_probs(
+    pre: &lgd::data::preprocess::Preprocessed,
+    est: &ShardedLgdEstimator<'_, DenseSrp>,
+    theta: &[f32],
+) -> Vec<f64> {
+    let n = pre.data.len();
+    let mut q = Vec::new();
+    pre.query(theta, &mut q);
+    let set = est.shard_set();
+    let r_total = set.total_rows() as f64;
+    let mut p = vec![0.0f64; n];
+    for s in 0..set.shard_count() {
+        let st = set.shard(s);
+        if st.rows.is_empty() {
+            continue;
+        }
+        let l = st.tables.hasher().l();
+        let nonempty = (0..l).filter(|&t| !st.tables.query_bucket(t, &q).is_empty()).count();
+        assert!(nonempty > 0, "shard {s}: query hits no bucket — setup too sparse");
+        let frac = st.stored.rows() as f64 / r_total;
+        for t in 0..l {
+            let b = st.tables.query_bucket(t, &q);
+            if b.is_empty() {
+                continue;
+            }
+            let w = frac / (nonempty as f64 * b.len() as f64);
+            for local in b.iter() {
+                let row = st.rows[local as usize] as usize;
+                let ex = if row >= n { row - n } else { row };
+                p[ex] += w;
+            }
+        }
+    }
+    let sum: f64 = p.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-9, "exact probabilities must sum to 1, got {sum}");
+    p
+}
+
+/// The Theorem-1 statistical gate: total-variation and chi-square bounds
+/// of `m` seeded draws (`counts`) against the enumerated exact
+/// probabilities, plus a per-example relative check on well-populated
+/// categories. Deterministic under fixed seeds.
+fn assert_mixture_close(p: &[f64], counts: &[u64], m: usize) {
+    let n = p.len();
+    let mut tv = 0.0f64;
+    let (mut chi2, mut cats) = (0.0f64, 0usize);
+    for i in 0..n {
+        let freq = counts[i] as f64 / m as f64;
+        tv += (freq - p[i]).abs();
+        let expect = p[i] * m as f64;
+        if expect >= 5.0 {
+            chi2 += (counts[i] as f64 - expect).powi(2) / expect;
+            cats += 1;
+        }
+    }
+    tv *= 0.5;
+    assert!(tv < 0.035, "total variation {tv:.4} too large for {m} draws");
+    let dof = cats.saturating_sub(1) as f64;
+    assert!(
+        chi2 < dof + 5.0 * (2.0 * dof).sqrt() + 10.0,
+        "chi-square {chi2:.1} vs dof {dof}: mixture sampling is biased"
+    );
+    for i in 0..n {
+        if p[i] > 0.005 {
+            let freq = counts[i] as f64 / m as f64;
+            let rel = (freq - p[i]).abs() / p[i];
+            assert!(rel < 0.15, "example {i}: freq {freq:.5} vs exact {:.5}", p[i]);
+        }
+    }
+}
+
 fn mixture_gate(sealed: bool) {
     let n = 180usize;
     let ds = SynthSpec::power_law("mix", n, 8, 91).generate().unwrap();
@@ -157,38 +234,7 @@ fn mixture_gate(sealed: bool) {
 
     // exact per-example probabilities of the mutated mixture
     let theta: Vec<f32> = (0..8).map(|j| 0.04 * (j as f32 - 3.0)).collect();
-    let mut q = Vec::new();
-    pre.query(&theta, &mut q);
-    let p: Vec<f64> = {
-        let set = est.shard_set();
-        let r_total = set.total_rows() as f64;
-        let mut p = vec![0.0f64; n];
-        for s in 0..set.shard_count() {
-            let st = set.shard(s);
-            if st.rows.is_empty() {
-                continue;
-            }
-            let l = st.tables.hasher().l();
-            let nonempty = (0..l).filter(|&t| !st.tables.query_bucket(t, &q).is_empty()).count();
-            assert!(nonempty > 0, "shard {s}: query hits no bucket — setup too sparse");
-            let frac = st.stored.rows() as f64 / r_total;
-            for t in 0..l {
-                let b = st.tables.query_bucket(t, &q);
-                if b.is_empty() {
-                    continue;
-                }
-                let w = frac / (nonempty as f64 * b.len() as f64);
-                for local in b.iter() {
-                    let row = st.rows[local as usize] as usize;
-                    let ex = if row >= n { row - n } else { row };
-                    p[ex] += w;
-                }
-            }
-        }
-        p
-    };
-    let sum: f64 = p.iter().sum();
-    assert!((sum - 1.0).abs() < 1e-9, "exact probabilities must sum to 1, got {sum}");
+    let p = exact_mixture_probs(&pre, &est, &theta);
     for id in 45..60 {
         assert_eq!(p[id], 0.0, "evicted example {id} still carries probability mass");
     }
@@ -204,33 +250,86 @@ fn mixture_gate(sealed: bool) {
     for id in 45..60 {
         assert_eq!(counts[id], 0, "drew evicted example {id}");
     }
-    // total-variation and chi-square bounds (seeded, deterministic)
-    let mut tv = 0.0f64;
-    let (mut chi2, mut cats) = (0.0f64, 0usize);
-    for i in 0..n {
-        let freq = counts[i] as f64 / m as f64;
-        tv += (freq - p[i]).abs();
-        let expect = p[i] * m as f64;
-        if expect >= 5.0 {
-            chi2 += (counts[i] as f64 - expect).powi(2) / expect;
-            cats += 1;
-        }
+    assert_mixture_close(&p, &counts, m);
+}
+
+/// The Theorem-1 gate against the **async pipelined draw engine**
+/// (per-shard sampler workers + mixer): the same scripted
+/// insert/remove/skew/rebalance stream, then 50k draws served through
+/// `run_session` must match the enumerated exact mixture probabilities —
+/// and a second mutation burst *mid-stream* (between sessions: queue
+/// flush + generation bump) must re-converge to the new exact
+/// distribution with zero draws of dead rows.
+#[test]
+fn mixture_probabilities_exact_async() {
+    let n = 180usize;
+    let ds = SynthSpec::power_law("mix-async", n, 8, 91).generate().unwrap();
+    let pre = preprocess(ds, &PreprocessOptions::default()).unwrap();
+    let hd = pre.hashed.cols();
+    let mut est =
+        ShardedLgdEstimator::new(&pre, DenseSrp::new(hd, 3, 12, 93), 95, LgdOptions::default(), 3)
+            .unwrap();
+    // the sync gate's scripted stream
+    for id in 0..60 {
+        assert!(est.remove(id).unwrap());
     }
-    tv *= 0.5;
-    assert!(tv < 0.035, "total variation {tv:.4} too large for {m} draws");
-    let dof = cats.saturating_sub(1) as f64;
-    assert!(
-        chi2 < dof + 5.0 * (2.0 * dof).sqrt() + 10.0,
-        "chi-square {chi2:.1} vs dof {dof}: mixture sampling is biased"
-    );
-    // per-example relative check on the well-populated categories
-    for i in 0..n {
-        if p[i] > 0.005 {
-            let freq = counts[i] as f64 / m as f64;
-            let rel = (freq - p[i]).abs() / p[i];
-            assert!(rel < 0.15, "example {i}: freq {freq:.5} vs exact {:.5}", p[i]);
-        }
+    for id in 0..20 {
+        est.insert(id).unwrap();
     }
+    est.set_rebalance_threshold(1.2);
+    for id in 20..45 {
+        est.shard_set_mut().insert_into(0, id, &pre.hashed).unwrap();
+    }
+    est.rebalance_to(1.0).unwrap();
+    let theta: Vec<f32> = (0..8).map(|j| 0.04 * (j as f32 - 3.0)).collect();
+    let p = exact_mixture_probs(&pre, &est, &theta);
+    for id in 45..60 {
+        assert_eq!(p[id], 0.0, "evicted example {id} still carries probability mass");
+    }
+    let (m, steps) = (100usize, 500usize); // 50k draws
+    let engine = DrawEngineConfig { workers: 3, queue_depth: 256 };
+    let mut counts = vec![0u64; n];
+    let rep = run_session(&mut est, &engine, &theta, m, steps, |_, draws| {
+        for d in draws {
+            counts[d.index] += 1;
+        }
+        true
+    })
+    .unwrap();
+    assert_eq!(rep.batches, steps);
+    assert_eq!(rep.stale_drops, 0);
+    assert_eq!(est.stats().fallbacks, 0, "fallbacks would contaminate the distribution");
+    for id in 45..60 {
+        assert_eq!(counts[id], 0, "async engine served evicted example {id}");
+    }
+    assert_mixture_close(&p, &counts, m * steps);
+
+    // mid-stream mutation: a fresh burst between sessions — the next
+    // session must serve the *new* exact mixture and never a dead row
+    let g0 = est.shard_set().generation();
+    for id in 60..90 {
+        assert!(est.remove(id).unwrap());
+    }
+    for id in 45..60 {
+        est.insert(id).unwrap();
+    }
+    est.rebalance_to(1.0).unwrap();
+    assert!(est.shard_set().generation() > g0);
+    let p2 = exact_mixture_probs(&pre, &est, &theta);
+    let mut counts2 = vec![0u64; n];
+    let rep2 = run_session(&mut est, &engine, &theta, m, steps, |_, draws| {
+        for d in draws {
+            counts2[d.index] += 1;
+        }
+        true
+    })
+    .unwrap();
+    assert_eq!(rep2.stale_drops, 0);
+    assert_eq!(est.stats().fallbacks, 0);
+    for id in 60..90 {
+        assert_eq!(counts2[id], 0, "async engine served dead row {id} after mutation");
+    }
+    assert_mixture_close(&p2, &counts2, m * steps);
 }
 
 /// Property: every LGD draw returns a valid index, a probability in (0, 1]
