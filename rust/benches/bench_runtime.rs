@@ -148,6 +148,46 @@ fn bench_sharded_draws() {
         );
     }
 
+    // --- snapshot_roundtrip: the amortization argument made measurable.
+    // Cold table build vs snapshot save/load+restore for the same engine,
+    // plus the bytes on disk. Timing rows are advisory (`_ns`), the byte
+    // count matches the advisory `bytes` class — only real work counters
+    // gate.
+    {
+        let shards = 4usize;
+        let t0 = std::time::Instant::now();
+        let est = ShardedLgdEstimator::new(
+            &pre,
+            DenseSrp::new(hd, 5, 25, 35),
+            37,
+            LgdOptions::default(),
+            shards,
+        )
+        .unwrap();
+        let cold_ns = t0.elapsed().as_secs_f64() * 1e9;
+        b.record("snapshot_cold_build_n20k_shards4", cold_ns);
+        let dir = std::env::temp_dir().join("lgd-bench-snapshot");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.lgdsnap");
+        let t0 = std::time::Instant::now();
+        let bytes = lgd::store::snapshot::save(&path, &est, None).unwrap();
+        let save_ns = t0.elapsed().as_secs_f64() * 1e9;
+        b.record("snapshot_save_n20k_shards4", save_ns);
+        let t0 = std::time::Instant::now();
+        let snap = lgd::store::snapshot::load(&path).unwrap();
+        let mut warm =
+            lgd::store::snapshot::restore_boxed(snap.hasher, &snap.pre, snap.engine).unwrap();
+        let load_ns = t0.elapsed().as_secs_f64() * 1e9;
+        b.record("snapshot_load_restore_n20k_shards4", load_ns);
+        // warm engine must serve immediately — one draw as a liveness probe
+        bb(warm.draw(&theta));
+        b.note("snapshot_bytes_n20k_shards4", bytes as f64);
+        b.note("snapshot_cold_build_ns_n20k", cold_ns);
+        b.note("snapshot_save_ns_n20k", save_ns);
+        b.note("snapshot_load_restore_ns_n20k", load_ns);
+        let _ = std::fs::remove_file(&path);
+    }
+
     b.report();
     let json_path = lgd::benchkit::bench_json_path("BENCH_runtime.json");
     match b.write_json(&json_path) {

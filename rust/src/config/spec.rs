@@ -18,6 +18,20 @@ pub enum HasherKind {
     Quadratic,
 }
 
+impl HasherKind {
+    /// THE canonical kind name — the string used by the TOML config, the
+    /// snapshot metadata and every user-facing report. One definition so a
+    /// new family cannot drift across the config parser, the resume gate
+    /// and the snapshot inspector.
+    pub fn name(self) -> &'static str {
+        match self {
+            HasherKind::Dense => "dense",
+            HasherKind::Sparse => "sparse",
+            HasherKind::Quadratic => "quadratic",
+        }
+    }
+}
+
 /// Which gradient estimator a run uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EstimatorKind {
@@ -207,6 +221,31 @@ impl Default for DataConfig {
     }
 }
 
+/// Snapshot-store block of a run config (`store::snapshot` persistence).
+#[derive(Debug, Clone, Default)]
+pub struct StoreConfig {
+    /// Snapshot path. When set, the trainer saves the full engine state
+    /// here at the end of the run (and at the autosave cadence below);
+    /// `lgd train --resume` warm-starts from it, skipping the table build
+    /// entirely.
+    pub path: Option<PathBuf>,
+    /// Save every this many completed epochs (0 = only the final save).
+    /// Epoch boundaries are the only legal save points: draw sessions hold
+    /// the estimator borrow, so the shard-set generation counter cannot
+    /// move mid-save — the same invariant that makes mutation a
+    /// session-boundary event for the async engine.
+    pub autosave_epochs: usize,
+    /// Warm-start from `path` instead of building tables (CLI `--resume`).
+    pub resume: bool,
+}
+
+impl StoreConfig {
+    /// True when any persistence behavior is requested.
+    pub fn is_active(&self) -> bool {
+        self.path.is_some() || self.resume
+    }
+}
+
 /// A full run configuration.
 #[derive(Debug, Clone, Default)]
 pub struct RunConfig {
@@ -218,6 +257,8 @@ pub struct RunConfig {
     pub lsh: LshConfig,
     /// Training loop.
     pub train: TrainConfig,
+    /// Snapshot persistence.
+    pub store: StoreConfig,
     /// Output directory for result CSVs.
     pub out_dir: PathBuf,
 }
@@ -254,7 +295,8 @@ impl RunConfig {
         cfg.lsh.sealed = doc.bool_or("lsh", "sealed", cfg.lsh.sealed)?;
         cfg.lsh.async_workers =
             doc.int_or("lsh", "async_workers", cfg.lsh.async_workers as i64)? as usize;
-        cfg.lsh.queue_depth = doc.int_or("lsh", "queue_depth", cfg.lsh.queue_depth as i64)? as usize;
+        cfg.lsh.queue_depth =
+            doc.int_or("lsh", "queue_depth", cfg.lsh.queue_depth as i64)? as usize;
         cfg.lsh.hasher = match doc.str_or("lsh", "hasher", "dense")?.as_str() {
             "dense" => HasherKind::Dense,
             "sparse" => HasherKind::Sparse,
@@ -304,6 +346,14 @@ impl RunConfig {
             "pjrt" => Backend::Pjrt,
             other => return Err(Error::Config(format!("unknown backend '{other}'"))),
         };
+
+        // [store]
+        let store_path = doc.str_or("store", "path", "")?;
+        if !store_path.is_empty() {
+            cfg.store.path = Some(PathBuf::from(store_path));
+        }
+        cfg.store.autosave_epochs =
+            doc.int_or("store", "autosave_epochs", cfg.store.autosave_epochs as i64)? as usize;
 
         cfg.validate()?;
         Ok(cfg)
@@ -366,6 +416,21 @@ impl RunConfig {
         if self.train.schedule.base() <= 0.0 {
             return Err(Error::Config("learning rate must be positive".into()));
         }
+        if self.store.autosave_epochs > 0 && self.store.path.is_none() {
+            return Err(Error::Config(
+                "store.autosave_epochs requires store.path (nowhere to save)".into(),
+            ));
+        }
+        if self.store.resume && self.store.path.is_none() {
+            return Err(Error::Config("--resume requires a snapshot path (store.path)".into()));
+        }
+        if self.store.is_active() && self.train.estimator != EstimatorKind::Lgd {
+            return Err(Error::Config(
+                "the snapshot store persists the LGD engine; it requires \
+                 train.estimator = \"lgd\""
+                    .into(),
+            ));
+        }
         Ok(())
     }
 }
@@ -390,6 +455,37 @@ mod tests {
         assert_eq!(cfg.lsh.queue_depth, 1024);
         assert_eq!(cfg.train.estimator, EstimatorKind::Lgd);
         assert_eq!(cfg.train.backend, Backend::Native);
+        assert!(cfg.store.path.is_none(), "persistence is opt-in");
+        assert_eq!(cfg.store.autosave_epochs, 0);
+        assert!(!cfg.store.resume);
+        assert!(!cfg.store.is_active());
+    }
+
+    #[test]
+    fn store_block_parses_and_validates() {
+        let doc = TomlDoc::parse(
+            "[store]\npath = \"idx/run.lgdsnap\"\nautosave_epochs = 2\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.store.path.as_deref(), Some(std::path::Path::new("idx/run.lgdsnap")));
+        assert_eq!(cfg.store.autosave_epochs, 2);
+        assert!(cfg.store.is_active());
+        // autosave without a path is rejected
+        let doc = TomlDoc::parse("[store]\nautosave_epochs = 2\n").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        // the store persists the LGD engine only
+        let doc = TomlDoc::parse(
+            "[store]\npath = \"x.lgdsnap\"\n[train]\nestimator = \"sgd\"\n",
+        )
+        .unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        // resume needs a path
+        let mut cfg = RunConfig::default();
+        cfg.store.resume = true;
+        assert!(cfg.validate().is_err());
+        cfg.store.path = Some(PathBuf::from("x.lgdsnap"));
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -742,6 +742,16 @@ impl<H: SrpHasher> ShardSet<H> {
         self.threshold
     }
 
+    /// Restore persisted set-level counters after a snapshot load: the
+    /// mutation generation (the async engine's staleness contract must
+    /// survive a restart — a candidate pre-drawn before a save can never be
+    /// served after a load *and* a mutation) and the accumulated
+    /// migration/rebalance statistics.
+    pub(crate) fn restore_counters(&mut self, generation: u64, stats: ShardSetStats) {
+        self.generation = generation;
+        self.stats = stats;
+    }
+
     /// Set the rebalance trigger: rebalance whenever `imbalance()` exceeds
     /// `t` after a mutation. 0 (or any non-finite / sub-1.0 value)
     /// disables automatic rebalancing.

@@ -3,10 +3,28 @@
 //! loss-vs-epoch and loss-vs-wall-clock, with sampling/gradient/update time
 //! split out. Evaluation time is *excluded* from the training clock so the
 //! LGD-vs-SGD wall-clock comparison measures only the algorithms.
+//!
+//! Structure (post `store::snapshot`):
+//! * [`LoopCtx`] is the single definition of the step-loop scaffolding —
+//!   shape math, optimizer/model/backend construction, gradient
+//!   accumulation, curve bookkeeping — shared by the SGD baseline, the
+//!   synchronous LGD loop and the pipelined async loop (previously three
+//!   near-copies, flagged by the PR-4 review).
+//! * [`crate::lsh::AnyHasher`] is the single `HasherKind` → constructor
+//!   dispatch; the boxed estimator builder, the monomorphized LGD path and
+//!   the snapshot-restore path all go through `visit`.
+//! * LGD runs are always driven through [`ShardedLgdEstimator`] (with
+//!   `shards = 1` it is `LgdEstimator` draw-for-draw — tested), which is
+//!   what makes warm starts and epoch-boundary autosaves
+//!   (`[store]`/`lgd train --resume`) uniform across sync and async modes.
+//!   Saves happen only at epoch boundaries: sessions hold the estimator
+//!   borrow, so the shard-set generation counter cannot move mid-save —
+//!   the same invariant that makes mutation a session-boundary event for
+//!   the async engine.
 
 use std::time::Instant;
 
-use crate::config::spec::{EstimatorKind, HasherKind, OptimizerKind, RunConfig};
+use crate::config::spec::{EstimatorKind, OptimizerKind, RunConfig};
 use crate::coordinator::draw_engine::{run_session, DrawEngineConfig};
 use crate::core::error::{Error, Result};
 use crate::core::matrix::axpy;
@@ -15,11 +33,12 @@ use crate::data::preprocess::Preprocessed;
 use crate::estimator::lgd::{LgdEstimator, LgdOptions};
 use crate::estimator::sharded::ShardedLgdEstimator;
 use crate::estimator::{EstimatorStats, GradientEstimator, UniformEstimator, WeightedDraw};
-use crate::lsh::srp::{DenseSrp, SparseSrp, SrpHasher};
-use crate::lsh::QuadraticSrp;
+use crate::lsh::srp::SrpHasher;
+use crate::lsh::{AnyHasher, HasherVisitor};
 use crate::model::{LinReg, LogReg, Model};
 use crate::optim::{AdaGrad, Adam, Optimizer, Sgd};
 use crate::runtime::{PjrtLinear, Runtime};
+use crate::store::snapshot::{self, EngineDump, LoadedSnapshot, SnapshotHasher, TrainState};
 
 /// One point of the convergence curve.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -40,22 +59,30 @@ pub struct CurvePoint {
 /// Everything a training run produces.
 #[derive(Debug, Clone)]
 pub struct TrainOutcome {
-    /// Convergence curve (one point at t=0, then per eval cadence).
+    /// Convergence curve (one point at the entry iteration, then per eval
+    /// cadence).
     pub curve: Vec<CurvePoint>,
     /// Final parameters.
     pub theta: Vec<f32>,
     /// Total training wall-clock (excl. eval).
     pub wall_secs: f64,
-    /// One-time preprocessing (LSH table build; 0 for SGD).
+    /// One-time preprocessing: LSH table build for a cold start, snapshot
+    /// restore for a warm start, 0 for SGD.
     pub preprocess_secs: f64,
-    /// Iterations executed.
+    /// Global iterations completed (a resumed run includes the iterations
+    /// done before the save).
     pub iterations: u64,
     /// Estimator counters (draws, fallbacks, hash cost).
     pub est_stats: EstimatorStats,
-    /// Estimator name ("sgd"/"lgd"/"lgd-sharded").
+    /// Estimator name ("sgd"/"lgd"/"lgd-sharded"/"lgd-async").
     pub estimator: String,
-    /// Per-shard table-build seconds (empty unless `lsh.shards > 1`).
+    /// Per-shard table-build seconds (all-zero after a warm start — the
+    /// observable "zero table-build work" guarantee).
     pub shard_build_secs: Vec<f64>,
+    /// True when the engine was warm-started from a snapshot.
+    pub resumed: bool,
+    /// Snapshots written during the run (autosaves + the final save).
+    pub autosaves: u32,
 }
 
 /// Gradient execution source.
@@ -98,6 +125,22 @@ where
     }
 }
 
+struct BoxedBuild<'c, 'a> {
+    cfg: &'c RunConfig,
+    pre: &'a Preprocessed,
+}
+
+impl<'c, 'a> HasherVisitor for BoxedBuild<'c, 'a> {
+    type Out = Result<(Box<dyn GradientEstimator + 'a>, Vec<f64>)>;
+
+    fn visit<H>(self, hasher: H) -> Self::Out
+    where
+        H: SnapshotHasher + Clone + 'static,
+    {
+        lgd_boxed(self.cfg, self.pre, hasher, lgd_options(self.cfg))
+    }
+}
+
 /// [`build_estimator`] plus the per-shard build timings the sharded engine
 /// reports (fed into [`TrainOutcome::shard_build_secs`]).
 pub fn build_estimator_reported<'a>(
@@ -110,30 +153,15 @@ pub fn build_estimator_reported<'a>(
         }
         EstimatorKind::Lgd => {
             let hd = pre.hashed.cols();
-            let opts = lgd_options(cfg);
-            match cfg.lsh.hasher {
-                HasherKind::Dense => {
-                    let h = DenseSrp::new(hd, cfg.lsh.k, cfg.lsh.l, cfg.lsh.seed);
-                    lgd_boxed(cfg, pre, h, opts)
-                }
-                HasherKind::Sparse => {
-                    let h = SparseSrp::new(hd, cfg.lsh.k, cfg.lsh.l, cfg.lsh.density, cfg.lsh.seed);
-                    lgd_boxed(cfg, pre, h, opts)
-                }
-                HasherKind::Quadratic => {
-                    let h =
-                        QuadraticSrp::new(hd, cfg.lsh.k, cfg.lsh.l, cfg.lsh.density, cfg.lsh.seed);
-                    lgd_boxed(cfg, pre, h, opts)
-                }
-            }
+            AnyHasher::from_lsh_config(&cfg.lsh, hd).visit(BoxedBuild { cfg, pre })
         }
     }
 }
 
 /// The estimator options a run config implies — one definition shared by
-/// the synchronous `build_estimator` path and the async trainer, so the
-/// two paths can never diverge on sampler tuning.
-fn lgd_options(cfg: &RunConfig) -> LgdOptions {
+/// the boxed builder, the monomorphized trainer paths and the snapshot
+/// save CLI, so no path can diverge on sampler tuning.
+pub fn lgd_options(cfg: &RunConfig) -> LgdOptions {
     LgdOptions {
         weight_clip: cfg.lsh.weight_clip,
         max_probes: 0,
@@ -141,6 +169,25 @@ fn lgd_options(cfg: &RunConfig) -> LgdOptions {
         mirror: cfg.lsh.mirror,
         sealed: cfg.lsh.sealed,
     }
+}
+
+/// Cold-build the sharded LGD engine a config describes (any shard count —
+/// `shards = 1` is `LgdEstimator` draw-for-draw). Shared by the trainer's
+/// cold path and `lgd snapshot save`.
+pub fn build_sharded_estimator<'a, H>(
+    cfg: &RunConfig,
+    pre: &'a Preprocessed,
+    hasher: H,
+) -> Result<ShardedLgdEstimator<'a, H>>
+where
+    H: SrpHasher + Clone,
+{
+    let mut est =
+        ShardedLgdEstimator::new(pre, hasher, cfg.train.seed, lgd_options(cfg), cfg.lsh.shards)?;
+    if cfg.lsh.rebalance_threshold > 0.0 {
+        est.set_rebalance_threshold(cfg.lsh.rebalance_threshold);
+    }
+    Ok(est)
 }
 
 fn build_optimizer(cfg: &RunConfig) -> Box<dyn Optimizer> {
@@ -160,8 +207,7 @@ fn native_model(task: Task) -> Box<dyn Model> {
 
 /// Mean train/test loss through the run's gradient backend — loss evals go
 /// through the same backend as training for coherence, but the callers
-/// exclude them from the training clock. One definition shared by the
-/// synchronous and async trainers.
+/// exclude them from the training clock.
 fn eval_losses(
     pre: &Preprocessed,
     test: &Dataset,
@@ -181,7 +227,7 @@ fn eval_losses(
 }
 
 /// One step's weighted-minibatch gradient estimate into `acc`, native or
-/// PJRT — the other half of the step body both trainers share.
+/// PJRT.
 #[allow(clippy::too_many_arguments)]
 fn accumulate_grad(
     pre: &Preprocessed,
@@ -216,300 +262,483 @@ fn accumulate_grad(
     Ok(())
 }
 
+/// The single definition of the training-loop scaffolding: iteration
+/// shapes, optimizer/model/backend state, parameter and scratch buffers,
+/// curve bookkeeping and the per-step gradient/update body. The SGD
+/// baseline loop, the synchronous LGD loop and the async pipelined loop
+/// all drive this (previously each carried its own copy).
+struct LoopCtx<'rt> {
+    batch: usize,
+    iters_per_epoch: u64,
+    total_iters: u64,
+    eval_every: u64,
+    opt: Box<dyn Optimizer>,
+    model: Box<dyn Model>,
+    pjrt: Option<(&'rt mut Runtime, PjrtLinear)>,
+    theta: Vec<f32>,
+    grad: Vec<f32>,
+    acc: Vec<f32>,
+    idxs: Vec<usize>,
+    weights: Vec<f64>,
+    curve: Vec<CurvePoint>,
+    /// Global iteration counter (resumes continue the saved value so
+    /// schedules and eval cadence stay aligned across restarts).
+    it: u64,
+    autosaves: u32,
+}
+
+impl<'rt> LoopCtx<'rt> {
+    /// Build the loop state; `warm` restores θ, the iteration counter and
+    /// the optimizer moments from a snapshot's training state.
+    fn new(
+        cfg: &RunConfig,
+        pre: &Preprocessed,
+        src: GradSource<'rt>,
+        warm: Option<&TrainState>,
+    ) -> Result<Self> {
+        let n = pre.data.len();
+        let d = pre.data.dim();
+        if n == 0 {
+            return Err(Error::Data("empty training set".into()));
+        }
+        let batch = cfg.train.batch;
+        let iters_per_epoch = (n / batch).max(1) as u64;
+        let total_iters = iters_per_epoch * cfg.train.epochs as u64;
+        let eval_every = if cfg.train.eval_every > 0 {
+            cfg.train.eval_every as u64
+        } else {
+            iters_per_epoch
+        };
+        let mut opt = build_optimizer(cfg);
+        let mut theta = vec![0.0f32; d];
+        let mut it = 0u64;
+        if let Some(ts) = warm {
+            if ts.theta.len() != d {
+                return Err(Error::Store(format!(
+                    "snapshot θ has {} parameters but the dataset needs {d}",
+                    ts.theta.len()
+                )));
+            }
+            if ts.optimizer != cfg.train.optimizer {
+                return Err(Error::Store(format!(
+                    "snapshot optimizer state is {:?} but the config trains with {:?}",
+                    ts.optimizer, cfg.train.optimizer
+                )));
+            }
+            // Saves happen at epoch boundaries, so the saved counter must
+            // sit on one under the *current* shape — a mismatch means the
+            // dataset size or train.batch changed since the save, which
+            // would silently shift the eval/autosave cadence.
+            if ts.iter != ts.epochs_done as u64 * iters_per_epoch {
+                return Err(Error::Store(format!(
+                    "snapshot iteration counter {} does not sit on an epoch boundary of \
+                     {iters_per_epoch} iterations/epoch — train.batch or the dataset \
+                     changed since the save",
+                    ts.iter
+                )));
+            }
+            opt.import_state(&ts.optim)?;
+            theta.copy_from_slice(&ts.theta);
+            it = ts.iter;
+        }
+        let model = native_model(pre.data.task);
+        let pjrt = match src {
+            GradSource::Native => None,
+            GradSource::Pjrt(rt) => {
+                let lin = PjrtLinear::new(rt, pre.data.task, batch, d)?;
+                Some((rt, lin))
+            }
+        };
+        Ok(LoopCtx {
+            batch,
+            iters_per_epoch,
+            total_iters,
+            eval_every,
+            opt,
+            model,
+            pjrt,
+            theta,
+            grad: vec![0.0f32; d],
+            acc: vec![0.0f32; d],
+            idxs: vec![0usize; batch],
+            weights: vec![0.0f64; batch],
+            curve: Vec::new(),
+            it,
+            autosaves: 0,
+        })
+    }
+
+    /// Mean train/test loss through the run's backend (the caller keeps
+    /// eval time off the training clock).
+    fn eval_now(&mut self, pre: &Preprocessed, test: &Dataset) -> Result<(f64, f64)> {
+        eval_losses(pre, test, self.model.as_ref(), &mut self.pjrt, &self.theta)
+    }
+
+    /// Append a curve point at the current iteration.
+    fn push_point(&mut self, wall: f64, train_loss: f64, test_loss: f64) {
+        self.curve.push(CurvePoint {
+            iter: self.it,
+            epoch: self.it as f64 / self.iters_per_epoch as f64,
+            wall,
+            train_loss,
+            test_loss,
+        });
+    }
+
+    /// Eval + record in one step (loop entry points).
+    fn eval_point(&mut self, pre: &Preprocessed, test: &Dataset, wall: f64) -> Result<()> {
+        let (tr, te) = self.eval_now(pre, test)?;
+        self.push_point(wall, tr, te);
+        Ok(())
+    }
+
+    /// One gradient estimate + optimizer update from a drawn batch.
+    fn grad_update(&mut self, pre: &Preprocessed, draws: &[WeightedDraw]) -> Result<()> {
+        accumulate_grad(
+            pre,
+            self.model.as_ref(),
+            &mut self.pjrt,
+            draws,
+            self.batch,
+            &self.theta,
+            &mut self.grad,
+            &mut self.idxs,
+            &mut self.weights,
+            &mut self.acc,
+        )?;
+        self.opt.step(&mut self.theta, &self.acc);
+        Ok(())
+    }
+
+    /// Is a curve eval due at the current iteration?
+    fn due_eval(&self) -> bool {
+        self.it % self.eval_every == 0 || self.it == self.total_iters
+    }
+
+    /// Assemble the run outcome.
+    fn outcome(
+        self,
+        wall_secs: f64,
+        preprocess_secs: f64,
+        est_stats: EstimatorStats,
+        estimator: String,
+        shard_build_secs: Vec<f64>,
+        resumed: bool,
+    ) -> TrainOutcome {
+        TrainOutcome {
+            curve: self.curve,
+            theta: self.theta,
+            wall_secs,
+            preprocess_secs,
+            iterations: self.it,
+            est_stats,
+            estimator,
+            shard_build_secs,
+            resumed,
+            autosaves: self.autosaves,
+        }
+    }
+}
+
+/// Run `steps` synchronous draw → gradient → update steps, timing each step
+/// into the training clock and evaluating at the cadence (eval excluded
+/// from the clock). Shared by the SGD baseline and the synchronous LGD
+/// epoch loop.
+fn run_sync_steps(
+    ctx: &mut LoopCtx<'_>,
+    est: &mut dyn GradientEstimator,
+    pre: &Preprocessed,
+    test: &Dataset,
+    steps: u64,
+    mut train_wall: f64,
+    draws: &mut Vec<WeightedDraw>,
+) -> Result<f64> {
+    for _ in 0..steps {
+        let step_t = Instant::now();
+        // --- sample ---
+        if ctx.batch == 1 {
+            draws.clear();
+            draws.push(est.draw(&ctx.theta));
+        } else {
+            est.draw_batch(&ctx.theta, ctx.batch, draws);
+        }
+        ctx.it += 1;
+        // --- gradient estimate + update ---
+        ctx.grad_update(pre, draws)?;
+        train_wall += step_t.elapsed().as_secs_f64();
+        if ctx.due_eval() {
+            let (tr, te) = ctx.eval_now(pre, test)?;
+            ctx.push_point(train_wall, tr, te);
+        }
+    }
+    Ok(train_wall)
+}
+
+/// Save the engine + training state at an epoch boundary when the config
+/// asks for it (every `store.autosave_epochs` epochs, and always at the
+/// final epoch when a path is configured).
+fn maybe_autosave<H: SnapshotHasher>(
+    cfg: &RunConfig,
+    est: &ShardedLgdEstimator<'_, H>,
+    ctx: &mut LoopCtx<'_>,
+    epochs_done: u32,
+) -> Result<()> {
+    let Some(path) = &cfg.store.path else { return Ok(()) };
+    let cadence = cfg.store.autosave_epochs as u32;
+    let last = epochs_done as usize == cfg.train.epochs;
+    if !(last || (cadence > 0 && epochs_done % cadence == 0)) {
+        return Ok(());
+    }
+    let ts = TrainState {
+        theta: ctx.theta.clone(),
+        iter: ctx.it,
+        epochs_done,
+        optimizer: cfg.train.optimizer,
+        optim: ctx.opt.export_state(),
+    };
+    snapshot::save(path, est, Some(&ts))?;
+    ctx.autosaves += 1;
+    Ok(())
+}
+
 /// Run one training configuration. `test` may be empty (test loss = 0).
-/// With `lsh.async_workers > 0` (and the LGD estimator) the step loop is
-/// fully pipelined: sampling overlaps gradient compute via the async draw
-/// engine. `async_workers = 0` is the synchronous path, byte-identical to
-/// the pre-engine behavior.
+/// LGD runs always go through the monomorphized sharded path (shards = 1
+/// is `LgdEstimator` draw-for-draw); with `lsh.async_workers > 0` the step
+/// loop is fully pipelined through the async draw engine. When
+/// `store.path` is set the engine (plus θ/optimizer state) is persisted at
+/// epoch boundaries — see [`train_resumed`] for the warm-start side.
 pub fn train(
     cfg: &RunConfig,
     pre: &Preprocessed,
     test: &Dataset,
     src: GradSource<'_>,
 ) -> Result<TrainOutcome> {
-    if cfg.lsh.async_workers > 0 && cfg.train.estimator == EstimatorKind::Lgd {
-        return train_async_dispatch(cfg, pre, test, src);
+    if cfg.store.resume {
+        // A resume config reaching the cold entry point would train from
+        // scratch and then overwrite the checkpoint at the final autosave —
+        // the exact failure the CLI guards against; guard the library API
+        // the same way.
+        return Err(Error::Config(
+            "store.resume is set — load the snapshot and call train_resumed \
+             (the CLI's --resume does this)"
+                .into(),
+        ));
     }
-    train_sync(cfg, pre, test, src)
+    match cfg.train.estimator {
+        EstimatorKind::Sgd => train_sgd(cfg, pre, test, src),
+        EstimatorKind::Lgd => {
+            let hd = pre.hashed.cols();
+            AnyHasher::from_lsh_config(&cfg.lsh, hd)
+                .visit(LgdRun { cfg, pre, test, src, warm: None })
+        }
+    }
 }
 
-fn train_sync(
+/// Warm-start training from a loaded snapshot: the engine is restored
+/// (zero table-build work, zero hash invocations), θ/iteration/optimizer
+/// state continue where the save left them, and the run proceeds until
+/// `cfg.train.epochs` *total* epochs are done. The snapshot owns the
+/// training dataset; `test` comes from the caller (it is not persisted).
+pub fn train_resumed(
+    cfg: &RunConfig,
+    test: &Dataset,
+    src: GradSource<'_>,
+    snap: LoadedSnapshot,
+) -> Result<TrainOutcome> {
+    if cfg.train.estimator != EstimatorKind::Lgd {
+        return Err(Error::Config("--resume requires train.estimator = \"lgd\"".into()));
+    }
+    // The engine state rides the snapshot, so a config that disagrees on
+    // the identity-critical knobs would produce a run that is not what the
+    // config declares — reject it instead of silently serving the
+    // snapshot's parameters under the config's name. (decode() guarantees
+    // the meta summary agrees with the decoded hasher, so comparing kinds
+    // directly is exact.)
+    let m = &snap.meta;
+    if snap.hasher.kind() != cfg.lsh.hasher || m.k != cfg.lsh.k || m.l != cfg.lsh.l {
+        return Err(Error::Config(format!(
+            "snapshot was built with hasher {} (K={}, L={}) but the config says {} \
+             (K={}, L={}) — resume with a matching config or re-index",
+            m.hasher,
+            m.k,
+            m.l,
+            cfg.lsh.hasher.name(),
+            cfg.lsh.k,
+            cfg.lsh.l
+        )));
+    }
+    if m.shards != cfg.lsh.shards {
+        return Err(Error::Config(format!(
+            "snapshot holds {} shard(s) but the config says {} — resume with --shards {} \
+             or re-index",
+            m.shards, cfg.lsh.shards, m.shards
+        )));
+    }
+    if m.mirror != cfg.lsh.mirror {
+        return Err(Error::Config(format!(
+            "snapshot was built with lsh.mirror = {} but the config says {} — mirroring \
+             changes the sampling distribution, resume with a matching config or re-index",
+            m.mirror, cfg.lsh.mirror
+        )));
+    }
+    let LoadedSnapshot { pre, hasher, engine, train: tstate, .. } = snap;
+    hasher.visit(LgdRun { cfg, pre: &pre, test, src, warm: Some((engine, tstate)) })
+}
+
+/// The monomorphized LGD run: cold build or snapshot restore, then the
+/// sync or async epoch loop.
+struct LgdRun<'c, 'p, 't, 'rt> {
+    cfg: &'c RunConfig,
+    pre: &'p Preprocessed,
+    test: &'t Dataset,
+    src: GradSource<'rt>,
+    warm: Option<(EngineDump, Option<TrainState>)>,
+}
+
+impl<'c, 'p, 't, 'rt> HasherVisitor for LgdRun<'c, 'p, 't, 'rt> {
+    type Out = Result<TrainOutcome>;
+
+    fn visit<H>(self, hasher: H) -> Self::Out
+    where
+        H: SnapshotHasher + Clone + 'static,
+    {
+        let LgdRun { cfg, pre, test, src, warm } = self;
+        let t0 = Instant::now();
+        let (est, tstate, resumed) = match warm {
+            Some((engine, ts)) => {
+                let mut est = snapshot::restore_estimator(pre, hasher, engine)?;
+                // Live-engine tuning follows the config on a warm start
+                // too: an explicit rebalance threshold overrides the
+                // persisted one (the cold path applies it the same way).
+                if cfg.lsh.rebalance_threshold > 0.0 {
+                    est.set_rebalance_threshold(cfg.lsh.rebalance_threshold);
+                }
+                (est, ts, true)
+            }
+            None => (build_sharded_estimator(cfg, pre, hasher)?, None, false),
+        };
+        let preprocess_secs = t0.elapsed().as_secs_f64();
+        run_lgd(cfg, pre, test, src, est, tstate, resumed, preprocess_secs)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_lgd<H: SnapshotHasher + Clone>(
+    cfg: &RunConfig,
+    pre: &Preprocessed,
+    test: &Dataset,
+    src: GradSource<'_>,
+    mut est: ShardedLgdEstimator<'_, H>,
+    tstate: Option<TrainState>,
+    resumed: bool,
+    preprocess_secs: f64,
+) -> Result<TrainOutcome> {
+    let mut ctx = LoopCtx::new(cfg, pre, src, tstate.as_ref())?;
+    let shard_build_secs = est.build_report().per_shard_secs.clone();
+    let asynchronous = cfg.lsh.async_workers > 0;
+    let engine =
+        DrawEngineConfig { workers: cfg.lsh.async_workers, queue_depth: cfg.lsh.queue_depth };
+    let start_epoch = tstate.as_ref().map(|t| t.epochs_done as usize).unwrap_or(0);
+
+    // The table build (or snapshot restore) counts as wall-clock spent
+    // before the first step; loss evals never enter the clock.
+    let mut train_wall = preprocess_secs;
+    ctx.eval_point(pre, test, train_wall)?;
+
+    let mut draws: Vec<WeightedDraw> = Vec::with_capacity(ctx.batch);
+    for epoch in start_epoch..cfg.train.epochs {
+        if asynchronous {
+            // One draw-engine session per epoch: the sampling query is
+            // frozen at the epoch's entry θ (stale proposal, *exact*
+            // probabilities ⇒ unbiased), so batch t+1 assembles on the
+            // sampler threads while batch t's gradient runs here. Queue
+            // stalls are real un-hidden wall-clock and stay on the clock.
+            let steps = ctx.iters_per_epoch as usize;
+            let m = ctx.batch;
+            let frozen = ctx.theta.clone();
+            let epoch_t = Instant::now();
+            let wall_base = train_wall;
+            let mut eval_secs = 0.0f64;
+            let mut abort: Option<Error> = None;
+            {
+                let ctx = &mut ctx;
+                let abort = &mut abort;
+                let eval_secs = &mut eval_secs;
+                run_session(&mut est, &engine, &frozen, m, steps, |_, dr| {
+                    ctx.it += 1;
+                    if let Err(e) = ctx.grad_update(pre, dr) {
+                        *abort = Some(e);
+                        return false;
+                    }
+                    if ctx.due_eval() {
+                        let ev = Instant::now();
+                        match ctx.eval_now(pre, test) {
+                            Ok((tr, te)) => {
+                                *eval_secs += ev.elapsed().as_secs_f64();
+                                let wall =
+                                    wall_base + epoch_t.elapsed().as_secs_f64() - *eval_secs;
+                                ctx.push_point(wall, tr, te);
+                            }
+                            Err(e) => {
+                                *abort = Some(e);
+                                return false;
+                            }
+                        }
+                    }
+                    true
+                })?;
+            }
+            if let Some(e) = abort {
+                return Err(e);
+            }
+            train_wall = wall_base + epoch_t.elapsed().as_secs_f64() - eval_secs;
+        } else {
+            let steps = ctx.iters_per_epoch;
+            train_wall =
+                run_sync_steps(&mut ctx, &mut est, pre, test, steps, train_wall, &mut draws)?;
+        }
+        // Epoch boundary: the only legal save point (the session borrow has
+        // been released; the generation counter is quiescent).
+        maybe_autosave(cfg, &est, &mut ctx, (epoch + 1) as u32)?;
+    }
+
+    let name = if asynchronous {
+        "lgd-async"
+    } else if est.shards() > 1 {
+        "lgd-sharded"
+    } else {
+        "lgd"
+    };
+    let stats = est.stats();
+    Ok(ctx.outcome(train_wall, preprocess_secs, stats, name.into(), shard_build_secs, resumed))
+}
+
+/// The uniform-sampling SGD baseline (boxed estimator, shared loop body).
+fn train_sgd(
     cfg: &RunConfig,
     pre: &Preprocessed,
     test: &Dataset,
     src: GradSource<'_>,
 ) -> Result<TrainOutcome> {
-    let n = pre.data.len();
-    let d = pre.data.dim();
-    if n == 0 {
-        return Err(Error::Data("empty training set".into()));
-    }
-    let batch = cfg.train.batch;
-    let iters_per_epoch = (n / batch).max(1) as u64;
-    let total_iters = iters_per_epoch * cfg.train.epochs as u64;
-    let eval_every = if cfg.train.eval_every > 0 {
-        cfg.train.eval_every as u64
-    } else {
-        iters_per_epoch
-    };
-
-    // One-time preprocessing: estimator construction builds the LSH tables
-    // (concurrently per shard when `lsh.shards > 1`).
     let t0 = Instant::now();
     let (mut est, shard_build_secs) = build_estimator_reported(cfg, pre)?;
     let preprocess_secs = t0.elapsed().as_secs_f64();
-
-    let mut opt = build_optimizer(cfg);
-    let model = native_model(pre.data.task);
-    let mut pjrt = match src {
-        GradSource::Native => None,
-        GradSource::Pjrt(rt) => {
-            let lin = PjrtLinear::new(rt, pre.data.task, batch, d)?;
-            Some((rt, lin))
-        }
-    };
-
-    let mut theta = vec![0.0f32; d];
-    let mut grad = vec![0.0f32; d];
-    let mut acc = vec![0.0f32; d];
-    let mut draws: Vec<WeightedDraw> = Vec::with_capacity(batch);
-    let mut idxs = vec![0usize; batch];
-    let mut weights = vec![0.0f64; batch];
-
-    let mut curve = Vec::new();
-    // LGD's table build counts as wall-clock spent before the first step.
+    let mut ctx = LoopCtx::new(cfg, pre, src, None)?;
     let mut train_wall = preprocess_secs;
-
-    // Loss evals are excluded from the training clock.
-    let (tr0, te0) = eval_losses(pre, test, model.as_ref(), &mut pjrt, &theta)?;
-    curve.push(CurvePoint {
-        iter: 0,
-        epoch: 0.0,
-        wall: train_wall,
-        train_loss: tr0,
-        test_loss: te0,
-    });
-
-    for it in 1..=total_iters {
-        let step_t = Instant::now();
-        // --- sample ---
-        if batch == 1 {
-            draws.clear();
-            draws.push(est.draw(&theta));
-        } else {
-            est.draw_batch(&theta, batch, &mut draws);
-        }
-        // --- gradient estimate ---
-        accumulate_grad(
-            pre,
-            model.as_ref(),
-            &mut pjrt,
-            &draws,
-            batch,
-            &theta,
-            &mut grad,
-            &mut idxs,
-            &mut weights,
-            &mut acc,
-        )?;
-        // --- update ---
-        opt.step(&mut theta, &acc);
-        train_wall += step_t.elapsed().as_secs_f64();
-
-        if it % eval_every == 0 || it == total_iters {
-            let (tr, te) = eval_losses(pre, test, model.as_ref(), &mut pjrt, &theta)?;
-            curve.push(CurvePoint {
-                iter: it,
-                epoch: it as f64 / iters_per_epoch as f64,
-                wall: train_wall,
-                train_loss: tr,
-                test_loss: te,
-            });
-        }
-    }
-
-    Ok(TrainOutcome {
-        curve,
-        theta,
-        wall_secs: train_wall,
-        preprocess_secs,
-        iterations: total_iters,
-        est_stats: est.stats(),
-        estimator: est.name().to_string(),
-        shard_build_secs,
-    })
-}
-
-/// `lsh.async_workers > 0`: monomorphize the pipelined trainer over the
-/// configured hash family (the draw engine is generic over the hasher).
-fn train_async_dispatch(
-    cfg: &RunConfig,
-    pre: &Preprocessed,
-    test: &Dataset,
-    src: GradSource<'_>,
-) -> Result<TrainOutcome> {
-    let hd = pre.hashed.cols();
-    let opts = lgd_options(cfg);
-    match cfg.lsh.hasher {
-        HasherKind::Dense => {
-            let h = DenseSrp::new(hd, cfg.lsh.k, cfg.lsh.l, cfg.lsh.seed);
-            train_async(cfg, pre, test, src, h, opts)
-        }
-        HasherKind::Sparse => {
-            let h = SparseSrp::new(hd, cfg.lsh.k, cfg.lsh.l, cfg.lsh.density, cfg.lsh.seed);
-            train_async(cfg, pre, test, src, h, opts)
-        }
-        HasherKind::Quadratic => {
-            let h = QuadraticSrp::new(hd, cfg.lsh.k, cfg.lsh.l, cfg.lsh.density, cfg.lsh.seed);
-            train_async(cfg, pre, test, src, h, opts)
-        }
-    }
-}
-
-/// The pipelined step loop: one draw-engine session per epoch. The
-/// sampling query is frozen at the epoch's entry θ (a stale proposal with
-/// *exact* probabilities — importance weighting keeps the estimator
-/// unbiased for any fixed proposal, exactly the `QueryCache` amortisation
-/// argument), so while batch `t`'s gradient is computed and applied here,
-/// batch `t+1` is already being assembled on the sampler threads. Each
-/// epoch boundary is a queue flush plus one fused re-hash of the new θ.
-/// Eval time is excluded from the training clock; queue-stall time is
-/// *included* (it is real wall-clock the pipeline failed to hide).
-fn train_async<H>(
-    cfg: &RunConfig,
-    pre: &Preprocessed,
-    test: &Dataset,
-    src: GradSource<'_>,
-    hasher: H,
-    opts: LgdOptions,
-) -> Result<TrainOutcome>
-where
-    H: SrpHasher + Clone,
-{
-    let n = pre.data.len();
-    let d = pre.data.dim();
-    if n == 0 {
-        return Err(Error::Data("empty training set".into()));
-    }
-    let batch = cfg.train.batch;
-    let iters_per_epoch = (n / batch).max(1) as u64;
-    let total_iters = iters_per_epoch * cfg.train.epochs as u64;
-    let eval_every = if cfg.train.eval_every > 0 {
-        cfg.train.eval_every as u64
-    } else {
-        iters_per_epoch
-    };
-
-    // One-time preprocessing: the sharded table build (shards = 1 is the
-    // single-table engine, still served asynchronously).
-    let t0 = Instant::now();
-    let mut est = ShardedLgdEstimator::new(pre, hasher, cfg.train.seed, opts, cfg.lsh.shards)?;
-    if cfg.lsh.rebalance_threshold > 0.0 {
-        est.set_rebalance_threshold(cfg.lsh.rebalance_threshold);
-    }
-    let shard_build_secs = est.build_report().per_shard_secs.clone();
-    let preprocess_secs = t0.elapsed().as_secs_f64();
-
-    let mut opt = build_optimizer(cfg);
-    let model = native_model(pre.data.task);
-    let mut pjrt = match src {
-        GradSource::Native => None,
-        GradSource::Pjrt(rt) => {
-            let lin = PjrtLinear::new(rt, pre.data.task, batch, d)?;
-            Some((rt, lin))
-        }
-    };
-
-    let mut theta = vec![0.0f32; d];
-    let mut grad = vec![0.0f32; d];
-    let mut acc = vec![0.0f32; d];
-    let mut idxs = vec![0usize; batch];
-    let mut weights = vec![0.0f64; batch];
-
-    let mut curve = Vec::new();
-    let mut train_wall = preprocess_secs;
-
-    let (tr0, te0) = eval_losses(pre, test, model.as_ref(), &mut pjrt, &theta)?;
-    curve.push(CurvePoint {
-        iter: 0,
-        epoch: 0.0,
-        wall: train_wall,
-        train_loss: tr0,
-        test_loss: te0,
-    });
-
-    let engine =
-        DrawEngineConfig { workers: cfg.lsh.async_workers, queue_depth: cfg.lsh.queue_depth };
-    let mut it = 0u64;
-    let mut abort: Option<Error> = None;
-    for _epoch in 0..cfg.train.epochs {
-        let frozen = theta.clone();
-        let epoch_t = Instant::now();
-        let mut eval_secs = 0.0f64;
-        let wall_base = train_wall;
-        run_session(&mut est, &engine, &frozen, batch, iters_per_epoch as usize, |_, draws| {
-            it += 1;
-            // --- gradient estimate (overlaps the next batch's sampling) ---
-            if let Err(e) = accumulate_grad(
-                pre,
-                model.as_ref(),
-                &mut pjrt,
-                draws,
-                batch,
-                &theta,
-                &mut grad,
-                &mut idxs,
-                &mut weights,
-                &mut acc,
-            ) {
-                abort = Some(e);
-                return false;
-            }
-            // --- update ---
-            opt.step(&mut theta, &acc);
-            if it % eval_every == 0 || it == total_iters {
-                let ev = Instant::now();
-                match eval_losses(pre, test, model.as_ref(), &mut pjrt, &theta) {
-                    Ok((tr, te)) => {
-                        eval_secs += ev.elapsed().as_secs_f64();
-                        curve.push(CurvePoint {
-                            iter: it,
-                            epoch: it as f64 / iters_per_epoch as f64,
-                            wall: wall_base + epoch_t.elapsed().as_secs_f64() - eval_secs,
-                            train_loss: tr,
-                            test_loss: te,
-                        });
-                    }
-                    Err(e) => {
-                        abort = Some(e);
-                        return false;
-                    }
-                }
-            }
-            true
-        })?;
-        if let Some(e) = abort.take() {
-            return Err(e);
-        }
-        train_wall = wall_base + epoch_t.elapsed().as_secs_f64() - eval_secs;
-    }
-
-    Ok(TrainOutcome {
-        curve,
-        theta,
-        wall_secs: train_wall,
-        preprocess_secs,
-        iterations: total_iters,
-        est_stats: est.stats(),
-        estimator: "lgd-async".to_string(),
-        shard_build_secs,
-    })
+    ctx.eval_point(pre, test, train_wall)?;
+    let mut draws: Vec<WeightedDraw> = Vec::with_capacity(ctx.batch);
+    let steps = ctx.total_iters;
+    train_wall =
+        run_sync_steps(&mut ctx, est.as_mut(), pre, test, steps, train_wall, &mut draws)?;
+    let stats = est.stats();
+    let name = est.name().to_string();
+    Ok(ctx.outcome(train_wall, preprocess_secs, stats, name, shard_build_secs, false))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::spec::RunConfig;
+    use crate::config::spec::{HasherKind, RunConfig};
     use crate::data::preprocess::{preprocess, PreprocessOptions};
     use crate::data::synth::SynthSpec;
     use crate::optim::Schedule;
@@ -542,6 +771,8 @@ mod tests {
         assert!(last < first * 0.8, "loss {first} -> {last}");
         assert_eq!(out.iterations, 4 * 400);
         assert!(out.preprocess_secs < 0.01, "SGD has no preprocessing");
+        assert!(!out.resumed);
+        assert_eq!(out.autosaves, 0);
     }
 
     #[test]
@@ -691,5 +922,40 @@ mod tests {
         let first = out.curve.first().unwrap().train_loss;
         let last = out.curve.last().unwrap().train_loss;
         assert!(last < first, "logreg did not descend: {first} -> {last}");
+    }
+
+    /// Store wiring: a run with `store.path` saves at the autosave cadence
+    /// plus the final epoch, and `train_resumed` warm-starts from the file
+    /// with zero table-build work (all-zero shard build timings).
+    #[test]
+    fn autosave_and_resume_wire_through() {
+        let (pre, te) = setup(300, 8, 21);
+        let dir = std::env::temp_dir().join("lgd-trainer-store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("wire.lgdsnap");
+        let mut cfg = small_cfg(EstimatorKind::Lgd);
+        cfg.lsh.shards = 2;
+        cfg.train.epochs = 2;
+        cfg.store.path = Some(path.clone());
+        cfg.store.autosave_epochs = 1;
+        let cold = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+        assert_eq!(cold.autosaves, 2, "one per epoch (the final save coincides)");
+        assert!(!cold.resumed);
+        // resume for two more epochs
+        cfg.train.epochs = 4;
+        cfg.store.autosave_epochs = 0;
+        cfg.store.resume = true;
+        let snap = crate::store::snapshot::load(&path).unwrap();
+        assert_eq!(snap.train.as_ref().unwrap().epochs_done, 2);
+        let warm = train_resumed(&cfg, &te, GradSource::Native, snap).unwrap();
+        assert!(warm.resumed);
+        assert_eq!(warm.iterations, cold.iterations * 2, "global counter continues");
+        assert!(
+            warm.shard_build_secs.iter().all(|&s| s == 0.0),
+            "a warm start performs zero table-build work"
+        );
+        assert_eq!(warm.autosaves, 1, "final save still fires when a path is set");
+        assert_eq!(warm.curve.first().unwrap().iter, cold.iterations);
+        std::fs::remove_file(&path).unwrap();
     }
 }

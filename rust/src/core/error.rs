@@ -23,6 +23,11 @@ pub enum Error {
     Io(String),
     /// Pipeline/coordination failure (channel closed, worker panicked...).
     Pipeline(String),
+    /// Snapshot-store failure: unreadable, truncated or corrupted persisted
+    /// state (bad magic/version, CRC mismatch, inconsistent sections). A
+    /// damaged snapshot must always surface as this — never UB and never a
+    /// silently wrong index.
+    Store(String),
 }
 
 impl fmt::Display for Error {
@@ -35,6 +40,7 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Io(m) => write!(f, "io error: {m}"),
             Error::Pipeline(m) => write!(f, "pipeline error: {m}"),
+            Error::Store(m) => write!(f, "store error: {m}"),
         }
     }
 }
@@ -72,6 +78,8 @@ mod tests {
         assert_eq!(e.to_string(), "shape error: 3x4 vs 5x4");
         let e = Error::Runtime("compile failed".into());
         assert!(e.to_string().contains("runtime"));
+        let e = Error::Store("crc mismatch in section 3".into());
+        assert_eq!(e.to_string(), "store error: crc mismatch in section 3");
     }
 
     #[test]

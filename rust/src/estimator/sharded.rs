@@ -322,6 +322,60 @@ impl<'a, H: SrpHasher> ShardedLgdEstimator<'a, H> {
         self.pre
     }
 
+    /// Raw RNG position (snapshot payload — see [`Pcg64::raw_state`]).
+    pub(crate) fn rng_raw(&self) -> (u128, u128) {
+        self.rng.raw_state()
+    }
+
+    /// The estimator's own draw-path counters (snapshot payload). Unlike
+    /// [`GradientEstimator::stats`] this does *not* fold in the shard set's
+    /// migration counters — those are persisted with the set itself.
+    pub(crate) fn raw_stats(&self) -> EstimatorStats {
+        self.stats
+    }
+
+    /// The single-draw query cache (snapshot payload).
+    pub(crate) fn cache_view(&self) -> &QueryCache {
+        &self.cache
+    }
+
+    /// The sampler options this estimator runs with (snapshot payload).
+    pub(crate) fn options(&self) -> &LgdOptions {
+        &self.opts
+    }
+
+    /// Reassemble an estimator from snapshot-restored parts. No tables are
+    /// built and no query is hashed — the restored engine continues the
+    /// saved one's draw stream bit-for-bit (RNG position, cache window and
+    /// counters all round-trip). The build report is all zeros: a warm
+    /// start performs zero table-build work, and that is observable.
+    pub(crate) fn from_restored(
+        pre: &'a Preprocessed,
+        set: ShardSet<H>,
+        rng: Pcg64,
+        stats: EstimatorStats,
+        cache: QueryCache,
+        opts: LgdOptions,
+    ) -> Self {
+        let report = ShardedBuildReport {
+            per_shard_secs: vec![0.0; set.shard_count()],
+            wall_secs: 0.0,
+            shard_rows: (0..set.shard_count()).map(|s| set.shard(s).stored.rows()).collect(),
+        };
+        ShardedLgdEstimator {
+            pre,
+            set,
+            rng,
+            opts,
+            stats,
+            query: Vec::new(),
+            cache,
+            codes: Vec::new(),
+            batch: Vec::new(),
+            report,
+        }
+    }
+
     /// Split the estimator into the borrow bundle the async draw engine
     /// drives a session through.
     pub(crate) fn engine_parts(&mut self) -> EngineParts<'_, 'a, H> {

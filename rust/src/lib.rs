@@ -27,6 +27,7 @@ pub mod lsh;
 pub mod model;
 pub mod optim;
 pub mod runtime;
+pub mod store;
 pub mod testkit;
 
 pub use crate::core::error::{Error, Result};

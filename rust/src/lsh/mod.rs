@@ -13,3 +13,110 @@ pub use quadratic::QuadraticSrp;
 pub use sampler::{Draw, LshSampler, SampleCost, Sampled};
 pub use srp::{DenseSrp, HashStats, SparseSrp, SrpHasher};
 pub use tables::{BucketRead, BucketView, LshTables, SealedTables, TableStats, TableStore};
+
+use crate::config::spec::{HasherKind, LshConfig};
+
+/// One concrete hash family behind a kind tag — THE single
+/// `HasherKind` → constructor dispatch in the codebase. The trainer's
+/// boxed estimator builder, the monomorphized LGD training loop and the
+/// snapshot loader all obtain their family here (previously the match was
+/// written once per call site, flagged by the PR-4 review; warm-start would
+/// have made a third copy).
+///
+/// `Clone` clones the wrapped family; every family's hash-invocation
+/// counters live behind a shared `Arc`, so a clone reports into the same
+/// cells — the handle pattern the zero-rebuild proofs rely on.
+#[derive(Clone)]
+pub enum AnyHasher {
+    /// Dense N(0,1) SimHash.
+    Dense(DenseSrp),
+    /// Very sparse ±1 projections with a calibrated collision law.
+    Sparse(SparseSrp),
+    /// Implicit quadratic feature-map SRP.
+    Quadratic(QuadraticSrp),
+}
+
+/// A generic computation over a concrete hash family. `AnyHasher::visit`
+/// monomorphizes the visitor per family, so generic engines (the sharded
+/// estimator, the draw engine, the snapshot restore path) never need their
+/// own kind dispatch.
+///
+/// The bound deliberately includes `store::snapshot::SnapshotHasher` even
+/// though that trait lives a layer up: trait impls cannot *strengthen* the
+/// method bounds, so persistence-needing visitors (the trainer's autosave
+/// path) can only exist if the capability is guaranteed here — and under
+/// the production north star every servable family must be persistable
+/// anyway. The cost is that a new family must ship its `SnapshotHasher`
+/// impl before it can be dispatched at all, which is the intended
+/// forcing function (an un-snapshottable index would silently re-pay the
+/// §2.2 one-time cost on every restart).
+pub trait HasherVisitor {
+    /// Result of the computation.
+    type Out;
+    /// Run with the concrete family.
+    fn visit<H>(self, hasher: H) -> Self::Out
+    where
+        H: crate::store::snapshot::SnapshotHasher + Clone + 'static;
+}
+
+impl AnyHasher {
+    /// Construct the family an `[lsh]` config block describes, over hash
+    /// space dimension `dim`.
+    pub fn from_lsh_config(lsh: &LshConfig, dim: usize) -> AnyHasher {
+        match lsh.hasher {
+            HasherKind::Dense => AnyHasher::Dense(DenseSrp::new(dim, lsh.k, lsh.l, lsh.seed)),
+            HasherKind::Sparse => {
+                AnyHasher::Sparse(SparseSrp::new(dim, lsh.k, lsh.l, lsh.density, lsh.seed))
+            }
+            HasherKind::Quadratic => {
+                AnyHasher::Quadratic(QuadraticSrp::new(dim, lsh.k, lsh.l, lsh.density, lsh.seed))
+            }
+        }
+    }
+
+    /// Which config kind this family is.
+    pub fn kind(&self) -> HasherKind {
+        match self {
+            AnyHasher::Dense(_) => HasherKind::Dense,
+            AnyHasher::Sparse(_) => HasherKind::Sparse,
+            AnyHasher::Quadratic(_) => HasherKind::Quadratic,
+        }
+    }
+
+    /// Shared hash-invocation counters of the wrapped family (clones report
+    /// into the same cells — the zero-rebuild proof reads these).
+    pub fn hash_stats(&self) -> HashStats {
+        match self {
+            AnyHasher::Dense(h) => h.hash_stats(),
+            AnyHasher::Sparse(h) => h.hash_stats(),
+            AnyHasher::Quadratic(h) => h.hash_stats(),
+        }
+    }
+
+    /// Meta-hash width of the wrapped family.
+    pub fn k(&self) -> usize {
+        match self {
+            AnyHasher::Dense(h) => h.k(),
+            AnyHasher::Sparse(h) => h.k(),
+            AnyHasher::Quadratic(h) => h.k(),
+        }
+    }
+
+    /// Table count of the wrapped family.
+    pub fn l(&self) -> usize {
+        match self {
+            AnyHasher::Dense(h) => h.l(),
+            AnyHasher::Sparse(h) => h.l(),
+            AnyHasher::Quadratic(h) => h.l(),
+        }
+    }
+
+    /// Monomorphize `v` over the concrete family.
+    pub fn visit<V: HasherVisitor>(self, v: V) -> V::Out {
+        match self {
+            AnyHasher::Dense(h) => v.visit(h),
+            AnyHasher::Sparse(h) => v.visit(h),
+            AnyHasher::Quadratic(h) => v.visit(h),
+        }
+    }
+}

@@ -97,6 +97,54 @@ impl QuadraticSrp {
         }
         QuadraticSrp { dim, k, l, density, planes, counters: Default::default() }
     }
+
+    /// Raw per-plane `(i, j, sign)` entry triples — the snapshot payload
+    /// (L·K planes in table-major, bit-minor order).
+    pub(crate) fn plane_parts(&self) -> Vec<(&[u32], &[u32], &[f32])> {
+        self.planes
+            .iter()
+            .map(|p| (p.ii.as_slice(), p.jj.as_slice(), p.sign.as_slice()))
+            .collect()
+    }
+
+    /// Configured nonzero density (diagnostic + snapshot payload).
+    pub fn density(&self) -> f64 {
+        self.density
+    }
+
+    /// Rebuild a family from snapshot parts; bit-exact codes versus the
+    /// saved family (the plane entries are the entire hash state).
+    pub(crate) fn from_parts(
+        dim: usize,
+        k: usize,
+        l: usize,
+        density: f64,
+        planes: Vec<(Vec<u32>, Vec<u32>, Vec<f32>)>,
+    ) -> crate::core::error::Result<Self> {
+        use crate::core::error::Error;
+        if k == 0 || k > 32 || l == 0 || dim == 0 || planes.len() != l * k {
+            return Err(Error::Store(format!(
+                "quadratic hasher parts inconsistent: dim {dim} k {k} l {l} with {} planes",
+                planes.len()
+            )));
+        }
+        if !(density > 0.0 && density <= 1.0) {
+            return Err(Error::Store(format!("quadratic hasher density {density} out of (0,1]")));
+        }
+        let mut built = Vec::with_capacity(planes.len());
+        for (idx, (ii, jj, sign)) in planes.into_iter().enumerate() {
+            if ii.len() != jj.len() || ii.len() != sign.len() || ii.is_empty() {
+                return Err(Error::Store(format!("quadratic plane {idx} has ragged entries")));
+            }
+            if ii.iter().chain(jj.iter()).any(|&v| v as usize >= dim) {
+                return Err(Error::Store(format!(
+                    "quadratic plane {idx} references a dimension >= {dim}"
+                )));
+            }
+            built.push(SparseQuadPlane { ii, jj, sign });
+        }
+        Ok(QuadraticSrp { dim, k, l, density, planes: built, counters: Default::default() })
+    }
 }
 
 impl SrpHasher for QuadraticSrp {

@@ -129,6 +129,24 @@ impl QueryCache {
     pub fn is_empty(&self) -> bool {
         self.query.is_empty()
     }
+
+    /// Snapshot view: `(query, per-table codes, age, norm)`. Persisting the
+    /// cache keeps a restored estimator mid-refresh-window, so its single-
+    /// draw stream continues exactly where the saved one stopped (refresh
+    /// *timing* is part of the stream when θ moves between draws).
+    pub(crate) fn snapshot_parts(&self) -> (&[f32], &[Option<u32>], usize, f64) {
+        (&self.query, &self.codes, self.age, self.norm)
+    }
+
+    /// Rebuild from [`Self::snapshot_parts`].
+    pub(crate) fn from_parts(
+        query: Vec<f32>,
+        codes: Vec<Option<u32>>,
+        age: usize,
+        norm: f64,
+    ) -> QueryCache {
+        QueryCache { query, codes, age, norm, scratch: Vec::new() }
+    }
 }
 
 /// The LSH sampler: borrows a bucket store (Vec-backed or sealed — any

@@ -15,6 +15,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::core::error::{Error, Result};
 use crate::core::matrix::dot_f64;
 use crate::core::rng::{Pcg64, Rng};
 
@@ -153,6 +154,32 @@ impl DenseSrp {
         let r = table * self.k + bit;
         &self.planes[r * self.dim..(r + 1) * self.dim]
     }
+
+    /// Raw (L·K) × dim plane matrix — the snapshot payload.
+    pub(crate) fn planes_raw(&self) -> &[f32] {
+        &self.planes
+    }
+
+    /// Rebuild a family from snapshot parts. The dim-major transpose is
+    /// recomputed with the same loop as [`Self::new`], so the restored
+    /// family's codes are bitwise-identical to the saved one. Counters
+    /// start fresh (a restored index has done no hashing yet).
+    pub(crate) fn from_parts(dim: usize, k: usize, l: usize, planes: Vec<f32>) -> Result<Self> {
+        if k == 0 || k > 32 || l == 0 || dim == 0 || planes.len() != l * k * dim {
+            return Err(Error::Store(format!(
+                "dense hasher parts inconsistent: dim {dim} k {k} l {l} with {} plane floats",
+                planes.len()
+            )));
+        }
+        let lk = l * k;
+        let mut planes_t = vec![0.0f32; lk * dim];
+        for r in 0..lk {
+            for i in 0..dim {
+                planes_t[i * lk + r] = planes[r * dim + i];
+            }
+        }
+        Ok(DenseSrp { dim, k, l, planes, planes_t, counters: Arc::default() })
+    }
 }
 
 impl SrpHasher for DenseSrp {
@@ -270,6 +297,23 @@ pub struct CalibCurve {
 impl CalibCurve {
     /// Number of cosine bins.
     pub const BINS: usize = 41;
+
+    /// The raw bin values (snapshot payload).
+    pub(crate) fn bins(&self) -> &[f64] {
+        &self.bins
+    }
+
+    /// Rebuild from snapshot bins.
+    pub(crate) fn from_bins(bins: Vec<f64>) -> Result<Self> {
+        if bins.len() != Self::BINS {
+            return Err(Error::Store(format!(
+                "calibration curve has {} bins, expected {}",
+                bins.len(),
+                Self::BINS
+            )));
+        }
+        Ok(CalibCurve { bins })
+    }
 
     /// Evaluate by linear interpolation, clamped to (0, 1).
     pub fn eval(&self, cos: f64) -> f64 {
@@ -444,6 +488,65 @@ impl SparseSrp {
     /// Configured density.
     pub fn density(&self) -> f64 {
         self.density
+    }
+
+    /// Per-plane canonical interleaved `(dim << 1 | sign)` entry lists —
+    /// the snapshot payload (L·K rows, ascending dimension order each).
+    pub(crate) fn row_entries(&self) -> Vec<&[u32]> {
+        self.rows.iter().map(|r| r.entries.as_slice()).collect()
+    }
+
+    /// The calibrated collision bins (snapshot payload).
+    pub(crate) fn calib_bins(&self) -> &[f64] {
+        self.calib.bins()
+    }
+
+    /// Rebuild a family from snapshot parts: the CSC postings are
+    /// recomputed with the same transpose as [`Self::new`] and the
+    /// calibration curve is restored bit-exact, so codes *and* the
+    /// Algorithm-1 probabilities of the restored family are identical to
+    /// the saved one — without re-running the ~1M-add calibration.
+    pub(crate) fn from_parts(
+        dim: usize,
+        k: usize,
+        l: usize,
+        density: f64,
+        entries: Vec<Vec<u32>>,
+        calib_bins: Vec<f64>,
+    ) -> Result<Self> {
+        if k == 0 || k > 32 || l == 0 || dim == 0 || entries.len() != l * k {
+            return Err(Error::Store(format!(
+                "sparse hasher parts inconsistent: dim {dim} k {k} l {l} with {} rows",
+                entries.len()
+            )));
+        }
+        if !(density > 0.0 && density <= 1.0) {
+            return Err(Error::Store(format!("sparse hasher density {density} out of (0,1]")));
+        }
+        let mut rows = Vec::with_capacity(entries.len());
+        for (i, e) in entries.into_iter().enumerate() {
+            if e.is_empty() {
+                return Err(Error::Store(format!("sparse plane row {i} has no entries")));
+            }
+            if e.iter().any(|&v| (v >> 1) as usize >= dim) {
+                return Err(Error::Store(format!(
+                    "sparse plane row {i} references a dimension >= {dim}"
+                )));
+            }
+            rows.push(SparseRow { entries: e });
+        }
+        let (post_off, post) = Self::transpose(dim, &rows);
+        Ok(SparseSrp {
+            dim,
+            k,
+            l,
+            density,
+            rows,
+            post_off,
+            post,
+            calib: CalibCurve::from_bins(calib_bins)?,
+            counters: Arc::default(),
+        })
     }
 }
 

@@ -747,6 +747,130 @@ impl<H: SrpHasher> BucketRead for SealedTables<H> {
     }
 }
 
+/// One sealed table flattened for the snapshot store: the CSR arena
+/// sections exactly as they sit in memory (sorted code index, offsets,
+/// live prefixes, id slab) plus the delta overlay as `(code, ids)` pairs in
+/// ascending code order. `slot_of` is derived state and is rebuilt on load.
+pub(crate) struct SealedTableDump {
+    pub(crate) codes: Vec<u32>,
+    pub(crate) offsets: Vec<u32>,
+    pub(crate) live: Vec<u32>,
+    pub(crate) ids: Vec<u32>,
+    pub(crate) overlay: Vec<(u32, Vec<u32>)>,
+}
+
+/// Borrowed twin of [`SealedTableDump`] — what the *encoder* walks. The
+/// arena sections are handed out as slices straight off the live table, so
+/// a save never deep-clones the id slab (only the tiny per-bucket index
+/// vectors are allocated).
+pub(crate) struct SealedTableView<'a> {
+    pub(crate) codes: &'a [u32],
+    pub(crate) offsets: &'a [u32],
+    pub(crate) live: &'a [u32],
+    pub(crate) ids: &'a [u32],
+    pub(crate) overlay: Vec<(u32, &'a [u32])>,
+}
+
+/// Layout-tagged snapshot image of a [`TableStore`]. The Vec layout dumps
+/// each table's non-empty buckets in ascending code order with bucket
+/// contents *in exact element order* (in-bucket order is part of the draw
+/// stream); the sealed layout dumps the already-flat arena section by
+/// section — no re-serialization bucket by bucket. The owned form is what
+/// the *decoder* produces; encoding goes through the borrowed
+/// [`TableDumpView`] so saves do not clone bucket contents.
+pub(crate) enum TableDump {
+    /// Vec-of-Vec buckets: per table, `(code, ids)` ascending by code.
+    Vec { tables: Vec<Vec<(u32, Vec<u32>)>>, len: usize },
+    /// CSR arena + overlay per table.
+    Sealed { tables: Vec<SealedTableDump>, len: usize },
+}
+
+/// Borrowed twin of [`TableDump`] for the encode path.
+pub(crate) enum TableDumpView<'a> {
+    /// Vec-of-Vec buckets, borrowed in ascending code order.
+    Vec { tables: Vec<Vec<(u32, &'a [u32])>>, len: usize },
+    /// CSR arena + overlay per table, borrowed.
+    Sealed { tables: Vec<SealedTableView<'a>>, len: usize },
+}
+
+impl SealedTable {
+    fn dump_view(&self) -> SealedTableView<'_> {
+        SealedTableView {
+            codes: &self.codes,
+            offsets: &self.offsets,
+            live: &self.live,
+            ids: &self.ids,
+            overlay: self.overlay.iter().map(|(c, v)| (*c, v.as_slice())).collect(),
+        }
+    }
+
+    /// Rebuild from a dump. Every structural invariant the probe path
+    /// relies on is re-validated here — including that every *live* id
+    /// (arena live prefixes + overlay; dead slack entries are never read)
+    /// indexes a stored point below `points` — so a snapshot that passed
+    /// its CRC but is semantically inconsistent still fails loudly instead
+    /// of producing out-of-bounds slab or row reads.
+    fn from_dump(k: usize, points: usize, d: SealedTableDump) -> Result<SealedTable> {
+        let corrupt = |m: String| Error::Store(format!("sealed table dump: {m}"));
+        if d.offsets.len() != d.codes.len() + 1 || d.live.len() != d.codes.len() {
+            return Err(corrupt("index section lengths disagree".into()));
+        }
+        if d.offsets.first() != Some(&0) || *d.offsets.last().unwrap() as usize != d.ids.len() {
+            return Err(corrupt("offsets do not span the id slab".into()));
+        }
+        let cap = 1u64 << k.min(32);
+        for s in 0..d.codes.len() {
+            if s + 1 < d.codes.len() && d.codes[s] >= d.codes[s + 1] {
+                return Err(corrupt("code index is not strictly ascending".into()));
+            }
+            if (d.codes[s] as u64) >= cap {
+                return Err(corrupt(format!("code {} exceeds the 2^{k} key space", d.codes[s])));
+            }
+            if d.offsets[s] > d.offsets[s + 1] {
+                return Err(corrupt("offsets are not monotone".into()));
+            }
+            if d.live[s] > d.offsets[s + 1] - d.offsets[s] {
+                return Err(corrupt(format!("slot {s} live prefix exceeds its capacity")));
+            }
+            let off = d.offsets[s] as usize;
+            for &id in &d.ids[off..off + d.live[s] as usize] {
+                if id as usize >= points {
+                    return Err(corrupt(format!(
+                        "slot {s} holds id {id} but the table stores {points} points"
+                    )));
+                }
+            }
+        }
+        let mut overlay = BTreeMap::new();
+        for (code, ids) in d.overlay {
+            if (code as u64) >= cap {
+                return Err(corrupt(format!("overlay code {code} exceeds the key space")));
+            }
+            if ids.is_empty() {
+                return Err(corrupt(format!("overlay bucket {code} is empty")));
+            }
+            if let Some(&id) = ids.iter().find(|&&id| id as usize >= points) {
+                return Err(corrupt(format!(
+                    "overlay bucket {code} holds id {id} but the table stores {points} points"
+                )));
+            }
+            if overlay.insert(code, ids).is_some() {
+                return Err(corrupt(format!("duplicate overlay bucket {code}")));
+            }
+        }
+        let mut t = SealedTable {
+            slot_of: if k <= 12 { vec![u32::MAX; 1 << k] } else { Vec::new() },
+            codes: d.codes,
+            offsets: d.offsets,
+            live: d.live,
+            ids: d.ids,
+            overlay,
+        };
+        t.rebuild_slot_of();
+        Ok(t)
+    }
+}
+
 /// Either table layout behind one API — the field type of
 /// [`crate::coordinator::pipeline::ShardTables`] and the estimators, so the
 /// `lsh.sealed` knob can swap layouts without touching the draw logic.
@@ -838,6 +962,84 @@ impl<H: SrpHasher> TableStore<H> {
     pub fn query_bucket(&self, t: usize, query: &[f32]) -> BucketView<'_> {
         let code = self.hasher().code(t, query);
         self.view(t, code)
+    }
+
+    /// Borrowed snapshot image of this store (layout-preserving; see
+    /// [`TableDumpView`]). No bucket contents are cloned — the encoder
+    /// streams straight off the live structures.
+    pub(crate) fn dump_view(&self) -> TableDumpView<'_> {
+        match self {
+            TableStore::Vec(t) => TableDumpView::Vec {
+                tables: t.tables.iter().map(|b| b.sorted_buckets()).collect(),
+                len: t.len,
+            },
+            TableStore::Sealed(t) => TableDumpView::Sealed {
+                tables: t.tables.iter().map(|s| s.dump_view()).collect(),
+                len: t.len,
+            },
+        }
+    }
+
+    /// Rebuild a store from a snapshot dump around `hasher` (a clone of the
+    /// saved family). Bucket contents are restored element for element, so
+    /// the rebuilt store serves the *identical* draw stream; all structural
+    /// invariants — including that every bucket id addresses one of the
+    /// `len` stored points — are re-validated and violations are
+    /// `Error::Store`, never an out-of-bounds read later on the draw path.
+    pub(crate) fn from_dump(hasher: H, dump: TableDump) -> Result<TableStore<H>> {
+        let (l, k) = (hasher.l(), hasher.k());
+        let cap = 1u64 << k.min(32);
+        match dump {
+            TableDump::Vec { tables, len } => {
+                if tables.len() != l {
+                    return Err(Error::Store(format!(
+                        "vec table dump has {} tables, hasher family has {l}",
+                        tables.len()
+                    )));
+                }
+                let mut t = LshTables::new(hasher);
+                for (ti, buckets) in tables.into_iter().enumerate() {
+                    let mut prev: Option<u32> = None;
+                    for (code, ids) in buckets {
+                        if (code as u64) >= cap {
+                            return Err(Error::Store(format!(
+                                "table {ti}: bucket code {code} exceeds the 2^{k} key space"
+                            )));
+                        }
+                        if prev.map(|p| code <= p).unwrap_or(false) {
+                            return Err(Error::Store(format!(
+                                "table {ti}: bucket codes not strictly ascending"
+                            )));
+                        }
+                        prev = Some(code);
+                        for id in ids {
+                            if id as usize >= len {
+                                return Err(Error::Store(format!(
+                                    "table {ti} code {code}: id {id} but the store holds \
+                                     {len} points"
+                                )));
+                            }
+                            t.insert_coded(ti, code, id);
+                        }
+                    }
+                }
+                t.finish_coded_inserts(len);
+                Ok(TableStore::Vec(t))
+            }
+            TableDump::Sealed { tables, len } => {
+                if tables.len() != l {
+                    return Err(Error::Store(format!(
+                        "sealed table dump has {} tables, hasher family has {l}",
+                        tables.len()
+                    )));
+                }
+                let rebuilt = tables
+                    .into_iter()
+                    .map(|d| SealedTable::from_dump(k, len, d))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(TableStore::Sealed(SealedTables { hasher, tables: rebuilt, len }))
+            }
+        }
     }
 }
 
@@ -1145,6 +1347,113 @@ mod tests {
             }
             assert_eq!(sealed.stats(), vecs.stats());
         });
+    }
+
+    /// Test-only materialisation of a borrowed dump view into the owned
+    /// form the decoder produces (the encode path never does this).
+    fn owned_dump(view: TableDumpView<'_>) -> TableDump {
+        match view {
+            TableDumpView::Vec { tables, len } => TableDump::Vec {
+                tables: tables
+                    .into_iter()
+                    .map(|b| b.into_iter().map(|(c, ids)| (c, ids.to_vec())).collect())
+                    .collect(),
+                len,
+            },
+            TableDumpView::Sealed { tables, len } => TableDump::Sealed {
+                tables: tables
+                    .into_iter()
+                    .map(|t| SealedTableDump {
+                        codes: t.codes.to_vec(),
+                        offsets: t.offsets.to_vec(),
+                        live: t.live.to_vec(),
+                        ids: t.ids.to_vec(),
+                        overlay: t.overlay.into_iter().map(|(c, v)| (c, v.to_vec())).collect(),
+                    })
+                    .collect(),
+                len,
+            },
+        }
+    }
+
+    /// Snapshot dump → rebuild round-trip: both layouts reproduce every
+    /// bucket element for element — including a sealed store with a live
+    /// delta overlay and removal slack — and corrupted dumps are rejected.
+    #[test]
+    fn dump_roundtrip_preserves_buckets_exactly() {
+        let rows = unit_rows(60, 8, 91);
+        let h = DenseSrp::new(8, 3, 5, 92);
+        for sealed in [false, true] {
+            let built = LshTables::build(h.clone(), rows.iter().map(|r| r.as_slice())).unwrap();
+            let mut store =
+                if sealed { TableStore::Sealed(built.seal()) } else { TableStore::Vec(built) };
+            // mutate so the sealed side carries overlay entries + slack
+            for id in [3u32, 17, 40] {
+                assert!(store.remove(id, &rows[id as usize]));
+            }
+            for id in [40u32, 3, 17] {
+                store.insert(id, &rows[id as usize]).unwrap();
+            }
+            let rebuilt = TableStore::from_dump(h.clone(), owned_dump(store.dump_view())).unwrap();
+            assert_eq!(rebuilt.is_sealed(), sealed);
+            assert_eq!(rebuilt.len(), store.len());
+            assert_eq!(rebuilt.overlay_len(), store.overlay_len());
+            for t in 0..5 {
+                for code in 0..(1u32 << 3) {
+                    assert_eq!(
+                        rebuilt.view(t, code).to_vec(),
+                        store.view(t, code).to_vec(),
+                        "sealed={sealed} table {t} code {code}: dump round-trip diverged"
+                    );
+                }
+            }
+            assert_eq!(rebuilt.stats(), store.stats());
+        }
+        // corrupted dumps fail loudly
+        let bad = TableDump::Sealed {
+            tables: vec![SealedTableDump {
+                codes: vec![1, 1], // not strictly ascending
+                offsets: vec![0, 1, 2],
+                live: vec![1, 1],
+                ids: vec![0, 1],
+                overlay: Vec::new(),
+            }],
+            len: 2,
+        };
+        let h1 = DenseSrp::new(8, 3, 1, 93);
+        assert!(matches!(TableStore::from_dump(h1, bad), Err(Error::Store(_))));
+        let bad = TableDump::Vec { tables: vec![vec![(1u32 << 3, vec![0])]], len: 1 };
+        let h1 = DenseSrp::new(8, 3, 1, 93);
+        assert!(matches!(TableStore::from_dump(h1, bad), Err(Error::Store(_))));
+        // a live id past the stored-point count must be rejected at load,
+        // not crash the draw path later (Vec, arena live prefix, overlay)
+        let bad = TableDump::Vec { tables: vec![vec![(2u32, vec![0, 7])]], len: 5 };
+        let h1 = DenseSrp::new(8, 3, 1, 93);
+        assert!(matches!(TableStore::from_dump(h1, bad), Err(Error::Store(_))));
+        let bad = TableDump::Sealed {
+            tables: vec![SealedTableDump {
+                codes: vec![2],
+                offsets: vec![0, 2],
+                live: vec![2],
+                ids: vec![0, 9], // 9 >= len 5
+                overlay: Vec::new(),
+            }],
+            len: 5,
+        };
+        let h1 = DenseSrp::new(8, 3, 1, 93);
+        assert!(matches!(TableStore::from_dump(h1, bad), Err(Error::Store(_))));
+        let bad = TableDump::Sealed {
+            tables: vec![SealedTableDump {
+                codes: vec![2],
+                offsets: vec![0, 1],
+                live: vec![1],
+                ids: vec![0],
+                overlay: vec![(2, vec![11])], // 11 >= len 5
+            }],
+            len: 5,
+        };
+        let h1 = DenseSrp::new(8, 3, 1, 93);
+        assert!(matches!(TableStore::from_dump(h1, bad), Err(Error::Store(_))));
     }
 
     /// TableStore dispatch: seal round-trip, coded probe and mutation all

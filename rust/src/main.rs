@@ -1,7 +1,11 @@
 //! `lgd` — the LGD coordinator CLI.
 //!
 //! Subcommands:
-//! * `train --config run.toml` — run one training configuration.
+//! * `train --config run.toml` — run one training configuration
+//!   (`--snapshot/--autosave-epochs/--resume` persist + warm-start the
+//!   engine through `store::snapshot`).
+//! * `snapshot save|inspect|load` — build-and-persist, verify, and
+//!   warm-start-serve an engine snapshot.
 //! * `experiments --id <table4|fig9|fig10|fig11|fig12|fig13|variance|sampling|fig5|all>`
 //!   — regenerate a paper table/figure series into `results/`.
 //! * `gen-data --name <spec> --out file.csv` — dump a synthetic dataset.
@@ -9,17 +13,23 @@
 //!   against the native Rust gradient (three-layer health check).
 //! * `help` — this text.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
 
 use lgd::cli::Args;
 use lgd::config::spec::{Backend, RunConfig};
 use lgd::config::toml::TomlDoc;
-use lgd::coordinator::trainer::{train, GradSource};
+use lgd::coordinator::trainer::{
+    build_sharded_estimator, train, train_resumed, GradSource,
+};
 use lgd::core::error::{Error, Result};
 use lgd::data::csv::CsvWriter;
-use lgd::data::preprocess::{preprocess, PreprocessOptions};
+use lgd::data::preprocess::{preprocess, PreprocessOptions, Preprocessed};
+use lgd::estimator::GradientEstimator;
 use lgd::experiments::ExpOptions;
+use lgd::lsh::{AnyHasher, HasherVisitor};
 use lgd::runtime::Runtime;
+use lgd::store::snapshot::{self, LoadedSnapshot, SnapshotHasher};
 
 const USAGE: &str = "\
 lgd — LSH-sampled Stochastic Gradient Descent (paper reproduction)
@@ -28,6 +38,11 @@ USAGE:
   lgd train --config <run.toml> [--out <dir>] [--shards <n>]
             [--rebalance-threshold <f>] [--sealed <true|false>]
             [--async-workers <n>] [--queue-depth <n>]
+            [--snapshot <file.lgdsnap>] [--autosave-epochs <n>] [--resume]
+  lgd snapshot save --config <run.toml> --out <file.lgdsnap>
+               [--shards <n>] [--sealed <true|false>]
+  lgd snapshot inspect --path <file.lgdsnap>
+  lgd snapshot load --path <file.lgdsnap>
   lgd experiments --id <table4|fig9|fig10|fig11|fig12|fig13|variance|sampling|fig5|all>
                   [--scale <f>] [--out <dir>] [--seed <n>] [--quick] [--artifacts <dir>]
   lgd gen-data --name <yearmsd-like|slice-like|ujiindoor-like|pareto|uniform>
@@ -45,6 +60,12 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> Result<()> {
+    // `lgd snapshot <save|inspect|load>` carries a sub-verb, which the flag
+    // grammar does not allow as a second positional — route it before the
+    // general parse.
+    if argv.first().map(|s| s.as_str()) == Some("snapshot") {
+        return cmd_snapshot(&argv[1..]);
+    }
     let args = Args::parse(argv)?;
     match args.command.as_str() {
         "train" => cmd_train(&args),
@@ -62,7 +83,7 @@ fn run(argv: &[String]) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.allow(&[
         "config", "out", "shards", "rebalance-threshold", "sealed", "async-workers",
-        "queue-depth",
+        "queue-depth", "snapshot", "autosave-epochs", "resume",
     ])?;
     let cfg_path = args.require("config")?;
     let doc = TomlDoc::load(std::path::Path::new(&cfg_path))?;
@@ -93,17 +114,72 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.lsh.queue_depth = args.usize_or("queue-depth", 1024)?;
         cfg.validate()?;
     }
+    // --snapshot / --autosave-epochs / --resume override the [store] block
+    // (persistence + warm start).
+    if !args.str_or("snapshot", "").is_empty() {
+        cfg.store.path = Some(PathBuf::from(args.str_or("snapshot", "")));
+    }
+    if !args.str_or("autosave-epochs", "").is_empty() {
+        cfg.store.autosave_epochs = args.usize_or("autosave-epochs", 0)?;
+    }
+    // Accept both spellings: bare `--resume` and `--resume true|false`
+    // (the sibling bool flags take values, so the valued form is an easy
+    // reach — it must not silently fall through to a cold run that then
+    // overwrites the checkpoint).
+    if args.has("resume") || args.bool_or("resume", false)? {
+        cfg.store.resume = true;
+    }
+    cfg.validate()?;
 
-    // dataset
+    // dataset: the test split always comes from the config; the training
+    // split is either preprocessed here (cold) or restored from the
+    // snapshot (warm — the whole point is not touching the raw data again)
     let ds = build_dataset(&cfg.data.name, cfg.data.scale, cfg.data.seed)?;
     let (tr, te) = ds.split(cfg.data.train_frac, cfg.data.seed)?;
-    let pre = preprocess(tr, &PreprocessOptions { center: cfg.lsh.center })?;
 
-    let outcome = match cfg.train.backend {
-        Backend::Native => train(&cfg, &pre, &te, GradSource::Native)?,
-        Backend::Pjrt => {
-            let mut rt = Runtime::new(&lgd::runtime::default_artifacts_dir())?;
-            train(&cfg, &pre, &te, GradSource::Pjrt(&mut rt))?
+    let outcome = if cfg.store.resume {
+        let path = cfg.store.path.clone().expect("validated: resume requires a path");
+        let t0 = Instant::now();
+        let snap = snapshot::load(&path)?;
+        // The test split above is regenerated from the [data] config while
+        // the training rows come from the snapshot — if the config's
+        // dataset drifted since the save, the reported test losses would be
+        // measured against a split of data the model never trained on.
+        if tr.len() != snap.meta.n || tr.name != snap.pre.data.name {
+            return Err(Error::Config(format!(
+                "snapshot trains on '{}' ({} examples) but the [data] config regenerates \
+                 '{}' ({} examples) — resume with the original [data] block or re-index",
+                snap.pre.data.name,
+                snap.meta.n,
+                tr.name,
+                tr.len()
+            )));
+        }
+        println!(
+            "warm start from {} ({} examples, {} shard(s), {} layout, generation {}) \
+             in {:.3}s — no table build",
+            path.display(),
+            snap.meta.n,
+            snap.meta.shards,
+            if snap.meta.sealed { "sealed" } else { "vec" },
+            snap.meta.generation,
+            t0.elapsed().as_secs_f64()
+        );
+        match cfg.train.backend {
+            Backend::Native => train_resumed(&cfg, &te, GradSource::Native, snap)?,
+            Backend::Pjrt => {
+                let mut rt = Runtime::new(&lgd::runtime::default_artifacts_dir())?;
+                train_resumed(&cfg, &te, GradSource::Pjrt(&mut rt), snap)?
+            }
+        }
+    } else {
+        let pre = preprocess(tr, &PreprocessOptions { center: cfg.lsh.center })?;
+        match cfg.train.backend {
+            Backend::Native => train(&cfg, &pre, &te, GradSource::Native)?,
+            Backend::Pjrt => {
+                let mut rt = Runtime::new(&lgd::runtime::default_artifacts_dir())?;
+                train(&cfg, &pre, &te, GradSource::Pjrt(&mut rt))?
+            }
         }
     };
 
@@ -151,6 +227,148 @@ fn cmd_train(args: &Args) -> Result<()> {
             outcome.est_stats.rebalances,
             outcome.est_stats.rebalance_secs
         );
+    }
+    if outcome.resumed {
+        println!("  warm start: restored engine, zero table-build work");
+    }
+    if outcome.autosaves > 0 {
+        if let Some(p) = &cfg.store.path {
+            println!("  snapshots: {} written to {}", outcome.autosaves, p.display());
+        }
+    }
+    Ok(())
+}
+
+/// `lgd snapshot <save|inspect|load>` — build-and-persist, verify, and
+/// warm-start-serve an engine snapshot.
+fn cmd_snapshot(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "save" => cmd_snapshot_save(&args),
+        "inspect" => cmd_snapshot_inspect(&args),
+        "load" => cmd_snapshot_load(&args),
+        other => Err(Error::Config(format!(
+            "snapshot needs a verb: save|inspect|load (got '{other}')\n{USAGE}"
+        ))),
+    }
+}
+
+/// Cold-build the engine a config describes, then persist it. The visitor
+/// monomorphizes over the configured hash family.
+struct ColdSave<'a> {
+    cfg: &'a RunConfig,
+    pre: &'a Preprocessed,
+    out: &'a Path,
+}
+
+impl<'a> HasherVisitor for ColdSave<'a> {
+    type Out = Result<(u64, f64)>;
+
+    fn visit<H>(self, hasher: H) -> Self::Out
+    where
+        H: SnapshotHasher + Clone + 'static,
+    {
+        let t0 = Instant::now();
+        let est = build_sharded_estimator(self.cfg, self.pre, hasher)?;
+        let build_secs = t0.elapsed().as_secs_f64();
+        let bytes = snapshot::save(self.out, &est, None)?;
+        Ok((bytes, build_secs))
+    }
+}
+
+fn cmd_snapshot_save(args: &Args) -> Result<()> {
+    args.allow(&["config", "out", "shards", "sealed"])?;
+    let cfg_path = args.require("config")?;
+    let out = PathBuf::from(args.require("out")?);
+    let doc = TomlDoc::load(Path::new(&cfg_path))?;
+    let mut cfg = RunConfig::from_toml(&doc)?;
+    if !args.str_or("shards", "").is_empty() {
+        cfg.lsh.shards = args.usize_or("shards", 1)?;
+    }
+    cfg.lsh.sealed = args.bool_or("sealed", cfg.lsh.sealed)?;
+    cfg.validate()?;
+    let ds = build_dataset(&cfg.data.name, cfg.data.scale, cfg.data.seed)?;
+    let (tr, _te) = ds.split(cfg.data.train_frac, cfg.data.seed)?;
+    let pre = preprocess(tr, &PreprocessOptions { center: cfg.lsh.center })?;
+    let hd = pre.hashed.cols();
+    let saver = ColdSave { cfg: &cfg, pre: &pre, out: &out };
+    let (bytes, build_secs) = AnyHasher::from_lsh_config(&cfg.lsh, hd).visit(saver)?;
+    println!(
+        "snapshot: built {} examples x {} shard(s) in {build_secs:.3}s, wrote {bytes} bytes \
+         to {}",
+        pre.data.len(),
+        cfg.lsh.shards,
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_snapshot_inspect(args: &Args) -> Result<()> {
+    args.allow(&["path"])?;
+    let path = PathBuf::from(args.require("path")?);
+    let info = snapshot::inspect(&path)?;
+    println!("{} — {} bytes, format v{}", path.display(), info.file_bytes, info.version);
+    println!("{:<12} {:>12} {:>12}", "section", "bytes", "crc32");
+    for s in &info.sections {
+        println!("{:<12} {:>12} {:>12}", s.name, s.bytes, format!("{:08x}", s.crc));
+    }
+    let m = &info.meta;
+    println!(
+        "engine: {} examples (d={}, hash dim {}), task {}, hasher {} (K={}, L={})",
+        m.n, m.d, m.hash_dim, m.task, m.hasher, m.k, m.l
+    );
+    println!(
+        "        {} shard(s), mirror {}, layout {}, generation {}, {} stored rows, \
+         {} present",
+        m.shards,
+        m.mirror,
+        if m.sealed { "sealed" } else { "vec" },
+        m.generation,
+        m.total_rows,
+        m.present
+    );
+    println!(
+        "        training state: {}",
+        if m.has_train { "present (resumable mid-run)" } else { "none (index only)" }
+    );
+    println!("all section CRCs verified OK");
+    Ok(())
+}
+
+fn cmd_snapshot_load(args: &Args) -> Result<()> {
+    args.allow(&["path", "draws"])?;
+    let path = PathBuf::from(args.require("path")?);
+    let draws = args.usize_or("draws", 5)?;
+    let t0 = Instant::now();
+    let snap = snapshot::load(&path)?;
+    let load_secs = t0.elapsed().as_secs_f64();
+    let LoadedSnapshot { meta, pre, hasher, engine, .. } = snap;
+    let handle = hasher.clone();
+    let t1 = Instant::now();
+    let mut est = snapshot::restore_boxed(hasher, &pre, engine)?;
+    let restore_secs = t1.elapsed().as_secs_f64();
+    let stats = handle.hash_stats();
+    println!(
+        "loaded {} in {load_secs:.3}s, restored engine in {restore_secs:.3}s \
+         ({} examples, {} shard(s), {} layout)",
+        path.display(),
+        meta.n,
+        meta.shards,
+        if meta.sealed { "sealed" } else { "vec" }
+    );
+    println!(
+        "zero-rebuild proof: {} row hashes, {} fused query hashes during restore",
+        stats.code_calls, stats.fused_calls
+    );
+    if draws > 0 {
+        let theta = vec![0.0f32; pre.data.dim()];
+        for i in 0..draws {
+            let d = est.draw(&theta);
+            println!(
+                "  draw {i}: example {} (p = {:.3e}, weight {:.3})",
+                d.index, d.prob, d.weight
+            );
+        }
     }
     Ok(())
 }

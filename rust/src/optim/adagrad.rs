@@ -2,7 +2,8 @@
 //! learning rates from accumulated squared gradients. Used in the paper's
 //! Figure 6/12/13 comparisons (LGD+AdaGrad vs SGD+AdaGrad).
 
-use crate::optim::Optimizer;
+use crate::core::error::Result;
+use crate::optim::{expect_slots, OptimState, Optimizer};
 
 /// `θ_i ← θ_i − lr · g_i / (√(Σ g_i²) + ε)`.
 #[derive(Debug, Clone)]
@@ -39,6 +40,16 @@ impl Optimizer for AdaGrad {
 
     fn name(&self) -> &'static str {
         "adagrad"
+    }
+
+    fn export_state(&self) -> OptimState {
+        OptimState { t: 0, slots: vec![self.accum.clone()] }
+    }
+
+    fn import_state(&mut self, st: &OptimState) -> Result<()> {
+        expect_slots("adagrad", st, 1)?;
+        self.accum = st.slots[0].clone();
+        Ok(())
     }
 }
 

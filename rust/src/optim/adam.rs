@@ -1,7 +1,8 @@
 //! Adam optimizer — used by the paper's BERT fine-tuning experiments
 //! (§3.2, "Adam optimizer with initial learning rate 2e-5").
 
-use crate::optim::Optimizer;
+use crate::core::error::Result;
+use crate::optim::{expect_slots, OptimState, Optimizer};
 
 /// Adam with bias correction.
 #[derive(Debug, Clone)]
@@ -55,6 +56,18 @@ impl Optimizer for Adam {
 
     fn name(&self) -> &'static str {
         "adam"
+    }
+
+    fn export_state(&self) -> OptimState {
+        OptimState { t: self.t, slots: vec![self.m.clone(), self.v.clone()] }
+    }
+
+    fn import_state(&mut self, st: &OptimState) -> Result<()> {
+        expect_slots("adam", st, 2)?;
+        self.t = st.t;
+        self.m = st.slots[0].clone();
+        self.v = st.slots[1].clone();
+        Ok(())
     }
 }
 

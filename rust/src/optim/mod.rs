@@ -8,6 +8,22 @@ pub mod adam;
 pub mod schedule;
 pub mod sgd;
 
+use crate::core::error::{Error, Result};
+
+/// Serializable optimizer state — the persistence-layer view every update
+/// rule exports into `store::snapshot` and re-imports on warm start: the
+/// step counter plus zero or more per-dimension moment slots (SGD: none;
+/// AdaGrad: the squared-gradient accumulator; Adam: first and second
+/// moments, in that order).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OptimState {
+    /// Steps taken so far (drives schedules and Adam bias correction).
+    pub t: u64,
+    /// Moment vectors, optimizer-defined order. Empty slots are legal —
+    /// they mean "not yet sized" (no step taken since construction).
+    pub slots: Vec<Vec<f64>>,
+}
+
 /// A stateful first-order update rule.
 pub trait Optimizer: Send {
     /// Apply one update: `theta ← theta − step(grad)`.
@@ -18,9 +34,78 @@ pub trait Optimizer: Send {
 
     /// Name for logs.
     fn name(&self) -> &'static str;
+
+    /// Export internal state for a snapshot (step counter + moment slots).
+    fn export_state(&self) -> OptimState;
+
+    /// Restore state previously exported by the *same optimizer kind*.
+    /// Errors (`Error::Store`) on a slot-count mismatch so a snapshot saved
+    /// with one optimizer cannot silently warp another's update rule.
+    fn import_state(&mut self, st: &OptimState) -> Result<()>;
+}
+
+/// Shared slot-count check for [`Optimizer::import_state`] implementations.
+pub(crate) fn expect_slots(name: &str, st: &OptimState, want: usize) -> Result<()> {
+    if st.slots.len() != want {
+        return Err(Error::Store(format!(
+            "{name} optimizer state expects {want} moment slot(s), snapshot has {}",
+            st.slots.len()
+        )));
+    }
+    Ok(())
 }
 
 pub use adagrad::AdaGrad;
 pub use adam::Adam;
 pub use schedule::Schedule;
 pub use sgd::Sgd;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every optimizer kind round-trips its state exactly: a restored
+    /// optimizer continues with the same updates as the original.
+    #[test]
+    fn optimizer_state_roundtrips_and_continues_identically() {
+        let mk: [fn() -> Box<dyn Optimizer>; 3] = [
+            || Box::new(Sgd::new(Schedule::Step { base: 0.1, drop: 0.5, every: 3 })),
+            || Box::new(AdaGrad::new(0.1)),
+            || Box::new(Adam::new(0.05)),
+        ];
+        for f in mk {
+            let mut a = f();
+            let mut theta_a = vec![0.5f32; 4];
+            for t in 0..7 {
+                let g: Vec<f32> = (0..4).map(|j| (t + j) as f32 * 0.3 - 0.8).collect();
+                a.step(&mut theta_a, &g);
+            }
+            let st = a.export_state();
+            let mut b = f();
+            b.import_state(&st).unwrap();
+            assert_eq!(b.export_state(), st, "{}: state not reproduced", a.name());
+            let mut theta_b = theta_a.clone();
+            for t in 0..7 {
+                let g: Vec<f32> = (0..4).map(|j| (t * j) as f32 * 0.1 - 0.2).collect();
+                a.step(&mut theta_a, &g);
+                b.step(&mut theta_b, &g);
+            }
+            assert_eq!(theta_a, theta_b, "{}: restored optimizer diverged", a.name());
+        }
+    }
+
+    /// Slot-count mismatches are a loud `Error::Store`, not silent drift.
+    #[test]
+    fn optimizer_state_slot_mismatch_rejected() {
+        let bad = OptimState { t: 3, slots: vec![vec![1.0]] };
+        let mut o = Sgd::constant(0.1);
+        assert!(matches!(
+            o.import_state(&bad),
+            Err(crate::core::error::Error::Store(_))
+        ));
+        let mut o = Adam::new(0.1);
+        assert!(o.import_state(&bad).is_err(), "adam wants two slots");
+        let mut o = AdaGrad::new(0.1);
+        assert!(o.import_state(&OptimState { t: 0, slots: vec![vec![0.5]] }).is_ok());
+    }
+}

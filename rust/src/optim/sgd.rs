@@ -1,6 +1,7 @@
 //! Plain gradient-descent update with a learning-rate schedule (eq. 2).
 
-use crate::optim::{Optimizer, Schedule};
+use crate::core::error::Result;
+use crate::optim::{expect_slots, OptimState, Optimizer, Schedule};
 
 /// `θ ← θ − η_t · g`.
 #[derive(Debug, Clone)]
@@ -38,6 +39,16 @@ impl Optimizer for Sgd {
 
     fn name(&self) -> &'static str {
         "sgd-update"
+    }
+
+    fn export_state(&self) -> OptimState {
+        OptimState { t: self.t, slots: Vec::new() }
+    }
+
+    fn import_state(&mut self, st: &OptimState) -> Result<()> {
+        expect_slots("sgd", st, 0)?;
+        self.t = st.t;
+        Ok(())
     }
 }
 

@@ -1,0 +1,63 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the per-section
+//! integrity check of the snapshot format.
+//!
+//! Zero dependencies: the 256-entry table is built at compile time with a
+//! `const fn`. CRC-32 detects every single-bit and single-byte error (and
+//! all burst errors up to 32 bits), which is exactly the guarantee the
+//! snapshot loader leans on: any one-byte corruption of a section payload
+//! fails its CRC and surfaces as a clean [`crate::core::error::Error::Store`].
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// CRC-32 of `bytes` (init 0xFFFF_FFFF, final XOR — the zlib/PNG variant).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The canonical check value of CRC-32/ISO-HDLC.
+    #[test]
+    fn known_vectors() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    /// Every single-byte corruption of a buffer changes the checksum — the
+    /// property the snapshot loader's corruption guarantee rests on.
+    #[test]
+    fn single_byte_flips_always_detected() {
+        let base: Vec<u8> = (0..257u16).map(|i| (i * 31 % 251) as u8).collect();
+        let want = crc32(&base);
+        for pos in 0..base.len() {
+            for flip in [0x01u8, 0x80, 0xFF] {
+                let mut c = base.clone();
+                c[pos] ^= flip;
+                assert_ne!(crc32(&c), want, "flip {flip:#x} at {pos} not detected");
+            }
+        }
+    }
+}

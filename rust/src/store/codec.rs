@@ -1,0 +1,312 @@
+//! Primitive binary codec for the snapshot format: a growable little-endian
+//! [`Writer`] and a bounds-checked [`Reader`].
+//!
+//! Every `Reader` method returns `Result`: running off the end of a buffer —
+//! a truncated file, a corrupted length prefix — is always a clean
+//! [`Error::Store`], never a panic or an out-of-bounds read. Length prefixes
+//! are validated against the bytes actually remaining before any allocation,
+//! so a flipped length byte cannot trigger a multi-gigabyte `Vec` reserve.
+
+use crate::core::error::{Error, Result};
+use crate::core::matrix::Matrix;
+
+/// Growable little-endian byte sink.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    /// Fresh empty writer.
+    pub fn new() -> Self {
+        Writer { buf: Vec::new() }
+    }
+
+    /// Consume into the written bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// One raw byte.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Little-endian u32.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Little-endian u64.
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Little-endian u128 (PRNG state).
+    pub fn u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// f32 as its IEEE-754 bit pattern (bit-exact round trip).
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    /// f64 as its IEEE-754 bit pattern (bit-exact round trip).
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str_(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    /// Length-prefixed u32 slice.
+    pub fn u32s(&mut self, v: &[u32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u32(x);
+        }
+    }
+
+    /// Length-prefixed f32 slice (bit patterns).
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    /// Length-prefixed f64 slice (bit patterns).
+    pub fn f64s(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    /// Row-major matrix: rows, cols, then the flat f32 buffer.
+    pub fn matrix(&mut self, m: &Matrix) {
+        self.u64(m.rows() as u64);
+        self.u64(m.cols() as u64);
+        self.f32s(m.as_slice());
+    }
+}
+
+/// Bounds-checked little-endian reader over a borrowed buffer.
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Read from the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Store(format!(
+                "truncated {what}: need {n} bytes, {} left",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// One raw byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1, "u8")?[0])
+    }
+
+    /// Little-endian u32.
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, "u32")?.try_into().unwrap()))
+    }
+
+    /// Little-endian u64.
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, "u64")?.try_into().unwrap()))
+    }
+
+    /// Little-endian u128.
+    pub fn u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16, "u128")?.try_into().unwrap()))
+    }
+
+    /// f32 from its bit pattern.
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// f64 from its bit pattern.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Length prefix for `elem_bytes`-wide elements, validated against the
+    /// remaining buffer *before* any allocation.
+    fn len_prefix(&mut self, elem_bytes: usize, what: &str) -> Result<usize> {
+        let n = self.u64()? as usize;
+        if n.checked_mul(elem_bytes).map(|b| b > self.remaining()).unwrap_or(true) {
+            return Err(Error::Store(format!(
+                "corrupt {what} length {n}: exceeds {} remaining bytes",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.len_prefix(1, "byte buffer")?;
+        self.take(n, "byte buffer")
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str_(&mut self) -> Result<String> {
+        let b = self.bytes()?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| Error::Store("string payload is not valid UTF-8".into()))
+    }
+
+    /// Length-prefixed u32 slice.
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.len_prefix(4, "u32 slice")?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    /// Length-prefixed f32 slice.
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_prefix(4, "f32 slice")?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    /// Length-prefixed f64 slice.
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.len_prefix(8, "f64 slice")?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    /// Row-major matrix (validated shape).
+    pub fn matrix(&mut self) -> Result<Matrix> {
+        let rows = self.u64()? as usize;
+        let cols = self.u64()? as usize;
+        let data = self.f32s()?;
+        if rows.checked_mul(cols) != Some(data.len()) {
+            return Err(Error::Store(format!(
+                "matrix shape {rows}x{cols} does not match buffer of {}",
+                data.len()
+            )));
+        }
+        Matrix::from_vec(rows, cols, data).map_err(|e| Error::Store(e.to_string()))
+    }
+
+    /// Assert the payload was consumed exactly — trailing garbage inside a
+    /// CRC-valid section still indicates a format mismatch.
+    pub fn expect_end(&self, what: &str) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(Error::Store(format!(
+                "{what}: {} unexpected trailing bytes",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_roundtrip_bit_exact() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.u128(0x0123_4567_89AB_CDEF_0011_2233_4455_6677);
+        w.f32(-0.0);
+        w.f64(f64::NAN);
+        w.str_("größe");
+        w.u32s(&[1, 2, 3]);
+        w.f32s(&[1.5, -2.25]);
+        w.f64s(&[3.141592653589793]);
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        w.matrix(&m);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.u128().unwrap(), 0x0123_4567_89AB_CDEF_0011_2233_4455_6677);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert!(r.f64().unwrap().is_nan(), "NaN must survive bit-exact");
+        assert_eq!(r.str_().unwrap(), "größe");
+        assert_eq!(r.u32s().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.f32s().unwrap(), vec![1.5, -2.25]);
+        assert_eq!(r.f64s().unwrap(), vec![3.141592653589793]);
+        assert_eq!(r.matrix().unwrap(), m);
+        r.expect_end("test").unwrap();
+    }
+
+    #[test]
+    fn truncation_and_bad_lengths_error_cleanly() {
+        let mut w = Writer::new();
+        w.u64(100); // claims a 100-element u32 slice that is not there
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(matches!(r.u32s(), Err(Error::Store(_))));
+        // plain truncation
+        let mut r = Reader::new(&bytes[..3]);
+        assert!(matches!(r.u64(), Err(Error::Store(_))));
+        // absurd length prefix must not allocate
+        let mut w = Writer::new();
+        w.u64(u64::MAX);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(matches!(r.f64s(), Err(Error::Store(_))));
+        // mismatched matrix shape
+        let mut w = Writer::new();
+        w.u64(2);
+        w.u64(2);
+        w.f32s(&[1.0, 2.0, 3.0]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(matches!(r.matrix(), Err(Error::Store(_))));
+        // trailing bytes detected
+        let mut w = Writer::new();
+        w.u8(1);
+        w.u8(2);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        r.u8().unwrap();
+        assert!(r.expect_end("tail").is_err());
+    }
+}

@@ -1,0 +1,344 @@
+//! The on-disk snapshot container: magic/version header, CRC-protected
+//! section table, and crash-safe atomic writes.
+//!
+//! ```text
+//! offset 0   magic    "LGDSNAP\0"                      (8 bytes)
+//!         8   version  u32 LE                           (= 1)
+//!        12   sections u32 LE                           (count)
+//!        16   reserved u64 LE                           (flags, 0)
+//!        24   table    sections × 32 bytes:
+//!               kind u32 | reserved u32 | offset u64 | len u64 |
+//!               crc32 u32 | reserved u32
+//!        24+32·S  header_crc u32 LE  — CRC-32 of bytes [0, 24+32·S)
+//!        ...  payloads, back to back, in table order
+//! ```
+//!
+//! Integrity model: the header CRC covers the magic, version, count and the
+//! whole section table, so *any* single-byte corruption of the header or
+//! table fails loudly; each payload carries its own CRC-32, so any
+//! single-byte payload corruption fails before its section is decoded.
+//! Truncation fails the bounds checks. The result is the tentpole
+//! guarantee: a damaged file is always a clean
+//! [`Error::Store`](crate::core::error::Error::Store), never UB and never a
+//! silently wrong index.
+//!
+//! Writes go to `<path>.tmp`, are fsynced, then renamed over `<path>` (and
+//! the parent directory is fsynced best-effort), so a crash mid-save leaves
+//! either the old snapshot or the new one — never a half-written file at
+//! the serving path.
+
+use std::ffi::OsString;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::core::error::{Error, Result};
+use crate::store::checksum::crc32;
+
+/// File magic ("LGD snapshot", NUL-terminated).
+pub const MAGIC: [u8; 8] = *b"LGDSNAP\0";
+
+/// Container format version. Bump on any incompatible layout change; the
+/// loader rejects versions it does not know (forward compatibility is a
+/// re-index, not a guess).
+pub const VERSION: u32 = 1;
+
+/// Fixed header bytes before the section table.
+const HEADER_FIXED: usize = 24;
+/// Bytes per section-table entry.
+const TABLE_ENTRY: usize = 32;
+/// Sanity cap on the section count (a corrupted count must not drive a
+/// huge table read).
+const MAX_SECTIONS: usize = 256;
+
+/// Section identifiers. Values are stable on-disk tags — never reuse one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SectionKind {
+    /// Summary metadata (shape, hasher family, flags) — decoded by inspect.
+    Meta,
+    /// The preprocessed dataset (features, targets, hash-space matrix).
+    Data,
+    /// Hash-family state (planes / postings / calibration).
+    Hasher,
+    /// Per-shard stored rows + table dumps (Vec or sealed CSR arena).
+    Shards,
+    /// Estimator state: RNG position, counters, query cache.
+    Estimator,
+    /// Optional training state: θ, iteration, optimizer moments.
+    Train,
+}
+
+impl SectionKind {
+    /// Stable on-disk tag.
+    pub fn tag(self) -> u32 {
+        match self {
+            SectionKind::Meta => 1,
+            SectionKind::Data => 2,
+            SectionKind::Hasher => 3,
+            SectionKind::Shards => 4,
+            SectionKind::Estimator => 5,
+            SectionKind::Train => 6,
+        }
+    }
+
+    /// Parse a tag.
+    pub fn from_tag(tag: u32) -> Result<SectionKind> {
+        Ok(match tag {
+            1 => SectionKind::Meta,
+            2 => SectionKind::Data,
+            3 => SectionKind::Hasher,
+            4 => SectionKind::Shards,
+            5 => SectionKind::Estimator,
+            6 => SectionKind::Train,
+            other => return Err(Error::Store(format!("unknown section kind {other}"))),
+        })
+    }
+
+    /// Human-readable name (inspect output).
+    pub fn name(self) -> &'static str {
+        match self {
+            SectionKind::Meta => "meta",
+            SectionKind::Data => "data",
+            SectionKind::Hasher => "hasher",
+            SectionKind::Shards => "shards",
+            SectionKind::Estimator => "estimator",
+            SectionKind::Train => "train",
+        }
+    }
+}
+
+/// One decoded section-table entry.
+#[derive(Debug, Clone)]
+pub struct SectionEntry {
+    /// What the payload holds.
+    pub kind: SectionKind,
+    /// Absolute payload offset in the file.
+    pub offset: usize,
+    /// Payload length in bytes.
+    pub len: usize,
+    /// Stored payload CRC-32.
+    pub crc: u32,
+}
+
+/// Assemble a snapshot file image from `(kind, payload)` sections.
+pub fn assemble(sections: &[(SectionKind, Vec<u8>)]) -> Vec<u8> {
+    let table_len = sections.len() * TABLE_ENTRY;
+    let payload_base = HEADER_FIXED + table_len + 4; // + header crc
+    let mut header = Vec::with_capacity(payload_base);
+    header.extend_from_slice(&MAGIC);
+    header.extend_from_slice(&VERSION.to_le_bytes());
+    header.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    header.extend_from_slice(&0u64.to_le_bytes());
+    let mut offset = payload_base;
+    for (kind, payload) in sections {
+        header.extend_from_slice(&kind.tag().to_le_bytes());
+        header.extend_from_slice(&0u32.to_le_bytes());
+        header.extend_from_slice(&(offset as u64).to_le_bytes());
+        header.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        header.extend_from_slice(&crc32(payload).to_le_bytes());
+        header.extend_from_slice(&0u32.to_le_bytes());
+        offset += payload.len();
+    }
+    let hcrc = crc32(&header);
+    header.extend_from_slice(&hcrc.to_le_bytes());
+    let mut out = header;
+    out.reserve(offset - out.len());
+    for (_, payload) in sections {
+        out.extend_from_slice(payload);
+    }
+    out
+}
+
+/// Parse and fully verify a snapshot image: magic, version, header CRC,
+/// section bounds and every payload CRC. Returns the verified entries; use
+/// [`section`] to borrow a payload.
+pub fn parse(bytes: &[u8]) -> Result<Vec<SectionEntry>> {
+    if bytes.len() < HEADER_FIXED + 4 {
+        return Err(Error::Store(format!("file of {} bytes is too short", bytes.len())));
+    }
+    if bytes[..8] != MAGIC {
+        return Err(Error::Store("bad magic — not an LGD snapshot".into()));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != VERSION {
+        return Err(Error::Store(format!(
+            "unsupported snapshot version {version} (this build reads {VERSION})"
+        )));
+    }
+    let count = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    if count > MAX_SECTIONS {
+        return Err(Error::Store(format!("section count {count} exceeds cap {MAX_SECTIONS}")));
+    }
+    let table_end = HEADER_FIXED + count * TABLE_ENTRY;
+    if bytes.len() < table_end + 4 {
+        return Err(Error::Store("truncated section table".into()));
+    }
+    let stored_hcrc = u32::from_le_bytes(bytes[table_end..table_end + 4].try_into().unwrap());
+    if crc32(&bytes[..table_end]) != stored_hcrc {
+        return Err(Error::Store("header/section-table CRC mismatch".into()));
+    }
+    let payload_base = table_end + 4;
+    let mut entries = Vec::with_capacity(count);
+    let mut expect_offset = payload_base;
+    for s in 0..count {
+        let at = HEADER_FIXED + s * TABLE_ENTRY;
+        let e = &bytes[at..at + TABLE_ENTRY];
+        let kind = SectionKind::from_tag(u32::from_le_bytes(e[0..4].try_into().unwrap()))?;
+        let offset = u64::from_le_bytes(e[8..16].try_into().unwrap()) as usize;
+        let len = u64::from_le_bytes(e[16..24].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(e[24..28].try_into().unwrap());
+        if offset != expect_offset {
+            return Err(Error::Store(format!(
+                "section {s} ({}) at offset {offset}, expected {expect_offset}",
+                kind.name()
+            )));
+        }
+        let end = offset.checked_add(len).ok_or_else(|| {
+            Error::Store(format!("section {s} ({}) length overflows", kind.name()))
+        })?;
+        if end > bytes.len() {
+            return Err(Error::Store(format!(
+                "section {s} ({}) runs past end of file ({end} > {})",
+                kind.name(),
+                bytes.len()
+            )));
+        }
+        if crc32(&bytes[offset..end]) != crc {
+            return Err(Error::Store(format!(
+                "section {s} ({}) payload CRC mismatch — snapshot is corrupted",
+                kind.name()
+            )));
+        }
+        expect_offset = end;
+        entries.push(SectionEntry { kind, offset, len, crc });
+    }
+    if expect_offset != bytes.len() {
+        return Err(Error::Store(format!(
+            "{} trailing bytes after the last section",
+            bytes.len() - expect_offset
+        )));
+    }
+    Ok(entries)
+}
+
+/// Borrow the payload of the first section of `kind`, or `None`.
+pub fn section<'a>(
+    bytes: &'a [u8],
+    entries: &[SectionEntry],
+    kind: SectionKind,
+) -> Option<&'a [u8]> {
+    entries
+        .iter()
+        .find(|e| e.kind == kind)
+        .map(|e| &bytes[e.offset..e.offset + e.len])
+}
+
+/// Like [`section`] but required.
+pub fn require_section<'a>(
+    bytes: &'a [u8],
+    entries: &[SectionEntry],
+    kind: SectionKind,
+) -> Result<&'a [u8]> {
+    section(bytes, entries, kind)
+        .ok_or_else(|| Error::Store(format!("snapshot is missing the {} section", kind.name())))
+}
+
+/// Sibling path with `.tmp` appended to the full file name (not an
+/// extension swap — `snap.lgdsnap` → `snap.lgdsnap.tmp`).
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = OsString::from(path.as_os_str());
+    name.push(".tmp");
+    PathBuf::from(name)
+}
+
+/// Crash-safe write: `<path>.tmp` + fsync + rename over `<path>`, parent
+/// directory fsynced best-effort. A crash at any point leaves either the
+/// previous file or the complete new one.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = tmp_path(path);
+    let wrap = |e: std::io::Error, what: &str| {
+        Error::Store(format!("{what} {}: {e}", tmp.display()))
+    };
+    {
+        let mut f = std::fs::File::create(&tmp).map_err(|e| wrap(e, "create"))?;
+        f.write_all(bytes).map_err(|e| wrap(e, "write"))?;
+        f.sync_all().map_err(|e| wrap(e, "fsync"))?;
+    }
+    std::fs::rename(&tmp, path)
+        .map_err(|e| Error::Store(format!("rename into {}: {e}", path.display())))?;
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all(); // best effort; not supported on all platforms
+        }
+    }
+    Ok(())
+}
+
+/// Read a snapshot file fully into memory.
+pub fn read_file(path: &Path) -> Result<Vec<u8>> {
+    std::fs::read(path).map_err(|e| Error::Store(format!("read {}: {e}", path.display())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        assemble(&[
+            (SectionKind::Meta, vec![1, 2, 3]),
+            (SectionKind::Data, vec![]),
+            (SectionKind::Shards, vec![9; 100]),
+        ])
+    }
+
+    #[test]
+    fn assemble_parse_roundtrip() {
+        let img = sample();
+        let entries = parse(&img).unwrap();
+        assert_eq!(entries.len(), 3);
+        assert_eq!(section(&img, &entries, SectionKind::Meta), Some(&[1u8, 2, 3][..]));
+        assert_eq!(section(&img, &entries, SectionKind::Data), Some(&[][..]));
+        assert_eq!(require_section(&img, &entries, SectionKind::Shards).unwrap().len(), 100);
+        assert!(section(&img, &entries, SectionKind::Train).is_none());
+        assert!(require_section(&img, &entries, SectionKind::Train).is_err());
+    }
+
+    /// Every single-byte corruption anywhere in the image — header, table,
+    /// payloads — is rejected with `Error::Store`, and every truncation too.
+    #[test]
+    fn every_corruption_position_rejected() {
+        let img = sample();
+        for pos in 0..img.len() {
+            let mut c = img.clone();
+            c[pos] ^= 0x40;
+            match parse(&c) {
+                Err(crate::core::error::Error::Store(_)) => {}
+                Err(e) => panic!("flip at {pos}: wrong error kind {e}"),
+                Ok(_) => panic!("flip at byte {pos} was not detected"),
+            }
+        }
+        for cut in 0..img.len() {
+            assert!(parse(&img[..cut]).is_err(), "truncation at {cut} accepted");
+        }
+        // trailing garbage is also rejected
+        let mut long = img.clone();
+        long.push(0);
+        assert!(parse(&long).is_err());
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join("lgd-store-format");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("probe.lgdsnap");
+        write_atomic(&path, b"one").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"one");
+        write_atomic(&path, b"two").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"two");
+        assert!(!tmp_path(&path).exists(), "tmp file must not survive a save");
+        assert!(matches!(
+            read_file(&dir.join("missing.lgdsnap")),
+            Err(crate::core::error::Error::Store(_))
+        ));
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,38 @@
+//! `store` — versioned, zero-dependency persistence for the full engine
+//! state.
+//!
+//! The paper's running-time argument (§2.2) treats the LSH preprocessing as
+//! a **one-time cost amortized across all subsequent adaptive draws** — an
+//! argument that collapses if every process start re-pays it. This
+//! subsystem makes the index outlive the process: the dataset matrix, the
+//! hash family's plane/posting state, every shard's sealed CSR arena (or
+//! Vec buckets) with its delta overlay, the live shard-set membership and
+//! generation counter, the estimator's RNG position and query cache, model
+//! weights and optimizer moments all round-trip through one binary file, so
+//! a restarted server serves the *identical* draw stream the stopped one
+//! would have — with zero table-build work and zero extra hash
+//! invocations.
+//!
+//! Layer map:
+//! * [`checksum`] — CRC-32 (compile-time table, no deps).
+//! * [`codec`] — bounds-checked little-endian primitives; truncation is
+//!   always a clean [`Error::Store`](crate::core::error::Error::Store).
+//! * [`format`] — the magic/version header, CRC-protected section table and
+//!   crash-safe atomic writes (`*.tmp` + fsync + rename).
+//! * [`snapshot`] — engine-level encode/decode/restore plus the
+//!   [`SnapshotHasher`](snapshot::SnapshotHasher) family trait.
+//!
+//! See `docs/persistence.md` for the on-disk layout and the compatibility
+//! policy.
+
+pub mod checksum;
+pub mod codec;
+pub mod format;
+pub mod snapshot;
+
+pub use checksum::crc32;
+pub use format::{write_atomic, SectionKind, MAGIC, VERSION};
+pub use snapshot::{
+    load, restore_boxed, restore_estimator, save, snapshot_bytes, EngineDump, LoadedSnapshot,
+    SnapshotHasher, SnapshotInfo, SnapshotMeta, TrainState,
+};

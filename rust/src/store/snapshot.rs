@@ -1,0 +1,1227 @@
+//! Engine-level snapshot encode/decode/restore.
+//!
+//! A snapshot holds everything required to serve draws without touching the
+//! raw data again: the preprocessed dataset, the hash family's complete
+//! state (planes / postings / calibration — restored **bit-exact**, so
+//! codes and Algorithm-1 probabilities are identical to the saved family's),
+//! every shard's stored rows and table layout (the PR-3 sealed CSR arena is
+//! dumped section by section — codes, offsets, live prefixes, id slab,
+//! overlay — never re-serialized bucket by bucket), the live shard-set
+//! membership with its generation counter, the estimator's RNG position,
+//! counters and query-cache window, and (optionally) training state: θ,
+//! iteration and optimizer moments.
+//!
+//! The restore contract, tested below and in the integration suite:
+//!
+//! * **Draw-for-draw identity** — a restored estimator continues the saved
+//!   engine's exact draw stream (single draws, batches, async sessions),
+//!   across Vec and sealed layouts, any shard count, and live overlay
+//!   state.
+//! * **Zero rebuild** — restoring performs no table build and no hash
+//!   invocation; the family's shared counters read zero right after a
+//!   load, and the rebuilt build report carries all-zero timings.
+//! * **Loud corruption** — any single-byte corruption or truncation is a
+//!   clean [`Error::Store`] (header CRC + per-section CRCs + bounds-checked
+//!   decode + structural re-validation), never UB or a silently wrong
+//!   index.
+
+use std::path::Path;
+
+use crate::config::spec::{HasherKind, OptimizerKind};
+use crate::coordinator::pipeline::{ShardSet, ShardSetStats, ShardTables};
+use crate::core::error::{Error, Result};
+use crate::core::matrix::Matrix;
+use crate::core::rng::Pcg64;
+use crate::data::dataset::{Dataset, Task};
+use crate::data::preprocess::{HashSpace, Preprocessed};
+use crate::estimator::lgd::LgdOptions;
+use crate::estimator::sharded::ShardedLgdEstimator;
+use crate::estimator::{EstimatorStats, GradientEstimator};
+use crate::lsh::sampler::{QueryCache, SampleCost};
+use crate::lsh::srp::{DenseSrp, SparseSrp, SrpHasher};
+use crate::lsh::tables::{BucketRead, TableDump, TableDumpView, TableStore};
+use crate::lsh::{AnyHasher, HasherVisitor, QuadraticSrp};
+use crate::optim::OptimState;
+use crate::store::codec::{Reader, Writer};
+use crate::store::format::{self, SectionKind};
+
+/// A hash family that knows how to serialize its complete state. All
+/// families ship an implementation; the bound rides along
+/// [`HasherVisitor`], so every monomorphized engine can snapshot itself.
+pub trait SnapshotHasher: SrpHasher {
+    /// Stable on-disk family tag.
+    fn hasher_tag(&self) -> u8;
+    /// Serialize the family's full state (planes / postings / calibration).
+    fn encode_state(&self, w: &mut Writer);
+}
+
+impl SnapshotHasher for DenseSrp {
+    fn hasher_tag(&self) -> u8 {
+        0
+    }
+
+    fn encode_state(&self, w: &mut Writer) {
+        w.u64(self.dim() as u64);
+        w.u32(self.k() as u32);
+        w.u32(self.l() as u32);
+        w.f32s(self.planes_raw());
+    }
+}
+
+impl SnapshotHasher for SparseSrp {
+    fn hasher_tag(&self) -> u8 {
+        1
+    }
+
+    fn encode_state(&self, w: &mut Writer) {
+        w.u64(self.dim() as u64);
+        w.u32(self.k() as u32);
+        w.u32(self.l() as u32);
+        w.f64(self.density());
+        let rows = self.row_entries();
+        w.u64(rows.len() as u64);
+        for r in rows {
+            w.u32s(r);
+        }
+        w.f64s(self.calib_bins());
+    }
+}
+
+impl SnapshotHasher for QuadraticSrp {
+    fn hasher_tag(&self) -> u8 {
+        2
+    }
+
+    fn encode_state(&self, w: &mut Writer) {
+        w.u64(self.dim() as u64);
+        w.u32(self.k() as u32);
+        w.u32(self.l() as u32);
+        w.f64(self.density());
+        let planes = self.plane_parts();
+        w.u64(planes.len() as u64);
+        for (ii, jj, sign) in planes {
+            w.u32s(ii);
+            w.u32s(jj);
+            w.f32s(sign);
+        }
+    }
+}
+
+fn decode_hasher(r: &mut Reader<'_>) -> Result<AnyHasher> {
+    let tag = r.u8()?;
+    let dim = r.u64()? as usize;
+    let k = r.u32()? as usize;
+    let l = r.u32()? as usize;
+    match tag {
+        0 => {
+            let planes = r.f32s()?;
+            Ok(AnyHasher::Dense(DenseSrp::from_parts(dim, k, l, planes)?))
+        }
+        1 => {
+            let density = r.f64()?;
+            let rows = r.u64()? as usize;
+            if rows != l.saturating_mul(k) {
+                return Err(Error::Store(format!("sparse hasher row count {rows} != L·K")));
+            }
+            let entries = (0..rows).map(|_| r.u32s()).collect::<Result<Vec<_>>>()?;
+            let bins = r.f64s()?;
+            Ok(AnyHasher::Sparse(SparseSrp::from_parts(dim, k, l, density, entries, bins)?))
+        }
+        2 => {
+            let density = r.f64()?;
+            let count = r.u64()? as usize;
+            if count != l.saturating_mul(k) {
+                return Err(Error::Store(format!("quadratic plane count {count} != L·K")));
+            }
+            let planes = (0..count)
+                .map(|_| Ok((r.u32s()?, r.u32s()?, r.f32s()?)))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(AnyHasher::Quadratic(QuadraticSrp::from_parts(dim, k, l, density, planes)?))
+        }
+        other => Err(Error::Store(format!("unknown hasher family tag {other}"))),
+    }
+}
+
+/// Summary metadata decoded by `lgd snapshot inspect` without touching the
+/// bulk sections.
+#[derive(Debug, Clone)]
+pub struct SnapshotMeta {
+    /// Examples in the persisted dataset.
+    pub n: usize,
+    /// Feature dimensionality.
+    pub d: usize,
+    /// Hash-space dimensionality.
+    pub hash_dim: usize,
+    /// Task tag ("regression"/"classification").
+    pub task: &'static str,
+    /// Hash family tag ("dense"/"sparse"/"quadratic").
+    pub hasher: &'static str,
+    /// Meta-hash width.
+    pub k: usize,
+    /// Table count.
+    pub l: usize,
+    /// Shard count of the persisted engine.
+    pub shards: usize,
+    /// Mirrored storage flag.
+    pub mirror: bool,
+    /// Whether shard tables are the sealed CSR arena layout.
+    pub sealed: bool,
+    /// Shard-set mutation generation at save time.
+    pub generation: u64,
+    /// Total stored rows `R` across shards.
+    pub total_rows: usize,
+    /// Present examples at save time.
+    pub present: usize,
+    /// Whether a training-state section is present.
+    pub has_train: bool,
+}
+
+fn encode_meta<H: SnapshotHasher>(est: &ShardedLgdEstimator<'_, H>, has_train: bool) -> Vec<u8> {
+    let pre = est.preprocessed();
+    let set = est.shard_set();
+    let hasher = set.shard(0).tables.hasher();
+    let mut w = Writer::new();
+    w.u64(pre.data.len() as u64);
+    w.u64(pre.data.dim() as u64);
+    w.u64(pre.hashed.cols() as u64);
+    w.u8(match pre.data.task {
+        Task::Regression => 0,
+        Task::Classification => 1,
+    });
+    w.u8(hasher.hasher_tag());
+    w.u32(hasher.k() as u32);
+    w.u32(hasher.l() as u32);
+    w.u32(set.shard_count() as u32);
+    w.u8(est.options().mirror as u8);
+    w.u8(set.shard(0).tables.is_sealed() as u8);
+    w.u64(set.generation());
+    w.u64(set.total_rows() as u64);
+    w.u64(set.present_len() as u64);
+    w.u8(has_train as u8);
+    w.into_bytes()
+}
+
+fn decode_meta(bytes: &[u8]) -> Result<SnapshotMeta> {
+    let mut r = Reader::new(bytes);
+    let n = r.u64()? as usize;
+    let d = r.u64()? as usize;
+    let hash_dim = r.u64()? as usize;
+    let task = match r.u8()? {
+        0 => "regression",
+        1 => "classification",
+        t => return Err(Error::Store(format!("unknown task tag {t}"))),
+    };
+    let hasher = match r.u8()? {
+        0 => HasherKind::Dense.name(),
+        1 => HasherKind::Sparse.name(),
+        2 => HasherKind::Quadratic.name(),
+        t => return Err(Error::Store(format!("unknown hasher family tag {t}"))),
+    };
+    let k = r.u32()? as usize;
+    let l = r.u32()? as usize;
+    let shards = r.u32()? as usize;
+    let mirror = r.u8()? != 0;
+    let sealed = r.u8()? != 0;
+    let generation = r.u64()?;
+    let total_rows = r.u64()? as usize;
+    let present = r.u64()? as usize;
+    let has_train = r.u8()? != 0;
+    r.expect_end("meta section")?;
+    Ok(SnapshotMeta {
+        n,
+        d,
+        hash_dim,
+        task,
+        hasher,
+        k,
+        l,
+        shards,
+        mirror,
+        sealed,
+        generation,
+        total_rows,
+        present,
+        has_train,
+    })
+}
+
+fn encode_data(pre: &Preprocessed) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.str_(&pre.data.name);
+    w.u8(match pre.data.task {
+        Task::Regression => 0,
+        Task::Classification => 1,
+    });
+    w.matrix(&pre.data.x);
+    w.f32s(&pre.data.y);
+    w.u8(match pre.space {
+        HashSpace::LinRegAugmented => 0,
+        HashSpace::LogRegSigned => 1,
+    });
+    w.f32s(&pre.center);
+    w.f64s(&pre.norms);
+    w.matrix(&pre.hashed);
+    w.into_bytes()
+}
+
+fn decode_data(bytes: &[u8]) -> Result<Preprocessed> {
+    let mut r = Reader::new(bytes);
+    let name = r.str_()?;
+    let task = match r.u8()? {
+        0 => Task::Regression,
+        1 => Task::Classification,
+        t => return Err(Error::Store(format!("unknown task tag {t}"))),
+    };
+    let x = r.matrix()?;
+    let y = r.f32s()?;
+    let space = match r.u8()? {
+        0 => HashSpace::LinRegAugmented,
+        1 => HashSpace::LogRegSigned,
+        t => return Err(Error::Store(format!("unknown hash-space tag {t}"))),
+    };
+    let center = r.f32s()?;
+    let norms = r.f64s()?;
+    let hashed = r.matrix()?;
+    r.expect_end("data section")?;
+    let n = x.rows();
+    if norms.len() != n || hashed.rows() != n {
+        return Err(Error::Store(format!(
+            "data section inconsistent: {n} examples, {} norms, {} hashed rows",
+            norms.len(),
+            hashed.rows()
+        )));
+    }
+    if hashed.cols() != space.dim(x.cols()) {
+        return Err(Error::Store(format!(
+            "hash-space width {} does not match features ({})",
+            hashed.cols(),
+            space.dim(x.cols())
+        )));
+    }
+    let data = Dataset::new(name, x, y, task).map_err(|e| Error::Store(e.to_string()))?;
+    Ok(Preprocessed { data, hashed, space, center, norms })
+}
+
+/// Serialize a borrowed table dump — bucket contents stream straight off
+/// the live store, so a save never deep-clones id slabs (the
+/// [`TableDumpView`] indirection exists exactly for this).
+fn encode_table_dump(w: &mut Writer, dump: &TableDumpView<'_>) {
+    match dump {
+        TableDumpView::Vec { tables, len } => {
+            w.u8(0);
+            w.u64(*len as u64);
+            w.u64(tables.len() as u64);
+            for buckets in tables {
+                w.u64(buckets.len() as u64);
+                for (code, ids) in buckets {
+                    w.u32(*code);
+                    w.u32s(ids);
+                }
+            }
+        }
+        TableDumpView::Sealed { tables, len } => {
+            w.u8(1);
+            w.u64(*len as u64);
+            w.u64(tables.len() as u64);
+            for t in tables {
+                w.u32s(t.codes);
+                w.u32s(t.offsets);
+                w.u32s(t.live);
+                w.u32s(t.ids);
+                w.u64(t.overlay.len() as u64);
+                for (code, ids) in &t.overlay {
+                    w.u32(*code);
+                    w.u32s(ids);
+                }
+            }
+        }
+    }
+}
+
+fn decode_table_dump(r: &mut Reader<'_>) -> Result<TableDump> {
+    let layout = r.u8()?;
+    let len = r.u64()? as usize;
+    let l = r.u64()? as usize;
+    if l > 1 << 20 {
+        return Err(Error::Store(format!("implausible table count {l}")));
+    }
+    match layout {
+        0 => {
+            let mut tables = Vec::with_capacity(l);
+            for _ in 0..l {
+                let nb = r.u64()? as usize;
+                if nb > r.remaining() {
+                    return Err(Error::Store("corrupt bucket count".into()));
+                }
+                let mut buckets = Vec::with_capacity(nb);
+                for _ in 0..nb {
+                    let code = r.u32()?;
+                    buckets.push((code, r.u32s()?));
+                }
+                tables.push(buckets);
+            }
+            Ok(TableDump::Vec { tables, len })
+        }
+        1 => {
+            let mut tables = Vec::with_capacity(l);
+            for _ in 0..l {
+                let codes = r.u32s()?;
+                let offsets = r.u32s()?;
+                let live = r.u32s()?;
+                let ids = r.u32s()?;
+                let no = r.u64()? as usize;
+                if no > r.remaining() {
+                    return Err(Error::Store("corrupt overlay count".into()));
+                }
+                let mut overlay = Vec::with_capacity(no);
+                for _ in 0..no {
+                    let code = r.u32()?;
+                    overlay.push((code, r.u32s()?));
+                }
+                tables.push(crate::lsh::tables::SealedTableDump {
+                    codes,
+                    offsets,
+                    live,
+                    ids,
+                    overlay,
+                });
+            }
+            Ok(TableDump::Sealed { tables, len })
+        }
+        other => Err(Error::Store(format!("unknown table layout tag {other}"))),
+    }
+}
+
+/// One shard's persisted state.
+pub(crate) struct ShardDump {
+    pub(crate) rows: Vec<u32>,
+    pub(crate) stored: Matrix,
+    pub(crate) norms: Vec<f64>,
+    pub(crate) tables: TableDump,
+}
+
+fn encode_shards<H: SrpHasher>(set: &ShardSet<H>) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(set.shard_count() as u32);
+    for s in 0..set.shard_count() {
+        let st = set.shard(s);
+        w.u32s(&st.rows);
+        w.matrix(&st.stored);
+        w.f64s(&st.norms);
+        encode_table_dump(&mut w, &st.tables.dump_view());
+    }
+    w.into_bytes()
+}
+
+fn decode_shards(bytes: &[u8]) -> Result<Vec<ShardDump>> {
+    let mut r = Reader::new(bytes);
+    let count = r.u32()? as usize;
+    if count == 0 || count > 4096 {
+        return Err(Error::Store(format!("shard count {count} out of 1..=4096")));
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let rows = r.u32s()?;
+        let stored = r.matrix()?;
+        let norms = r.f64s()?;
+        let tables = decode_table_dump(&mut r)?;
+        out.push(ShardDump { rows, stored, norms, tables });
+    }
+    r.expect_end("shards section")?;
+    Ok(out)
+}
+
+fn encode_stats(w: &mut Writer, st: &EstimatorStats) {
+    w.u64(st.draws);
+    w.u64(st.fallbacks);
+    w.u64(st.cost.codes as u64);
+    w.f64(st.cost.mults);
+    w.u64(st.cost.randoms as u64);
+    w.u64(st.cost.probes as u64);
+    w.u64(st.migrations);
+    w.u64(st.rebalances);
+    w.f64(st.rebalance_secs);
+    w.u64(st.prefetch_hits);
+    w.u64(st.queue_stalls);
+}
+
+fn decode_stats(r: &mut Reader<'_>) -> Result<EstimatorStats> {
+    Ok(EstimatorStats {
+        draws: r.u64()?,
+        fallbacks: r.u64()?,
+        cost: SampleCost {
+            codes: r.u64()? as usize,
+            mults: r.f64()?,
+            randoms: r.u64()? as usize,
+            probes: r.u64()? as usize,
+        },
+        migrations: r.u64()?,
+        rebalances: r.u64()?,
+        rebalance_secs: r.f64()?,
+        prefetch_hits: r.u64()?,
+        queue_stalls: r.u64()?,
+    })
+}
+
+fn encode_options(w: &mut Writer, opts: &LgdOptions) {
+    match opts.weight_clip {
+        Some(c) => {
+            w.u8(1);
+            w.f64(c);
+        }
+        None => {
+            w.u8(0);
+            w.f64(0.0);
+        }
+    }
+    w.u64(opts.max_probes as u64);
+    w.u64(opts.query_refresh as u64);
+    w.u8(opts.mirror as u8);
+    w.u8(opts.sealed as u8);
+}
+
+fn decode_options(r: &mut Reader<'_>) -> Result<LgdOptions> {
+    let has_clip = r.u8()? != 0;
+    let clip = r.f64()?;
+    Ok(LgdOptions {
+        weight_clip: if has_clip { Some(clip) } else { None },
+        max_probes: r.u64()? as usize,
+        query_refresh: r.u64()? as usize,
+        mirror: r.u8()? != 0,
+        sealed: r.u8()? != 0,
+    })
+}
+
+fn encode_estimator<H: SrpHasher>(est: &ShardedLgdEstimator<'_, H>) -> Vec<u8> {
+    let set = est.shard_set();
+    let mut w = Writer::new();
+    // live shard-set state
+    w.u64(est.preprocessed().data.len() as u64);
+    w.u8(est.options().mirror as u8);
+    w.f64(set.threshold());
+    w.u64(set.generation());
+    let ss = set.stats();
+    w.u64(ss.migrations);
+    w.u64(ss.rebalances);
+    w.f64(ss.rebalance_secs);
+    // estimator state
+    let (state, inc) = est.rng_raw();
+    w.u128(state);
+    w.u128(inc);
+    encode_stats(&mut w, &est.raw_stats());
+    encode_options(&mut w, est.options());
+    // query cache (mid-window single-draw state)
+    let (query, codes, age, norm) = est.cache_view().snapshot_parts();
+    w.f32s(query);
+    w.u64(codes.len() as u64);
+    for c in codes {
+        match c {
+            Some(v) => {
+                w.u8(1);
+                w.u32(*v);
+            }
+            None => {
+                w.u8(0);
+                w.u32(0);
+            }
+        }
+    }
+    w.u64(age as u64);
+    w.f64(norm);
+    w.into_bytes()
+}
+
+/// Everything the estimator needs beyond the dataset and the hash family —
+/// the decoded (but not yet wired) engine. Turn it into a live estimator
+/// with [`restore_estimator`] / [`restore_boxed`].
+pub struct EngineDump {
+    pub(crate) shards: Vec<ShardDump>,
+    pub(crate) n: usize,
+    pub(crate) mirror: bool,
+    pub(crate) threshold: f64,
+    pub(crate) generation: u64,
+    pub(crate) set_stats: ShardSetStats,
+    pub(crate) rng: (u128, u128),
+    pub(crate) stats: EstimatorStats,
+    pub(crate) opts: LgdOptions,
+    pub(crate) cache_query: Vec<f32>,
+    pub(crate) cache_codes: Vec<Option<u32>>,
+    pub(crate) cache_age: usize,
+    pub(crate) cache_norm: f64,
+}
+
+fn decode_estimator(bytes: &[u8], shards: Vec<ShardDump>) -> Result<EngineDump> {
+    let mut r = Reader::new(bytes);
+    let n = r.u64()? as usize;
+    let mirror = r.u8()? != 0;
+    let threshold = r.f64()?;
+    let generation = r.u64()?;
+    let set_stats = ShardSetStats {
+        migrations: r.u64()?,
+        rebalances: r.u64()?,
+        rebalance_secs: r.f64()?,
+    };
+    let state = r.u128()?;
+    let inc = r.u128()?;
+    let stats = decode_stats(&mut r)?;
+    let opts = decode_options(&mut r)?;
+    let cache_query = r.f32s()?;
+    let nc = r.u64()? as usize;
+    if nc.checked_mul(5).map(|b| b > r.remaining()).unwrap_or(true) {
+        return Err(Error::Store("corrupt query-cache code count".into()));
+    }
+    let mut cache_codes = Vec::with_capacity(nc);
+    for _ in 0..nc {
+        let present = r.u8()? != 0;
+        let v = r.u32()?;
+        cache_codes.push(if present { Some(v) } else { None });
+    }
+    let cache_age = r.u64()? as usize;
+    let cache_norm = r.f64()?;
+    r.expect_end("estimator section")?;
+    Ok(EngineDump {
+        shards,
+        n,
+        mirror,
+        threshold,
+        generation,
+        set_stats,
+        rng: (state, inc),
+        stats,
+        opts,
+        cache_query,
+        cache_codes,
+        cache_age,
+        cache_norm,
+    })
+}
+
+/// Optional training state riding along an engine snapshot: the model
+/// weights, the global iteration counter and the optimizer's moments —
+/// everything `lgd train --resume` needs to continue mid-run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainState {
+    /// Model parameters at the save point.
+    pub theta: Vec<f32>,
+    /// Iterations completed.
+    pub iter: u64,
+    /// Whole epochs completed (saves happen at epoch boundaries — the only
+    /// legal points under the generation-counter contract, since sessions
+    /// hold the estimator borrow).
+    pub epochs_done: u32,
+    /// Update rule the moments belong to.
+    pub optimizer: OptimizerKind,
+    /// Exported optimizer state.
+    pub optim: OptimState,
+}
+
+fn optimizer_tag(kind: OptimizerKind) -> u8 {
+    match kind {
+        OptimizerKind::Sgd => 0,
+        OptimizerKind::AdaGrad => 1,
+        OptimizerKind::Adam => 2,
+    }
+}
+
+fn encode_train(ts: &TrainState) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.f32s(&ts.theta);
+    w.u64(ts.iter);
+    w.u32(ts.epochs_done);
+    w.u8(optimizer_tag(ts.optimizer));
+    w.u64(ts.optim.t);
+    w.u32(ts.optim.slots.len() as u32);
+    for s in &ts.optim.slots {
+        w.f64s(s);
+    }
+    w.into_bytes()
+}
+
+fn decode_train(bytes: &[u8]) -> Result<TrainState> {
+    let mut r = Reader::new(bytes);
+    let theta = r.f32s()?;
+    let iter = r.u64()?;
+    let epochs_done = r.u32()?;
+    let optimizer = match r.u8()? {
+        0 => OptimizerKind::Sgd,
+        1 => OptimizerKind::AdaGrad,
+        2 => OptimizerKind::Adam,
+        t => return Err(Error::Store(format!("unknown optimizer tag {t}"))),
+    };
+    let t = r.u64()?;
+    let nslots = r.u32()? as usize;
+    if nslots > 8 {
+        return Err(Error::Store(format!("implausible optimizer slot count {nslots}")));
+    }
+    let slots = (0..nslots).map(|_| r.f64s()).collect::<Result<Vec<_>>>()?;
+    r.expect_end("train section")?;
+    Ok(TrainState { theta, iter, epochs_done, optimizer, optim: OptimState { t, slots } })
+}
+
+/// Encode the full engine (plus optional training state) into a snapshot
+/// image — the bytes [`save`] writes atomically.
+pub fn snapshot_bytes<H: SnapshotHasher>(
+    est: &ShardedLgdEstimator<'_, H>,
+    train: Option<&TrainState>,
+) -> Vec<u8> {
+    let hasher = est.shard_set().shard(0).tables.hasher();
+    let mut hw = Writer::new();
+    hw.u8(hasher.hasher_tag());
+    hasher.encode_state(&mut hw);
+    let mut sections = vec![
+        (SectionKind::Meta, encode_meta(est, train.is_some())),
+        (SectionKind::Data, encode_data(est.preprocessed())),
+        (SectionKind::Hasher, hw.into_bytes()),
+        (SectionKind::Shards, encode_shards(est.shard_set())),
+        (SectionKind::Estimator, encode_estimator(est)),
+    ];
+    if let Some(ts) = train {
+        sections.push((SectionKind::Train, encode_train(ts)));
+    }
+    format::assemble(&sections)
+}
+
+/// Save the engine to `path` crash-safely (`*.tmp` + fsync + rename).
+/// Returns the bytes written.
+pub fn save<H: SnapshotHasher>(
+    path: &Path,
+    est: &ShardedLgdEstimator<'_, H>,
+    train: Option<&TrainState>,
+) -> Result<u64> {
+    let bytes = snapshot_bytes(est, train);
+    format::write_atomic(path, &bytes)?;
+    Ok(bytes.len() as u64)
+}
+
+/// A fully decoded and verified snapshot. `pre` owns the dataset the
+/// restored estimator borrows; `engine` + `hasher` feed
+/// [`restore_estimator`] / [`restore_boxed`].
+pub struct LoadedSnapshot {
+    /// Summary metadata.
+    pub meta: SnapshotMeta,
+    /// The persisted preprocessed dataset.
+    pub pre: Preprocessed,
+    /// The persisted hash family (bit-exact, fresh counters).
+    pub hasher: AnyHasher,
+    /// The decoded engine state.
+    pub engine: EngineDump,
+    /// Training state, when the snapshot carries one.
+    pub train: Option<TrainState>,
+}
+
+/// Decode and verify a snapshot image (every CRC checked before any
+/// decode; every structural invariant re-validated).
+pub fn decode(bytes: &[u8]) -> Result<LoadedSnapshot> {
+    let entries = format::parse(bytes)?;
+    let meta = decode_meta(format::require_section(bytes, &entries, SectionKind::Meta)?)?;
+    let pre = decode_data(format::require_section(bytes, &entries, SectionKind::Data)?)?;
+    let mut hr = Reader::new(format::require_section(bytes, &entries, SectionKind::Hasher)?);
+    let hasher = decode_hasher(&mut hr)?;
+    hr.expect_end("hasher section")?;
+    let shards = decode_shards(format::require_section(bytes, &entries, SectionKind::Shards)?)?;
+    let est_bytes = format::require_section(bytes, &entries, SectionKind::Estimator)?;
+    let engine = decode_estimator(est_bytes, shards)?;
+    let train = match format::section(bytes, &entries, SectionKind::Train) {
+        Some(b) => Some(decode_train(b)?),
+        None => None,
+    };
+    if meta.has_train != train.is_some() {
+        return Err(Error::Store("meta/train-section presence disagree".into()));
+    }
+    if engine.n != pre.data.len() {
+        return Err(Error::Store(format!(
+            "engine covers {} examples but dataset has {}",
+            engine.n,
+            pre.data.len()
+        )));
+    }
+    // Cross-section consistency: the summary the resume gate trusts must
+    // agree with the sections actually restored. Per-section CRCs cannot
+    // catch a writer bug or a reassembled file whose sections are
+    // individually valid but mutually inconsistent — this does.
+    let kind_name = hasher.kind().name();
+    if meta.hasher != kind_name || meta.k != hasher.k() || meta.l != hasher.l() {
+        return Err(Error::Store(format!(
+            "meta section claims hasher {} (K={}, L={}) but the hasher section holds \
+             {kind_name} (K={}, L={})",
+            meta.hasher,
+            meta.k,
+            meta.l,
+            hasher.k(),
+            hasher.l()
+        )));
+    }
+    if meta.shards != engine.shards.len() {
+        return Err(Error::Store(format!(
+            "meta section claims {} shard(s) but the shards section holds {}",
+            meta.shards,
+            engine.shards.len()
+        )));
+    }
+    if meta.n != pre.data.len() || meta.mirror != engine.mirror {
+        return Err(Error::Store(
+            "meta section disagrees with the data/estimator sections".into(),
+        ));
+    }
+    Ok(LoadedSnapshot { meta, pre, hasher, engine, train })
+}
+
+/// Load and verify a snapshot file.
+pub fn load(path: &Path) -> Result<LoadedSnapshot> {
+    decode(&format::read_file(path)?)
+}
+
+/// One section row of [`SnapshotInfo`].
+#[derive(Debug, Clone)]
+pub struct SectionInfo {
+    /// Section name.
+    pub name: &'static str,
+    /// Payload bytes.
+    pub bytes: usize,
+    /// Stored (and verified) CRC-32.
+    pub crc: u32,
+}
+
+/// What `lgd snapshot inspect` prints: the verified container layout plus
+/// the summary metadata.
+#[derive(Debug, Clone)]
+pub struct SnapshotInfo {
+    /// Total file bytes.
+    pub file_bytes: usize,
+    /// Container format version.
+    pub version: u32,
+    /// Verified sections in file order.
+    pub sections: Vec<SectionInfo>,
+    /// Summary metadata.
+    pub meta: SnapshotMeta,
+}
+
+/// Verify a snapshot file and report its layout without decoding the bulk
+/// sections (the CRCs of *all* sections are still checked).
+pub fn inspect(path: &Path) -> Result<SnapshotInfo> {
+    let bytes = format::read_file(path)?;
+    let entries = format::parse(&bytes)?;
+    let meta = decode_meta(format::require_section(&bytes, &entries, SectionKind::Meta)?)?;
+    Ok(SnapshotInfo {
+        file_bytes: bytes.len(),
+        version: format::VERSION,
+        sections: entries
+            .iter()
+            .map(|e| SectionInfo { name: e.kind.name(), bytes: e.len, crc: e.crc })
+            .collect(),
+        meta,
+    })
+}
+
+/// Wire a decoded engine back into a live [`ShardedLgdEstimator`] borrowing
+/// `pre` (normally the snapshot's own `pre`). Performs **zero** table-build
+/// work and **zero** hash invocations — tables are reassembled from their
+/// dumps, membership indices are recomputed (pure integer work), and the
+/// RNG/cache/counters continue exactly where the saved engine stopped.
+pub fn restore_estimator<'a, H: SnapshotHasher + Clone>(
+    pre: &'a Preprocessed,
+    hasher: H,
+    engine: EngineDump,
+) -> Result<ShardedLgdEstimator<'a, H>> {
+    let n = engine.n;
+    if n != pre.data.len() {
+        return Err(Error::Store(format!(
+            "engine covers {n} examples but dataset has {}",
+            pre.data.len()
+        )));
+    }
+    let hd = pre.hashed.cols();
+    if hasher.dim() != hd {
+        return Err(Error::Store(format!(
+            "hasher dim {} but hash space is {hd}-dimensional",
+            hasher.dim()
+        )));
+    }
+    let mut owned = vec![false; 2 * n];
+    let mut base_rows = 0usize;
+    let mut mirror_rows = 0usize;
+    let mut shards: Vec<ShardTables<H>> = Vec::with_capacity(engine.shards.len());
+    for (s, d) in engine.shards.into_iter().enumerate() {
+        let rows_n = d.rows.len();
+        if d.stored.rows() != rows_n || d.norms.len() != rows_n {
+            return Err(Error::Store(format!(
+                "shard {s}: {rows_n} row ids, {} stored rows, {} norms",
+                d.stored.rows(),
+                d.norms.len()
+            )));
+        }
+        if rows_n > 0 && d.stored.cols() != hd {
+            return Err(Error::Store(format!(
+                "shard {s}: stored width {} but hash space is {hd}",
+                d.stored.cols()
+            )));
+        }
+        for &r in &d.rows {
+            let r = r as usize;
+            if r >= 2 * n {
+                return Err(Error::Store(format!("shard {s}: virtual row id {r} out of range")));
+            }
+            if owned[r] {
+                return Err(Error::Store(format!("virtual row id {r} owned by two shards")));
+            }
+            owned[r] = true;
+            if r < n {
+                base_rows += 1;
+            } else {
+                mirror_rows += 1;
+            }
+        }
+        let tables = TableStore::from_dump(hasher.clone(), d.tables)?;
+        if tables.len() != rows_n {
+            return Err(Error::Store(format!(
+                "shard {s}: tables index {} points but shard stores {rows_n}",
+                tables.len()
+            )));
+        }
+        shards.push(ShardTables {
+            rows: d.rows,
+            stored: d.stored,
+            norms: d.norms,
+            tables,
+            build_secs: 0.0,
+        });
+    }
+    if mirror_rows != if engine.mirror { base_rows } else { 0 } {
+        return Err(Error::Store(format!(
+            "mirror flag disagrees with the shard layout ({base_rows} base, \
+             {mirror_rows} mirror rows)"
+        )));
+    }
+    if !engine.cache_query.is_empty() {
+        if engine.cache_codes.len() != hasher.l() {
+            return Err(Error::Store(format!(
+                "query cache holds {} codes but the family has {} tables",
+                engine.cache_codes.len(),
+                hasher.l()
+            )));
+        }
+        // A wrong-width cached query would panic (or silently mis-hash)
+        // inside the lazy code fill on the first draw — reject at load.
+        if engine.cache_query.len() != hd {
+            return Err(Error::Store(format!(
+                "query cache holds a {}-dimensional query but the hash space is {hd}",
+                engine.cache_query.len()
+            )));
+        }
+    }
+    let mut set = ShardSet::from_shards(shards, n, engine.mirror, engine.threshold);
+    set.restore_counters(engine.generation, engine.set_stats);
+    let rng = Pcg64::from_raw_state(engine.rng.0, engine.rng.1);
+    let cache = QueryCache::from_parts(
+        engine.cache_query,
+        engine.cache_codes,
+        engine.cache_age,
+        engine.cache_norm,
+    );
+    Ok(ShardedLgdEstimator::from_restored(pre, set, rng, engine.stats, cache, engine.opts))
+}
+
+struct BoxedRestore<'a> {
+    pre: &'a Preprocessed,
+    engine: EngineDump,
+}
+
+impl<'a> HasherVisitor for BoxedRestore<'a> {
+    type Out = Result<Box<dyn GradientEstimator + 'a>>;
+
+    fn visit<H>(self, hasher: H) -> Self::Out
+    where
+        H: SnapshotHasher + Clone + 'static,
+    {
+        Ok(Box::new(restore_estimator(self.pre, hasher, self.engine)?))
+    }
+}
+
+/// Restore into a boxed [`GradientEstimator`] — the serving-side entry
+/// point (`lgd snapshot load`, `examples/warm_start.rs`) where the concrete
+/// hash family does not matter.
+pub fn restore_boxed<'a>(
+    hasher: AnyHasher,
+    pre: &'a Preprocessed,
+    engine: EngineDump,
+) -> Result<Box<dyn GradientEstimator + 'a>> {
+    hasher.visit(BoxedRestore { pre, engine })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::draw_engine::{run_session, DrawEngineConfig};
+    use crate::data::preprocess::{preprocess, PreprocessOptions};
+    use crate::data::synth::SynthSpec;
+    use crate::estimator::WeightedDraw;
+
+    fn setup(n: usize, d: usize, seed: u64) -> Preprocessed {
+        let ds = SynthSpec::power_law("snap", n, d, seed).generate().unwrap();
+        preprocess(ds, &PreprocessOptions::default()).unwrap()
+    }
+
+    fn mutate(est: &mut ShardedLgdEstimator<'_, DenseSrp>, pre: &Preprocessed) {
+        for id in 0..20 {
+            assert!(est.remove(id).unwrap());
+        }
+        for id in 0..8 {
+            est.shard_set_mut().insert_into(0, id, &pre.hashed).unwrap();
+        }
+    }
+
+    /// The headline contract: across layouts and shard counts, with live
+    /// overlay mutations and a warm mid-window query cache, a restored
+    /// engine replays the saved engine's exact stream — single draws and
+    /// batches — with zero table-build hashing on load.
+    #[test]
+    fn snapshot_roundtrip_replays_draw_stream_exactly() {
+        let pre = setup(120, 8, 11);
+        let hd = pre.hashed.cols();
+        let theta: Vec<f32> = (0..8).map(|j| 0.03 * (j as f32 - 3.0)).collect();
+        for sealed in [true, false] {
+            for shards in [1usize, 3] {
+                let opts = LgdOptions { sealed, ..LgdOptions::default() };
+                let mut a = ShardedLgdEstimator::new(
+                    &pre,
+                    DenseSrp::new(hd, 3, 8, 13),
+                    15,
+                    opts,
+                    shards,
+                )
+                .unwrap();
+                mutate(&mut a, &pre);
+                // warm the cache mid-window so refresh timing is part of
+                // the persisted state
+                for _ in 0..7 {
+                    a.draw(&theta);
+                }
+                let bytes = snapshot_bytes(&a, None);
+                let snap = decode(&bytes).unwrap();
+                assert_eq!(snap.meta.shards, shards);
+                assert_eq!(snap.meta.sealed, sealed);
+                assert!(!snap.meta.has_train);
+                let handle = snap.hasher.clone();
+                let mut b = restore_boxed(snap.hasher, &pre, snap.engine).unwrap();
+                // zero-rebuild proof: restoring hashed nothing at all
+                let s0 = handle.hash_stats();
+                assert_eq!(s0.code_calls, 0, "restore must not hash rows (table build)");
+                assert_eq!(s0.fused_calls, 0, "restore must not hash the query");
+                for i in 0..300 {
+                    assert_eq!(
+                        a.draw(&theta),
+                        b.draw(&theta),
+                        "sealed={sealed} shards={shards}: draw {i} diverged after restore"
+                    );
+                }
+                let (mut xa, mut xb) = (Vec::new(), Vec::new());
+                for round in 0..4 {
+                    a.draw_batch(&theta, 24, &mut xa);
+                    b.draw_batch(&theta, 24, &mut xb);
+                    assert_eq!(xa, xb, "batch round {round} diverged after restore");
+                }
+                // the draw path never needs per-row hashing
+                assert_eq!(handle.hash_stats().code_calls, 0);
+                assert_eq!(a.stats().fallbacks, b.stats().fallbacks);
+            }
+        }
+    }
+
+    /// The same identity through the async draw engine: a restored engine's
+    /// sessions replay the saved engine's sessions, in both worker modes.
+    #[test]
+    fn snapshot_roundtrip_replays_async_sessions() {
+        let pre = setup(150, 8, 31);
+        let hd = pre.hashed.cols();
+        let theta = vec![0.04f32; 8];
+        for workers in [1usize, 2] {
+            let mut a = ShardedLgdEstimator::new(
+                &pre,
+                DenseSrp::new(hd, 3, 10, 33),
+                35,
+                LgdOptions::default(),
+                2,
+            )
+            .unwrap();
+            mutate(&mut a, &pre);
+            let bytes = snapshot_bytes(&a, None);
+            let snap = decode(&bytes).unwrap();
+            let AnyHasher::Dense(h) = snap.hasher else { panic!("dense family expected") };
+            let mut b = restore_estimator(&pre, h, snap.engine).unwrap();
+            assert_eq!(b.shard_set().generation(), a.shard_set().generation());
+            let cfg = DrawEngineConfig { workers, queue_depth: 32 };
+            let (mut ga, mut gb): (Vec<WeightedDraw>, Vec<WeightedDraw>) =
+                (Vec::new(), Vec::new());
+            run_session(&mut a, &cfg, &theta, 16, 5, |_, d| {
+                ga.extend(d.iter().copied());
+                true
+            })
+            .unwrap();
+            run_session(&mut b, &cfg, &theta, 16, 5, |_, d| {
+                gb.extend(d.iter().copied());
+                true
+            })
+            .unwrap();
+            assert_eq!(ga, gb, "workers={workers}: async session diverged after restore");
+        }
+    }
+
+    /// Sparse and quadratic families restore bit-exact (codes *and*
+    /// calibrated probabilities), not just the dense reference family.
+    #[test]
+    fn snapshot_roundtrip_other_hash_families() {
+        let pre = setup(80, 6, 51);
+        let hd = pre.hashed.cols();
+        let theta = vec![0.05f32; 6];
+        // sparse
+        let mut a = ShardedLgdEstimator::new(
+            &pre,
+            SparseSrp::new(hd, 3, 6, 0.3, 53),
+            55,
+            LgdOptions::default(),
+            2,
+        )
+        .unwrap();
+        let snap = decode(&snapshot_bytes(&a, None)).unwrap();
+        assert_eq!(snap.meta.hasher, "sparse");
+        let mut b = restore_boxed(snap.hasher, &pre, snap.engine).unwrap();
+        for i in 0..200 {
+            assert_eq!(a.draw(&theta), b.draw(&theta), "sparse draw {i} diverged");
+        }
+        // quadratic
+        let mut a = ShardedLgdEstimator::new(
+            &pre,
+            QuadraticSrp::new(hd, 3, 6, 0.2, 57),
+            59,
+            LgdOptions::default(),
+            2,
+        )
+        .unwrap();
+        let snap = decode(&snapshot_bytes(&a, None)).unwrap();
+        assert_eq!(snap.meta.hasher, "quadratic");
+        let mut b = restore_boxed(snap.hasher, &pre, snap.engine).unwrap();
+        for i in 0..200 {
+            assert_eq!(a.draw(&theta), b.draw(&theta), "quadratic draw {i} diverged");
+        }
+    }
+
+    /// Training state (θ, iteration, optimizer moments) rides along and
+    /// round-trips exactly.
+    #[test]
+    fn snapshot_train_state_roundtrips() {
+        let pre = setup(60, 6, 71);
+        let hd = pre.hashed.cols();
+        let est = ShardedLgdEstimator::new(
+            &pre,
+            DenseSrp::new(hd, 3, 6, 73),
+            75,
+            LgdOptions::default(),
+            1,
+        )
+        .unwrap();
+        let ts = TrainState {
+            theta: vec![0.25, -0.5, 1.5, 0.0, -2.0, 0.125],
+            iter: 1234,
+            epochs_done: 3,
+            optimizer: OptimizerKind::Adam,
+            optim: OptimState {
+                t: 1234,
+                slots: vec![vec![0.1, -0.2, 0.3], vec![0.01, 0.02, 0.03]],
+            },
+        };
+        let bytes = snapshot_bytes(&est, Some(&ts));
+        let snap = decode(&bytes).unwrap();
+        assert!(snap.meta.has_train);
+        assert_eq!(snap.train, Some(ts));
+    }
+
+    /// Corruption gate: every single-byte flip in the header/section table
+    /// is rejected, and so is every sampled payload flip and truncation —
+    /// always as `Error::Store`, never a panic.
+    #[test]
+    fn snapshot_corruption_rejected_at_every_position() {
+        let pre = setup(24, 4, 91);
+        let hd = pre.hashed.cols();
+        let mut est = ShardedLgdEstimator::new(
+            &pre,
+            DenseSrp::new(hd, 2, 3, 93),
+            95,
+            LgdOptions::default(),
+            2,
+        )
+        .unwrap();
+        let theta = vec![0.1f32; 4];
+        for _ in 0..5 {
+            est.draw(&theta);
+        }
+        let ts = TrainState {
+            theta: vec![0.0; 4],
+            iter: 24,
+            epochs_done: 1,
+            optimizer: OptimizerKind::Sgd,
+            optim: OptimState { t: 24, slots: Vec::new() },
+        };
+        let bytes = snapshot_bytes(&est, Some(&ts));
+        decode(&bytes).unwrap();
+        // exhaustive over the header + section table (the satellite's
+        // specific requirement)...
+        let header_end = 24 + 6 * 32 + 4;
+        assert!(bytes.len() > header_end);
+        for pos in 0..header_end {
+            let mut c = bytes.clone();
+            c[pos] ^= 0x20;
+            match decode(&c) {
+                Err(Error::Store(_)) => {}
+                Err(e) => panic!("header flip at {pos}: wrong error kind {e}"),
+                Ok(_) => panic!("header flip at byte {pos} was not detected"),
+            }
+        }
+        // ...and sampled across every payload (section CRCs catch all
+        // single-byte errors; sampling keeps the test fast)
+        let mut pos = header_end;
+        while pos < bytes.len() {
+            let mut c = bytes.clone();
+            c[pos] ^= 0xFF;
+            assert!(
+                matches!(decode(&c), Err(Error::Store(_))),
+                "payload flip at byte {pos} was not detected"
+            );
+            pos += 13;
+        }
+        // truncations
+        for cut in [0usize, 7, 23, header_end - 1, header_end, bytes.len() - 1] {
+            assert!(
+                matches!(decode(&bytes[..cut]), Err(Error::Store(_))),
+                "truncation at {cut} accepted"
+            );
+        }
+    }
+
+    /// Inspect verifies the container and reports layout + metadata.
+    #[test]
+    fn snapshot_inspect_reports_sections() {
+        let pre = setup(40, 5, 101);
+        let hd = pre.hashed.cols();
+        let est = ShardedLgdEstimator::new(
+            &pre,
+            DenseSrp::new(hd, 3, 4, 103),
+            105,
+            LgdOptions::default(),
+            2,
+        )
+        .unwrap();
+        let dir = std::env::temp_dir().join("lgd-store-inspect");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("probe.lgdsnap");
+        let written = save(&path, &est, None).unwrap();
+        let info = inspect(&path).unwrap();
+        assert_eq!(info.file_bytes as u64, written);
+        assert_eq!(info.version, format::VERSION);
+        let names: Vec<&str> = info.sections.iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["meta", "data", "hasher", "shards", "estimator"]);
+        assert_eq!(info.meta.n, 40);
+        assert_eq!(info.meta.shards, 2);
+        assert!(info.meta.mirror);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

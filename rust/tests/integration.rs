@@ -489,6 +489,129 @@ fn simhash_artifact_matches_packing_contract() {
     }
 }
 
+/// Warm-start acceptance (sync, batch = 1, AdaGrad): a run interrupted at
+/// an epoch boundary and resumed from its snapshot is **identical** to the
+/// uninterrupted run — same draws (RNG + query-cache window restored), same
+/// θ/optimizer moments, so the loss curve matches bit for bit at every
+/// shared iteration — and the warm start performs zero table-build work.
+#[test]
+fn snapshot_resume_matches_uninterrupted_training() {
+    use lgd::config::spec::OptimizerKind;
+    let ds = SynthSpec::power_law("resume", 300, 8, 77).generate().unwrap();
+    let (tr, te) = ds.split(0.8, 3).unwrap();
+    let pre = preprocess(tr, &PreprocessOptions::default()).unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.train.estimator = EstimatorKind::Lgd;
+    cfg.train.epochs = 4;
+    cfg.train.optimizer = OptimizerKind::AdaGrad;
+    cfg.train.schedule = Schedule::Const(0.05);
+    cfg.lsh.k = 3;
+    cfg.lsh.l = 10;
+    cfg.lsh.shards = 2;
+    let full = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+
+    let dir = std::env::temp_dir().join("lgd-int-resume");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sync.lgdsnap");
+    let mut half_cfg = cfg.clone();
+    half_cfg.train.epochs = 2;
+    half_cfg.store.path = Some(path.clone());
+    let half = train(&half_cfg, &pre, &te, GradSource::Native).unwrap();
+    assert_eq!(half.autosaves, 1, "final save fires when a path is set");
+
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.store.path = Some(path.clone());
+    resume_cfg.store.resume = true;
+    let snap = lgd::store::snapshot::load(&path).unwrap();
+    let warm = lgd::coordinator::trainer::train_resumed(
+        &resume_cfg,
+        &te,
+        GradSource::Native,
+        snap,
+    )
+    .unwrap();
+    assert!(warm.resumed);
+    assert!(
+        warm.shard_build_secs.iter().all(|&s| s == 0.0),
+        "warm start must report zero table-build work"
+    );
+    assert_eq!(warm.iterations, full.iterations, "global iteration counter continues");
+    // every shared curve iteration matches the uninterrupted run exactly
+    for wp in &warm.curve {
+        let fp = full
+            .curve
+            .iter()
+            .find(|p| p.iter == wp.iter)
+            .unwrap_or_else(|| panic!("uninterrupted run has no point at iter {}", wp.iter));
+        assert_eq!(wp.train_loss, fp.train_loss, "iter {}: train loss diverged", wp.iter);
+        assert_eq!(wp.test_loss, fp.test_loss, "iter {}: test loss diverged", wp.iter);
+    }
+    assert_eq!(warm.theta, full.theta, "final parameters diverged after resume");
+    // the estimator's cumulative counters also continue exactly
+    let (a, b) = (warm.est_stats, full.est_stats);
+    assert_eq!(a.draws, b.draws);
+    assert_eq!(a.fallbacks, b.fallbacks);
+    assert_eq!(a.cost.randoms, b.cost.randoms);
+    assert_eq!(a.cost.probes, b.cost.probes);
+    assert_eq!(a.cost.codes, b.cost.codes, "resume must not re-hash anything extra");
+    std::fs::remove_file(&path).unwrap();
+}
+
+/// The same warm-start identity through the async pipelined trainer
+/// (per-shard sampler workers): sessions after a resume replay the
+/// uninterrupted run's sessions draw for draw.
+#[test]
+fn snapshot_resume_matches_uninterrupted_training_async() {
+    let ds = SynthSpec::power_law("resume-async", 300, 8, 79).generate().unwrap();
+    let (tr, te) = ds.split(0.8, 5).unwrap();
+    let pre = preprocess(tr, &PreprocessOptions::default()).unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.train.estimator = EstimatorKind::Lgd;
+    cfg.train.epochs = 4;
+    cfg.train.schedule = Schedule::Const(0.05);
+    cfg.train.batch = 8;
+    cfg.lsh.k = 3;
+    cfg.lsh.l = 10;
+    cfg.lsh.shards = 2;
+    cfg.lsh.async_workers = 2;
+    let full = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+    assert_eq!(full.estimator, "lgd-async");
+
+    let dir = std::env::temp_dir().join("lgd-int-resume");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("async.lgdsnap");
+    let mut half_cfg = cfg.clone();
+    half_cfg.train.epochs = 2;
+    half_cfg.store.path = Some(path.clone());
+    train(&half_cfg, &pre, &te, GradSource::Native).unwrap();
+
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.store.path = Some(path.clone());
+    resume_cfg.store.resume = true;
+    let snap = lgd::store::snapshot::load(&path).unwrap();
+    assert_eq!(snap.meta.shards, 2);
+    let warm = lgd::coordinator::trainer::train_resumed(
+        &resume_cfg,
+        &te,
+        GradSource::Native,
+        snap,
+    )
+    .unwrap();
+    assert_eq!(warm.estimator, "lgd-async");
+    assert!(warm.resumed);
+    assert!(warm.shard_build_secs.iter().all(|&s| s == 0.0));
+    for wp in &warm.curve {
+        let fp = full
+            .curve
+            .iter()
+            .find(|p| p.iter == wp.iter)
+            .unwrap_or_else(|| panic!("uninterrupted run has no point at iter {}", wp.iter));
+        assert_eq!(wp.train_loss, fp.train_loss, "iter {}: async resume diverged", wp.iter);
+    }
+    assert_eq!(warm.theta, full.theta, "final parameters diverged after async resume");
+    std::fs::remove_file(&path).unwrap();
+}
+
 /// CLI smoke: parse → train → CSV out, through the public binary surface.
 #[test]
 fn config_driven_training_run() {
