@@ -45,5 +45,24 @@ fn main() {
             dense.mults_per_code() / sparse.mults_per_code()
         );
     }
+
+    // --- Aligned-kernel dispatch A/B (docs/numerics.md): the same
+    // collision-probability dot under auto (SIMD when the CPU has it) vs
+    // forced-scalar dispatch. Outputs are bitwise identical and no mults
+    // counter moves — the ns delta is the whole story (advisory rows).
+    {
+        use lgd::core::numerics::{set_kernel_mode, simd_active, KernelMode};
+        let d = 386usize;
+        let x = unit(d, &mut rng);
+        let q = unit(d, &mut rng);
+        println!("\nkernel dispatch A/B: simd active under auto = {}", simd_active());
+        for mode in [KernelMode::Auto, KernelMode::Scalar] {
+            set_kernel_mode(mode);
+            b.bench(&format!("dot_fast_d{d}_kernel_{}", mode.name()), || {
+                bb(lgd::core::matrix::dot_fast(&x, &q));
+            });
+        }
+        set_kernel_mode(KernelMode::Auto);
+    }
     b.report();
 }

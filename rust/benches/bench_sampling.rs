@@ -211,6 +211,22 @@ fn main() {
         b.note(&format!("hash_mults_per_draw_{tag}"), st.cost.mults / draws);
     }
 
+    // --- Aligned-kernel dispatch A/B (docs/numerics.md): the same draw
+    // stream under auto (SIMD when available) vs forced-scalar dispatch —
+    // draws and mults counters are identical by construction; the ns rows
+    // are advisory and show the dispatch win on the cp hot path.
+    {
+        use lgd::core::numerics::{set_kernel_mode, simd_active, KernelMode};
+        println!("\nkernel dispatch A/B: simd active under auto = {}", simd_active());
+        for mode in [KernelMode::Auto, KernelMode::Scalar] {
+            set_kernel_mode(mode);
+            b.bench(&format!("lgd_draw_n50k_shards4_kernel_{}", mode.name()), || {
+                bb(sealed_est.draw(&theta));
+            });
+        }
+        set_kernel_mode(KernelMode::Auto);
+    }
+
     // --- Shared-query-code contract: one fused hash invocation per batch,
     // zero per-table code() calls on the draw path, independent of shard
     // count (measured via the hasher family's shared counters).

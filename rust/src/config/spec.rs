@@ -5,6 +5,7 @@ use std::path::PathBuf;
 
 use crate::core::error::{Error, Result};
 use crate::config::toml::TomlDoc;
+use crate::core::numerics::KernelMode;
 use crate::optim::Schedule;
 
 /// Which hash family backs the sampler.
@@ -117,6 +118,12 @@ pub struct LshConfig {
     /// queue capacity; assembled batches are capped at `queue_depth /
     /// batch`). Must be >= 1; irrelevant when `async_workers = 0`.
     pub queue_depth: usize,
+    /// Kernel dispatch for the aligned numerics layer (`core::numerics`):
+    /// `auto` (default) uses the SIMD path when the CPU supports it,
+    /// `scalar` forces the portable loops. The two are bitwise-identical —
+    /// this knob exists purely for A/B debugging of the dispatch path; see
+    /// docs/numerics.md.
+    pub kernel: KernelMode,
 }
 
 impl Default for LshConfig {
@@ -153,6 +160,7 @@ impl Default for LshConfig {
             sealed: true,
             async_workers: 0,
             queue_depth: 1024,
+            kernel: KernelMode::Auto,
         }
     }
 }
@@ -297,6 +305,9 @@ impl RunConfig {
             doc.int_or("lsh", "async_workers", cfg.lsh.async_workers as i64)? as usize;
         cfg.lsh.queue_depth =
             doc.int_or("lsh", "queue_depth", cfg.lsh.queue_depth as i64)? as usize;
+        let kernel = doc.str_or("lsh", "kernel", cfg.lsh.kernel.name())?;
+        cfg.lsh.kernel = KernelMode::from_name(&kernel)
+            .ok_or_else(|| Error::Config(format!("unknown kernel '{kernel}' (auto|scalar)")))?;
         cfg.lsh.hasher = match doc.str_or("lsh", "hasher", "dense")?.as_str() {
             "dense" => HasherKind::Dense,
             "sparse" => HasherKind::Sparse,
@@ -453,6 +464,7 @@ mod tests {
         assert!(cfg.lsh.sealed, "the CSR arena serves draws by default");
         assert_eq!(cfg.lsh.async_workers, 0, "async serving is opt-in");
         assert_eq!(cfg.lsh.queue_depth, 1024);
+        assert_eq!(cfg.lsh.kernel, KernelMode::Auto, "SIMD dispatch is the default");
         assert_eq!(cfg.train.estimator, EstimatorKind::Lgd);
         assert_eq!(cfg.train.backend, Backend::Native);
         assert!(cfg.store.path.is_none(), "persistence is opt-in");
@@ -507,6 +519,7 @@ rebalance_threshold = 1.5
 sealed = false
 async_workers = 4
 queue_depth = 256
+kernel = "scalar"
 [train]
 estimator = "sgd"
 optimizer = "adagrad"
@@ -530,6 +543,7 @@ backend = "pjrt"
         assert!(!cfg.lsh.sealed);
         assert_eq!(cfg.lsh.async_workers, 4);
         assert_eq!(cfg.lsh.queue_depth, 256);
+        assert_eq!(cfg.lsh.kernel, KernelMode::Scalar);
         assert_eq!(cfg.train.estimator, EstimatorKind::Sgd);
         assert_eq!(cfg.train.optimizer, OptimizerKind::AdaGrad);
         assert!(matches!(cfg.train.schedule, Schedule::Exp { .. }));
@@ -549,6 +563,7 @@ backend = "pjrt"
             "[lsh]\nrebalance_threshold = 1.5",
             "[lsh]\nqueue_depth = 0",
             "[lsh]\nasync_workers = 2000",
+            "[lsh]\nkernel = \"avx512\"",
             "[train]\nepochs = 0",
             "[train]\nestimator = \"bogus\"",
             "[train]\nlr = -0.1",

@@ -312,8 +312,7 @@ where
                         local.push_row(&neg).map_err(|e| Error::Pipeline(e.to_string()))?;
                     }
                 }
-                let norms: Vec<f64> =
-                    (0..local.rows()).map(|i| crate::core::matrix::norm2(local.row(i))).collect();
+                let norms: Vec<f64> = local.row_norms();
                 let tables = LshTables::build(h, (0..local.rows()).map(|i| local.row(i)))?;
                 Ok(ShardTables {
                     rows,
@@ -1014,7 +1013,7 @@ mod tests {
         let (pre_b, tb, pre_s, ts) = build_both(200, 12, 3);
         // identical preprocessed data
         assert_eq!(pre_b.data.y, pre_s.data.y);
-        assert_eq!(pre_b.hashed.as_slice(), pre_s.hashed.as_slice());
+        assert_eq!(pre_b.hashed, pre_s.hashed);
         assert_eq!(pre_b.norms, pre_s.norms);
         // identical table contents (same hasher -> same codes); bucket order
         // within a table may differ, compare as sets
@@ -1155,12 +1154,12 @@ mod tests {
                 streaming_build_sharded(ds.clone(), hasher.clone(), 3, mirror, &cfg, &m)
                     .unwrap();
             assert_eq!(rep.records, 240);
-            assert_eq!(pre_b.hashed.as_slice(), pre_s.hashed.as_slice());
+            assert_eq!(pre_b.hashed, pre_s.hashed);
             assert_eq!(pre_b.norms, pre_s.norms);
             assert_eq!(batch.len(), streamed.len());
             for (a, b) in batch.iter().zip(&streamed) {
                 assert_eq!(a.rows, b.rows, "mirror={mirror}: row order diverged");
-                assert_eq!(a.stored.as_slice(), b.stored.as_slice());
+                assert_eq!(a.stored, b.stored);
                 assert_eq!(a.norms, b.norms);
                 assert_eq!(a.tables.len(), b.tables.len());
                 for t in 0..8 {
@@ -1194,6 +1193,10 @@ mod tests {
         let mut seen = vec![0usize; n];
         for s in 0..set.shard_count() {
             let st = set.shard(s);
+            assert!(
+                st.stored.zero_tail_ok(),
+                "shard {s}: aligned zero-tail invariant broken by migration"
+            );
             assert_eq!(st.rows.len(), st.stored.rows());
             assert_eq!(st.rows.len(), st.norms.len());
             assert_eq!(st.tables.len(), st.rows.len());

@@ -524,6 +524,9 @@ pub fn train(
                 .into(),
         ));
     }
+    // Bitwise-invisible perf A/B (docs/numerics.md); set before any kernel
+    // touches data so the whole run uses one dispatch path.
+    crate::core::numerics::set_kernel_mode(cfg.lsh.kernel);
     match cfg.train.estimator {
         EstimatorKind::Sgd => train_sgd(cfg, pre, test, src),
         EstimatorKind::Lgd => {
@@ -548,6 +551,7 @@ pub fn train_resumed(
     if cfg.train.estimator != EstimatorKind::Lgd {
         return Err(Error::Config("--resume requires train.estimator = \"lgd\"".into()));
     }
+    crate::core::numerics::set_kernel_mode(cfg.lsh.kernel);
     // The engine state rides the snapshot, so a config that disagrees on
     // the identity-critical knobs would produce a run that is not what the
     // config declares — reject it instead of silently serving the

@@ -1,25 +1,39 @@
-//! Dense row-major matrix and vector helpers (BLAS-lite).
+//! Dense row-major matrix over the aligned-block numerics layer.
 //!
 //! The library deliberately avoids external linear-algebra crates (offline
-//! build): all hot-path math is a handful of dot products and axpys, written
-//! here once with explicit unit tests and reused everywhere. `f32` storage
-//! matches the PJRT artifacts; accumulation happens in `f64` where it
-//! protects a result (means, norms over long vectors).
+//! build): all hot-path math is the single kernel suite in
+//! [`crate::core::numerics`], re-exported here so call sites keep one
+//! import path. Storage is [`AlignedRows`]: every row padded to a
+//! [`LANES`](crate::core::numerics::LANES) multiple of 64-byte-aligned
+//! blocks with a guaranteed-zero tail. `row(i)` is the logical slice
+//! callers always saw; `row_block(i)` is the padded slice the kernels
+//! want. `f32` storage matches the PJRT artifacts; accumulation happens in
+//! `f64` where it protects a result (means, norms over long vectors).
 
 use crate::core::error::{Error, Result};
+use crate::core::numerics::AlignedRows;
 
-/// Row-major dense matrix of `f32`.
+// The ONE kernel suite — every caller that did `crate::core::matrix::dot`
+// etc. now reaches the aligned-block kernels through the same path.
+pub use crate::core::numerics::{
+    angular_similarity, axpy, cosine, dot, dot_f64, dot_fast, dot_norm, norm2, normalize,
+    scale, scale_into, sub,
+};
+
+/// Row-major dense matrix of `f32` in aligned padded storage.
+///
+/// Derived `PartialEq` compares the padded blocks; the zero-tail invariant
+/// plus the deterministic stride make that coincide exactly with logical
+/// equality (same dims, same values).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Matrix {
-    rows: usize,
-    cols: usize,
-    data: Vec<f32>,
+    data: AlignedRows,
 }
 
 impl Matrix {
     /// All-zeros matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+        Matrix { data: AlignedRows::zeros(rows, cols) }
     }
 
     /// Build from a flat row-major buffer. Errors if the length mismatches.
@@ -30,221 +44,119 @@ impl Matrix {
                 data.len()
             )));
         }
-        Ok(Matrix { rows, cols, data })
+        let mut ar = AlignedRows::new(cols);
+        for r in 0..rows {
+            ar.push_row(&data[r * cols..(r + 1) * cols]);
+        }
+        Ok(Matrix { data: ar })
     }
 
     /// Number of rows.
     #[inline]
     pub fn rows(&self) -> usize {
-        self.rows
+        self.data.rows()
     }
 
-    /// Number of columns.
+    /// Number of (logical) columns.
     #[inline]
     pub fn cols(&self) -> usize {
-        self.cols
+        self.data.cols()
     }
 
-    /// Borrow row `i` as a slice.
+    /// Borrow row `i` as its logical slice (exactly `cols` values).
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
-        debug_assert!(i < self.rows);
-        &self.data[i * self.cols..(i + 1) * self.cols]
+        debug_assert!(i < self.rows());
+        self.data.row(i)
     }
 
-    /// Mutable row access.
+    /// Mutable logical row access (padding tail stays untouched).
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
-        debug_assert!(i < self.rows);
-        &mut self.data[i * self.cols..(i + 1) * self.cols]
+        debug_assert!(i < self.rows());
+        self.data.row_mut(i)
+    }
+
+    /// Full padded row `i` — a [`LANES`](crate::core::numerics::LANES)
+    /// multiple long with a guaranteed-zero tail; what the kernels want.
+    #[inline]
+    pub fn row_block(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows());
+        self.data.row_block(i)
     }
 
     /// Element access.
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f32 {
-        self.data[i * self.cols + j]
+        self.row(i)[j]
     }
 
     /// Element write.
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f32) {
-        self.data[i * self.cols + j] = v;
-    }
-
-    /// Flat row-major buffer.
-    #[inline]
-    pub fn as_slice(&self) -> &[f32] {
-        &self.data
-    }
-
-    /// Mutable flat buffer.
-    #[inline]
-    pub fn as_mut_slice(&mut self) -> &mut [f32] {
-        &mut self.data
+        self.row_mut(i)[j] = v;
     }
 
     /// Matrix–vector product `y = A x`. `x.len()` must equal `cols`.
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) -> Result<()> {
-        if x.len() != self.cols || y.len() != self.rows {
+        if x.len() != self.cols() || y.len() != self.rows() {
             return Err(Error::Shape(format!(
                 "matvec {}x{} with x[{}] y[{}]",
-                self.rows, self.cols, x.len(), y.len()
+                self.rows(),
+                self.cols(),
+                x.len(),
+                y.len()
             )));
         }
-        for i in 0..self.rows {
+        for i in 0..self.rows() {
             y[i] = dot(self.row(i), x);
         }
         Ok(())
     }
 
+    /// L2 norm of every row through the kernel suite (the estimator norm
+    /// caches). Runs over the padded blocks — bitwise identical to the
+    /// logical rows, because the zero tail only adds exact `+0.0` terms to
+    /// a non-negative accumulator.
+    pub fn row_norms(&self) -> Vec<f64> {
+        (0..self.rows()).map(|i| norm2(self.row_block(i))).collect()
+    }
+
     /// Append a row (must match `cols`; first append on an empty matrix sets
     /// the width).
     pub fn push_row(&mut self, row: &[f32]) -> Result<()> {
-        if self.rows == 0 && self.cols == 0 {
-            self.cols = row.len();
-        }
-        if row.len() != self.cols {
+        if !(self.rows() == 0 && self.cols() == 0) && row.len() != self.cols() {
             return Err(Error::Shape(format!(
                 "push_row of width {} into {} cols",
-                row.len(), self.cols
+                row.len(),
+                self.cols()
             )));
         }
-        self.data.extend_from_slice(row);
-        self.rows += 1;
+        self.data.push_row(row);
         Ok(())
     }
 
     /// Remove row `i` by moving the last row into its place (O(cols), does
     /// not preserve row order). Live shard tables use this for streaming
-    /// removals; the caller owns any external id ↔ row-index fix-up.
+    /// removals; the caller owns any external id ↔ row-index fix-up. Whole
+    /// padded blocks move, so the zero-tail invariant is preserved.
     pub fn swap_remove_row(&mut self, i: usize) {
-        assert!(i < self.rows, "swap_remove_row({i}) of {} rows", self.rows);
-        let last = self.rows - 1;
-        if i != last {
-            let (head, tail) = self.data.split_at_mut(last * self.cols);
-            head[i * self.cols..(i + 1) * self.cols].copy_from_slice(&tail[..self.cols]);
-        }
-        self.data.truncate(last * self.cols);
-        self.rows -= 1;
+        assert!(i < self.rows(), "swap_remove_row({i}) of {} rows", self.rows());
+        self.data.swap_remove_row(i);
     }
-}
 
-/// Dot product with f64 accumulation.
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f64;
-    for i in 0..a.len() {
-        acc += a[i] as f64 * b[i] as f64;
-    }
-    acc as f32
-}
-
-/// Dot product returning f64 (used where the caller keeps f64 precision).
-#[inline]
-pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f64;
-    for i in 0..a.len() {
-        acc += a[i] as f64 * b[i] as f64;
-    }
-    acc
-}
-
-/// Fast f32 dot with 4 independent accumulators (auto-vectorizes; ~4×
-/// faster than the f64-accumulated variant). Used on the sampling hot path
-/// where float32 precision suffices (collision probabilities).
-#[inline]
-pub fn dot_fast(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut acc = (s0 + s1) + (s2 + s3);
-    for i in chunks * 4..n {
-        acc += a[i] * b[i];
-    }
-    acc
-}
-
-/// `y += alpha * x`.
-#[inline]
-pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        y[i] += alpha * x[i];
-    }
-}
-
-/// `x *= alpha`.
-#[inline]
-pub fn scale(alpha: f32, x: &mut [f32]) {
-    for v in x.iter_mut() {
-        *v *= alpha;
-    }
-}
-
-/// Euclidean norm with f64 accumulation.
-#[inline]
-pub fn norm2(x: &[f32]) -> f64 {
-    let mut acc = 0.0f64;
-    for &v in x {
-        acc += v as f64 * v as f64;
-    }
-    acc.sqrt()
-}
-
-/// Normalize `x` to unit L2 norm in place; returns the original norm.
-/// Zero vectors are left untouched (returns 0).
-#[inline]
-pub fn normalize(x: &mut [f32]) -> f64 {
-    let n = norm2(x);
-    if n > 0.0 {
-        let inv = (1.0 / n) as f32;
-        for v in x.iter_mut() {
-            *v *= inv;
-        }
-    }
-    n
-}
-
-/// Cosine similarity, clamped into [-1, 1]. Returns 0 if either vector is 0.
-#[inline]
-pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
-    let na = norm2(a);
-    let nb = norm2(b);
-    if na == 0.0 || nb == 0.0 {
-        return 0.0;
-    }
-    (dot_f64(a, b) / (na * nb)).clamp(-1.0, 1.0)
-}
-
-/// Angular similarity `1 - acos(cos)/pi` — the quantity the paper plots in
-/// Figure 9 and the SimHash collision probability (eq. 14).
-#[inline]
-pub fn angular_similarity(a: &[f32], b: &[f32]) -> f64 {
-    1.0 - cosine(a, b).acos() / std::f64::consts::PI
-}
-
-/// `a - b` into `out`.
-#[inline]
-pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
-    debug_assert!(a.len() == b.len() && b.len() == out.len());
-    for i in 0..a.len() {
-        out[i] = a[i] - b[i];
+    /// True when every padded position beyond the logical width is exactly
+    /// `+0.0` — the invariant tests assert across mutation, migration and
+    /// snapshot load.
+    pub fn zero_tail_ok(&self) -> bool {
+        self.data.zero_tail_ok()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::numerics::LANES;
 
     #[test]
     fn from_vec_checks_len() {
@@ -291,6 +203,55 @@ mod tests {
         assert_eq!(m.rows(), 2);
         assert_eq!(m.cols(), 2);
         assert!(m.push_row(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn aligned_layout_is_invisible_to_logical_callers() {
+        // ragged widths around the lane boundary: logical reads unchanged,
+        // padded blocks lane-multiple with zero tails, equality logical
+        for cols in [1usize, LANES - 1, LANES, LANES + 1, 2 * LANES + 5, 91] {
+            let flat: Vec<f32> = (0..3 * cols).map(|i| i as f32 - 7.5).collect();
+            let m = Matrix::from_vec(3, cols, flat.clone()).unwrap();
+            for r in 0..3 {
+                assert_eq!(m.row(r), &flat[r * cols..(r + 1) * cols]);
+                assert_eq!(m.row_block(r).len() % LANES, 0);
+                assert_eq!(&m.row_block(r)[..cols], m.row(r));
+            }
+            assert!(m.zero_tail_ok(), "cols={cols}");
+            let m2 = Matrix::from_vec(3, cols, flat).unwrap();
+            assert_eq!(m, m2, "padded equality must coincide with logical equality");
+        }
+    }
+
+    #[test]
+    fn zero_tail_survives_mutation() {
+        let mut m = Matrix::zeros(0, 0);
+        for r in 0..10 {
+            let row: Vec<f32> = (0..21).map(|j| (r * 21 + j) as f32).collect();
+            m.push_row(&row).unwrap();
+            assert!(m.zero_tail_ok(), "after push {r}");
+        }
+        m.row_mut(4).iter_mut().for_each(|v| *v = -3.25);
+        m.set(2, 20, 1.5);
+        assert!(m.zero_tail_ok(), "after writes");
+        m.swap_remove_row(0);
+        m.swap_remove_row(5);
+        m.swap_remove_row(m.rows() - 1);
+        assert!(m.zero_tail_ok(), "after swap_remove");
+        assert_eq!(m.rows(), 7);
+    }
+
+    #[test]
+    fn row_norms_match_per_row_kernel() {
+        let m = Matrix::from_vec(4, 21, (0..84).map(|i| (i as f32).sin()).collect()).unwrap();
+        let norms = m.row_norms();
+        for i in 0..4 {
+            assert_eq!(
+                norms[i].to_bits(),
+                norm2(m.row(i)).to_bits(),
+                "padded row norm must be bitwise identical to the logical one"
+            );
+        }
     }
 
     #[test]

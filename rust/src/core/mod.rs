@@ -1,10 +1,13 @@
-//! Foundational substrates: errors, PRNG, dense linear algebra, statistics.
+//! Foundational substrates: errors, PRNG, aligned-block numerics, dense
+//! linear algebra, statistics.
 
 pub mod error;
 pub mod matrix;
+pub mod numerics;
 pub mod rng;
 pub mod stats;
 
 pub use error::{Error, Result};
 pub use matrix::Matrix;
+pub use numerics::{AlignedBlock, AlignedRows, KernelMode, LANES};
 pub use rng::{Pcg64, Rng, SplitMix64};

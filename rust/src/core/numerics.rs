@@ -1,0 +1,797 @@
+//! The aligned-block numerics layer: ONE kernel suite under `Matrix`, the
+//! SRP hashers and the model gradient kernels.
+//!
+//! Storage: [`AlignedRows`] keeps every row padded to a multiple of
+//! [`LANES`] f32 lanes inside `#[repr(align(64))]` [`AlignedBlock`]s — one
+//! cache line per block — with a **guaranteed-zero tail** (every padded
+//! position beyond the logical width holds exactly `+0.0`). Callers that
+//! want the logical row use `row(i)`; kernels that want the full padded
+//! stride use `row_block(i)`.
+//!
+//! Kernels: lane-width chunked loops the compiler auto-vectorizes, plus an
+//! optional `std::arch` AVX2 path behind runtime
+//! `is_x86_feature_detected!` with a portable fallback — zero external
+//! dependencies. Dispatch is a *pure perf A/B*: the AVX2 paths use no FMA
+//! and reduce through the same fixed pairwise tree as the portable paths,
+//! so `auto` and `scalar` ([`KernelMode`]) produce bitwise-identical
+//! results on every input.
+//!
+//! Determinism contract (see `docs/numerics.md`):
+//! * `dot`, `dot_f64`, `norm2`, `normalize`, `dot_norm`, `cosine` are
+//!   **sequential-order f64** accumulations — never re-associated, never
+//!   vectorized. Hash code-sign decisions (`s >= 0.0`) and every bitwise
+//!   parity gate (fused-vs-per-table, sealed-vs-Vec, sync-vs-async,
+//!   snapshot resume) ride on these. The zero tail makes them safe over
+//!   padded blocks too: a `+0.0` product added to a non-negative or
+//!   sign-preserved accumulator does not change its bits.
+//! * `dot_fast` is the re-associated throughput kernel ([`LANES`] virtual
+//!   lanes, fixed tree reduction). Its only consumers are collision
+//!   probabilities, which feed statistical gates (TV/chi-square) and
+//!   parity suites where both sides share this kernel.
+//! * `axpy`, `scale`, `scale_into` are elementwise — vectorizing them is
+//!   bitwise-safe, so they take the AVX2 path under `auto`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// f32 lanes per aligned block (64 bytes = one cache line).
+pub const LANES: usize = 16;
+
+/// One cache-line-aligned block of [`LANES`] f32 values.
+///
+/// `#[repr(C, align(64))]` over `[f32; LANES]` has size 64 with no padding,
+/// so a contiguous `[AlignedBlock]` reinterprets soundly as a flat `[f32]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+#[repr(C, align(64))]
+pub struct AlignedBlock(pub [f32; LANES]);
+
+impl AlignedBlock {
+    /// The all-zero block (every lane `+0.0`).
+    pub const ZERO: AlignedBlock = AlignedBlock([0.0; LANES]);
+}
+
+/// Blocks needed to hold `cols` logical values (0 for an empty width).
+#[inline]
+pub fn blocks_for(cols: usize) -> usize {
+    cols.div_ceil(LANES)
+}
+
+#[inline]
+fn flat(blocks: &[AlignedBlock]) -> &[f32] {
+    // SAFETY: AlignedBlock is #[repr(C, align(64))] over [f32; LANES],
+    // size 64 == LANES * size_of::<f32>() with no padding bytes, and f32's
+    // alignment divides the block's, so the contiguous block storage is
+    // exactly blocks.len() * LANES valid, initialized f32 values.
+    unsafe { std::slice::from_raw_parts(blocks.as_ptr() as *const f32, blocks.len() * LANES) }
+}
+
+#[inline]
+fn flat_mut(blocks: &mut [AlignedBlock]) -> &mut [f32] {
+    // SAFETY: as `flat`, plus exclusive access through the &mut borrow.
+    unsafe {
+        std::slice::from_raw_parts_mut(blocks.as_mut_ptr() as *mut f32, blocks.len() * LANES)
+    }
+}
+
+/// Row-major f32 storage with every row padded to a [`LANES`] multiple of
+/// cache-line-aligned blocks and a guaranteed-zero tail.
+///
+/// This is the storage under [`crate::core::matrix::Matrix`]; the zero-tail
+/// invariant is what lets the sequential-f64 kernels run over full padded
+/// blocks without changing a single output bit, and what makes padded
+/// equality coincide with logical equality (`PartialEq` derives).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlignedRows {
+    blocks: Vec<AlignedBlock>,
+    rows: usize,
+    cols: usize,
+    /// Blocks per row (0 iff `cols == 0`).
+    stride: usize,
+}
+
+impl AlignedRows {
+    /// Empty storage of logical width `cols` (0 rows).
+    pub fn new(cols: usize) -> AlignedRows {
+        AlignedRows { blocks: Vec::new(), rows: 0, cols, stride: blocks_for(cols) }
+    }
+
+    /// `rows x cols` of zeros.
+    pub fn zeros(rows: usize, cols: usize) -> AlignedRows {
+        let stride = blocks_for(cols);
+        AlignedRows { blocks: vec![AlignedBlock::ZERO; rows * stride], rows, cols, stride }
+    }
+
+    /// Row count.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Logical column count.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Padded row length in f32 lanes (`stride * LANES`).
+    #[inline]
+    pub fn padded_cols(&self) -> usize {
+        self.stride * LANES
+    }
+
+    /// Logical row `i` (exactly `cols` values).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        let start = i * self.stride * LANES;
+        &flat(&self.blocks)[start..start + self.cols]
+    }
+
+    /// Mutable logical row `i` — the padding tail stays untouched, so the
+    /// zero-tail invariant survives any write through this.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let start = i * self.stride * LANES;
+        let cols = self.cols;
+        &mut flat_mut(&mut self.blocks)[start..start + cols]
+    }
+
+    /// Full padded row `i` (`padded_cols()` values, tail guaranteed zero) —
+    /// what the kernels want.
+    #[inline]
+    pub fn row_block(&self, i: usize) -> &[f32] {
+        let w = self.stride * LANES;
+        let start = i * w;
+        &flat(&self.blocks)[start..start + w]
+    }
+
+    /// Append a row. On the first push into width-0 empty storage the
+    /// logical width is adopted from the row (and persists even if the
+    /// storage empties again). The caller validates width agreement.
+    pub fn push_row(&mut self, row: &[f32]) {
+        if self.rows == 0 && self.cols == 0 {
+            self.cols = row.len();
+            self.stride = blocks_for(row.len());
+        }
+        debug_assert_eq!(row.len(), self.cols, "push_row width mismatch");
+        let start = self.blocks.len();
+        self.blocks.resize(start + self.stride, AlignedBlock::ZERO);
+        flat_mut(&mut self.blocks)[start * LANES..start * LANES + row.len()]
+            .copy_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Remove row `i` by moving the last row into its place (O(stride)).
+    /// Whole padded blocks move, so the zero tail is preserved verbatim.
+    pub fn swap_remove_row(&mut self, i: usize) {
+        debug_assert!(i < self.rows, "swap_remove_row out of range");
+        let last = self.rows - 1;
+        if i != last {
+            let (head, tail) = self.blocks.split_at_mut(last * self.stride);
+            head[i * self.stride..(i + 1) * self.stride]
+                .copy_from_slice(&tail[..self.stride]);
+        }
+        self.blocks.truncate(last * self.stride);
+        self.rows = last;
+    }
+
+    /// True when every padded position beyond the logical width holds
+    /// exactly `+0.0` (bit pattern zero) — the invariant every kernel and
+    /// the derived `PartialEq` rely on.
+    pub fn zero_tail_ok(&self) -> bool {
+        let w = self.stride * LANES;
+        (0..self.rows).all(|i| {
+            flat(&self.blocks)[i * w + self.cols..(i + 1) * w]
+                .iter()
+                .all(|v| v.to_bits() == 0)
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel-mode dispatch
+// ---------------------------------------------------------------------------
+
+/// Which kernel path the re-associable/elementwise kernels take.
+///
+/// `Auto` uses the AVX2 path when the CPU has it; `Scalar` forces the
+/// portable lane-chunked loops. The two are bitwise identical by
+/// construction (no FMA, shared tree reduction), so the knob is a pure
+/// perf A/B — `lsh.kernel` / `lgd train --kernel` set it process-wide.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// Runtime-detected best path (default).
+    #[default]
+    Auto,
+    /// Portable loops only.
+    Scalar,
+}
+
+impl KernelMode {
+    /// Parse the config/CLI spelling (`auto` | `scalar`).
+    pub fn from_name(s: &str) -> Option<KernelMode> {
+        match s {
+            "auto" => Some(KernelMode::Auto),
+            "scalar" => Some(KernelMode::Scalar),
+            _ => None,
+        }
+    }
+
+    /// The config/CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelMode::Auto => "auto",
+            KernelMode::Scalar => "scalar",
+        }
+    }
+}
+
+static KERNEL_MODE: AtomicU8 = AtomicU8::new(0);
+
+/// Set the process-wide kernel mode (the trainer applies `lsh.kernel`).
+pub fn set_kernel_mode(mode: KernelMode) {
+    KERNEL_MODE.store(mode as u8, Ordering::Relaxed);
+}
+
+/// Current process-wide kernel mode.
+pub fn kernel_mode() -> KernelMode {
+    match KERNEL_MODE.load(Ordering::Relaxed) {
+        1 => KernelMode::Scalar,
+        _ => KernelMode::Auto,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    // 0 = unknown, 1 = yes, 2 = no — probed once, then a relaxed load.
+    static AVX2: AtomicU8 = AtomicU8::new(0);
+    match AVX2.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let yes = std::arch::is_x86_feature_detected!("avx2");
+            AVX2.store(if yes { 1 } else { 2 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+#[inline]
+fn use_avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        kernel_mode() == KernelMode::Auto && avx2_available()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// True when the `auto` path currently dispatches to `std::arch` SIMD —
+/// reported by the benches so an A/B row is interpretable.
+pub fn simd_active() -> bool {
+    use_avx2()
+}
+
+// ---------------------------------------------------------------------------
+// Sequential-order f64 kernels (never re-associated — parity-gate safe)
+// ---------------------------------------------------------------------------
+
+/// Dot product with a sequential f64 accumulator, returned as f32.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_f64(a, b) as f32
+}
+
+/// Dot product with a sequential f64 accumulator — the code-sign kernel.
+/// Element order is the contract: hash bits test `dot_f64(..) >= 0.0`.
+#[inline]
+pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len().min(b.len());
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        acc += a[i] as f64 * b[i] as f64;
+    }
+    acc
+}
+
+/// L2 norm with a sequential f64 accumulator.
+#[inline]
+pub fn norm2(v: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for &x in v {
+        let xf = x as f64;
+        acc += xf * xf;
+    }
+    acc.sqrt()
+}
+
+/// Fused single-pass dot + both norms: `(a·b, ‖a‖, ‖b‖)`. Three independent
+/// sequential f64 accumulators, so each output is bitwise identical to the
+/// separate `dot_f64`/`norm2` calls it replaces.
+#[inline]
+pub fn dot_norm(a: &[f32], b: &[f32]) -> (f64, f64, f64) {
+    let n = a.len().min(b.len());
+    let (mut d, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for i in 0..n {
+        let x = a[i] as f64;
+        let y = b[i] as f64;
+        d += x * y;
+        na += x * x;
+        nb += y * y;
+    }
+    (d, na.sqrt(), nb.sqrt())
+}
+
+/// Normalize `v` to unit L2 norm in place; returns the original norm.
+/// Zero vectors are left untouched.
+pub fn normalize(v: &mut [f32]) -> f64 {
+    let n = norm2(v);
+    if n > 0.0 {
+        let inv = (1.0 / n) as f32;
+        scale(inv, v);
+    }
+    n
+}
+
+/// Cosine similarity in [-1, 1]; 0 when either vector has zero norm.
+/// One fused pass (`dot_norm`) — bitwise identical to the historical
+/// three-pass form.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let (d, na, nb) = dot_norm(a, b);
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    (d / (na * nb)).clamp(-1.0, 1.0)
+}
+
+/// SimHash angular similarity `1 − θ/π` (paper eq. 14).
+pub fn angular_similarity(a: &[f32], b: &[f32]) -> f64 {
+    1.0 - cosine(a, b).acos() / std::f64::consts::PI
+}
+
+// ---------------------------------------------------------------------------
+// Collision-probability helpers (the ONE copy of the clamp logic)
+// ---------------------------------------------------------------------------
+
+/// Floor/ceiling for collision probabilities: Algorithm-1 weights divide by
+/// the probability, so it must stay inside `(0, 1)` strictly.
+pub const PROB_FLOOR: f64 = 1e-9;
+
+/// Clamp a collision probability into `[PROB_FLOOR, 1 − PROB_FLOOR]`.
+#[inline]
+pub fn clamp_prob(p: f64) -> f64 {
+    p.clamp(PROB_FLOOR, 1.0 - PROB_FLOOR)
+}
+
+/// Cosine from a precomputed dot product and norms, clamped into [-1, 1].
+/// The caller guards zero norms (families differ on the convention there).
+#[inline]
+pub fn normed_cosine(dot: f64, na: f64, nb: f64) -> f64 {
+    (dot / (na * nb)).clamp(-1.0, 1.0)
+}
+
+/// SimHash collision law `1 − arccos(cos)/π`, clamped by [`clamp_prob`].
+#[inline]
+pub fn angular_cp(cos: f64) -> f64 {
+    clamp_prob(1.0 - cos.acos() / std::f64::consts::PI)
+}
+
+/// Quadratic-SRP collision law: the implicit feature map squares the
+/// cosine, then the angular law applies. `clamp` before `acos` keeps the
+/// argument in domain when `|cos|` exceeds 1 from rounding.
+#[inline]
+pub fn quadratic_angular_cp(cos: f64) -> f64 {
+    angular_cp((cos * cos).clamp(-1.0, 1.0))
+}
+
+// ---------------------------------------------------------------------------
+// Re-associated throughput kernel: dot_fast
+// ---------------------------------------------------------------------------
+
+/// Fixed pairwise tree reduction over the [`LANES`] virtual-SIMD lanes.
+/// Shared by the portable and AVX2 paths — the reason dispatch is bitwise
+/// invisible.
+#[inline]
+fn tree_reduce(l: &[f32; LANES]) -> f32 {
+    let q0 = (l[0] + l[1]) + (l[2] + l[3]);
+    let q1 = (l[4] + l[5]) + (l[6] + l[7]);
+    let q2 = (l[8] + l[9]) + (l[10] + l[11]);
+    let q3 = (l[12] + l[13]) + (l[14] + l[15]);
+    (q0 + q1) + (q2 + q3)
+}
+
+#[inline]
+fn dot_fast_portable(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / LANES;
+    let mut lanes = [0.0f32; LANES];
+    for c in 0..chunks {
+        let base = c * LANES;
+        for (j, lane) in lanes.iter_mut().enumerate() {
+            *lane += a[base + j] * b[base + j];
+        }
+    }
+    for (j, i) in (chunks * LANES..n).enumerate() {
+        lanes[j] += a[i] * b[i];
+    }
+    tree_reduce(&lanes)
+}
+
+/// Throughput f32 dot product: [`LANES`] virtual lanes, fixed tree
+/// reduction. Re-associates relative to `dot_f64` — consumers are the
+/// collision-probability paths, whose gates are statistical. The AVX2 and
+/// portable paths are bitwise identical (no FMA, same per-lane order, same
+/// reduction), so [`KernelMode`] never changes a result.
+#[inline]
+pub fn dot_fast(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 presence was runtime-verified by `use_avx2`.
+        return unsafe { dot_fast_avx2(a, b) };
+    }
+    dot_fast_portable(a, b)
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise kernels (vectorization is bitwise-safe)
+// ---------------------------------------------------------------------------
+
+/// `y += alpha * x` elementwise.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 presence was runtime-verified by `use_avx2`.
+        unsafe { axpy_avx2(alpha, x, y) };
+        return;
+    }
+    let n = x.len().min(y.len());
+    for i in 0..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `v *= alpha` in place.
+#[inline]
+pub fn scale(alpha: f32, v: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 presence was runtime-verified by `use_avx2`.
+        unsafe { scale_avx2(alpha, v) };
+        return;
+    }
+    for x in v.iter_mut() {
+        *x *= alpha;
+    }
+}
+
+/// `out = alpha * x` elementwise — the model gradient kernel
+/// (`∇f = c·x` for both linear models).
+#[inline]
+pub fn scale_into(alpha: f32, x: &[f32], out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 presence was runtime-verified by `use_avx2`.
+        unsafe { scale_into_avx2(alpha, x, out) };
+        return;
+    }
+    let n = x.len().min(out.len());
+    for i in 0..n {
+        out[i] = alpha * x[i];
+    }
+}
+
+/// `a − b` into `out`.
+#[inline]
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert!(a.len() == b.len() && b.len() == out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 paths — no FMA, scalar-identical rounding per element
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_fast_avx2(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let chunks = n / LANES;
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    for c in 0..chunks {
+        let base = c * LANES;
+        let x0 = _mm256_loadu_ps(ap.add(base));
+        let y0 = _mm256_loadu_ps(bp.add(base));
+        let x1 = _mm256_loadu_ps(ap.add(base + 8));
+        let y1 = _mm256_loadu_ps(bp.add(base + 8));
+        // mul then add (no FMA): two roundings per lane, exactly like the
+        // portable `lanes[j] += a*b` — dispatch stays bitwise invisible.
+        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(x0, y0));
+        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(x1, y1));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc0);
+    _mm256_storeu_ps(lanes.as_mut_ptr().add(8), acc1);
+    for (j, i) in (chunks * LANES..n).enumerate() {
+        lanes[j] += a[i] * b[i];
+    }
+    tree_reduce(&lanes)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = x.len().min(y.len());
+    let va = _mm256_set1_ps(alpha);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+        _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, _mm256_mul_ps(va, xv)));
+        i += 8;
+    }
+    while i < n {
+        y[i] += alpha * x[i];
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scale_avx2(alpha: f32, v: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = v.len();
+    let va = _mm256_set1_ps(alpha);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let xv = _mm256_loadu_ps(v.as_ptr().add(i));
+        _mm256_storeu_ps(v.as_mut_ptr().add(i), _mm256_mul_ps(xv, va));
+        i += 8;
+    }
+    while i < n {
+        v[i] *= alpha;
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scale_into_avx2(alpha: f32, x: &[f32], out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = x.len().min(out.len());
+    let va = _mm256_set1_ps(alpha);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(va, xv));
+        i += 8;
+    }
+    while i < n {
+        out[i] = alpha * x[i];
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ref_vec(seed: u64, n: usize) -> Vec<f32> {
+        // cheap deterministic pseudo-data without pulling in core::rng
+        let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((s >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+            })
+            .collect()
+    }
+
+    #[test]
+    fn aligned_block_is_one_cache_line() {
+        assert_eq!(std::mem::size_of::<AlignedBlock>(), 64);
+        assert_eq!(std::mem::align_of::<AlignedBlock>(), 64);
+        assert_eq!(LANES * std::mem::size_of::<f32>(), 64);
+    }
+
+    #[test]
+    fn aligned_rows_zero_tail_invariant() {
+        // ragged widths around the lane boundary, through every mutation
+        for cols in [1usize, 7, 15, 16, 17, 31, 33, 91] {
+            let mut m = AlignedRows::new(0);
+            assert_eq!(m.cols(), 0);
+            for r in 0..9 {
+                m.push_row(&ref_vec(r as u64 + 1, cols));
+                assert!(m.zero_tail_ok(), "cols={cols} after push {r}");
+            }
+            assert_eq!(m.cols(), cols);
+            assert_eq!(m.padded_cols() % LANES, 0);
+            // writes through row_mut cannot touch the tail
+            m.row_mut(3).iter_mut().for_each(|v| *v = -1.25);
+            assert!(m.zero_tail_ok(), "cols={cols} after row_mut");
+            // swap-remove moves whole padded blocks
+            m.swap_remove_row(0);
+            m.swap_remove_row(m.rows() - 1);
+            m.swap_remove_row(2);
+            assert!(m.zero_tail_ok(), "cols={cols} after swap_remove");
+            assert_eq!(m.rows(), 6);
+            // width persists through emptying
+            while m.rows() > 0 {
+                m.swap_remove_row(0);
+            }
+            assert_eq!(m.cols(), cols, "width persists when emptied");
+            m.push_row(&ref_vec(99, cols));
+            assert!(m.zero_tail_ok());
+        }
+    }
+
+    #[test]
+    fn rows_roundtrip_logical_values() {
+        let a = ref_vec(1, 21);
+        let b = ref_vec(2, 21);
+        let mut m = AlignedRows::new(21);
+        m.push_row(&a);
+        m.push_row(&b);
+        assert_eq!(m.row(0), &a[..]);
+        assert_eq!(m.row(1), &b[..]);
+        assert_eq!(&m.row_block(0)[..21], &a[..]);
+        assert!(m.row_block(0)[21..].iter().all(|v| v.to_bits() == 0));
+    }
+
+    #[test]
+    fn sequential_kernels_are_padding_invariant() {
+        // the zero tail must not change a single bit of the sequential
+        // f64 kernels — this is what lets callers hand kernels either the
+        // logical row or the padded block
+        for cols in [5usize, 16, 23, 91] {
+            let a = ref_vec(3, cols);
+            let b = ref_vec(4, cols);
+            let mut m = AlignedRows::new(cols);
+            m.push_row(&a);
+            m.push_row(&b);
+            let (pa, pb) = (m.row_block(0), m.row_block(1));
+            assert_eq!(dot_f64(&a, &b).to_bits(), dot_f64(pa, pb).to_bits());
+            assert_eq!(norm2(&a).to_bits(), norm2(pa).to_bits());
+            let (d, na, nb) = dot_norm(&a, &b);
+            let (dp, nap, nbp) = dot_norm(pa, pb);
+            assert_eq!(d.to_bits(), dp.to_bits());
+            assert_eq!(na.to_bits(), nap.to_bits());
+            assert_eq!(nb.to_bits(), nbp.to_bits());
+        }
+    }
+
+    #[test]
+    fn dot_norm_matches_separate_kernels_bitwise() {
+        let a = ref_vec(5, 137);
+        let b = ref_vec(6, 137);
+        let (d, na, nb) = dot_norm(&a, &b);
+        assert_eq!(d.to_bits(), dot_f64(&a, &b).to_bits());
+        assert_eq!(na.to_bits(), norm2(&a).to_bits());
+        assert_eq!(nb.to_bits(), norm2(&b).to_bits());
+    }
+
+    #[test]
+    fn dot_fast_matches_reference_within_tolerance() {
+        for n in [0usize, 1, 15, 16, 17, 64, 91, 385, 530] {
+            let a = ref_vec(7, n);
+            let b = ref_vec(8, n);
+            let reference = dot_f64(&a, &b);
+            let fast = dot_fast(&a, &b) as f64;
+            let tol = 1e-4 * (1.0 + reference.abs());
+            assert!((fast - reference).abs() < tol, "n={n}: {fast} vs {reference}");
+        }
+    }
+
+    #[test]
+    fn kernel_mode_dispatch_is_bitwise_invisible() {
+        // auto vs scalar must agree bit for bit on every kernel — the knob
+        // is a perf A/B, never a numerics A/B. (On non-AVX2 hosts both
+        // modes take the portable path and the test is trivially green.)
+        let prev = kernel_mode();
+        for n in [1usize, 8, 15, 16, 17, 47, 91, 386, 530] {
+            let a = ref_vec(9, n);
+            let b = ref_vec(10, n);
+            set_kernel_mode(KernelMode::Auto);
+            let df_auto = dot_fast(&a, &b);
+            let mut ya = b.clone();
+            axpy(0.37, &a, &mut ya);
+            let mut sa = a.clone();
+            scale(-1.83, &mut sa);
+            let mut oa = vec![0.0f32; n];
+            scale_into(2.5, &a, &mut oa);
+
+            set_kernel_mode(KernelMode::Scalar);
+            let df_scalar = dot_fast(&a, &b);
+            let mut ys = b.clone();
+            axpy(0.37, &a, &mut ys);
+            let mut ss = a.clone();
+            scale(-1.83, &mut ss);
+            let mut os = vec![0.0f32; n];
+            scale_into(2.5, &a, &mut os);
+
+            assert_eq!(df_auto.to_bits(), df_scalar.to_bits(), "dot_fast n={n}");
+            for i in 0..n {
+                assert_eq!(ya[i].to_bits(), ys[i].to_bits(), "axpy n={n} i={i}");
+                assert_eq!(sa[i].to_bits(), ss[i].to_bits(), "scale n={n} i={i}");
+                assert_eq!(oa[i].to_bits(), os[i].to_bits(), "scale_into n={n} i={i}");
+            }
+        }
+        set_kernel_mode(prev);
+    }
+
+    #[test]
+    fn elementwise_kernels_match_naive_loops() {
+        let n = 93;
+        let x = ref_vec(11, n);
+        let mut y = ref_vec(12, n);
+        let mut y_ref = y.clone();
+        axpy(1.75, &x, &mut y);
+        for i in 0..n {
+            y_ref[i] += 1.75 * x[i];
+        }
+        assert_eq!(y, y_ref);
+        let mut v = x.clone();
+        let mut v_ref = x.clone();
+        scale(0.31, &mut v);
+        v_ref.iter_mut().for_each(|e| *e *= 0.31);
+        assert_eq!(v, v_ref);
+        let mut out = vec![0.0f32; n];
+        scale_into(-2.0, &x, &mut out);
+        let out_ref: Vec<f32> = x.iter().map(|&e| -2.0 * e).collect();
+        assert_eq!(out, out_ref);
+    }
+
+    #[test]
+    fn cosine_and_collision_helpers() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 2.0];
+        assert_eq!(cosine(&a, &b), 0.0);
+        assert_eq!(cosine(&a, &a), 1.0);
+        assert_eq!(cosine(&a, &[0.0, 0.0]), 0.0, "zero norm convention");
+        assert!((angular_similarity(&a, &b) - 0.5).abs() < 1e-12);
+        // clamp floor/ceiling
+        assert_eq!(angular_cp(1.0), 1.0 - PROB_FLOOR);
+        assert_eq!(angular_cp(-1.0), PROB_FLOOR);
+        // out-of-domain cosines clamp instead of NaN
+        assert_eq!(normed_cosine(3.0, 1.0, 1.0), 1.0);
+        assert_eq!(normed_cosine(-3.0, 1.0, 1.0), -1.0);
+        // quadratic law: squaring first, then clamp-then-acos, matches the
+        // historical clamp(c*c) form even when |c| > 1
+        assert_eq!(
+            quadratic_angular_cp(1.2f64.clamp(-1.0, 1.0)),
+            clamp_prob(1.0 - (1.2f64 * 1.2).clamp(-1.0, 1.0).acos() / std::f64::consts::PI)
+        );
+        // squared cosine is never negative, so the quadratic law bottoms
+        // out at 0.5 (orthogonal vectors), not at the probability floor
+        assert!((quadratic_angular_cp(0.0) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn normalize_and_sub_semantics() {
+        let mut v = vec![3.0f32, 4.0];
+        let n = normalize(&mut v);
+        assert!((n - 5.0).abs() < 1e-12);
+        assert!((norm2(&v) - 1.0).abs() < 1e-6);
+        let mut z = vec![0.0f32; 3];
+        assert_eq!(normalize(&mut z), 0.0);
+        assert!(z.iter().all(|&x| x == 0.0), "zero vectors untouched");
+        let mut out = [0.0f32; 2];
+        sub(&[3.0, 1.0], &[1.0, 4.0], &mut out);
+        assert_eq!(out, [2.0, -3.0]);
+    }
+
+    #[test]
+    fn kernel_mode_parses_names() {
+        assert_eq!(KernelMode::from_name("auto"), Some(KernelMode::Auto));
+        assert_eq!(KernelMode::from_name("scalar"), Some(KernelMode::Scalar));
+        assert_eq!(KernelMode::from_name("fast"), None);
+        assert_eq!(KernelMode::Auto.name(), "auto");
+        assert_eq!(KernelMode::Scalar.name(), "scalar");
+    }
+}

@@ -109,8 +109,7 @@ impl<'a, H: SrpHasher> LgdEstimator<'a, H> {
         } else {
             TableStore::Vec(tables)
         };
-        let stored_norms =
-            (0..stored.rows()).map(|i| crate::core::matrix::norm2(stored.row(i))).collect();
+        let stored_norms = stored.row_norms();
         Ok(LgdEstimator {
             pre,
             tables,
@@ -143,8 +142,7 @@ impl<'a, H: SrpHasher> LgdEstimator<'a, H> {
             TableStore::Vec(tables)
         };
         let stored = pre.hashed.clone();
-        let stored_norms =
-            (0..stored.rows()).map(|i| crate::core::matrix::norm2(stored.row(i))).collect();
+        let stored_norms = stored.row_norms();
         LgdEstimator {
             pre,
             tables,

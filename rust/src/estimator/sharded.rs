@@ -966,8 +966,7 @@ mod tests {
                 rows.push(i as u32);
                 stored.push_row(pre.hashed.row(i)).unwrap();
             }
-            let norms: Vec<f64> =
-                (0..stored.rows()).map(|i| crate::core::matrix::norm2(stored.row(i))).collect();
+            let norms: Vec<f64> = stored.row_norms();
             let tables =
                 crate::lsh::tables::TableStore::Vec(LshTables::new(DenseSrp::new(hd, 3, 4, 53)));
             shards.push(ShardTables { rows, stored, norms, tables, build_secs: 0.0 });

@@ -19,12 +19,13 @@
 //! which the LGD estimator inverts for unbiasedness (Thm 1).
 
 use crate::core::matrix::angular_similarity;
+use crate::core::numerics::{clamp_prob, normed_cosine, quadratic_angular_cp};
 
 /// SimHash per-bit collision probability (eq. 14), clamped to [ε, 1−ε] so
 /// importance weights stay finite even for near-antipodal pairs.
 #[inline]
 pub fn simhash_cp(x: &[f32], q: &[f32]) -> f64 {
-    angular_similarity(x, q).clamp(1e-9, 1.0 - 1e-9)
+    clamp_prob(angular_similarity(x, q))
 }
 
 /// Probability that `x` lands in the same K-bit bucket as the query in one
@@ -57,9 +58,7 @@ pub fn quadratic_cp(u: &[f32], v: &[f32]) -> f64 {
     if nu == 0.0 || nv == 0.0 {
         return 0.5;
     }
-    let c = dot_f64(u, v) / (nu * nv);
-    let cos_t = (c * c).clamp(-1.0, 1.0);
-    (1.0 - cos_t.acos() / std::f64::consts::PI).clamp(1e-9, 1.0 - 1e-9)
+    quadratic_angular_cp(normed_cosine(dot_f64(u, v), nu, nv))
 }
 
 #[cfg(test)]

@@ -190,9 +190,8 @@ impl SrpHasher for QuadraticSrp {
         if nx == 0.0 || nq == 0.0 {
             return 0.5;
         }
-        let c = crate::core::matrix::dot_fast(x, q) as f64 / (nx * nq);
-        let cos_t = (c * c).clamp(-1.0, 1.0);
-        (1.0 - cos_t.acos() / std::f64::consts::PI).clamp(1e-9, 1.0 - 1e-9)
+        use crate::core::numerics::{dot_fast, normed_cosine, quadratic_angular_cp};
+        quadratic_angular_cp(normed_cosine(dot_fast(x, q) as f64, nx, nq))
     }
 }
 

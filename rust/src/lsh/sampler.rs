@@ -166,9 +166,7 @@ pub struct LshSampler<'a, T: BucketRead> {
 impl<'a, T: BucketRead> LshSampler<'a, T> {
     /// Wrap tables + the matrix of the vectors that were inserted into them.
     pub fn new(tables: &'a T, hashed: &'a Matrix) -> Self {
-        let norms: Vec<f64> =
-            (0..hashed.rows()).map(|i| crate::core::matrix::norm2(hashed.row(i))).collect();
-        Self::with_norms(tables, hashed, std::borrow::Cow::Owned(norms))
+        Self::with_norms(tables, hashed, std::borrow::Cow::Owned(hashed.row_norms()))
     }
 
     /// Construct with precomputed row norms (hot path: callers that build a

@@ -16,7 +16,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::core::error::{Error, Result};
-use crate::core::matrix::dot_f64;
+use crate::core::matrix::{dot_f64, Matrix};
+use crate::core::numerics::{angular_cp, clamp_prob, dot_fast, normed_cosine};
 use crate::core::rng::{Pcg64, Rng};
 
 /// Cumulative hash-invocation counters of a hasher family. The counters
@@ -94,8 +95,9 @@ pub trait SrpHasher: Send + Sync {
         if nx == 0.0 || nq == 0.0 {
             return 0.5;
         }
-        let cos = (crate::core::matrix::dot_fast(x, q) as f64 / (nx * nq)).clamp(-1.0, 1.0);
-        (1.0 - cos.acos() / std::f64::consts::PI).clamp(1e-9, 1.0 - 1e-9)
+        // ONE copy of the cosine/clamp logic: core::numerics owns it (the
+        // sparse and quadratic overrides route through the same helpers)
+        angular_cp(normed_cosine(dot_fast(x, q) as f64, nx, nq))
     }
 
     /// Codes for all L tables. The default walks the tables one `code()` at
@@ -120,13 +122,27 @@ pub struct DenseSrp {
     dim: usize,
     k: usize,
     l: usize,
-    /// (l*k) × dim row-major plane matrix.
-    planes: Vec<f32>,
+    /// (l*k) × dim plane matrix in aligned lane-padded storage — every
+    /// plane row is a `row_block` the kernel layer can run at full width.
+    planes: Matrix,
     /// dim × (l*k) transpose of `planes` — the CSC layout the fused
     /// `codes_all` sweep walks sequentially (per input dimension, all L·K
-    /// plane coefficients are contiguous).
-    planes_t: Vec<f32>,
+    /// plane coefficients are contiguous), lane-padded like `planes`.
+    planes_t: Matrix,
     counters: Arc<HashCounters>,
+}
+
+/// Build the dim-major lane-padded transpose of a flat (l·k) × dim plane
+/// buffer — one loop shared by `new` and the snapshot restore path, so a
+/// restored family's memory layout is identical to the saved one's.
+fn transpose_planes(dim: usize, lk: usize, planes: &[f32]) -> Matrix {
+    let mut t = Matrix::zeros(dim, lk);
+    for r in 0..lk {
+        for i in 0..dim {
+            t.set(i, r, planes[r * dim + i]);
+        }
+    }
+    t
 }
 
 impl DenseSrp {
@@ -140,24 +156,24 @@ impl DenseSrp {
             *v = rng.gaussian() as f32;
         }
         let lk = l * k;
-        let mut planes_t = vec![0.0f32; lk * dim];
-        for r in 0..lk {
-            for i in 0..dim {
-                planes_t[i * lk + r] = planes[r * dim + i];
-            }
-        }
+        let planes_t = transpose_planes(dim, lk, &planes);
+        let planes = Matrix::from_vec(lk, dim, planes).expect("lk*dim buffer");
         DenseSrp { dim, k, l, planes, planes_t, counters: Arc::default() }
     }
 
     #[inline]
     fn plane(&self, table: usize, bit: usize) -> &[f32] {
-        let r = table * self.k + bit;
-        &self.planes[r * self.dim..(r + 1) * self.dim]
+        self.planes.row(table * self.k + bit)
     }
 
-    /// Raw (L·K) × dim plane matrix — the snapshot payload.
-    pub(crate) fn planes_raw(&self) -> &[f32] {
-        &self.planes
+    /// Raw (L·K) × dim plane matrix, logical widths only — the snapshot
+    /// payload (the lane padding never reaches disk).
+    pub(crate) fn planes_raw(&self) -> Vec<f32> {
+        let mut flat = Vec::with_capacity(self.planes.rows() * self.dim);
+        for r in 0..self.planes.rows() {
+            flat.extend_from_slice(self.planes.row(r));
+        }
+        flat
     }
 
     /// Rebuild a family from snapshot parts. The dim-major transpose is
@@ -172,12 +188,8 @@ impl DenseSrp {
             )));
         }
         let lk = l * k;
-        let mut planes_t = vec![0.0f32; lk * dim];
-        for r in 0..lk {
-            for i in 0..dim {
-                planes_t[i * lk + r] = planes[r * dim + i];
-            }
-        }
+        let planes_t = transpose_planes(dim, lk, &planes);
+        let planes = Matrix::from_vec(lk, dim, planes).expect("length checked above");
         Ok(DenseSrp { dim, k, l, planes, planes_t, counters: Arc::default() })
     }
 }
@@ -221,7 +233,7 @@ impl SrpHasher for DenseSrp {
         let mut acc = vec![0.0f64; lk];
         for (i, &xi) in x.iter().enumerate() {
             let xi = xi as f64;
-            let col = &self.planes_t[i * lk..(i + 1) * lk];
+            let col = self.planes_t.row(i);
             for (a, &p) in acc.iter_mut().zip(col) {
                 *a += p as f64 * xi;
             }
@@ -321,7 +333,7 @@ impl CalibCurve {
         let lo = x.floor() as usize;
         let hi = (lo + 1).min(Self::BINS - 1);
         let w = x - lo as f64;
-        (self.bins[lo] * (1.0 - w) + self.bins[hi] * w).clamp(1e-9, 1.0 - 1e-9)
+        clamp_prob(self.bins[lo] * (1.0 - w) + self.bins[hi] * w)
     }
 }
 
@@ -628,8 +640,9 @@ impl SrpHasher for SparseSrp {
         if nx == 0.0 || nq == 0.0 {
             return 0.5;
         }
-        let cos = (crate::core::matrix::dot_fast(x, q) as f64 / (nx * nq)).clamp(-1.0, 1.0);
-        self.calib.eval(cos)
+        // same shared cosine helper as the angular default; only the law
+        // differs (calibrated curve instead of 1 − θ/π)
+        self.calib.eval(normed_cosine(dot_fast(x, q) as f64, nx, nq))
     }
 }
 

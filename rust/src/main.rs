@@ -37,7 +37,7 @@ lgd — LSH-sampled Stochastic Gradient Descent (paper reproduction)
 USAGE:
   lgd train --config <run.toml> [--out <dir>] [--shards <n>]
             [--rebalance-threshold <f>] [--sealed <true|false>]
-            [--async-workers <n>] [--queue-depth <n>]
+            [--async-workers <n>] [--queue-depth <n>] [--kernel <auto|scalar>]
             [--snapshot <file.lgdsnap>] [--autosave-epochs <n>] [--resume]
   lgd snapshot save --config <run.toml> --out <file.lgdsnap>
                [--shards <n>] [--sealed <true|false>]
@@ -83,7 +83,7 @@ fn run(argv: &[String]) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.allow(&[
         "config", "out", "shards", "rebalance-threshold", "sealed", "async-workers",
-        "queue-depth", "snapshot", "autosave-epochs", "resume",
+        "queue-depth", "kernel", "snapshot", "autosave-epochs", "resume",
     ])?;
     let cfg_path = args.require("config")?;
     let doc = TomlDoc::load(std::path::Path::new(&cfg_path))?;
@@ -113,6 +113,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     if !args.str_or("queue-depth", "").is_empty() {
         cfg.lsh.queue_depth = args.usize_or("queue-depth", 1024)?;
         cfg.validate()?;
+    }
+    // --kernel A/Bs the aligned-numerics dispatch (bitwise-invisible; see
+    // docs/numerics.md).
+    let kernel = args.str_or("kernel", "");
+    if !kernel.is_empty() {
+        cfg.lsh.kernel = lgd::core::numerics::KernelMode::from_name(&kernel)
+            .ok_or_else(|| Error::Config(format!("unknown kernel '{kernel}' (auto|scalar)")))?;
     }
     // --snapshot / --autosave-epochs / --resume override the [store] block
     // (persistence + warm start).

@@ -3,7 +3,7 @@
 //! Gradient `∇f = 2(θ·x − y)·x`, with norm `2|θ·x − y|·‖x‖` — the absolute-
 //! inner-product form of eq. 4 that LGD's hash space targets.
 
-use crate::core::matrix::{dot_f64, norm2};
+use crate::core::matrix::{dot_f64, norm2, scale_into};
 use crate::model::Model;
 
 /// Least-squares model (no regularisation — matching the paper's "plain"
@@ -22,10 +22,7 @@ impl Model for LinReg {
     fn grad(&self, x: &[f32], y: f32, theta: &[f32], out: &mut [f32]) {
         debug_assert_eq!(x.len(), out.len());
         let r = (dot_f64(x, theta) - y as f64) as f32;
-        let c = 2.0 * r;
-        for i in 0..x.len() {
-            out[i] = c * x[i];
-        }
+        scale_into(2.0 * r, x, out);
     }
 
     #[inline]

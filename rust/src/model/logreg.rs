@@ -2,7 +2,7 @@
 //! `f(x, θ) = ln(1 + e^{−y·θ·x})`, `∇f = −y·x·σ(−y·θ·x)`,
 //! `‖∇f‖ = ‖x‖ / (e^{y·θ·x} + 1)` (paper eq. 11).
 
-use crate::core::matrix::{dot_f64, norm2};
+use crate::core::matrix::{dot_f64, norm2, scale_into};
 use crate::model::Model;
 
 /// Binary logistic regression model.
@@ -32,10 +32,7 @@ impl Model for LogReg {
         let m = y as f64 * dot_f64(x, theta);
         // σ(−m) = 1/(1+e^m)
         let s = (1.0 / (1.0 + m.exp())) as f32;
-        let c = -y * s;
-        for i in 0..x.len() {
-            out[i] = c * x[i];
-        }
+        scale_into(-y * s, x, out);
     }
 
     #[inline]

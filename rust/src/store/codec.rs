@@ -102,11 +102,18 @@ impl Writer {
         }
     }
 
-    /// Row-major matrix: rows, cols, then the flat f32 buffer.
+    /// Row-major matrix: rows, cols, then the flat f32 buffer at *logical*
+    /// widths — the in-memory lane padding never reaches disk, so these
+    /// bytes are identical to what pre-aligned-layout versions wrote.
     pub fn matrix(&mut self, m: &Matrix) {
         self.u64(m.rows() as u64);
         self.u64(m.cols() as u64);
-        self.f32s(m.as_slice());
+        self.u64((m.rows() * m.cols()) as u64);
+        for r in 0..m.rows() {
+            for &x in m.row(r) {
+                self.f32(x);
+            }
+        }
     }
 }
 
@@ -274,6 +281,36 @@ mod tests {
         assert_eq!(r.f64s().unwrap(), vec![3.141592653589793]);
         assert_eq!(r.matrix().unwrap(), m);
         r.expect_end("test").unwrap();
+    }
+
+    #[test]
+    fn matrix_wire_format_is_unchanged_by_aligned_storage() {
+        // Hand-build the bytes a pre-aligned-layout writer emitted:
+        // u64 rows, u64 cols, then a length-prefixed flat f32 buffer. A
+        // ragged width (21 = LANES + 5) forces in-memory padding.
+        let (rows, cols) = (3usize, 21usize);
+        let flat: Vec<f32> = (0..rows * cols).map(|i| (i as f32 - 31.5) * 0.25).collect();
+        let mut legacy = Vec::new();
+        legacy.extend_from_slice(&(rows as u64).to_le_bytes());
+        legacy.extend_from_slice(&(cols as u64).to_le_bytes());
+        legacy.extend_from_slice(&((rows * cols) as u64).to_le_bytes());
+        for &x in &flat {
+            legacy.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+
+        // Today's writer must emit the identical bytes (logical widths only)…
+        let m = Matrix::from_vec(rows, cols, flat).unwrap();
+        let mut w = Writer::new();
+        w.matrix(&m);
+        assert_eq!(w.into_bytes(), legacy, "matrix wire format drifted");
+
+        // …and a legacy (PR-5-era) payload must load into the aligned
+        // layout with the zero-tail invariant intact.
+        let mut r = Reader::new(&legacy);
+        let loaded = r.matrix().unwrap();
+        r.expect_end("legacy matrix").unwrap();
+        assert_eq!(loaded, m);
+        assert!(loaded.zero_tail_ok(), "snapshot load must re-establish zero tails");
     }
 
     #[test]

@@ -64,7 +64,7 @@ impl SnapshotHasher for DenseSrp {
         w.u64(self.dim() as u64);
         w.u32(self.k() as u32);
         w.u32(self.l() as u32);
-        w.f32s(self.planes_raw());
+        w.f32s(&self.planes_raw());
     }
 }
 
