@@ -3,6 +3,8 @@
 //! mini-BERT step — quantifying the L3↔runtime boundary. Skips cleanly if
 //! artifacts are missing (`make artifacts`).
 
+use std::sync::Arc;
+
 use lgd::benchkit::{bb, Bench};
 use lgd::coordinator::draw_engine::{run_session, DrawEngineConfig};
 use lgd::core::matrix::axpy;
@@ -13,7 +15,7 @@ use lgd::estimator::{GradientEstimator, ShardedLgdEstimator, WeightedDraw};
 use lgd::lsh::srp::{DenseSrp, SrpHasher};
 use lgd::model::{LinReg, Model};
 use lgd::runtime::executor::{lit_f32, lit_i32};
-use lgd::runtime::{BertSession, Runtime};
+use lgd::runtime::{run_harness, BertSession, Runtime, ServingCore};
 
 /// Native sampling-engine runtime: single-structure vs sharded draw
 /// throughput, sealed CSR arena vs Vec buckets. Runs regardless of PJRT
@@ -186,6 +188,38 @@ fn bench_sharded_draws() {
         b.note("snapshot_save_ns_n20k", save_ns);
         b.note("snapshot_load_restore_ns_n20k", load_ns);
         let _ = std::fs::remove_file(&path);
+    }
+
+    // --- Concurrent serving (`runtime::serving`): aggregate draws/sec of
+    // one shared-read core vs client count. Every client is a pipelined
+    // session with its own RNG stream and draw queue against the same
+    // published generation, so this charts read-scaling, not lock
+    // contention. Throughput names are advisory by class (`per_sec`);
+    // `stale_candidates_rejected` is a gated work counter pinned at 0 —
+    // a session's producer samples from the very generation its consumer
+    // checks against, so any nonzero value is a real serving bug.
+    {
+        let pre = Arc::new(pre);
+        let core = ServingCore::build(
+            Arc::clone(&pre),
+            DenseSrp::new(hd, 5, 25, 35),
+            LgdOptions::default(),
+            4,
+        )
+        .unwrap();
+        let m = 32usize;
+        let batches = if std::env::var("LGD_BENCH_FAST").is_ok() { 50 } else { 400 };
+        let mut stale_total = 0u64;
+        for &clients in &[1usize, 2, 4, 8] {
+            let rep = run_harness(&core, clients, batches, m, &theta, 37).unwrap();
+            b.record(
+                &format!("serve_batch_b32_clients{clients}"),
+                rep.wall_secs * 1e9 / (clients * batches) as f64,
+            );
+            b.note(&format!("draws_per_sec_clients{clients}"), rep.draws_per_sec);
+            stale_total += rep.stale_rejected;
+        }
+        b.note("stale_candidates_rejected", stale_total as f64);
     }
 
     b.report();

@@ -8,6 +8,6 @@ pub mod toml;
 pub use json::Json;
 pub use spec::{
     Backend, DataConfig, EstimatorKind, HasherKind, LshConfig, OptimizerKind, RunConfig,
-    TrainConfig,
+    ServeConfig, TrainConfig,
 };
 pub use toml::{TomlDoc, TomlValue};

@@ -254,6 +254,29 @@ impl StoreConfig {
     }
 }
 
+/// Concurrent-serving block of a run config (`runtime::serving` — the
+/// epoch-based shared-read engine behind `lgd serve`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Concurrent client sessions the harness drives (each gets its own
+    /// forked RNG stream, query-code buffers and draw queue; all share one
+    /// immutable published generation).
+    pub clients: usize,
+    /// Draws per request batch.
+    pub batch: usize,
+    /// Request batches each client issues.
+    pub requests: usize,
+    /// TCP listen address (`host:port`) for the length-prefixed wire front.
+    /// Empty = in-process harness only (the default; nothing listens).
+    pub addr: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { clients: 4, batch: 32, requests: 200, addr: String::new() }
+    }
+}
+
 /// A full run configuration.
 #[derive(Debug, Clone, Default)]
 pub struct RunConfig {
@@ -267,6 +290,8 @@ pub struct RunConfig {
     pub train: TrainConfig,
     /// Snapshot persistence.
     pub store: StoreConfig,
+    /// Concurrent serving (`lgd serve`).
+    pub serve: ServeConfig,
     /// Output directory for result CSVs.
     pub out_dir: PathBuf,
 }
@@ -366,6 +391,12 @@ impl RunConfig {
         cfg.store.autosave_epochs =
             doc.int_or("store", "autosave_epochs", cfg.store.autosave_epochs as i64)? as usize;
 
+        // [serve]
+        cfg.serve.clients = doc.int_or("serve", "clients", cfg.serve.clients as i64)? as usize;
+        cfg.serve.batch = doc.int_or("serve", "batch", cfg.serve.batch as i64)? as usize;
+        cfg.serve.requests = doc.int_or("serve", "requests", cfg.serve.requests as i64)? as usize;
+        cfg.serve.addr = doc.str_or("serve", "addr", &cfg.serve.addr)?;
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -442,6 +473,27 @@ impl RunConfig {
                     .into(),
             ));
         }
+        if self.serve.clients == 0 || self.serve.clients > 1024 {
+            return Err(Error::Config(format!(
+                "serve.clients = {} out of 1..=1024",
+                self.serve.clients
+            )));
+        }
+        if self.serve.batch == 0 || self.serve.batch > (1 << 16) {
+            return Err(Error::Config(format!(
+                "serve.batch = {} out of 1..=2^16",
+                self.serve.batch
+            )));
+        }
+        if self.serve.requests == 0 {
+            return Err(Error::Config("serve.requests must be positive".into()));
+        }
+        if !self.serve.addr.is_empty() && !self.serve.addr.contains(':') {
+            return Err(Error::Config(format!(
+                "serve.addr = '{}' is not a host:port listen address",
+                self.serve.addr
+            )));
+        }
         Ok(())
     }
 }
@@ -471,6 +523,33 @@ mod tests {
         assert_eq!(cfg.store.autosave_epochs, 0);
         assert!(!cfg.store.resume);
         assert!(!cfg.store.is_active());
+        assert_eq!(cfg.serve.clients, 4);
+        assert_eq!(cfg.serve.batch, 32);
+        assert_eq!(cfg.serve.requests, 200);
+        assert!(cfg.serve.addr.is_empty(), "no TCP front unless asked");
+    }
+
+    #[test]
+    fn serve_block_parses_and_validates() {
+        let doc = TomlDoc::parse(
+            "[serve]\nclients = 8\nbatch = 64\nrequests = 50\naddr = \"127.0.0.1:7979\"\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.serve.clients, 8);
+        assert_eq!(cfg.serve.batch, 64);
+        assert_eq!(cfg.serve.requests, 50);
+        assert_eq!(cfg.serve.addr, "127.0.0.1:7979");
+        for bad in [
+            "[serve]\nclients = 0",
+            "[serve]\nclients = 2000",
+            "[serve]\nbatch = 0",
+            "[serve]\nrequests = 0",
+            "[serve]\naddr = \"nocolon\"",
+        ] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(RunConfig::from_toml(&doc).is_err(), "accepted bad config: {bad}");
+        }
     }
 
     #[test]

@@ -42,7 +42,7 @@
 //! the borrow checker.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread;
 
 use crate::coordinator::pipeline::ShardSet;
@@ -71,11 +71,21 @@ pub struct DrawEngineConfig {
     /// candidate queue holds at most this many candidates, and at most
     /// `max(1, queue_depth / m)` assembled batches wait for the consumer.
     pub queue_depth: usize,
+    /// Fault injection (tests only): the per-shard sampler worker for this
+    /// shard panics while holding its queue mutex, exercising the poison
+    /// recovery + clean-session-error path end-to-end.
+    #[cfg(test)]
+    pub(crate) fail_worker: Option<usize>,
 }
 
 impl Default for DrawEngineConfig {
     fn default() -> Self {
-        DrawEngineConfig { workers: 1, queue_depth: 1024 }
+        DrawEngineConfig {
+            workers: 1,
+            queue_depth: 1024,
+            #[cfg(test)]
+            fail_worker: None,
+        }
     }
 }
 
@@ -104,10 +114,27 @@ pub struct SessionReport {
 /// Bounded MPSC ring buffer on `Mutex` + `Condvar` — the zero-dep draw
 /// queue of the engine. Blocking `push`/`pop` with close semantics, plus
 /// hit/stall counters on the pop side (did the consumer wait?).
+///
+/// **Poison recovery.** Every lock/wait site recovers from
+/// [`PoisonError`] instead of unwrapping: the ring state is a plain
+/// `VecDeque` plus counters — no operation leaves it mid-update across a
+/// panic point — so a producer or consumer that dies while holding the
+/// mutex must not convert an isolated thread failure into a panic cascade
+/// through every other session thread. The dead thread's `CloseGuard`
+/// closes the queue during unwind and [`run_session`] surfaces a clean
+/// [`Error::Pipeline`] from the join instead.
 pub struct DrawQueue<T> {
     inner: Mutex<QueueState<T>>,
     not_empty: Condvar,
     not_full: Condvar,
+}
+
+/// Lock `m`, treating a poisoned mutex as live: the protected queue state
+/// is always structurally valid (see [`DrawQueue`] docs), so the poison
+/// flag carries no information the close/join protocol doesn't already
+/// deliver.
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 struct QueueState<T> {
@@ -137,9 +164,9 @@ impl<T> DrawQueue<T> {
 
     /// Blocking push. Returns false (dropping `v`) if the queue is closed.
     pub fn push(&self, v: T) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = plock(&self.inner);
         while g.buf.len() >= g.cap && !g.closed {
-            g = self.not_full.wait(g).unwrap();
+            g = self.not_full.wait(g).unwrap_or_else(PoisonError::into_inner);
         }
         if g.closed {
             return false;
@@ -154,7 +181,7 @@ impl<T> DrawQueue<T> {
     /// drained. Counts a prefetch hit when an item was already waiting and
     /// a stall when this call had to block first.
     pub fn pop(&self) -> Option<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = plock(&self.inner);
         let mut waited = false;
         loop {
             if let Some(v) = g.buf.pop_front() {
@@ -171,14 +198,14 @@ impl<T> DrawQueue<T> {
                 return None;
             }
             waited = true;
-            g = self.not_empty.wait(g).unwrap();
+            g = self.not_empty.wait(g).unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     /// Close the queue: producers' `push` returns false, consumers drain
     /// the buffer then get `None`. Idempotent.
     pub fn close(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = plock(&self.inner);
         g.closed = true;
         drop(g);
         self.not_empty.notify_all();
@@ -187,7 +214,7 @@ impl<T> DrawQueue<T> {
 
     /// Items currently buffered.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().buf.len()
+        plock(&self.inner).buf.len()
     }
 
     /// True when nothing is buffered.
@@ -197,7 +224,7 @@ impl<T> DrawQueue<T> {
 
     /// (prefetch hits, stalls) observed on the pop side so far.
     pub fn counters(&self) -> (u64, u64) {
-        let g = self.inner.lock().unwrap();
+        let g = plock(&self.inner);
         (g.hits, g.stalls)
     }
 }
@@ -408,6 +435,8 @@ where
         let cand_qs: Vec<DrawQueue<Candidate>> =
             (0..shard_count).map(|_| DrawQueue::new(cand_cap)).collect();
         let cand_qs = &cand_qs;
+        #[cfg(test)]
+        let fail_worker = cfg.fail_worker;
         let (mixer_res, worker_res, consumed) = thread::scope(|scope| {
             let bq = &batch_q;
             let mut workers = Vec::new();
@@ -417,6 +446,8 @@ where
                 }
                 workers.push(scope.spawn(move || {
                     let _guard = CloseGuard(&cand_qs[s]);
+                    #[cfg(test)]
+                    inject_worker_failure(fail_worker, s, &cand_qs[s]);
                     let sampler = shard_sampler(set.shard(s), opts);
                     // Per-shard RNG stream derived from (session, shard):
                     // candidate streams — and therefore the assembled
@@ -507,6 +538,17 @@ where
     Ok(SessionReport { prefetch_hits: hits, queue_stalls: stalls, generation: gen, ..report })
 }
 
+/// Test-only fault injection: kill shard worker `s` *while holding its
+/// queue mutex*, so the mutex is genuinely poisoned — the recovery path
+/// under test is the real one, not a simulation.
+#[cfg(test)]
+fn inject_worker_failure(fail: Option<usize>, s: usize, q: &DrawQueue<Candidate>) {
+    if fail == Some(s) {
+        let _poisoner = q.inner.lock();
+        panic!("draw-engine test: injected shard-worker failure");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -567,7 +609,7 @@ mod tests {
     fn zero_workers_is_rejected() {
         let pre = setup(60, 6, 7);
         let mut est = mk(&pre, 2);
-        let cfg = DrawEngineConfig { workers: 0, queue_depth: 8 };
+        let cfg = DrawEngineConfig { workers: 0, queue_depth: 8, ..Default::default() };
         assert!(run_session(&mut est, &cfg, &[0.1; 6], 8, 2, |_, _| true).is_err());
     }
 
@@ -589,7 +631,7 @@ mod tests {
             sync.draw_batch(&theta, m, &mut out);
             want.extend(out.iter().copied());
         }
-        let cfg = DrawEngineConfig { workers: 1, queue_depth: 64 };
+        let cfg = DrawEngineConfig { workers: 1, queue_depth: 64, ..Default::default() };
         let rep = run_session(&mut async_, &cfg, &theta, m, steps, |_, draws| {
             got.extend(draws.iter().copied());
             true
@@ -629,7 +671,7 @@ mod tests {
         let run = |workers: usize| {
             let mut est = mk(&pre, 3);
             let mut got = Vec::new();
-            let cfg = DrawEngineConfig { workers, queue_depth: 64 };
+            let cfg = DrawEngineConfig { workers, queue_depth: 64, ..Default::default() };
             let rep = run_session(&mut est, &cfg, &theta, m, steps, |_, draws| {
                 got.extend(draws.iter().copied());
                 true
@@ -664,7 +706,7 @@ mod tests {
             let pre = setup(150, 8, 59);
             let mut est = mk(&pre, 3);
             let theta = vec![0.04f32; 8];
-            let cfg = DrawEngineConfig { workers, queue_depth: 32 };
+            let cfg = DrawEngineConfig { workers, queue_depth: 32, ..Default::default() };
             let g0 = est.shard_set().generation();
             run_session(&mut est, &cfg, &theta, 16, 4, |_, draws| {
                 assert!(draws.iter().all(|d| d.index < 150));
@@ -701,7 +743,7 @@ mod tests {
             assert!(est.remove(id).unwrap());
         }
         for workers in [1usize, 2] {
-            let cfg = DrawEngineConfig { workers, queue_depth: 16 };
+            let cfg = DrawEngineConfig { workers, queue_depth: 16, ..Default::default() };
             let before = est.stats().fallbacks;
             let rep = run_session(&mut est, &cfg, &[0.1; 6], 8, 3, |_, draws| {
                 assert_eq!(draws.len(), 8);
@@ -721,9 +763,73 @@ mod tests {
         let pre = setup(120, 6, 83);
         for workers in [1usize, 3] {
             let mut est = mk(&pre, 3);
-            let cfg = DrawEngineConfig { workers, queue_depth: 16 };
+            let cfg = DrawEngineConfig { workers, queue_depth: 16, ..Default::default() };
             let rep = run_session(&mut est, &cfg, &[0.05; 6], 8, 100, |step, _| step < 2).unwrap();
             assert_eq!(rep.batches, 3, "steps 0,1 continue, step 2 stops");
         }
+    }
+
+    /// A thread dying while it holds the queue mutex poisons it; every
+    /// queue operation must recover (the ring state is plain data, always
+    /// valid) instead of cascading the panic into other threads.
+    #[test]
+    fn poisoned_queue_recovers_on_every_operation() {
+        let q: DrawQueue<u32> = DrawQueue::new(4);
+        assert!(q.push(1));
+        let died = thread::scope(|scope| {
+            scope
+                .spawn(|| {
+                    let _held = q.inner.lock().unwrap();
+                    panic!("die holding the queue mutex");
+                })
+                .join()
+        });
+        assert!(died.is_err(), "the poisoning thread must have panicked");
+        assert!(q.inner.is_poisoned(), "setup failed: mutex not poisoned");
+        // all operations still work against the poisoned mutex
+        assert!(q.push(2));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        let (hits, stalls) = q.counters();
+        assert_eq!(hits + stalls, 2);
+        q.close();
+        assert!(!q.push(3));
+        assert_eq!(q.pop(), None);
+    }
+
+    /// The poisoning-cascade bugfix end-to-end: a shard worker killed
+    /// mid-session (while holding its queue mutex) must surface as a clean
+    /// `Error::Pipeline` from `run_session` — not a panic in the mixer or
+    /// the consumer — and the estimator must keep serving synchronous
+    /// draws afterwards.
+    #[test]
+    fn killed_worker_yields_clean_session_error_and_sync_draws_survive() {
+        let pre = setup(150, 8, 91);
+        let mut est = mk(&pre, 3);
+        let theta = vec![0.04f32; 8];
+        let cfg = DrawEngineConfig { workers: 3, queue_depth: 16, fail_worker: Some(1) };
+        let mut consumed = 0usize;
+        let res = run_session(&mut est, &cfg, &theta, 16, 5, |_, draws| {
+            assert_eq!(draws.len(), 16, "batches stay whole even with a dead worker");
+            consumed += 1;
+            true
+        });
+        match res {
+            Err(Error::Pipeline(msg)) => {
+                assert!(msg.contains("shard worker"), "unexpected error: {msg}")
+            }
+            other => panic!("expected a clean pipeline error, got {other:?}"),
+        }
+        assert_eq!(consumed, 5, "the dead shard degrades to fallbacks, not a hang");
+        // the estimator is intact: synchronous draws continue to work
+        let mut out = Vec::new();
+        est.draw_batch(&theta, 16, &mut out);
+        assert_eq!(out.len(), 16);
+        assert!(out.iter().all(|d| d.index < 150 && d.prob > 0.0));
+        // and a fresh (uninjected) session also works
+        let cfg = DrawEngineConfig { workers: 3, queue_depth: 16, ..Default::default() };
+        let rep = run_session(&mut est, &cfg, &theta, 16, 3, |_, _| true).unwrap();
+        assert_eq!(rep.batches, 3);
     }
 }

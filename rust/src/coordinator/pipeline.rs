@@ -240,6 +240,7 @@ where
 /// over them. Row ids index the *virtual* stored matrix `[base; −base]`:
 /// id `i < n` is `base.row(i)`, id `i + n` is its negation (mirrored
 /// storage) — matching `LgdEstimator`'s stored-row layout.
+#[derive(Clone)]
 pub struct ShardTables<H: SrpHasher> {
     /// Virtual stored-row id of each local row (local row j ↔ rows\[j\]).
     pub rows: Vec<u32>,
@@ -533,6 +534,12 @@ pub struct ShardSetStats {
 /// (`R_s`, `R = Σ R_s`) are recomputed after every mutation, so the
 /// shard-mixture proposal `p = (R_s/R)·p_shard` stays exact and Theorem-1
 /// unbiasedness holds at every point of the stream.
+///
+/// `Clone` (requiring `H: Clone`) deep-copies the whole set — tables,
+/// stored rows, membership indexes and the generation counter — which is
+/// what [`crate::runtime::serving`] builds generation `g+1` from while
+/// readers keep serving the published `g`.
+#[derive(Clone)]
 pub struct ShardSet<H: SrpHasher> {
     shards: Vec<ShardTables<H>>,
     /// Base-row count of the backing matrix; example ids live in `[0, n)`.

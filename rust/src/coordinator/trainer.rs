@@ -640,8 +640,11 @@ fn run_lgd<H: SnapshotHasher + Clone>(
     let mut ctx = LoopCtx::new(cfg, pre, src, tstate.as_ref())?;
     let shard_build_secs = est.build_report().per_shard_secs.clone();
     let asynchronous = cfg.lsh.async_workers > 0;
-    let engine =
-        DrawEngineConfig { workers: cfg.lsh.async_workers, queue_depth: cfg.lsh.queue_depth };
+    let engine = DrawEngineConfig {
+        workers: cfg.lsh.async_workers,
+        queue_depth: cfg.lsh.queue_depth,
+        ..Default::default()
+    };
     let start_epoch = tstate.as_ref().map(|t| t.epochs_done as usize).unwrap_or(0);
 
     // The table build (or snapshot restore) counts as wall-clock spent

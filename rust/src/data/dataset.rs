@@ -60,16 +60,26 @@ impl Dataset {
     }
 
     /// Split into (train, test) by shuffled indices; `train_frac` in (0,1).
+    /// Both sides are guaranteed non-empty, so datasets with fewer than two
+    /// examples are rejected here — a silent 1/0 "split" would train on
+    /// everything and report test loss over nothing.
     pub fn split(&self, train_frac: f64, seed: u64) -> Result<(Dataset, Dataset)> {
         if !(0.0..1.0).contains(&train_frac) || train_frac == 0.0 {
             return Err(Error::Data(format!("bad train fraction {train_frac}")));
         }
         let n = self.len();
+        if n < 2 {
+            return Err(Error::Data(format!(
+                "dataset '{}' has {n} example(s) — at least 2 are needed for a \
+                 non-empty train/test split",
+                self.name
+            )));
+        }
         let mut idx: Vec<usize> = (0..n).collect();
         let mut rng = Pcg64::new(seed, 0x53504c54); // "SPLT"
         rng.shuffle(&mut idx);
         let n_train = ((n as f64) * train_frac).round() as usize;
-        let n_train = n_train.clamp(1, n.saturating_sub(1).max(1));
+        let n_train = n_train.clamp(1, n - 1);
         let take = |ids: &[usize], tag: &str| -> Result<Dataset> {
             let mut x = Matrix::zeros(0, 0);
             let mut y = Vec::with_capacity(ids.len());
@@ -138,6 +148,28 @@ mod tests {
         let (c, _) = ds.split(0.5, 2).unwrap();
         assert_eq!(a.y, b.y);
         assert_ne!(a.y, c.y);
+    }
+
+    /// The degenerate-split boundary: n = 0 and n = 1 cannot yield two
+    /// non-empty sides and must error loudly (the old clamp silently
+    /// "split" a singleton into train = everything, test = nothing); n = 2
+    /// is the smallest legal dataset and always splits 1/1 regardless of
+    /// the fraction.
+    #[test]
+    fn split_rejects_too_small_datasets() {
+        for n in [0usize, 1] {
+            let ds = toy(n, 2);
+            let err = ds.split(0.8, 1);
+            assert!(err.is_err(), "n = {n} must not split");
+        }
+        let ds = toy(2, 2);
+        for frac in [0.1, 0.5, 0.9] {
+            let (tr, te) = ds.split(frac, 1).unwrap();
+            assert_eq!((tr.len(), te.len()), (1, 1), "n = 2 at frac {frac}");
+        }
+        // fraction validation is unchanged
+        assert!(toy(10, 2).split(0.0, 1).is_err());
+        assert!(toy(10, 2).split(1.0, 1).is_err());
     }
 
     #[test]

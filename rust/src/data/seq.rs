@@ -8,6 +8,7 @@
 //! a real learnable signal to the mini transformer while matching the
 //! GLUE tasks' size (§Table 4: MRPC 3.7k / RTE 2.5k training pairs).
 
+use crate::core::error::{Error, Result};
 use crate::core::rng::{Pcg64, Rng};
 
 /// Reserved token ids.
@@ -159,14 +160,27 @@ impl SeqDataset {
         &self.ids[i * self.max_t..(i + 1) * self.max_t]
     }
 
-    /// Split indices into (train, test).
-    pub fn split(&self, train_frac: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
-        let mut idx: Vec<usize> = (0..self.len()).collect();
+    /// Split indices into (train, test). Both sides are guaranteed
+    /// non-empty; datasets with fewer than two examples are rejected
+    /// (mirroring [`crate::data::Dataset::split`]) instead of silently
+    /// producing an empty test side.
+    pub fn split(&self, train_frac: f64, seed: u64) -> Result<(Vec<usize>, Vec<usize>)> {
+        if !(0.0..1.0).contains(&train_frac) || train_frac == 0.0 {
+            return Err(Error::Data(format!("bad train fraction {train_frac}")));
+        }
+        let n = self.len();
+        if n < 2 {
+            return Err(Error::Data(format!(
+                "sequence dataset has {n} example(s) — at least 2 are needed for a \
+                 non-empty train/test split"
+            )));
+        }
+        let mut idx: Vec<usize> = (0..n).collect();
         let mut rng = Pcg64::new(seed, 0x53505456);
         rng.shuffle(&mut idx);
-        let k = ((self.len() as f64) * train_frac).round() as usize;
-        let k = k.clamp(1, self.len().saturating_sub(1).max(1));
-        (idx[..k].to_vec(), idx[k..].to_vec())
+        let k = ((n as f64) * train_frac).round() as usize;
+        let k = k.clamp(1, n - 1);
+        Ok((idx[..k].to_vec(), idx[k..].to_vec()))
     }
 }
 
@@ -230,10 +244,32 @@ mod tests {
     #[test]
     fn split_partitions() {
         let ds = SeqSpec::mrpc_like(0.1, 128, 16, 9).generate();
-        let (tr, te) = ds.split(0.8, 1);
+        let (tr, te) = ds.split(0.8, 1).unwrap();
         assert_eq!(tr.len() + te.len(), ds.len());
         let mut all: Vec<usize> = tr.iter().chain(te.iter()).copied().collect();
         all.sort_unstable();
         assert_eq!(all, (0..ds.len()).collect::<Vec<_>>());
+    }
+
+    /// n ∈ {0, 1} must error (no silent empty test side); n = 2 splits 1/1
+    /// at every fraction — the same boundary contract as `Dataset::split`.
+    #[test]
+    fn split_rejects_too_small_datasets() {
+        let mk = |n: usize| SeqDataset {
+            ids: vec![CLS; n * 4],
+            labels: vec![0; n],
+            max_t: 4,
+            vocab: 8,
+            name: "tiny".into(),
+        };
+        for n in [0usize, 1] {
+            assert!(mk(n).split(0.8, 1).is_err(), "n = {n} must not split");
+        }
+        for frac in [0.1, 0.5, 0.9] {
+            let (tr, te) = mk(2).split(frac, 1).unwrap();
+            assert_eq!((tr.len(), te.len()), (1, 1), "n = 2 at frac {frac}");
+        }
+        assert!(mk(10).split(0.0, 1).is_err());
+        assert!(mk(10).split(1.0, 1).is_err());
     }
 }

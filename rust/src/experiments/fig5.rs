@@ -247,7 +247,7 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
     ];
     for spec in tasks {
         let ds = spec.generate();
-        let (tr, te) = ds.split(0.9, opts.seed);
+        let (tr, te) = ds.split(0.9, opts.seed)?;
         for use_lgd in [true, false] {
             let evals = finetune(
                 &mut rt,

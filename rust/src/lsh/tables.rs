@@ -21,6 +21,7 @@ use crate::lsh::srp::SrpHasher;
 /// `non_empty()` is O(1) and bucket iteration — hence [`TableStats`] — is
 /// O(non-empty) instead of O(2^K) per call, cheap enough to sample inside
 /// the training loop.
+#[derive(Clone)]
 enum Buckets {
     Dense {
         slots: Vec<Vec<u32>>,
@@ -238,6 +239,7 @@ pub trait BucketRead: Send + Sync {
 }
 
 /// L hash tables over point ids.
+#[derive(Clone)]
 pub struct LshTables<H: SrpHasher> {
     hasher: H,
     /// tables[t] : code -> point ids
@@ -437,6 +439,7 @@ impl<H: SrpHasher> BucketRead for LshTables<H> {
 /// the Vec layout under any mutation sequence — the draw-for-draw
 /// guarantee. Invariant: a code with overlay entries has a full arena slot
 /// (or none), because inserts prefer arena slack.
+#[derive(Clone)]
 struct SealedTable {
     /// code → slot for K ≤ 12 (u32::MAX = no slot); empty when the
     /// binary-searched `codes` index is used instead.
@@ -626,6 +629,7 @@ impl SealedTable {
 /// with a delta overlay absorbing live mutation (see [`SealedTable`]).
 /// Produced by [`LshTables::seal`]; [`Self::compact`] folds the overlay
 /// back into a fresh arena (the shard set calls it after rebalancing).
+#[derive(Clone)]
 pub struct SealedTables<H: SrpHasher> {
     hasher: H,
     tables: Vec<SealedTable>,
@@ -874,6 +878,9 @@ impl SealedTable {
 /// Either table layout behind one API — the field type of
 /// [`crate::coordinator::pipeline::ShardTables`] and the estimators, so the
 /// `lsh.sealed` knob can swap layouts without touching the draw logic.
+/// `Clone` (requiring `H: Clone`, like every hash family) supports the
+/// copy-on-write generation flips of [`crate::runtime::serving`].
+#[derive(Clone)]
 pub enum TableStore<H: SrpHasher> {
     /// Vec-of-Vec buckets — the mutable build layout.
     Vec(LshTables<H>),

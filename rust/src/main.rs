@@ -9,18 +9,24 @@
 //! * `experiments --id <table4|fig9|fig10|fig11|fig12|fig13|variance|sampling|fig5|all>`
 //!   — regenerate a paper table/figure series into `results/`.
 //! * `gen-data --name <spec> --out file.csv` — dump a synthetic dataset.
+//! * `serve` — build the index once and serve it concurrently: the
+//!   in-process N-client harness reports draws/sec vs client count, and
+//!   `--addr host:port` additionally exposes the length-prefixed TCP
+//!   front (`runtime::serving`).
 //! * `runtime-smoke` — load an AOT artifact, execute it, cross-check
 //!   against the native Rust gradient (three-layer health check).
 //! * `help` — this text.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
 use std::time::Instant;
 
 use lgd::cli::Args;
 use lgd::config::spec::{Backend, RunConfig};
 use lgd::config::toml::TomlDoc;
 use lgd::coordinator::trainer::{
-    build_sharded_estimator, train, train_resumed, GradSource,
+    build_sharded_estimator, lgd_options, train, train_resumed, GradSource,
 };
 use lgd::core::error::{Error, Result};
 use lgd::data::csv::CsvWriter;
@@ -28,7 +34,7 @@ use lgd::data::preprocess::{preprocess, PreprocessOptions, Preprocessed};
 use lgd::estimator::GradientEstimator;
 use lgd::experiments::ExpOptions;
 use lgd::lsh::{AnyHasher, HasherVisitor};
-use lgd::runtime::Runtime;
+use lgd::runtime::{run_harness, serve_tcp, Runtime, ServingCore};
 use lgd::store::snapshot::{self, LoadedSnapshot, SnapshotHasher};
 
 const USAGE: &str = "\
@@ -47,6 +53,8 @@ USAGE:
                   [--scale <f>] [--out <dir>] [--seed <n>] [--quick] [--artifacts <dir>]
   lgd gen-data --name <yearmsd-like|slice-like|ujiindoor-like|pareto|uniform>
                --out <file.csv> [--scale <f>] [--seed <n>]
+  lgd serve [--config <run.toml>] [--clients <n>] [--batch <m>] [--requests <n>]
+            [--addr <host:port>] [--shards <n>] [--sealed <true|false>]
   lgd runtime-smoke [--artifacts <dir>]
   lgd help
 ";
@@ -71,6 +79,7 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "experiments" => cmd_experiments(&args),
         "gen-data" => cmd_gen_data(&args),
+        "serve" => cmd_serve(&args),
         "runtime-smoke" => cmd_runtime_smoke(&args),
         "" | "help" => {
             print!("{USAGE}");
@@ -448,6 +457,106 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
     w.flush()?;
     println!("wrote {} rows x {} cols to {}", ds.len(), ds.dim() + 1, out.display());
     Ok(())
+}
+
+/// Build the serving core a config describes and drive the in-process
+/// N-client harness (plus the TCP wire front when `serve.addr` is set).
+/// The visitor monomorphizes over the configured hash family, like the
+/// snapshot-save path.
+struct ServeRun<'a> {
+    cfg: &'a RunConfig,
+    pre: Arc<Preprocessed>,
+}
+
+impl<'a> HasherVisitor for ServeRun<'a> {
+    type Out = Result<()>;
+
+    fn visit<H>(self, hasher: H) -> Self::Out
+    where
+        H: SnapshotHasher + Clone + 'static,
+    {
+        let cfg = self.cfg;
+        let t0 = Instant::now();
+        let core =
+            ServingCore::build(Arc::clone(&self.pre), hasher, lgd_options(cfg), cfg.lsh.shards)?;
+        println!(
+            "serving core: {} examples x {} shard(s), {} layout, generation {}, \
+             built in {:.3}s",
+            self.pre.data.len(),
+            cfg.lsh.shards,
+            if cfg.lsh.sealed { "sealed" } else { "vec" },
+            core.generation(),
+            t0.elapsed().as_secs_f64()
+        );
+
+        // Scaling sweep: client counts {1, 2, 4, 8} up to the configured
+        // ceiling, always ending on serve.clients itself.
+        let theta = vec![0.0f32; self.pre.data.dim()];
+        let mut counts: Vec<usize> =
+            [1usize, 2, 4, 8].into_iter().filter(|&c| c < cfg.serve.clients).collect();
+        counts.push(cfg.serve.clients);
+        println!("{:>8} {:>12} {:>14} {:>12}", "clients", "draws", "draws/sec", "stale_rej");
+        for &c in &counts {
+            let rep = run_harness(
+                &core,
+                c,
+                cfg.serve.requests,
+                cfg.serve.batch,
+                &theta,
+                cfg.train.seed,
+            )?;
+            println!(
+                "{:>8} {:>12} {:>14.0} {:>12}",
+                rep.clients, rep.draws, rep.draws_per_sec, rep.stale_rejected
+            );
+        }
+
+        if !cfg.serve.addr.is_empty() {
+            let listener = std::net::TcpListener::bind(&cfg.serve.addr)
+                .map_err(|e| Error::Io(format!("bind {}: {e}", cfg.serve.addr)))?;
+            println!("listening on {} — kill the process to stop", cfg.serve.addr);
+            // The CLI front runs until the process is killed; the stop flag
+            // exists for embedders (tests flip it from another thread).
+            let stop = AtomicBool::new(false);
+            let served = serve_tcp(&core, listener, &stop)?;
+            println!("served {served} draws over TCP");
+        }
+        Ok(())
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.allow(&["config", "clients", "batch", "requests", "addr", "shards", "sealed"])?;
+    let mut cfg = match args.str_or("config", "").as_str() {
+        "" => RunConfig::default(),
+        path => RunConfig::from_toml(&TomlDoc::load(Path::new(path))?)?,
+    };
+    // Flag overrides for the [serve] block (and the shard/layout knobs the
+    // serving core inherits from [lsh]); out-of-range values are rejected
+    // by validation, not ignored.
+    if !args.str_or("clients", "").is_empty() {
+        cfg.serve.clients = args.usize_or("clients", 4)?;
+    }
+    if !args.str_or("batch", "").is_empty() {
+        cfg.serve.batch = args.usize_or("batch", 32)?;
+    }
+    if !args.str_or("requests", "").is_empty() {
+        cfg.serve.requests = args.usize_or("requests", 200)?;
+    }
+    if !args.str_or("addr", "").is_empty() {
+        cfg.serve.addr = args.str_or("addr", "");
+    }
+    if !args.str_or("shards", "").is_empty() {
+        cfg.lsh.shards = args.usize_or("shards", 1)?;
+    }
+    cfg.lsh.sealed = args.bool_or("sealed", cfg.lsh.sealed)?;
+    cfg.validate()?;
+
+    let ds = build_dataset(&cfg.data.name, cfg.data.scale, cfg.data.seed)?;
+    let (tr, _te) = ds.split(cfg.data.train_frac, cfg.data.seed)?;
+    let pre = Arc::new(preprocess(tr, &PreprocessOptions { center: cfg.lsh.center })?);
+    let hd = pre.hashed.cols();
+    AnyHasher::from_lsh_config(&cfg.lsh, hd).visit(ServeRun { cfg: &cfg, pre })
 }
 
 fn cmd_runtime_smoke(args: &Args) -> Result<()> {

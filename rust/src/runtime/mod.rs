@@ -1,16 +1,21 @@
-//! PJRT runtime bridge: manifest parsing, executable cache, and the
-//! model-specific sessions (linear models, mini-BERT) that execute the AOT
-//! HLO artifacts from the Rust hot path.
+//! Runtime layer: the PJRT bridge (manifest parsing, executable cache, and
+//! the model-specific sessions that execute the AOT HLO artifacts from the
+//! Rust hot path) plus the epoch-based concurrent serving engine.
 
 pub mod artifact;
 pub mod bert;
 pub mod executor;
 pub mod linear;
+pub mod serving;
 
 pub use artifact::{BertAbi, Dtype, EntrySpec, Manifest, TensorSpec};
 pub use bert::BertSession;
 pub use executor::{lit_f32, lit_i32, to_f32, to_vec_f32, to_vec_u32, Runtime};
 pub use linear::PjrtLinear;
+pub use serving::{
+    run_harness, serve_tcp, HarnessReport, ServeClient, ServeReport, ServingCore,
+    ServingCounters, ServingSession,
+};
 
 use std::path::PathBuf;
 

@@ -1,0 +1,1157 @@
+//! Epoch-based shared serving: many concurrent sessions draw from one
+//! immutable published generation of the sharded LGD index.
+//!
+//! [`ShardedLgdEstimator`](crate::estimator::ShardedLgdEstimator) owns its
+//! shard set exclusively — one borrow, one RNG, one draw stream. Serving
+//! wants the opposite shape: *N* clients sampling the same index at once.
+//! The split here is the classic read-copy-update arrangement:
+//!
+//! * [`ServingCore`] — the shared, read-only side: the preprocessed
+//!   dataset, the sampler options, and an `Arc`-published [`ShardSet`]
+//!   (stored rows, norms, sealed CSR arenas, hasher — all immutable after
+//!   publication). Readers never lock anything on the draw path.
+//! * [`ServingSession`] — the per-client side: its own fused query codes
+//!   (one `codes_all` sweep per batch), its own RNG stream, its own
+//!   [`SampleCost`](crate::lsh::sampler::SampleCost) counters, and — when
+//!   pipelined — its own [`DrawQueue`] and sampler thread. Sessions share
+//!   **no** mutable state, so N concurrent sessions are draw-for-draw
+//!   identical to the same N sessions run sequentially (tested here and in
+//!   the integration suite).
+//!
+//! **Generation flips.** Mutations (insert/remove/rebalance) never touch
+//! the published set. [`ServingCore::mutate`] takes the writer lock, deep-
+//! clones the current generation `g`, applies the mutation (the `ShardSet`
+//! mutators bump the PR-4 generation counter), and atomically publishes
+//! `g+1`. Sessions pinned to `g` keep draining their own `Arc` — every row
+//! in it is live *for g*, so no session can ever serve a row that was dead
+//! in its pinned generation. A session picks up `g+1` only at an explicit
+//! [`ServingSession::refresh`], and the pipelined consumer drops (and
+//! counts) any queued batch whose generation tag does not match the pinned
+//! generation — the same "observed, not assumed" staleness contract as the
+//! async draw engine's `stale_drops`.
+//!
+//! **Determinism.** A session's RNG uses the estimator's stream constant,
+//! so `ServingSession::open(core, seed)` replays the batch stream of
+//! `ShardedLgdEstimator` built with the same hasher/options/`seed` — the
+//! contract the serving determinism tests pin for {Vec, sealed} layouts
+//! across shard counts.
+//!
+//! A minimal wire front rides along: a length-prefixed (u32 LE) request/
+//! response protocol over `std::net` TCP ([`serve_tcp`]/[`ServeClient`]),
+//! plus the in-process N-client harness ([`run_harness`]) the CLI's
+//! `lgd serve`, the `async_serving` example and `bench_runtime` all share.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::draw_engine::DrawQueue;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pipeline::{build_shard_tables, ShardSet, ShardTables};
+use crate::core::error::{Error, Result};
+use crate::core::rng::Pcg64;
+use crate::data::preprocess::Preprocessed;
+use crate::data::shard::ShardPlan;
+use crate::estimator::lgd::LgdOptions;
+use crate::estimator::sharded::mixture_draw_batch;
+use crate::estimator::{EstimatorStats, WeightedDraw};
+use crate::lsh::sampler::Draw;
+use crate::lsh::srp::SrpHasher;
+use crate::lsh::tables::BucketRead;
+
+/// Lock `m`, treating a poisoned mutex as live — the protected state (an
+/// `Arc` pointer or the writer token) is always structurally valid, same
+/// policy as the draw queues.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn io_err(e: std::io::Error) -> Error {
+    Error::Pipeline(format!("serving wire: {e}"))
+}
+
+/// Monotonic counters of a [`ServingCore`] (all sessions aggregated).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServingCounters {
+    /// Generation publications (one per successful [`ServingCore::mutate`]).
+    pub flips: u64,
+    /// Sessions opened against this core.
+    pub sessions: u64,
+    /// Draws delivered to consumers across all sessions.
+    pub draws_served: u64,
+    /// Queued batches discarded because their generation tag did not match
+    /// the session's pinned generation. Structurally 0 — a session's
+    /// producer samples from the very `Arc` the consumer checks against —
+    /// but counted so the "zero stale-generation serves" invariant is
+    /// observed, not assumed (CI smoke-checks it stays 0).
+    pub stale_rejected: u64,
+}
+
+/// The shared read-only core of the serving engine: dataset + options +
+/// the currently published shard-set generation. Cheap to share
+/// (`Arc<ServingCore<_>>`); all draw-path state lives in sessions.
+pub struct ServingCore<H: SrpHasher> {
+    pre: Arc<Preprocessed>,
+    opts: LgdOptions,
+    /// The published generation. Readers clone the `Arc` out ([`Self::pin`])
+    /// and never hold the lock across a draw.
+    published: Mutex<Arc<ShardSet<H>>>,
+    /// Lock-free mirror of the published set's generation counter, so
+    /// sessions can poll staleness without touching the mutex.
+    gen: AtomicU64,
+    /// Serializes writers; readers never take it.
+    writer: Mutex<()>,
+    flips: AtomicU64,
+    sessions_opened: AtomicU64,
+    draws_served: AtomicU64,
+    stale_rejected: AtomicU64,
+}
+
+impl<H: SrpHasher> ServingCore<H> {
+    /// Build the index (concurrent per-shard table builds, sealed into the
+    /// CSR arena when `opts.sealed`) and wrap it as generation 0.
+    pub fn build(
+        pre: Arc<Preprocessed>,
+        hasher: H,
+        opts: LgdOptions,
+        shards: usize,
+    ) -> Result<Arc<Self>>
+    where
+        H: Clone,
+    {
+        let n = pre.data.len();
+        let plan = ShardPlan::round_robin(n, shards)?;
+        let built = build_shard_tables(&pre.hashed, &plan, opts.mirror, &hasher, &Metrics::new())?;
+        let built: Vec<ShardTables<H>> = if opts.sealed {
+            built.into_iter().map(ShardTables::seal).collect()
+        } else {
+            built
+        };
+        let set = ShardSet::from_shards(built, n, opts.mirror, 0.0);
+        Ok(Arc::new(Self::from_set(pre, set, opts)))
+    }
+
+    /// Wrap an existing shard set (e.g. restored from a snapshot) as the
+    /// published generation.
+    pub fn from_set(pre: Arc<Preprocessed>, set: ShardSet<H>, opts: LgdOptions) -> Self {
+        let gen = set.generation();
+        ServingCore {
+            pre,
+            opts,
+            published: Mutex::new(Arc::new(set)),
+            gen: AtomicU64::new(gen),
+            writer: Mutex::new(()),
+            flips: AtomicU64::new(0),
+            sessions_opened: AtomicU64::new(0),
+            draws_served: AtomicU64::new(0),
+            stale_rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// The preprocessed dataset every generation serves.
+    pub fn preprocessed(&self) -> &Preprocessed {
+        &self.pre
+    }
+
+    /// The sampler options sessions run with.
+    pub fn options(&self) -> &LgdOptions {
+        &self.opts
+    }
+
+    /// Pin the currently published generation: an `Arc` the caller can
+    /// read from for as long as it likes, regardless of later flips.
+    pub fn pin(&self) -> Arc<ShardSet<H>> {
+        lock(&self.published).clone()
+    }
+
+    /// Generation counter of the published set (lock-free).
+    pub fn generation(&self) -> u64 {
+        self.gen.load(Ordering::Acquire)
+    }
+
+    /// Apply a mutation as a generation flip: clone the published set
+    /// (copy-on-write — readers keep their pins), run `f` on the clone,
+    /// and atomically publish the result. Writers are serialized by the
+    /// writer lock; an `Err` from `f` publishes nothing. Returns `f`'s
+    /// value.
+    pub fn mutate<T, F>(&self, f: F) -> Result<T>
+    where
+        H: Clone,
+        F: FnOnce(&mut ShardSet<H>, &Preprocessed) -> Result<T>,
+    {
+        let _w = lock(&self.writer);
+        let mut next = ShardSet::clone(&self.pin());
+        let out = f(&mut next, &self.pre)?;
+        let gen = next.generation();
+        *lock(&self.published) = Arc::new(next);
+        self.gen.store(gen, Ordering::Release);
+        self.flips.fetch_add(1, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Flip that inserts example `id`; returns the shard chosen.
+    pub fn insert(&self, id: usize) -> Result<usize>
+    where
+        H: Clone,
+    {
+        self.mutate(|set, pre| set.insert(id, &pre.hashed))
+    }
+
+    /// Flip that removes example `id`; returns whether it was present.
+    pub fn remove(&self, id: usize) -> Result<bool>
+    where
+        H: Clone,
+    {
+        self.mutate(|set, pre| set.remove(id, &pre.hashed))
+    }
+
+    /// Flip that rebalances shards to imbalance ≤ `target`; returns the
+    /// number of examples migrated.
+    pub fn rebalance_to(&self, target: f64) -> Result<usize>
+    where
+        H: Clone,
+    {
+        self.mutate(|set, pre| set.rebalance_to(target, &pre.hashed))
+    }
+
+    /// Snapshot of the aggregate counters.
+    pub fn counters(&self) -> ServingCounters {
+        ServingCounters {
+            flips: self.flips.load(Ordering::Relaxed),
+            sessions: self.sessions_opened.load(Ordering::Relaxed),
+            draws_served: self.draws_served.load(Ordering::Relaxed),
+            stale_rejected: self.stale_rejected.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// What one [`ServingSession::run_pipelined`] call did.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServeReport {
+    /// Batches delivered to the consumer callback.
+    pub batches: usize,
+    /// Draws assembled by the sampler side (≥ `batches · m` on early stop).
+    pub draws: u64,
+    /// Batches that were ready the moment the consumer asked.
+    pub prefetch_hits: u64,
+    /// Batch requests that had to wait on an empty queue.
+    pub queue_stalls: u64,
+    /// Queued batches dropped for a stale generation tag (see
+    /// [`ServingCounters::stale_rejected`]).
+    pub stale_rejected: u64,
+    /// Pinned generation the session served.
+    pub generation: u64,
+}
+
+/// One assembled batch, tagged with the generation it was drawn under.
+struct GenBatch {
+    gen: u64,
+    draws: Vec<WeightedDraw>,
+}
+
+/// Closes a queue when dropped — shutdown stays correct on every exit
+/// path, including a panicking consumer callback.
+struct Closer<'q>(&'q DrawQueue<GenBatch>);
+
+impl Drop for Closer<'_> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// Pop batches off `q` and hand live-generation ones to the consumer,
+/// dropping (and counting) stale-tagged batches, until `steps` batches
+/// were delivered, the callback stops, or the producer died. Closes `q`
+/// on every exit path.
+fn deliver_batches<F>(
+    q: &DrawQueue<GenBatch>,
+    gen: u64,
+    steps: usize,
+    stale: &mut u64,
+    on_batch: &mut F,
+) -> usize
+where
+    F: FnMut(usize, &[WeightedDraw]) -> bool,
+{
+    let guard = Closer(q);
+    let mut delivered = 0usize;
+    while delivered < steps {
+        match q.pop() {
+            Some(b) if b.gen == gen => {
+                let go = on_batch(delivered, &b.draws);
+                delivered += 1;
+                if !go {
+                    break;
+                }
+            }
+            Some(_) => *stale += 1,
+            None => break,
+        }
+    }
+    drop(guard);
+    delivered
+}
+
+/// One client's view of a [`ServingCore`]: a pinned generation plus all
+/// the mutable draw-path state (RNG stream, fused query codes, counters,
+/// scratch buffers) that the shared core deliberately does not hold.
+pub struct ServingSession<H: SrpHasher> {
+    core: Arc<ServingCore<H>>,
+    set: Arc<ShardSet<H>>,
+    opts: LgdOptions,
+    rng: Pcg64,
+    stats: EstimatorStats,
+    query: Vec<f32>,
+    codes: Vec<u32>,
+    scratch: Vec<Draw>,
+}
+
+impl<H: SrpHasher> ServingSession<H> {
+    /// Open a session pinned to the currently published generation. The
+    /// RNG uses the estimator's stream constant, so a session with seed
+    /// `s` replays `ShardedLgdEstimator`'s batch stream under the same
+    /// hasher/options/seed.
+    pub fn open(core: &Arc<ServingCore<H>>, seed: u64) -> Self {
+        core.sessions_opened.fetch_add(1, Ordering::Relaxed);
+        ServingSession {
+            set: core.pin(),
+            opts: core.opts.clone(),
+            core: Arc::clone(core),
+            rng: Pcg64::new(seed, 0x4c474400),
+            stats: EstimatorStats::default(),
+            query: Vec::new(),
+            codes: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Generation this session is pinned to.
+    pub fn generation(&self) -> u64 {
+        self.set.generation()
+    }
+
+    /// The pinned shard set (immutable for the session's lifetime).
+    pub fn shard_set(&self) -> &ShardSet<H> {
+        &self.set
+    }
+
+    /// The session's own draw-path counters.
+    pub fn stats(&self) -> EstimatorStats {
+        self.stats
+    }
+
+    /// True when the core has published a newer generation than the one
+    /// this session is pinned to (lock-free poll).
+    pub fn is_stale(&self) -> bool {
+        self.core.generation() != self.set.generation()
+    }
+
+    /// Re-pin to the currently published generation. Returns true when
+    /// the pin actually moved. Draws before and after a refresh belong to
+    /// different generations; the session's RNG stream continues either
+    /// way.
+    pub fn refresh(&mut self) -> bool {
+        if !self.is_stale() {
+            return false;
+        }
+        self.set = self.core.pin();
+        true
+    }
+
+    /// Hash the query once (fused `codes_all` sweep) into the session's
+    /// own code buffer. Skipped on a drained set — the batch core serves
+    /// membership-aware uniform fallbacks without codes.
+    fn hash_query(&mut self, theta: &[f32]) {
+        if self.set.total_rows() == 0 {
+            return;
+        }
+        self.core.pre.query(theta, &mut self.query);
+        let hasher = self.set.shard(0).tables.hasher();
+        hasher.codes_all(&self.query, &mut self.codes);
+        self.stats.cost.codes += hasher.l();
+        self.stats.cost.mults += hasher.mults_all();
+    }
+
+    /// Draw one exact shard-mixture batch of `m` weighted draws against
+    /// the query built from `theta` — the synchronous per-session path,
+    /// identical draw-for-draw to `ShardedLgdEstimator::draw_batch` under
+    /// the same seed.
+    pub fn draw_batch(&mut self, theta: &[f32], m: usize, out: &mut Vec<WeightedDraw>) {
+        self.hash_query(theta);
+        let n = self.set.base_len();
+        mixture_draw_batch(
+            &self.set,
+            n,
+            &self.opts,
+            &self.codes,
+            &self.query,
+            m,
+            &mut self.rng,
+            &mut self.stats,
+            &mut self.scratch,
+            out,
+        );
+        self.core.draws_served.fetch_add(m as u64, Ordering::Relaxed);
+    }
+
+    /// Run one pipelined serving session: `steps` batches of `m` draws,
+    /// assembled ahead of the consumer by the session's own sampler thread
+    /// through its own bounded [`DrawQueue`] (capacity ≈ `queue_depth / m`
+    /// batches). The query is hashed once for the whole run; the RNG is
+    /// handed back, so synchronous [`Self::draw_batch`] calls continue the
+    /// same stream afterwards — a fully consumed pipelined run delivers
+    /// exactly the batches `steps` synchronous calls would have (the
+    /// early-stop caveat of the async draw engine applies here too).
+    ///
+    /// Every queued batch carries its generation tag; the consumer side
+    /// refuses to deliver a batch tagged with anything but the pinned
+    /// generation, counting rejects into [`ServeReport::stale_rejected`]
+    /// and the core's aggregate counter.
+    pub fn run_pipelined<F>(
+        &mut self,
+        theta: &[f32],
+        m: usize,
+        steps: usize,
+        queue_depth: usize,
+        mut on_batch: F,
+    ) -> Result<ServeReport>
+    where
+        F: FnMut(usize, &[WeightedDraw]) -> bool,
+    {
+        let gen = self.set.generation();
+        if m == 0 || steps == 0 {
+            return Ok(ServeReport { generation: gen, ..Default::default() });
+        }
+        self.hash_query(theta);
+        let set = &*self.set;
+        let n = set.base_len();
+        let opts = &self.opts;
+        let codes = &self.codes;
+        let query = &self.query;
+        let prod_rng = self.rng.clone();
+        let q: DrawQueue<GenBatch> = DrawQueue::new((queue_depth / m).max(1));
+        let mut stale = 0u64;
+        let (prod_res, delivered) = thread::scope(|scope| {
+            let qr = &q;
+            let producer = scope.spawn(move || {
+                let _close = Closer(qr);
+                let mut rng = prod_rng;
+                let mut st = EstimatorStats::default();
+                let mut scratch = Vec::new();
+                for _ in 0..steps {
+                    let mut out = Vec::with_capacity(m);
+                    mixture_draw_batch(
+                        set,
+                        n,
+                        opts,
+                        codes,
+                        query,
+                        m,
+                        &mut rng,
+                        &mut st,
+                        &mut scratch,
+                        &mut out,
+                    );
+                    if !qr.push(GenBatch { gen, draws: out }) {
+                        break;
+                    }
+                }
+                (rng, st)
+            });
+            let delivered = deliver_batches(&q, gen, steps, &mut stale, &mut on_batch);
+            (producer.join(), delivered)
+        });
+        let (rng_back, prod_stats) =
+            prod_res.map_err(|_| Error::Pipeline("serving sampler thread panicked".into()))?;
+        self.rng = rng_back;
+        let draws = prod_stats.draws;
+        self.stats.merge_draws(&prod_stats);
+        let (hits, stalls) = q.counters();
+        self.stats.prefetch_hits += hits;
+        self.stats.queue_stalls += stalls;
+        self.core.draws_served.fetch_add((delivered * m) as u64, Ordering::Relaxed);
+        if stale > 0 {
+            self.core.stale_rejected.fetch_add(stale, Ordering::Relaxed);
+        }
+        Ok(ServeReport {
+            batches: delivered,
+            draws,
+            prefetch_hits: hits,
+            queue_stalls: stalls,
+            stale_rejected: stale,
+            generation: gen,
+        })
+    }
+}
+
+/// Aggregate result of one in-process multi-client run.
+#[derive(Debug, Clone, Copy)]
+pub struct HarnessReport {
+    /// Concurrent client sessions.
+    pub clients: usize,
+    /// Pipelined batches each client consumed.
+    pub batches_per_client: usize,
+    /// Draws per batch.
+    pub batch: usize,
+    /// Total draws delivered across clients.
+    pub draws: u64,
+    /// Wall seconds for the whole fan-out.
+    pub wall_secs: f64,
+    /// `draws / wall_secs`.
+    pub draws_per_sec: f64,
+    /// Stale-generation batch rejects across clients (expected 0).
+    pub stale_rejected: u64,
+    /// Generation the clients served.
+    pub generation: u64,
+}
+
+/// The in-process N-client harness: `clients` concurrent pipelined
+/// sessions (seeds `seed`, `seed+1`, …) each consuming `batches` batches
+/// of `m` draws against the same query. Returns the aggregate throughput —
+/// the serving scaling number `lgd serve`, the `async_serving` example and
+/// `bench_runtime` report.
+pub fn run_harness<H: SrpHasher>(
+    core: &Arc<ServingCore<H>>,
+    clients: usize,
+    batches: usize,
+    m: usize,
+    theta: &[f32],
+    seed: u64,
+) -> Result<HarnessReport> {
+    if clients == 0 {
+        return Err(Error::Config("serving harness needs clients >= 1".into()));
+    }
+    let t0 = Instant::now();
+    let results: Vec<thread::Result<Result<ServeReport>>> = thread::scope(|scope| {
+        let mut hs = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let core = Arc::clone(core);
+            hs.push(scope.spawn(move || -> Result<ServeReport> {
+                let mut sess = ServingSession::open(&core, seed.wrapping_add(c as u64));
+                sess.run_pipelined(theta, m, batches, 4 * m, |_, draws| {
+                    debug_assert_eq!(draws.len(), m);
+                    true
+                })
+            }));
+        }
+        hs.into_iter().map(|h| h.join()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let mut draws = 0u64;
+    let mut stale = 0u64;
+    let mut gen = 0u64;
+    for r in results {
+        let rep = r.map_err(|_| Error::Pipeline("serving client thread panicked".into()))??;
+        draws += (rep.batches * m) as u64;
+        stale += rep.stale_rejected;
+        gen = rep.generation;
+    }
+    Ok(HarnessReport {
+        clients,
+        batches_per_client: batches,
+        batch: m,
+        draws,
+        wall_secs: wall,
+        draws_per_sec: draws as f64 / wall.max(1e-12),
+        stale_rejected: stale,
+        generation: gen,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Wire protocol: u32 LE length-prefixed frames over std::net TCP.
+//
+//   request  = HELLO(op=1, magic u32, version u32, seed u64)
+//            | DRAW (op=2, m u32, dim u32, theta f32×dim)
+//            | BYE  (op=3)
+//   response = ok:  status=0 + HELLO → generation u64
+//                              DRAW  → generation u64, count u32,
+//                                      (index u32, weight f64, prob f64)×count
+//              err: status=1 + utf-8 message
+// ---------------------------------------------------------------------------
+
+/// Frame magic in HELLO ("LGDS").
+pub const WIRE_MAGIC: u32 = 0x4C47_4453;
+/// Wire protocol version.
+pub const WIRE_VERSION: u32 = 1;
+
+const OP_HELLO: u8 = 1;
+const OP_DRAW: u8 = 2;
+const OP_BYE: u8 = 3;
+const ST_OK: u8 = 0;
+const ST_ERR: u8 = 1;
+/// Frame size ceiling (16 MiB) — refuse anything larger before allocating.
+const MAX_FRAME: u32 = 1 << 24;
+/// Per-request draw-count ceiling.
+const MAX_DRAWS_PER_REQUEST: u32 = 1 << 20;
+
+/// Bounds-checked little-endian reader over one frame payload.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, k: usize) -> Result<&'a [u8]> {
+        if k > self.buf.len() - self.pos {
+            return Err(Error::Pipeline("serving wire: truncated frame".into()));
+        }
+        let s = &self.buf[self.pos..self.pos + k];
+        self.pos += k;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, k: usize) -> Result<Vec<f32>> {
+        let raw = self.take(4 * k)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn rest_str(&self) -> String {
+        String::from_utf8_lossy(&self.buf[self.pos..]).into_owned()
+    }
+}
+
+fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() as u64 > MAX_FRAME as u64 {
+        return Err(Error::Pipeline(format!(
+            "serving wire: frame of {} bytes exceeds the {MAX_FRAME}-byte ceiling",
+            payload.len()
+        )));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes()).map_err(io_err)?;
+    w.write_all(payload).map_err(io_err)?;
+    w.flush().map_err(io_err)
+}
+
+/// Blocking frame read (client side). `Ok(None)` on clean EOF before the
+/// header.
+fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut lb = [0u8; 4];
+    match r.read_exact(&mut lb) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(io_err(e)),
+    }
+    let len = u32::from_le_bytes(lb);
+    if len > MAX_FRAME {
+        return Err(Error::Pipeline(format!("serving wire: oversized frame ({len} bytes)")));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf).map_err(io_err)?;
+    Ok(Some(buf))
+}
+
+/// Fill `buf` from the stream, tolerating read-timeout polls (the server
+/// sets a timeout so handlers can notice the stop flag). `Ok(None)` =
+/// clean end: EOF before any byte (between frames), or the stop flag went
+/// up while nothing was in flight.
+fn read_full(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> Result<Option<()>> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(Error::Pipeline("serving wire: connection truncated mid-frame".into()));
+            }
+            Ok(k) => got += k,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Relaxed) && got == 0 {
+                    return Ok(None);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(io_err(e)),
+        }
+    }
+    Ok(Some(()))
+}
+
+fn err_payload(msg: &str) -> Vec<u8> {
+    let mut p = Vec::with_capacity(1 + msg.len());
+    p.push(ST_ERR);
+    p.extend_from_slice(msg.as_bytes());
+    p
+}
+
+/// Handle one client connection: HELLO opens the session, DRAWs stream
+/// batches, BYE (or EOF) ends it. Returns draws served on this
+/// connection. Protocol violations get an error frame, then the
+/// connection closes — they never take the server down.
+fn handle_conn<H: SrpHasher>(
+    core: &Arc<ServingCore<H>>,
+    mut stream: TcpStream,
+    stop: &AtomicBool,
+) -> Result<u64> {
+    stream.set_read_timeout(Some(Duration::from_millis(100))).map_err(io_err)?;
+    stream.set_nodelay(true).ok();
+    let mut session: Option<ServingSession<H>> = None;
+    let mut served = 0u64;
+    let mut draws: Vec<WeightedDraw> = Vec::new();
+    loop {
+        let mut lb = [0u8; 4];
+        if read_full(&mut stream, &mut lb, stop)?.is_none() {
+            return Ok(served);
+        }
+        let len = u32::from_le_bytes(lb);
+        if len > MAX_FRAME {
+            let _ = write_frame(&mut stream, &err_payload("oversized frame"));
+            return Ok(served);
+        }
+        let mut payload = vec![0u8; len as usize];
+        if read_full(&mut stream, &mut payload, stop)?.is_none() {
+            return Ok(served);
+        }
+        // Decode + dispatch; a malformed frame answers with an error
+        // payload and closes this connection only.
+        let flow = (|| -> Result<bool> {
+            let mut r = Reader::new(&payload);
+            match r.u8()? {
+                OP_HELLO => {
+                    let magic = r.u32()?;
+                    let version = r.u32()?;
+                    let seed = r.u64()?;
+                    if magic != WIRE_MAGIC {
+                        return Err(Error::Pipeline("serving wire: bad HELLO magic".into()));
+                    }
+                    if version != WIRE_VERSION {
+                        return Err(Error::Pipeline(format!(
+                            "serving wire: unsupported version {version} (server speaks \
+                             {WIRE_VERSION})"
+                        )));
+                    }
+                    let sess = ServingSession::open(core, seed);
+                    let mut p = Vec::with_capacity(9);
+                    p.push(ST_OK);
+                    p.extend_from_slice(&sess.generation().to_le_bytes());
+                    session = Some(sess);
+                    write_frame(&mut stream, &p)?;
+                    Ok(true)
+                }
+                OP_DRAW => {
+                    let m = r.u32()?;
+                    let dim = r.u32()? as usize;
+                    if m == 0 || m > MAX_DRAWS_PER_REQUEST {
+                        return Err(Error::Pipeline(format!("serving wire: bad draw count {m}")));
+                    }
+                    let theta = r.f32s(dim)?;
+                    let sess = session
+                        .as_mut()
+                        .ok_or_else(|| Error::Pipeline("serving wire: DRAW before HELLO".into()))?;
+                    sess.draw_batch(&theta, m as usize, &mut draws);
+                    let mut p = Vec::with_capacity(13 + draws.len() * 20);
+                    p.push(ST_OK);
+                    p.extend_from_slice(&sess.generation().to_le_bytes());
+                    p.extend_from_slice(&(draws.len() as u32).to_le_bytes());
+                    for d in &draws {
+                        p.extend_from_slice(&(d.index as u32).to_le_bytes());
+                        p.extend_from_slice(&d.weight.to_le_bytes());
+                        p.extend_from_slice(&d.prob.to_le_bytes());
+                    }
+                    served += m as u64;
+                    write_frame(&mut stream, &p)?;
+                    Ok(true)
+                }
+                OP_BYE => Ok(false),
+                op => Err(Error::Pipeline(format!("serving wire: unknown op {op}"))),
+            }
+        })();
+        match flow {
+            Ok(true) => {}
+            Ok(false) => return Ok(served),
+            Err(e) => {
+                let _ = write_frame(&mut stream, &err_payload(&e.to_string()));
+                return Ok(served);
+            }
+        }
+    }
+}
+
+/// Serve the core over TCP: accept connections until `stop` goes up, one
+/// handler thread per connection (each with its own [`ServingSession`]).
+/// Returns the total draws served. The listener is polled non-blocking so
+/// the stop flag is honored promptly; handlers notice it within their
+/// read-timeout tick once their client goes quiet.
+pub fn serve_tcp<H: SrpHasher>(
+    core: &Arc<ServingCore<H>>,
+    listener: TcpListener,
+    stop: &AtomicBool,
+) -> Result<u64> {
+    listener.set_nonblocking(true).map_err(io_err)?;
+    let total = AtomicU64::new(0);
+    let mut first_err: Option<Error> = None;
+    thread::scope(|scope| {
+        let mut handlers = Vec::new();
+        while !stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _addr)) => {
+                    let totalr = &total;
+                    handlers.push(scope.spawn(move || -> Result<()> {
+                        let served = handle_conn(core, stream, stop)?;
+                        totalr.fetch_add(served, Ordering::Relaxed);
+                        Ok(())
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    first_err = Some(io_err(e));
+                    break;
+                }
+            }
+        }
+        for h in handlers {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    let dead = Error::Pipeline("serving connection handler panicked".into());
+                    first_err.get_or_insert(dead);
+                }
+            }
+        }
+    });
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(total.load(Ordering::Relaxed)),
+    }
+}
+
+/// Client half of the wire protocol.
+pub struct ServeClient {
+    stream: TcpStream,
+    /// Generation the server reported at HELLO.
+    pub generation: u64,
+}
+
+impl ServeClient {
+    /// Connect and HELLO with `seed` (the server opens a session whose
+    /// draw stream is pinned by that seed).
+    pub fn connect(addr: impl ToSocketAddrs, seed: u64) -> Result<Self> {
+        let mut stream = TcpStream::connect(addr).map_err(io_err)?;
+        stream.set_nodelay(true).ok();
+        let mut p = Vec::with_capacity(17);
+        p.push(OP_HELLO);
+        p.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+        p.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        p.extend_from_slice(&seed.to_le_bytes());
+        write_frame(&mut stream, &p)?;
+        let resp = read_frame(&mut stream)?
+            .ok_or_else(|| Error::Pipeline("serving wire: server closed during HELLO".into()))?;
+        let mut r = Reader::new(&resp);
+        if r.u8()? != ST_OK {
+            return Err(Error::Pipeline(format!("serving server rejected HELLO: {}", r.rest_str())));
+        }
+        let generation = r.u64()?;
+        Ok(ServeClient { stream, generation })
+    }
+
+    /// Request one batch of `m` weighted draws for the query built from
+    /// `theta`; returns the server session's generation and the draws.
+    pub fn draw(&mut self, theta: &[f32], m: usize) -> Result<(u64, Vec<WeightedDraw>)> {
+        let mut p = Vec::with_capacity(9 + 4 * theta.len());
+        p.push(OP_DRAW);
+        p.extend_from_slice(&(m as u32).to_le_bytes());
+        p.extend_from_slice(&(theta.len() as u32).to_le_bytes());
+        for v in theta {
+            p.extend_from_slice(&v.to_le_bytes());
+        }
+        write_frame(&mut self.stream, &p)?;
+        let resp = read_frame(&mut self.stream)?
+            .ok_or_else(|| Error::Pipeline("serving wire: server closed during DRAW".into()))?;
+        let mut r = Reader::new(&resp);
+        if r.u8()? != ST_OK {
+            return Err(Error::Pipeline(format!("serving server error: {}", r.rest_str())));
+        }
+        let generation = r.u64()?;
+        let count = r.u32()? as usize;
+        let mut draws = Vec::with_capacity(count);
+        for _ in 0..count {
+            let index = r.u32()? as usize;
+            let weight = r.f64()?;
+            let prob = r.f64()?;
+            draws.push(WeightedDraw { index, weight, prob });
+        }
+        Ok((generation, draws))
+    }
+
+    /// Polite goodbye (the server also handles a plain disconnect).
+    pub fn bye(mut self) -> Result<()> {
+        write_frame(&mut self.stream, &[OP_BYE])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::preprocess::{preprocess, PreprocessOptions};
+    use crate::data::synth::SynthSpec;
+    use crate::estimator::{GradientEstimator, ShardedLgdEstimator};
+    use crate::lsh::srp::DenseSrp;
+
+    fn setup(n: usize, d: usize, seed: u64) -> Arc<Preprocessed> {
+        let ds = SynthSpec::power_law("serve", n, d, seed).generate().unwrap();
+        Arc::new(preprocess(ds, &PreprocessOptions::default()).unwrap())
+    }
+
+    fn mk_core(pre: &Arc<Preprocessed>, shards: usize, sealed: bool) -> Arc<ServingCore<DenseSrp>> {
+        let hd = pre.hashed.cols();
+        let opts = LgdOptions { sealed, ..LgdOptions::default() };
+        ServingCore::build(Arc::clone(pre), DenseSrp::new(hd, 3, 12, 101), opts, shards).unwrap()
+    }
+
+    /// The determinism contract: a session replays the estimator's batch
+    /// stream under the same hasher/options/seed, for both table layouts.
+    #[test]
+    fn session_replays_estimator_batch_stream() {
+        let pre = setup(200, 8, 21);
+        let hd = pre.hashed.cols();
+        let theta = vec![0.04f32; 8];
+        for sealed in [true, false] {
+            let core = mk_core(&pre, 3, sealed);
+            let opts = LgdOptions { sealed, ..LgdOptions::default() };
+            let mut est =
+                ShardedLgdEstimator::new(&pre, DenseSrp::new(hd, 3, 12, 101), 7, opts, 3).unwrap();
+            let mut sess = ServingSession::open(&core, 7);
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            for round in 0..5 {
+                est.draw_batch(&theta, 32, &mut a);
+                sess.draw_batch(&theta, 32, &mut b);
+                assert_eq!(a, b, "sealed={sealed} round {round}: session diverged");
+            }
+        }
+    }
+
+    /// Sessions share no mutable state: N concurrent sessions produce
+    /// exactly the draws the same N sessions produce sequentially.
+    #[test]
+    fn concurrent_sessions_equal_sequential() {
+        let pre = setup(180, 8, 33);
+        let core = mk_core(&pre, 4, true);
+        let theta = vec![0.05f32; 8];
+        let run_one = |seed: u64| {
+            let mut sess = ServingSession::open(&core, seed);
+            let mut got = Vec::new();
+            sess.run_pipelined(&theta, 16, 4, 64, |_, draws| {
+                got.extend(draws.iter().copied());
+                true
+            })
+            .unwrap();
+            got
+        };
+        let sequential: Vec<Vec<WeightedDraw>> = (0..4).map(|c| run_one(900 + c)).collect();
+        let concurrent: Vec<Vec<WeightedDraw>> = thread::scope(|scope| {
+            let hs: Vec<_> = (0..4).map(|c| scope.spawn(move || run_one(900 + c))).collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(sequential, concurrent, "concurrency changed a draw stream");
+    }
+
+    /// Pipelined runs replay the synchronous session stream and hand the
+    /// RNG back so sync draws continue it.
+    #[test]
+    fn pipelined_matches_sync_session_stream() {
+        let pre = setup(160, 8, 41);
+        let core = mk_core(&pre, 3, true);
+        let theta = vec![0.03f32; 8];
+        let (m, steps) = (24usize, 6usize);
+        let mut sync = ServingSession::open(&core, 11);
+        let mut piped = ServingSession::open(&core, 11);
+        let mut want = Vec::new();
+        let mut out = Vec::new();
+        for _ in 0..steps {
+            sync.draw_batch(&theta, m, &mut out);
+            want.extend(out.iter().copied());
+        }
+        let mut got = Vec::new();
+        let rep = piped
+            .run_pipelined(&theta, m, steps, 64, |_, draws| {
+                got.extend(draws.iter().copied());
+                true
+            })
+            .unwrap();
+        assert_eq!(rep.batches, steps);
+        assert_eq!(rep.draws, (m * steps) as u64);
+        assert_eq!(rep.stale_rejected, 0);
+        assert_eq!(want, got, "pipelined session diverged from sync");
+        // RNG hand-back: both continue identically
+        let mut out2 = Vec::new();
+        sync.draw_batch(&theta, m, &mut out);
+        piped.draw_batch(&theta, m, &mut out2);
+        assert_eq!(out, out2, "post-pipeline sync draws diverged");
+    }
+
+    /// Generation flips are copy-on-write: pinned sessions keep serving
+    /// their generation untouched, refreshed sessions see the mutation and
+    /// never serve rows dead in the new generation.
+    #[test]
+    fn flips_are_cow_and_refresh_respects_membership() {
+        let pre = setup(150, 8, 51);
+        let core = mk_core(&pre, 3, true);
+        let theta = vec![0.04f32; 8];
+        let mut pinned = ServingSession::open(&core, 5);
+        let g0 = pinned.generation();
+        for id in 0..50 {
+            assert!(core.remove(id).unwrap());
+        }
+        assert!(core.generation() > g0, "flips must bump the published generation");
+        assert_eq!(core.counters().flips, 50);
+        // the pinned session still serves g0: all 150 ids remain valid there
+        assert!(pinned.is_stale());
+        assert_eq!(pinned.generation(), g0);
+        let mut out = Vec::new();
+        pinned.draw_batch(&theta, 64, &mut out);
+        assert!(out.iter().all(|d| d.index < 150));
+        // refreshed: the evicted block must never appear again
+        assert!(pinned.refresh());
+        assert!(!pinned.is_stale());
+        for _ in 0..20 {
+            pinned.draw_batch(&theta, 32, &mut out);
+            assert!(
+                out.iter().all(|d| d.index >= 50 && d.index < 150),
+                "refreshed session served a dead row"
+            );
+        }
+        // a freshly opened session starts on the new generation
+        let mut fresh = ServingSession::open(&core, 6);
+        assert_eq!(fresh.generation(), core.generation());
+        fresh.draw_batch(&theta, 64, &mut out);
+        assert!(out.iter().all(|d| d.index >= 50 && d.index < 150));
+    }
+
+    /// The consumer-side staleness filter: batches tagged with a foreign
+    /// generation are dropped and counted, never delivered.
+    #[test]
+    fn deliver_batches_drops_stale_generations() {
+        let q: DrawQueue<GenBatch> = DrawQueue::new(8);
+        let d = WeightedDraw { index: 0, weight: 1.0, prob: 1.0 };
+        for gen in [3u64, 7, 3, 2, 3] {
+            assert!(q.push(GenBatch { gen, draws: vec![d; 4] }));
+        }
+        q.close();
+        let mut stale = 0u64;
+        let mut delivered_draws = 0usize;
+        let delivered = deliver_batches(&q, 3, 10, &mut stale, &mut |_, draws| {
+            delivered_draws += draws.len();
+            true
+        });
+        assert_eq!(delivered, 3, "three live-generation batches");
+        assert_eq!(stale, 2, "two foreign-generation batches rejected");
+        assert_eq!(delivered_draws, 12);
+    }
+
+    /// The harness aggregates across clients and observes zero stale
+    /// rejects on a quiescent core.
+    #[test]
+    fn harness_aggregates_across_clients() {
+        let pre = setup(120, 6, 61);
+        let core = mk_core(&pre, 2, true);
+        let theta = vec![0.05f32; 6];
+        let rep = run_harness(&core, 4, 5, 16, &theta, 77).unwrap();
+        assert_eq!(rep.clients, 4);
+        assert_eq!(rep.draws, 4 * 5 * 16);
+        assert_eq!(rep.stale_rejected, 0);
+        assert!(rep.draws_per_sec > 0.0);
+        let c = core.counters();
+        assert_eq!(c.sessions, 4);
+        assert_eq!(c.draws_served, rep.draws);
+        assert_eq!(c.stale_rejected, 0);
+        assert!(run_harness(&core, 0, 1, 1, &theta, 1).is_err());
+    }
+
+    /// TCP round trip: a served client's draws equal an in-process session
+    /// with the same seed, concurrent clients each get their own stream,
+    /// and protocol errors answer cleanly.
+    #[test]
+    fn tcp_serving_round_trip() {
+        let pre = setup(140, 8, 71);
+        let core = mk_core(&pre, 3, true);
+        let theta = vec![0.04f32; 8];
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = AtomicBool::new(false);
+        thread::scope(|scope| {
+            let corer = &core;
+            let stopr = &stop;
+            let server = scope.spawn(move || serve_tcp(corer, listener, stopr));
+            // reference stream: in-process session, same seed
+            let mut reference = ServingSession::open(&core, 1234);
+            let mut want = Vec::new();
+            reference.draw_batch(&theta, 20, &mut want);
+            let mut client = ServeClient::connect(addr, 1234).unwrap();
+            assert_eq!(client.generation, core.generation());
+            let (gen, got) = client.draw(&theta, 20).unwrap();
+            assert_eq!(gen, core.generation());
+            assert_eq!(want, got, "wire round trip changed the draw stream");
+            // a second concurrent client gets its own independent stream
+            let mut other = ServeClient::connect(addr, 4321).unwrap();
+            let (_, draws2) = other.draw(&theta, 20).unwrap();
+            assert!(draws2.iter().all(|d| d.index < 140 && d.prob > 0.0));
+            other.bye().unwrap();
+            // DRAW before HELLO answers an error frame, not a hang
+            let mut raw = TcpStream::connect(addr).unwrap();
+            let mut p = vec![OP_DRAW];
+            p.extend_from_slice(&20u32.to_le_bytes());
+            p.extend_from_slice(&0u32.to_le_bytes());
+            write_frame(&mut raw, &p).unwrap();
+            let resp = read_frame(&mut raw).unwrap().unwrap();
+            assert_eq!(resp[0], ST_ERR);
+            drop(raw);
+            client.bye().unwrap();
+            stop.store(true, Ordering::Relaxed);
+            let served = server.join().unwrap().unwrap();
+            assert_eq!(served, 40, "two 20-draw requests served");
+        });
+        assert!(core.counters().draws_served >= 60, "reference + wire draws counted");
+    }
+
+    /// A drained published generation serves uniform fallbacks (weight 1)
+    /// instead of hanging — through sessions and the harness alike.
+    #[test]
+    fn drained_generation_serves_uniform_fallbacks() {
+        let pre = setup(40, 6, 81);
+        let core = mk_core(&pre, 2, true);
+        for id in 0..40 {
+            assert!(core.remove(id).unwrap());
+        }
+        assert_eq!(core.pin().total_rows(), 0);
+        let mut sess = ServingSession::open(&core, 9);
+        let mut out = Vec::new();
+        sess.draw_batch(&[0.1; 6], 16, &mut out);
+        assert_eq!(out.len(), 16);
+        assert!(out.iter().all(|d| d.index < 40 && d.weight == 1.0));
+        assert_eq!(sess.stats().fallbacks, 16);
+        let rep = run_harness(&core, 2, 2, 8, &[0.1; 6], 3).unwrap();
+        assert_eq!(rep.draws, 2 * 2 * 8);
+    }
+}

@@ -1049,7 +1049,7 @@ mod tests {
             let AnyHasher::Dense(h) = snap.hasher else { panic!("dense family expected") };
             let mut b = restore_estimator(&pre, h, snap.engine).unwrap();
             assert_eq!(b.shard_set().generation(), a.shard_set().generation());
-            let cfg = DrawEngineConfig { workers, queue_depth: 32 };
+            let cfg = DrawEngineConfig { workers, queue_depth: 32, ..Default::default() };
             let (mut ga, mut gb): (Vec<WeightedDraw>, Vec<WeightedDraw>) =
                 (Vec::new(), Vec::new());
             run_session(&mut a, &cfg, &theta, 16, 5, |_, d| {

@@ -2,6 +2,8 @@
 //! property-based invariants via `testkit`, and PJRT runtime cross-checks
 //! (the runtime tests skip with a message when `make artifacts` hasn't run).
 
+use std::sync::Arc;
+
 use lgd::config::spec::{Backend, EstimatorKind, RunConfig};
 use lgd::coordinator::draw_engine::{run_session, DrawEngineConfig};
 use lgd::coordinator::metrics::Metrics;
@@ -11,11 +13,12 @@ use lgd::core::rng::Rng;
 use lgd::data::preprocess::{preprocess, PreprocessOptions};
 use lgd::data::SynthSpec;
 use lgd::estimator::lgd::{LgdEstimator, LgdOptions};
-use lgd::estimator::{GradientEstimator, ShardedLgdEstimator};
+use lgd::estimator::{GradientEstimator, ShardedLgdEstimator, WeightedDraw};
 use lgd::lsh::srp::DenseSrp;
 use lgd::lsh::tables::BucketRead;
 use lgd::model::{LinReg, Model};
 use lgd::optim::Schedule;
+use lgd::runtime::{run_harness, ServingCore, ServingSession};
 use lgd::testkit::{gen, prop};
 
 fn artifacts_available() -> Option<std::path::PathBuf> {
@@ -135,16 +138,17 @@ fn mixture_probabilities_exact_under_mutation_sealed() {
 /// the built tables and the query from `theta`: shard `s` is picked with
 /// probability `R_s/R` and Algorithm 1 inside it returns local row `i`
 /// with probability `(1/#nonempty) Σ_t 1{i ∈ B_t}/|B_t|` (the same
-/// enumeration `lsh::sampler` validates for one structure).
+/// enumeration `lsh::sampler` validates for one structure). Takes the
+/// shard set directly so the estimator gates and the shared-read serving
+/// gates enumerate through the identical code path.
 fn exact_mixture_probs(
     pre: &lgd::data::preprocess::Preprocessed,
-    est: &ShardedLgdEstimator<'_, DenseSrp>,
+    set: &lgd::coordinator::pipeline::ShardSet<DenseSrp>,
     theta: &[f32],
 ) -> Vec<f64> {
     let n = pre.data.len();
     let mut q = Vec::new();
     pre.query(theta, &mut q);
-    let set = est.shard_set();
     let r_total = set.total_rows() as f64;
     let mut p = vec![0.0f64; n];
     for s in 0..set.shard_count() {
@@ -234,7 +238,7 @@ fn mixture_gate(sealed: bool) {
 
     // exact per-example probabilities of the mutated mixture
     let theta: Vec<f32> = (0..8).map(|j| 0.04 * (j as f32 - 3.0)).collect();
-    let p = exact_mixture_probs(&pre, &est, &theta);
+    let p = exact_mixture_probs(&pre, est.shard_set(), &theta);
     for id in 45..60 {
         assert_eq!(p[id], 0.0, "evicted example {id} still carries probability mass");
     }
@@ -282,7 +286,7 @@ fn mixture_probabilities_exact_async() {
     }
     est.rebalance_to(1.0).unwrap();
     let theta: Vec<f32> = (0..8).map(|j| 0.04 * (j as f32 - 3.0)).collect();
-    let p = exact_mixture_probs(&pre, &est, &theta);
+    let p = exact_mixture_probs(&pre, est.shard_set(), &theta);
     for id in 45..60 {
         assert_eq!(p[id], 0.0, "evicted example {id} still carries probability mass");
     }
@@ -315,7 +319,7 @@ fn mixture_probabilities_exact_async() {
     }
     est.rebalance_to(1.0).unwrap();
     assert!(est.shard_set().generation() > g0);
-    let p2 = exact_mixture_probs(&pre, &est, &theta);
+    let p2 = exact_mixture_probs(&pre, est.shard_set(), &theta);
     let mut counts2 = vec![0u64; n];
     let rep2 = run_session(&mut est, &engine, &theta, m, steps, |_, draws| {
         for d in draws {
@@ -610,6 +614,253 @@ fn snapshot_resume_matches_uninterrupted_training_async() {
     }
     assert_eq!(warm.theta, full.theta, "final parameters diverged after async resume");
     std::fs::remove_file(&path).unwrap();
+}
+
+/// Shared-read determinism: N concurrent pipelined sessions against one
+/// `ServingCore` deliver exactly the draws of the same N sessions run one
+/// after the other — for both bucket layouts ({Vec, sealed}) and shard
+/// counts {1, 4}. Sessions share no mutable state, so thread interleaving
+/// cannot change any per-seed stream.
+#[test]
+fn serving_concurrent_sessions_match_sequential() {
+    for sealed in [false, true] {
+        for shards in [1usize, 4] {
+            let ds = SynthSpec::power_law("serve-det", 240, 10, 41).generate().unwrap();
+            let pre = Arc::new(preprocess(ds, &PreprocessOptions::default()).unwrap());
+            let hd = pre.hashed.cols();
+            let opts = LgdOptions { sealed, ..LgdOptions::default() };
+            let core =
+                ServingCore::build(Arc::clone(&pre), DenseSrp::new(hd, 3, 12, 101), opts, shards)
+                    .unwrap();
+            let theta: Vec<f32> = (0..10).map(|j| 0.03 * (j as f32 - 5.0)).collect();
+            let (clients, m, steps) = (4usize, 16usize, 6usize);
+            let run = |core: &Arc<ServingCore<DenseSrp>>, c: usize| -> Vec<WeightedDraw> {
+                let mut sess = ServingSession::open(core, 700 + c as u64);
+                let mut got = Vec::new();
+                let rep = sess
+                    .run_pipelined(&theta, m, steps, 4 * m, |_, draws| {
+                        got.extend_from_slice(draws);
+                        true
+                    })
+                    .unwrap();
+                assert_eq!(rep.batches, steps);
+                assert_eq!(rep.stale_rejected, 0);
+                got
+            };
+            let sequential: Vec<Vec<WeightedDraw>> =
+                (0..clients).map(|c| run(&core, c)).collect();
+            let concurrent: Vec<Vec<WeightedDraw>> = std::thread::scope(|scope| {
+                let hs: Vec<_> = (0..clients)
+                    .map(|c| {
+                        let core = Arc::clone(&core);
+                        let run = &run;
+                        scope.spawn(move || run(&core, c))
+                    })
+                    .collect();
+                hs.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            assert_eq!(
+                sequential, concurrent,
+                "sealed={sealed} shards={shards}: concurrent sessions diverged from sequential"
+            );
+        }
+    }
+}
+
+/// The Theorem-1 statistical gate on the **shared-read serving path**: the
+/// sync gate's scripted insert/remove/skew/rebalance stream applied as
+/// generation flips through `ServingCore::mutate`, then ~50k draws
+/// aggregated across 8 concurrent live sessions must match the enumerated
+/// exact mixture probabilities of the published generation — with zero
+/// stale-generation serves and zero draws of dead rows. Then a flip under
+/// pinned readers: the pinned session keeps serving its own (fully live)
+/// generation while a fresh session sees only the new membership.
+#[test]
+fn mixture_probabilities_exact_serving_shared_read() {
+    let n = 180usize;
+    let ds = SynthSpec::power_law("mix-serve", n, 8, 91).generate().unwrap();
+    let pre = Arc::new(preprocess(ds, &PreprocessOptions::default()).unwrap());
+    let hd = pre.hashed.cols();
+    let core = ServingCore::build(
+        Arc::clone(&pre),
+        DenseSrp::new(hd, 3, 12, 93),
+        LgdOptions::default(),
+        3,
+    )
+    .unwrap();
+    // the sync gate's scripted stream, replayed as generation flips
+    for id in 0..60 {
+        assert!(core.remove(id).unwrap());
+    }
+    for id in 0..20 {
+        core.insert(id).unwrap();
+    }
+    core.mutate(|set, pre| {
+        for id in 20..45 {
+            set.insert_into(0, id, &pre.hashed)?;
+        }
+        Ok(())
+    })
+    .unwrap();
+    let migrated = core.rebalance_to(1.0).unwrap();
+    assert!(migrated > 0, "the scripted skew must have migrated examples");
+    assert_eq!(core.counters().flips, 60 + 20 + 2);
+
+    let theta: Vec<f32> = (0..8).map(|j| 0.04 * (j as f32 - 3.0)).collect();
+    let p = exact_mixture_probs(&pre, &core.pin(), &theta);
+    for id in 45..60 {
+        assert_eq!(p[id], 0.0, "evicted example {id} still carries probability mass");
+    }
+
+    // 8 live sessions × 25-draw batches × 250 steps = 50k draws
+    let (clients, m, steps) = (8usize, 25usize, 250usize);
+    let per_client: Vec<Vec<u64>> = std::thread::scope(|scope| {
+        let hs: Vec<_> = (0..clients)
+            .map(|c| {
+                let core = Arc::clone(&core);
+                let theta = &theta;
+                scope.spawn(move || {
+                    let mut counts = vec![0u64; n];
+                    let mut sess = ServingSession::open(&core, 95 + c as u64);
+                    let rep = sess
+                        .run_pipelined(theta, m, steps, 4 * m, |_, draws| {
+                            for d in draws {
+                                counts[d.index] += 1;
+                            }
+                            true
+                        })
+                        .unwrap();
+                    assert_eq!(rep.batches, steps);
+                    assert_eq!(rep.stale_rejected, 0);
+                    assert_eq!(
+                        sess.stats().fallbacks,
+                        0,
+                        "fallbacks would contaminate the distribution"
+                    );
+                    counts
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut counts = vec![0u64; n];
+    for pc in &per_client {
+        for (i, c) in pc.iter().enumerate() {
+            counts[i] += c;
+        }
+    }
+    for id in 45..60 {
+        assert_eq!(counts[id], 0, "a live session served dead row {id}");
+    }
+    assert_mixture_close(&p, &counts, clients * m * steps);
+    assert_eq!(core.counters().stale_rejected, 0, "zero stale-generation serves");
+
+    // flip under pinned readers
+    let mut pinned = ServingSession::open(&core, 4242);
+    for id in 100..130 {
+        assert!(core.remove(id).unwrap());
+    }
+    assert!(pinned.is_stale());
+    let mut out = Vec::new();
+    pinned.draw_batch(&theta, 64, &mut out); // every row is live *for its pin*
+    assert_eq!(out.len(), 64);
+    let p2 = exact_mixture_probs(&pre, &core.pin(), &theta);
+    let mut fresh = ServingSession::open(&core, 4243);
+    let mut counts2 = vec![0u64; n];
+    for _ in 0..80 {
+        fresh.draw_batch(&theta, 64, &mut out);
+        for d in &out {
+            counts2[d.index] += 1;
+        }
+    }
+    for id in 100..130 {
+        assert_eq!(p2[id], 0.0);
+        assert_eq!(counts2[id], 0, "fresh session served row {id}, dead in its generation");
+    }
+    assert!(pinned.refresh());
+    assert_eq!(pinned.generation(), core.generation());
+}
+
+/// Create/drop vs flip stress: six clients churn sessions (open → a few
+/// batches → drop, refreshing mid-life) while a writer interleaves
+/// insert/remove generation flips. Ids evicted before the churn starts and
+/// never re-admitted must never be served by any session, whatever
+/// generation it pinned; every aggregate counter adds up at the end.
+#[test]
+fn serving_session_churn_vs_generation_flips() {
+    let n = 200usize;
+    let ds = SynthSpec::power_law("serve-churn", n, 8, 83).generate().unwrap();
+    let pre = Arc::new(preprocess(ds, &PreprocessOptions::default()).unwrap());
+    let hd = pre.hashed.cols();
+    let core = ServingCore::build(
+        Arc::clone(&pre),
+        DenseSrp::new(hd, 3, 12, 85),
+        LgdOptions::default(),
+        2,
+    )
+    .unwrap();
+    // ids 170.. are dead in every generation the churn can observe
+    for id in 170..n {
+        assert!(core.remove(id).unwrap());
+    }
+    let base_flips = core.counters().flips;
+    let theta: Vec<f32> = (0..8).map(|j| 0.04 * (j as f32 - 3.0)).collect();
+    let writer_flips = 60u64;
+    std::thread::scope(|scope| {
+        let writer = {
+            let core = Arc::clone(&core);
+            scope.spawn(move || {
+                // churn the low ids: every generation keeps 170.. dead
+                for round in 0..writer_flips / 2 {
+                    let id = (round % 30) as usize;
+                    assert!(core.remove(id).unwrap());
+                    core.insert(id).unwrap();
+                }
+            })
+        };
+        let clients: Vec<_> = (0..6u64)
+            .map(|c| {
+                let core = Arc::clone(&core);
+                let theta = &theta;
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    for life in 0..20u64 {
+                        let mut sess = ServingSession::open(&core, c * 1000 + life);
+                        for batchno in 0..3 {
+                            sess.draw_batch(theta, 32, &mut out);
+                            assert_eq!(out.len(), 32);
+                            for d in &out {
+                                assert!(d.index < n);
+                                assert!(
+                                    d.index < 170,
+                                    "served id {} — dead in every generation",
+                                    d.index
+                                );
+                                assert!(d.weight > 0.0);
+                            }
+                            if batchno == 1 {
+                                sess.refresh();
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        writer.join().unwrap();
+        for h in clients {
+            h.join().unwrap();
+        }
+    });
+    let counters = core.counters();
+    assert_eq!(counters.flips, base_flips + writer_flips);
+    assert_eq!(counters.sessions, 6 * 20);
+    assert_eq!(counters.draws_served, 6 * 20 * 3 * 32);
+    assert_eq!(counters.stale_rejected, 0);
+    // the multi-client harness over the settled core still aggregates
+    let rep = run_harness(&core, 8, 10, 32, &theta, 9000).unwrap();
+    assert_eq!(rep.draws, 8 * 10 * 32);
+    assert_eq!(rep.stale_rejected, 0);
+    assert!(rep.draws_per_sec > 0.0);
 }
 
 /// CLI smoke: parse → train → CSV out, through the public binary surface.
