@@ -210,6 +210,7 @@ fn bench_sharded_draws() {
         let m = 32usize;
         let batches = if std::env::var("LGD_BENCH_FAST").is_ok() { 50 } else { 400 };
         let mut stale_total = 0u64;
+        let mut degraded_total = 0u64;
         for &clients in &[1usize, 2, 4, 8] {
             let rep = run_harness(&core, clients, batches, m, &theta, 37).unwrap();
             b.record(
@@ -218,8 +219,14 @@ fn bench_sharded_draws() {
             );
             b.note(&format!("draws_per_sec_clients{clients}"), rep.draws_per_sec);
             stale_total += rep.stale_rejected;
+            degraded_total += rep.degraded;
         }
         b.note("stale_candidates_rejected", stale_total as f64);
+        // Sessions that lost their sampler thread and fell back to
+        // synchronous draws. Like the stale counter this is pinned at 0:
+        // nothing in the bench arms a failpoint, so a nonzero value means a
+        // worker died on its own.
+        b.note("serve_degraded_sessions", degraded_total as f64);
     }
 
     b.report();

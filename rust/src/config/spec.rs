@@ -230,7 +230,7 @@ impl Default for DataConfig {
 }
 
 /// Snapshot-store block of a run config (`store::snapshot` persistence).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct StoreConfig {
     /// Snapshot path. When set, the trainer saves the full engine state
     /// here at the end of the run (and at the autosave cadence below);
@@ -245,6 +245,17 @@ pub struct StoreConfig {
     pub autosave_epochs: usize,
     /// Warm-start from `path` instead of building tables (CLI `--resume`).
     pub resume: bool,
+    /// Rotated snapshot generations kept on disk (1..=64). Autosaves shift
+    /// `path` → `path.1` → … → `path.{keep-1}` before writing, so a crash
+    /// mid-save (or a corrupt newest file) still leaves the previous
+    /// generation for `--resume`'s newest-valid-wins recovery scan.
+    pub keep: usize,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig { path: None, autosave_epochs: 0, resume: false, keep: 2 }
+    }
 }
 
 impl StoreConfig {
@@ -269,11 +280,29 @@ pub struct ServeConfig {
     /// TCP listen address (`host:port`) for the length-prefixed wire front.
     /// Empty = in-process harness only (the default; nothing listens).
     pub addr: String,
+    /// Connection-slot bound for the supervised TCP front (1..=4096). The
+    /// `max_clients + 1`-th concurrent connection gets a best-effort error
+    /// frame and is dropped, counted in `rejected_at_capacity`.
+    pub max_clients: usize,
+    /// Milliseconds a connection may sit idle between requests before the
+    /// server closes it (1..=3_600_000).
+    pub idle_timeout_ms: u64,
+    /// Milliseconds allowed for a single mid-frame read or write before the
+    /// connection is counted as errored and dropped (1..=3_600_000).
+    pub io_timeout_ms: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { clients: 4, batch: 32, requests: 200, addr: String::new() }
+        ServeConfig {
+            clients: 4,
+            batch: 32,
+            requests: 200,
+            addr: String::new(),
+            max_clients: 64,
+            idle_timeout_ms: 30_000,
+            io_timeout_ms: 5_000,
+        }
     }
 }
 
@@ -390,12 +419,19 @@ impl RunConfig {
         }
         cfg.store.autosave_epochs =
             doc.int_or("store", "autosave_epochs", cfg.store.autosave_epochs as i64)? as usize;
+        cfg.store.keep = doc.int_or("store", "keep", cfg.store.keep as i64)? as usize;
 
         // [serve]
         cfg.serve.clients = doc.int_or("serve", "clients", cfg.serve.clients as i64)? as usize;
         cfg.serve.batch = doc.int_or("serve", "batch", cfg.serve.batch as i64)? as usize;
         cfg.serve.requests = doc.int_or("serve", "requests", cfg.serve.requests as i64)? as usize;
         cfg.serve.addr = doc.str_or("serve", "addr", &cfg.serve.addr)?;
+        cfg.serve.max_clients =
+            doc.int_or("serve", "max_clients", cfg.serve.max_clients as i64)? as usize;
+        cfg.serve.idle_timeout_ms =
+            doc.int_or("serve", "idle_timeout_ms", cfg.serve.idle_timeout_ms as i64)? as u64;
+        cfg.serve.io_timeout_ms =
+            doc.int_or("serve", "io_timeout_ms", cfg.serve.io_timeout_ms as i64)? as u64;
 
         cfg.validate()?;
         Ok(cfg)
@@ -488,6 +524,26 @@ impl RunConfig {
         if self.serve.requests == 0 {
             return Err(Error::Config("serve.requests must be positive".into()));
         }
+        if self.store.keep == 0 || self.store.keep > 64 {
+            return Err(Error::Config(format!(
+                "store.keep = {} out of 1..=64",
+                self.store.keep
+            )));
+        }
+        if self.serve.max_clients == 0 || self.serve.max_clients > 4096 {
+            return Err(Error::Config(format!(
+                "serve.max_clients = {} out of 1..=4096",
+                self.serve.max_clients
+            )));
+        }
+        for (name, ms) in [
+            ("serve.idle_timeout_ms", self.serve.idle_timeout_ms),
+            ("serve.io_timeout_ms", self.serve.io_timeout_ms),
+        ] {
+            if ms == 0 || ms > 3_600_000 {
+                return Err(Error::Config(format!("{name} = {ms} out of 1..=3_600_000")));
+            }
+        }
         if !self.serve.addr.is_empty() && !self.serve.addr.contains(':') {
             return Err(Error::Config(format!(
                 "serve.addr = '{}' is not a host:port listen address",
@@ -523,16 +579,21 @@ mod tests {
         assert_eq!(cfg.store.autosave_epochs, 0);
         assert!(!cfg.store.resume);
         assert!(!cfg.store.is_active());
+        assert_eq!(cfg.store.keep, 2, "one rotated fallback generation by default");
         assert_eq!(cfg.serve.clients, 4);
         assert_eq!(cfg.serve.batch, 32);
         assert_eq!(cfg.serve.requests, 200);
         assert!(cfg.serve.addr.is_empty(), "no TCP front unless asked");
+        assert_eq!(cfg.serve.max_clients, 64);
+        assert_eq!(cfg.serve.idle_timeout_ms, 30_000);
+        assert_eq!(cfg.serve.io_timeout_ms, 5_000);
     }
 
     #[test]
     fn serve_block_parses_and_validates() {
         let doc = TomlDoc::parse(
-            "[serve]\nclients = 8\nbatch = 64\nrequests = 50\naddr = \"127.0.0.1:7979\"\n",
+            "[serve]\nclients = 8\nbatch = 64\nrequests = 50\naddr = \"127.0.0.1:7979\"\n\
+             max_clients = 16\nidle_timeout_ms = 1000\nio_timeout_ms = 250\n",
         )
         .unwrap();
         let cfg = RunConfig::from_toml(&doc).unwrap();
@@ -540,12 +601,19 @@ mod tests {
         assert_eq!(cfg.serve.batch, 64);
         assert_eq!(cfg.serve.requests, 50);
         assert_eq!(cfg.serve.addr, "127.0.0.1:7979");
+        assert_eq!(cfg.serve.max_clients, 16);
+        assert_eq!(cfg.serve.idle_timeout_ms, 1000);
+        assert_eq!(cfg.serve.io_timeout_ms, 250);
         for bad in [
             "[serve]\nclients = 0",
             "[serve]\nclients = 2000",
             "[serve]\nbatch = 0",
             "[serve]\nrequests = 0",
             "[serve]\naddr = \"nocolon\"",
+            "[serve]\nmax_clients = 0",
+            "[serve]\nmax_clients = 5000",
+            "[serve]\nidle_timeout_ms = 0",
+            "[serve]\nio_timeout_ms = 4000000",
         ] {
             let doc = TomlDoc::parse(bad).unwrap();
             assert!(RunConfig::from_toml(&doc).is_err(), "accepted bad config: {bad}");
@@ -555,16 +623,22 @@ mod tests {
     #[test]
     fn store_block_parses_and_validates() {
         let doc = TomlDoc::parse(
-            "[store]\npath = \"idx/run.lgdsnap\"\nautosave_epochs = 2\n",
+            "[store]\npath = \"idx/run.lgdsnap\"\nautosave_epochs = 2\nkeep = 3\n",
         )
         .unwrap();
         let cfg = RunConfig::from_toml(&doc).unwrap();
         assert_eq!(cfg.store.path.as_deref(), Some(std::path::Path::new("idx/run.lgdsnap")));
         assert_eq!(cfg.store.autosave_epochs, 2);
+        assert_eq!(cfg.store.keep, 3);
         assert!(cfg.store.is_active());
         // autosave without a path is rejected
         let doc = TomlDoc::parse("[store]\nautosave_epochs = 2\n").unwrap();
         assert!(RunConfig::from_toml(&doc).is_err());
+        // rotation depth is bounded
+        for bad in ["[store]\nkeep = 0", "[store]\nkeep = 100"] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(RunConfig::from_toml(&doc).is_err(), "accepted bad config: {bad}");
+        }
         // the store persists the LGD engine only
         let doc = TomlDoc::parse(
             "[store]\npath = \"x.lgdsnap\"\n[train]\nestimator = \"sgd\"\n",

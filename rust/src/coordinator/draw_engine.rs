@@ -57,6 +57,7 @@ use crate::estimator::{EstimatorStats, WeightedDraw};
 use crate::lsh::sampler::{SampleCost, Sampled};
 use crate::lsh::srp::SrpHasher;
 use crate::lsh::tables::BucketRead;
+use crate::testkit::faults;
 
 /// Tuning knobs of the async draw engine (`lsh.async_workers`,
 /// `lsh.queue_depth`).
@@ -71,21 +72,11 @@ pub struct DrawEngineConfig {
     /// candidate queue holds at most this many candidates, and at most
     /// `max(1, queue_depth / m)` assembled batches wait for the consumer.
     pub queue_depth: usize,
-    /// Fault injection (tests only): the per-shard sampler worker for this
-    /// shard panics while holding its queue mutex, exercising the poison
-    /// recovery + clean-session-error path end-to-end.
-    #[cfg(test)]
-    pub(crate) fail_worker: Option<usize>,
 }
 
 impl Default for DrawEngineConfig {
     fn default() -> Self {
-        DrawEngineConfig {
-            workers: 1,
-            queue_depth: 1024,
-            #[cfg(test)]
-            fail_worker: None,
-        }
+        DrawEngineConfig { workers: 1, queue_depth: 1024 }
     }
 }
 
@@ -164,6 +155,12 @@ impl<T> DrawQueue<T> {
 
     /// Blocking push. Returns false (dropping `v`) if the queue is closed.
     pub fn push(&self, v: T) -> bool {
+        if faults::should_fail(faults::QUEUE_PUSH) {
+            // A producer dying mid-push: panic holding the mutex so the
+            // poison-recovery path downstream is the real one.
+            let _poisoner = self.inner.lock();
+            panic!("failpoint: {}", faults::QUEUE_PUSH);
+        }
         let mut g = plock(&self.inner);
         while g.buf.len() >= g.cap && !g.closed {
             g = self.not_full.wait(g).unwrap_or_else(PoisonError::into_inner);
@@ -181,6 +178,11 @@ impl<T> DrawQueue<T> {
     /// drained. Counts a prefetch hit when an item was already waiting and
     /// a stall when this call had to block first.
     pub fn pop(&self) -> Option<T> {
+        if faults::should_fail(faults::QUEUE_POP) {
+            // The consumer observing a dead/closed queue: early `None`
+            // (never a panic — pop runs on consumer/main threads).
+            return None;
+        }
         let mut g = plock(&self.inner);
         let mut waited = false;
         loop {
@@ -435,8 +437,6 @@ where
         let cand_qs: Vec<DrawQueue<Candidate>> =
             (0..shard_count).map(|_| DrawQueue::new(cand_cap)).collect();
         let cand_qs = &cand_qs;
-        #[cfg(test)]
-        let fail_worker = cfg.fail_worker;
         let (mixer_res, worker_res, consumed) = thread::scope(|scope| {
             let bq = &batch_q;
             let mut workers = Vec::new();
@@ -446,8 +446,13 @@ where
                 }
                 workers.push(scope.spawn(move || {
                     let _guard = CloseGuard(&cand_qs[s]);
-                    #[cfg(test)]
-                    inject_worker_failure(fail_worker, s, &cand_qs[s]);
+                    if faults::should_fail_at(faults::WORKER_START, s as u64) {
+                        // Die while holding the queue mutex so it is
+                        // genuinely poisoned — the recovery path under
+                        // test is the real one, not a simulation.
+                        let _poisoner = cand_qs[s].inner.lock();
+                        panic!("failpoint: {} shard {s}", faults::WORKER_START);
+                    }
                     let sampler = shard_sampler(set.shard(s), opts);
                     // Per-shard RNG stream derived from (session, shard):
                     // candidate streams — and therefore the assembled
@@ -536,17 +541,6 @@ where
     parts.stats.prefetch_hits += hits;
     parts.stats.queue_stalls += stalls;
     Ok(SessionReport { prefetch_hits: hits, queue_stalls: stalls, generation: gen, ..report })
-}
-
-/// Test-only fault injection: kill shard worker `s` *while holding its
-/// queue mutex*, so the mutex is genuinely poisoned — the recovery path
-/// under test is the real one, not a simulation.
-#[cfg(test)]
-fn inject_worker_failure(fail: Option<usize>, s: usize, q: &DrawQueue<Candidate>) {
-    if fail == Some(s) {
-        let _poisoner = q.inner.lock();
-        panic!("draw-engine test: injected shard-worker failure");
-    }
 }
 
 #[cfg(test)]
@@ -798,38 +792,9 @@ mod tests {
         assert_eq!(q.pop(), None);
     }
 
-    /// The poisoning-cascade bugfix end-to-end: a shard worker killed
-    /// mid-session (while holding its queue mutex) must surface as a clean
-    /// `Error::Pipeline` from `run_session` — not a panic in the mixer or
-    /// the consumer — and the estimator must keep serving synchronous
-    /// draws afterwards.
-    #[test]
-    fn killed_worker_yields_clean_session_error_and_sync_draws_survive() {
-        let pre = setup(150, 8, 91);
-        let mut est = mk(&pre, 3);
-        let theta = vec![0.04f32; 8];
-        let cfg = DrawEngineConfig { workers: 3, queue_depth: 16, fail_worker: Some(1) };
-        let mut consumed = 0usize;
-        let res = run_session(&mut est, &cfg, &theta, 16, 5, |_, draws| {
-            assert_eq!(draws.len(), 16, "batches stay whole even with a dead worker");
-            consumed += 1;
-            true
-        });
-        match res {
-            Err(Error::Pipeline(msg)) => {
-                assert!(msg.contains("shard worker"), "unexpected error: {msg}")
-            }
-            other => panic!("expected a clean pipeline error, got {other:?}"),
-        }
-        assert_eq!(consumed, 5, "the dead shard degrades to fallbacks, not a hang");
-        // the estimator is intact: synchronous draws continue to work
-        let mut out = Vec::new();
-        est.draw_batch(&theta, 16, &mut out);
-        assert_eq!(out.len(), 16);
-        assert!(out.iter().all(|d| d.index < 150 && d.prob > 0.0));
-        // and a fresh (uninjected) session also works
-        let cfg = DrawEngineConfig { workers: 3, queue_depth: 16, ..Default::default() };
-        let rep = run_session(&mut est, &cfg, &theta, 16, 3, |_, _| true).unwrap();
-        assert_eq!(rep.batches, 3);
-    }
+    // The killed-worker end-to-end test (a shard worker dying while it
+    // holds its queue mutex surfaces as a clean `Error::Pipeline`, and
+    // synchronous draws survive) lives in `tests/chaos.rs`: it arms the
+    // real `WORKER_START` failpoint, and real sites must never be armed
+    // from the lib's parallel unit-test threads.
 }

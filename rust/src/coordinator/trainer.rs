@@ -496,7 +496,7 @@ fn maybe_autosave<H: SnapshotHasher>(
         optimizer: cfg.train.optimizer,
         optim: ctx.opt.export_state(),
     };
-    snapshot::save(path, est, Some(&ts))?;
+    snapshot::save_rotated(path, cfg.store.keep, est, Some(&ts))?;
     ctx.autosaves += 1;
     Ok(())
 }

@@ -20,7 +20,7 @@
 use std::path::{Path, PathBuf};
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use lgd::cli::Args;
 use lgd::config::spec::{Backend, RunConfig};
@@ -34,7 +34,7 @@ use lgd::data::preprocess::{preprocess, PreprocessOptions, Preprocessed};
 use lgd::estimator::GradientEstimator;
 use lgd::experiments::ExpOptions;
 use lgd::lsh::{AnyHasher, HasherVisitor};
-use lgd::runtime::{run_harness, serve_tcp, Runtime, ServingCore};
+use lgd::runtime::{run_harness, serve_supervised, Runtime, ServeOptions, ServingCore};
 use lgd::store::snapshot::{self, LoadedSnapshot, SnapshotHasher};
 
 const USAGE: &str = "\
@@ -44,7 +44,7 @@ USAGE:
   lgd train --config <run.toml> [--out <dir>] [--shards <n>]
             [--rebalance-threshold <f>] [--sealed <true|false>]
             [--async-workers <n>] [--queue-depth <n>] [--kernel <auto|scalar>]
-            [--snapshot <file.lgdsnap>] [--autosave-epochs <n>] [--resume]
+            [--snapshot <file.lgdsnap>] [--autosave-epochs <n>] [--keep <n>] [--resume]
   lgd snapshot save --config <run.toml> --out <file.lgdsnap>
                [--shards <n>] [--sealed <true|false>]
   lgd snapshot inspect --path <file.lgdsnap>
@@ -55,6 +55,7 @@ USAGE:
                --out <file.csv> [--scale <f>] [--seed <n>]
   lgd serve [--config <run.toml>] [--clients <n>] [--batch <m>] [--requests <n>]
             [--addr <host:port>] [--shards <n>] [--sealed <true|false>]
+            [--max-clients <n>] [--idle-timeout-ms <n>] [--io-timeout-ms <n>]
   lgd runtime-smoke [--artifacts <dir>]
   lgd help
 ";
@@ -92,7 +93,7 @@ fn run(argv: &[String]) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.allow(&[
         "config", "out", "shards", "rebalance-threshold", "sealed", "async-workers",
-        "queue-depth", "kernel", "snapshot", "autosave-epochs", "resume",
+        "queue-depth", "kernel", "snapshot", "autosave-epochs", "keep", "resume",
     ])?;
     let cfg_path = args.require("config")?;
     let doc = TomlDoc::load(std::path::Path::new(&cfg_path))?;
@@ -138,6 +139,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     if !args.str_or("autosave-epochs", "").is_empty() {
         cfg.store.autosave_epochs = args.usize_or("autosave-epochs", 0)?;
     }
+    if !args.str_or("keep", "").is_empty() {
+        cfg.store.keep = args.usize_or("keep", 2)?;
+    }
     // Accept both spellings: bare `--resume` and `--resume true|false`
     // (the sibling bool flags take values, so the valued form is an easy
     // reach — it must not silently fall through to a cold run that then
@@ -154,9 +158,23 @@ fn cmd_train(args: &Args) -> Result<()> {
     let (tr, te) = ds.split(cfg.data.train_frac, cfg.data.seed)?;
 
     let outcome = if cfg.store.resume {
-        let path = cfg.store.path.clone().expect("validated: resume requires a path");
+        let base = cfg.store.path.clone().expect("validated: resume requires a path");
         let t0 = Instant::now();
-        let snap = snapshot::load(&path)?;
+        // Newest-valid-wins: a crash mid-autosave (or a corrupt newest
+        // file) falls back to the previous rotated generation instead of
+        // refusing to start.
+        let rec = snapshot::recover(&base, cfg.store.keep)?;
+        if rec.slot > 0 {
+            println!(
+                "newest snapshot at {} is unreadable — falling back to rotated \
+                 generation {} ({} newer file(s) skipped)",
+                base.display(),
+                rec.path.display(),
+                rec.skipped
+            );
+        }
+        let path = rec.path;
+        let snap = rec.snap;
         // The test split above is regenerated from the [data] config while
         // the training rows come from the snapshot — if the config's
         // dataset drifted since the save, the reported test losses would be
@@ -495,7 +513,10 @@ impl<'a> HasherVisitor for ServeRun<'a> {
         let mut counts: Vec<usize> =
             [1usize, 2, 4, 8].into_iter().filter(|&c| c < cfg.serve.clients).collect();
         counts.push(cfg.serve.clients);
-        println!("{:>8} {:>12} {:>14} {:>12}", "clients", "draws", "draws/sec", "stale_rej");
+        println!(
+            "{:>8} {:>12} {:>14} {:>12} {:>10}",
+            "clients", "draws", "draws/sec", "stale_rej", "degraded"
+        );
         for &c in &counts {
             let rep = run_harness(
                 &core,
@@ -506,27 +527,46 @@ impl<'a> HasherVisitor for ServeRun<'a> {
                 cfg.train.seed,
             )?;
             println!(
-                "{:>8} {:>12} {:>14.0} {:>12}",
-                rep.clients, rep.draws, rep.draws_per_sec, rep.stale_rejected
+                "{:>8} {:>12} {:>14.0} {:>12} {:>10}",
+                rep.clients, rep.draws, rep.draws_per_sec, rep.stale_rejected, rep.degraded
             );
         }
 
         if !cfg.serve.addr.is_empty() {
             let listener = std::net::TcpListener::bind(&cfg.serve.addr)
                 .map_err(|e| Error::Io(format!("bind {}: {e}", cfg.serve.addr)))?;
-            println!("listening on {} — kill the process to stop", cfg.serve.addr);
+            let opts = ServeOptions {
+                max_clients: cfg.serve.max_clients,
+                idle_timeout: Duration::from_millis(cfg.serve.idle_timeout_ms),
+                io_timeout: Duration::from_millis(cfg.serve.io_timeout_ms),
+            };
+            println!(
+                "listening on {} (max {} clients, idle {}ms, io {}ms) — kill the \
+                 process to stop",
+                cfg.serve.addr,
+                opts.max_clients,
+                cfg.serve.idle_timeout_ms,
+                cfg.serve.io_timeout_ms
+            );
             // The CLI front runs until the process is killed; the stop flag
             // exists for embedders (tests flip it from another thread).
             let stop = AtomicBool::new(false);
-            let served = serve_tcp(&core, listener, &stop)?;
-            println!("served {served} draws over TCP");
+            let totals = serve_supervised(&core, listener, &stop, &opts)?;
+            println!(
+                "served {} draws over {} TCP connection(s) ({} errored, {} rejected \
+                 at capacity)",
+                totals.draws, totals.connections, totals.conn_errors, totals.rejected_at_capacity
+            );
         }
         Ok(())
     }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.allow(&["config", "clients", "batch", "requests", "addr", "shards", "sealed"])?;
+    args.allow(&[
+        "config", "clients", "batch", "requests", "addr", "shards", "sealed", "max-clients",
+        "idle-timeout-ms", "io-timeout-ms",
+    ])?;
     let mut cfg = match args.str_or("config", "").as_str() {
         "" => RunConfig::default(),
         path => RunConfig::from_toml(&TomlDoc::load(Path::new(path))?)?,
@@ -550,6 +590,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.lsh.shards = args.usize_or("shards", 1)?;
     }
     cfg.lsh.sealed = args.bool_or("sealed", cfg.lsh.sealed)?;
+    if !args.str_or("max-clients", "").is_empty() {
+        cfg.serve.max_clients = args.usize_or("max-clients", 64)?;
+    }
+    if !args.str_or("idle-timeout-ms", "").is_empty() {
+        cfg.serve.idle_timeout_ms = args.u64_or("idle-timeout-ms", 30_000)?;
+    }
+    if !args.str_or("io-timeout-ms", "").is_empty() {
+        cfg.serve.io_timeout_ms = args.u64_or("io-timeout-ms", 5_000)?;
+    }
     cfg.validate()?;
 
     let ds = build_dataset(&cfg.data.name, cfg.data.scale, cfg.data.seed)?;

@@ -13,8 +13,9 @@ pub use bert::BertSession;
 pub use executor::{lit_f32, lit_i32, to_f32, to_vec_f32, to_vec_u32, Runtime};
 pub use linear::PjrtLinear;
 pub use serving::{
-    run_harness, serve_tcp, HarnessReport, ServeClient, ServeReport, ServingCore,
-    ServingCounters, ServingSession,
+    run_harness, serve_supervised, serve_tcp, ClientOptions, HarnessReport, RetryClient,
+    RetryPolicy, ServeClient, ServeOptions, ServeReport, ServeTotals, ServingCore,
+    ServingCounters, ServingSession, WireStats,
 };
 
 use std::path::PathBuf;

@@ -36,10 +36,23 @@
 //! contract the serving determinism tests pin for {Vec, sealed} layouts
 //! across shard counts.
 //!
-//! A minimal wire front rides along: a length-prefixed (u32 LE) request/
-//! response protocol over `std::net` TCP ([`serve_tcp`]/[`ServeClient`]),
+//! A supervised wire front rides along: a length-prefixed (u32 LE)
+//! request/response protocol over `std::net` TCP
+//! ([`serve_supervised`]/[`ServeClient`]) with a bounded connection pool,
+//! per-connection idle/write deadlines and per-connection error isolation
+//! (a broken client becomes a counter, never the server's exit status),
 //! plus the in-process N-client harness ([`run_harness`]) the CLI's
 //! `lgd serve`, the `async_serving` example and `bench_runtime` all share.
+//!
+//! **Failure model** (see `docs/robustness.md`): a pipelined session whose
+//! sampler thread dies *degrades* — it replays what the consumer already
+//! saw from its own untouched RNG and finishes synchronously, so the
+//! delivered stream is identical to an undegraded run and the incident is
+//! a [`ServingCounters::degraded_sessions`] tick, not a lost session. On
+//! the client side, [`RetryClient`] reconnects with deterministic
+//! exponential backoff and fast-forwards the fresh seed-pinned server
+//! session past every already-consumed draw, keeping the resumed stream
+//! draw-for-draw identical.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -61,6 +74,7 @@ use crate::estimator::{EstimatorStats, WeightedDraw};
 use crate::lsh::sampler::Draw;
 use crate::lsh::srp::SrpHasher;
 use crate::lsh::tables::BucketRead;
+use crate::testkit::faults;
 
 /// Lock `m`, treating a poisoned mutex as live — the protected state (an
 /// `Arc` pointer or the writer token) is always structurally valid, same
@@ -88,6 +102,10 @@ pub struct ServingCounters {
     /// but counted so the "zero stale-generation serves" invariant is
     /// observed, not assumed (CI smoke-checks it stays 0).
     pub stale_rejected: u64,
+    /// Pipelined sessions whose sampler thread died and which fell back to
+    /// synchronous draws (the delivered stream stays identical — see
+    /// [`ServingSession::run_pipelined`]). 0 in healthy operation.
+    pub degraded_sessions: u64,
 }
 
 /// The shared read-only core of the serving engine: dataset + options +
@@ -108,6 +126,7 @@ pub struct ServingCore<H: SrpHasher> {
     sessions_opened: AtomicU64,
     draws_served: AtomicU64,
     stale_rejected: AtomicU64,
+    degraded_sessions: AtomicU64,
 }
 
 impl<H: SrpHasher> ServingCore<H> {
@@ -148,6 +167,7 @@ impl<H: SrpHasher> ServingCore<H> {
             sessions_opened: AtomicU64::new(0),
             draws_served: AtomicU64::new(0),
             stale_rejected: AtomicU64::new(0),
+            degraded_sessions: AtomicU64::new(0),
         }
     }
 
@@ -183,6 +203,11 @@ impl<H: SrpHasher> ServingCore<H> {
         F: FnOnce(&mut ShardSet<H>, &Preprocessed) -> Result<T>,
     {
         let _w = lock(&self.writer);
+        if faults::should_fail(faults::GENERATION_FLIP) {
+            // Before the clone: a failed flip publishes nothing and the
+            // previous generation keeps serving untouched.
+            return Err(Error::Pipeline("generation flip failed (failpoint)".into()));
+        }
         let mut next = ShardSet::clone(&self.pin());
         let out = f(&mut next, &self.pre)?;
         let gen = next.generation();
@@ -224,6 +249,7 @@ impl<H: SrpHasher> ServingCore<H> {
             sessions: self.sessions_opened.load(Ordering::Relaxed),
             draws_served: self.draws_served.load(Ordering::Relaxed),
             stale_rejected: self.stale_rejected.load(Ordering::Relaxed),
+            degraded_sessions: self.degraded_sessions.load(Ordering::Relaxed),
         }
     }
 }
@@ -244,6 +270,10 @@ pub struct ServeReport {
     pub stale_rejected: u64,
     /// Pinned generation the session served.
     pub generation: u64,
+    /// True when the sampler thread died and the session fell back to
+    /// synchronous draws (the delivered stream is still identical to an
+    /// undegraded run).
+    pub degraded: bool,
 }
 
 /// One assembled batch, tagged with the generation it was drawn under.
@@ -265,25 +295,29 @@ impl Drop for Closer<'_> {
 /// Pop batches off `q` and hand live-generation ones to the consumer,
 /// dropping (and counting) stale-tagged batches, until `steps` batches
 /// were delivered, the callback stops, or the producer died. Closes `q`
-/// on every exit path.
+/// on every exit path. Returns `(delivered, stopped)` — `stopped` is true
+/// only when the *callback* ended the run, which is what lets the degraded
+/// fallback tell "the consumer is done" apart from "the producer died".
 fn deliver_batches<F>(
     q: &DrawQueue<GenBatch>,
     gen: u64,
     steps: usize,
     stale: &mut u64,
     on_batch: &mut F,
-) -> usize
+) -> (usize, bool)
 where
     F: FnMut(usize, &[WeightedDraw]) -> bool,
 {
     let guard = Closer(q);
     let mut delivered = 0usize;
+    let mut stopped = false;
     while delivered < steps {
         match q.pop() {
             Some(b) if b.gen == gen => {
                 let go = on_batch(delivered, &b.draws);
                 delivered += 1;
                 if !go {
+                    stopped = true;
                     break;
                 }
             }
@@ -292,7 +326,7 @@ where
         }
     }
     drop(guard);
-    delivered
+    (delivered, stopped)
 }
 
 /// One client's view of a [`ServingCore`]: a pinned generation plus all
@@ -434,10 +468,13 @@ impl<H: SrpHasher> ServingSession<H> {
         let prod_rng = self.rng.clone();
         let q: DrawQueue<GenBatch> = DrawQueue::new((queue_depth / m).max(1));
         let mut stale = 0u64;
-        let (prod_res, delivered) = thread::scope(|scope| {
+        let (prod_res, (mut delivered, stopped)) = thread::scope(|scope| {
             let qr = &q;
             let producer = scope.spawn(move || {
                 let _close = Closer(qr);
+                if faults::should_fail_at(faults::WORKER_START, 0) {
+                    panic!("failpoint: {}", faults::WORKER_START);
+                }
                 let mut rng = prod_rng;
                 let mut st = EstimatorStats::default();
                 let mut scratch = Vec::new();
@@ -464,11 +501,66 @@ impl<H: SrpHasher> ServingSession<H> {
             let delivered = deliver_batches(&q, gen, steps, &mut stale, &mut on_batch);
             (producer.join(), delivered)
         });
-        let (rng_back, prod_stats) =
-            prod_res.map_err(|_| Error::Pipeline("serving sampler thread panicked".into()))?;
-        self.rng = rng_back;
-        let draws = prod_stats.draws;
-        self.stats.merge_draws(&prod_stats);
+        let mut degraded = false;
+        let draws;
+        match prod_res {
+            Ok((rng_back, prod_stats)) => {
+                self.rng = rng_back;
+                draws = prod_stats.draws;
+                self.stats.merge_draws(&prod_stats);
+            }
+            Err(_) => {
+                // Degraded mode: the sampler thread died, taking its RNG
+                // clone and counters with it. The session's own RNG is
+                // untouched, so replay the `delivered` batches from it —
+                // regenerating exactly the stream (and the stats) the
+                // consumer already saw; the producer's discarded partial
+                // work never reached anyone — then finish the remaining
+                // steps synchronously. The delivered stream is identical
+                // to an undegraded run, draw-for-draw.
+                degraded = true;
+                self.core.degraded_sessions.fetch_add(1, Ordering::Relaxed);
+                let mut buf = Vec::with_capacity(m);
+                for _ in 0..delivered {
+                    mixture_draw_batch(
+                        &self.set,
+                        n,
+                        &self.opts,
+                        &self.codes,
+                        &self.query,
+                        m,
+                        &mut self.rng,
+                        &mut self.stats,
+                        &mut self.scratch,
+                        &mut buf,
+                    );
+                }
+                let mut assembled = (delivered * m) as u64;
+                if !stopped {
+                    while delivered < steps {
+                        mixture_draw_batch(
+                            &self.set,
+                            n,
+                            &self.opts,
+                            &self.codes,
+                            &self.query,
+                            m,
+                            &mut self.rng,
+                            &mut self.stats,
+                            &mut self.scratch,
+                            &mut buf,
+                        );
+                        assembled += m as u64;
+                        let go = on_batch(delivered, &buf);
+                        delivered += 1;
+                        if !go {
+                            break;
+                        }
+                    }
+                }
+                draws = assembled;
+            }
+        }
         let (hits, stalls) = q.counters();
         self.stats.prefetch_hits += hits;
         self.stats.queue_stalls += stalls;
@@ -483,6 +575,7 @@ impl<H: SrpHasher> ServingSession<H> {
             queue_stalls: stalls,
             stale_rejected: stale,
             generation: gen,
+            degraded,
         })
     }
 }
@@ -504,6 +597,8 @@ pub struct HarnessReport {
     pub draws_per_sec: f64,
     /// Stale-generation batch rejects across clients (expected 0).
     pub stale_rejected: u64,
+    /// Client sessions that fell back to synchronous draws (expected 0).
+    pub degraded: u64,
     /// Generation the clients served.
     pub generation: u64,
 }
@@ -542,11 +637,13 @@ pub fn run_harness<H: SrpHasher>(
     let wall = t0.elapsed().as_secs_f64();
     let mut draws = 0u64;
     let mut stale = 0u64;
+    let mut degraded = 0u64;
     let mut gen = 0u64;
     for r in results {
         let rep = r.map_err(|_| Error::Pipeline("serving client thread panicked".into()))??;
         draws += (rep.batches * m) as u64;
         stale += rep.stale_rejected;
+        degraded += rep.degraded as u64;
         gen = rep.generation;
     }
     Ok(HarnessReport {
@@ -557,6 +654,7 @@ pub fn run_harness<H: SrpHasher>(
         wall_secs: wall,
         draws_per_sec: draws as f64 / wall.max(1e-12),
         stale_rejected: stale,
+        degraded,
         generation: gen,
     })
 }
@@ -567,9 +665,11 @@ pub fn run_harness<H: SrpHasher>(
 //   request  = HELLO(op=1, magic u32, version u32, seed u64)
 //            | DRAW (op=2, m u32, dim u32, theta f32×dim)
 //            | BYE  (op=3)
+//            | STATS(op=4) — allowed before HELLO
 //   response = ok:  status=0 + HELLO → generation u64
 //                              DRAW  → generation u64, count u32,
 //                                      (index u32, weight f64, prob f64)×count
+//                              STATS → 8×u64 (see WireStats)
 //              err: status=1 + utf-8 message
 // ---------------------------------------------------------------------------
 
@@ -581,6 +681,7 @@ pub const WIRE_VERSION: u32 = 1;
 const OP_HELLO: u8 = 1;
 const OP_DRAW: u8 = 2;
 const OP_BYE: u8 = 3;
+const OP_STATS: u8 = 4;
 const ST_OK: u8 = 0;
 const ST_ERR: u8 = 1;
 /// Frame size ceiling (16 MiB) — refuse anything larger before allocating.
@@ -635,6 +736,9 @@ impl<'a> Reader<'a> {
 }
 
 fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if faults::should_fail(faults::TCP_WRITE) {
+        return Err(Error::Pipeline("serving wire: write failpoint".into()));
+    }
     if payload.len() as u64 > MAX_FRAME as u64 {
         return Err(Error::Pipeline(format!(
             "serving wire: frame of {} bytes exceeds the {MAX_FRAME}-byte ceiling",
@@ -649,6 +753,9 @@ fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
 /// Blocking frame read (client side). `Ok(None)` on clean EOF before the
 /// header.
 fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    if faults::should_fail_at(faults::TCP_READ, faults::SIDE_CLIENT) {
+        return Err(Error::Pipeline("serving wire: read failpoint".into()));
+    }
     let mut lb = [0u8; 4];
     match r.read_exact(&mut lb) {
         Ok(()) => {}
@@ -665,10 +772,20 @@ fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
 }
 
 /// Fill `buf` from the stream, tolerating read-timeout polls (the server
-/// sets a timeout so handlers can notice the stop flag). `Ok(None)` =
-/// clean end: EOF before any byte (between frames), or the stop flag went
-/// up while nothing was in flight.
-fn read_full(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> Result<Option<()>> {
+/// sets a short timeout so handlers can notice the stop flag). `Ok(None)`
+/// = clean end: EOF before any byte (between frames), the stop flag going
+/// up, or the `deadline` expiring, all while nothing was in flight; a
+/// deadline that expires *mid-frame* is an error.
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    deadline: Option<Duration>,
+) -> Result<Option<()>> {
+    if faults::should_fail_at(faults::TCP_READ, faults::SIDE_SERVER) {
+        return Err(Error::Pipeline("serving wire: read failpoint".into()));
+    }
+    let start = Instant::now();
     let mut got = 0usize;
     while got < buf.len() {
         match stream.read(&mut buf[got..]) {
@@ -686,6 +803,16 @@ fn read_full(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> Resul
                 if stop.load(Ordering::Relaxed) && got == 0 {
                     return Ok(None);
                 }
+                if let Some(d) = deadline {
+                    if start.elapsed() >= d {
+                        if got == 0 {
+                            return Ok(None);
+                        }
+                        return Err(Error::Pipeline(
+                            "serving wire: read deadline exceeded mid-frame".into(),
+                        ));
+                    }
+                }
             }
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
             Err(e) => return Err(io_err(e)),
@@ -701,23 +828,76 @@ fn err_payload(msg: &str) -> Vec<u8> {
     p
 }
 
+/// Knobs of the supervised TCP front ([`serve_supervised`]).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Connection-pool bound: accepts beyond this many live connections
+    /// answer an error frame and close (counted in
+    /// [`ServeTotals::rejected_at_capacity`]); they never spawn a handler.
+    pub max_clients: usize,
+    /// Idle deadline: a connection that sends nothing for this long
+    /// between frames is closed cleanly.
+    pub idle_timeout: Duration,
+    /// Per-frame I/O deadline: a request that stalls mid-frame or a
+    /// response write that cannot make progress for this long fails the
+    /// connection (counted, isolated).
+    pub io_timeout: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_clients: 64,
+            idle_timeout: Duration::from_secs(30),
+            io_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Per-listener counters shared between the accept loop and the handlers.
+#[derive(Default)]
+struct ServeState {
+    draws: AtomicU64,
+    connections: AtomicU64,
+    conn_errors: AtomicU64,
+    rejected_at_capacity: AtomicU64,
+}
+
+/// What one [`serve_supervised`] run did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeTotals {
+    /// Draws served across all connections.
+    pub draws: u64,
+    /// Connections accepted into the pool.
+    pub connections: u64,
+    /// Connections that ended in an I/O error or handler panic (isolated —
+    /// the server kept running).
+    pub conn_errors: u64,
+    /// Connections turned away because the pool was full.
+    pub rejected_at_capacity: u64,
+}
+
 /// Handle one client connection: HELLO opens the session, DRAWs stream
-/// batches, BYE (or EOF) ends it. Returns draws served on this
-/// connection. Protocol violations get an error frame, then the
-/// connection closes — they never take the server down.
+/// batches, STATS reads the server counters, BYE (or EOF, or the idle
+/// deadline) ends it. Returns draws served on this connection. Protocol
+/// violations get an error frame, then the connection closes — they never
+/// take the server down.
 fn handle_conn<H: SrpHasher>(
     core: &Arc<ServingCore<H>>,
     mut stream: TcpStream,
     stop: &AtomicBool,
+    opts: &ServeOptions,
+    state: &ServeState,
 ) -> Result<u64> {
     stream.set_read_timeout(Some(Duration::from_millis(100))).map_err(io_err)?;
+    stream.set_write_timeout(Some(opts.io_timeout)).map_err(io_err)?;
     stream.set_nodelay(true).ok();
     let mut session: Option<ServingSession<H>> = None;
     let mut served = 0u64;
     let mut draws: Vec<WeightedDraw> = Vec::new();
     loop {
         let mut lb = [0u8; 4];
-        if read_full(&mut stream, &mut lb, stop)?.is_none() {
+        if read_full(&mut stream, &mut lb, stop, Some(opts.idle_timeout))?.is_none() {
             return Ok(served);
         }
         let len = u32::from_le_bytes(lb);
@@ -726,7 +906,7 @@ fn handle_conn<H: SrpHasher>(
             return Ok(served);
         }
         let mut payload = vec![0u8; len as usize];
-        if read_full(&mut stream, &mut payload, stop)?.is_none() {
+        if read_full(&mut stream, &mut payload, stop, Some(opts.io_timeout))?.is_none() {
             return Ok(served);
         }
         // Decode + dispatch; a malformed frame answers with an error
@@ -761,6 +941,12 @@ fn handle_conn<H: SrpHasher>(
                     if m == 0 || m > MAX_DRAWS_PER_REQUEST {
                         return Err(Error::Pipeline(format!("serving wire: bad draw count {m}")));
                     }
+                    let want = core.pre.data.dim();
+                    if dim != want {
+                        return Err(Error::Pipeline(format!(
+                            "serving wire: DRAW dim {dim} does not match the dataset dim {want}"
+                        )));
+                    }
                     let theta = r.f32s(dim)?;
                     let sess = session
                         .as_mut()
@@ -779,6 +965,27 @@ fn handle_conn<H: SrpHasher>(
                     write_frame(&mut stream, &p)?;
                     Ok(true)
                 }
+                OP_STATS => {
+                    // Allowed before HELLO: health checks don't need a
+                    // session.
+                    let c = core.counters();
+                    let mut p = Vec::with_capacity(1 + 8 * 8);
+                    p.push(ST_OK);
+                    for v in [
+                        c.flips,
+                        c.sessions,
+                        c.draws_served,
+                        c.stale_rejected,
+                        c.degraded_sessions,
+                        state.connections.load(Ordering::Relaxed),
+                        state.conn_errors.load(Ordering::Relaxed),
+                        state.rejected_at_capacity.load(Ordering::Relaxed),
+                    ] {
+                        p.extend_from_slice(&v.to_le_bytes());
+                    }
+                    write_frame(&mut stream, &p)?;
+                    Ok(true)
+                }
                 OP_BYE => Ok(false),
                 op => Err(Error::Pipeline(format!("serving wire: unknown op {op}"))),
             }
@@ -794,57 +1001,135 @@ fn handle_conn<H: SrpHasher>(
     }
 }
 
-/// Serve the core over TCP: accept connections until `stop` goes up, one
-/// handler thread per connection (each with its own [`ServingSession`]).
-/// Returns the total draws served. The listener is polled non-blocking so
-/// the stop flag is honored promptly; handlers notice it within their
-/// read-timeout tick once their client goes quiet.
-pub fn serve_tcp<H: SrpHasher>(
+/// Serve the core over TCP under supervision: accept connections until
+/// `stop` goes up, one handler thread per connection (each with its own
+/// [`ServingSession`]), with the pool bounded at `opts.max_clients` live
+/// connections — excess accepts answer an error frame and close. A
+/// connection that errors (broken pipe, stalled frame, handler panic)
+/// becomes a [`ServeTotals::conn_errors`] tick, never the server's exit
+/// status: `Err` is reserved for listener/accept failures. On stop the
+/// accept loop drains gracefully — every live handler is joined (each
+/// notices the flag within its read-timeout tick once its client goes
+/// quiet).
+pub fn serve_supervised<H: SrpHasher>(
     core: &Arc<ServingCore<H>>,
     listener: TcpListener,
     stop: &AtomicBool,
-) -> Result<u64> {
+    opts: &ServeOptions,
+) -> Result<ServeTotals> {
     listener.set_nonblocking(true).map_err(io_err)?;
-    let total = AtomicU64::new(0);
-    let mut first_err: Option<Error> = None;
+    let state = ServeState::default();
+    let mut listen_err: Option<Error> = None;
     thread::scope(|scope| {
-        let mut handlers = Vec::new();
+        let st = &state;
+        let mut handlers: Vec<thread::ScopedJoinHandle<'_, ()>> = Vec::new();
         while !stop.load(Ordering::Relaxed) {
             match listener.accept() {
-                Ok((stream, _addr)) => {
-                    let totalr = &total;
-                    handlers.push(scope.spawn(move || -> Result<()> {
-                        let served = handle_conn(core, stream, stop)?;
-                        totalr.fetch_add(served, Ordering::Relaxed);
-                        Ok(())
+                Ok((mut stream, _addr)) => {
+                    // Reap finished handlers first so the pool bound
+                    // tracks *live* connections, not historical ones.
+                    let mut i = 0;
+                    while i < handlers.len() {
+                        if handlers[i].is_finished() {
+                            if handlers.swap_remove(i).join().is_err() {
+                                st.conn_errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    if handlers.len() >= opts.max_clients {
+                        st.rejected_at_capacity.fetch_add(1, Ordering::Relaxed);
+                        let _ = write_frame(&mut stream, &err_payload("server at capacity"));
+                        continue;
+                    }
+                    st.connections.fetch_add(1, Ordering::Relaxed);
+                    handlers.push(scope.spawn(move || {
+                        match handle_conn(core, stream, stop, opts, st) {
+                            Ok(served) => {
+                                st.draws.fetch_add(served, Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                st.conn_errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
                     }));
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     thread::sleep(Duration::from_millis(5));
                 }
                 Err(e) => {
-                    first_err = Some(io_err(e));
+                    listen_err = Some(io_err(e));
                     break;
                 }
             }
         }
         for h in handlers {
-            match h.join() {
-                Ok(Ok(())) => {}
-                Ok(Err(e)) => {
-                    first_err.get_or_insert(e);
-                }
-                Err(_) => {
-                    let dead = Error::Pipeline("serving connection handler panicked".into());
-                    first_err.get_or_insert(dead);
-                }
+            if h.join().is_err() {
+                st.conn_errors.fetch_add(1, Ordering::Relaxed);
             }
         }
     });
-    match first_err {
+    match listen_err {
         Some(e) => Err(e),
-        None => Ok(total.load(Ordering::Relaxed)),
+        None => Ok(ServeTotals {
+            draws: state.draws.load(Ordering::Relaxed),
+            connections: state.connections.load(Ordering::Relaxed),
+            conn_errors: state.conn_errors.load(Ordering::Relaxed),
+            rejected_at_capacity: state.rejected_at_capacity.load(Ordering::Relaxed),
+        }),
     }
+}
+
+/// [`serve_supervised`] with default [`ServeOptions`], returning just the
+/// draws served — the original front's signature, kept for callers that
+/// don't need the totals.
+pub fn serve_tcp<H: SrpHasher>(
+    core: &Arc<ServingCore<H>>,
+    listener: TcpListener,
+    stop: &AtomicBool,
+) -> Result<u64> {
+    serve_supervised(core, listener, stop, &ServeOptions::default()).map(|t| t.draws)
+}
+
+/// Client-side socket deadlines — the knobs that keep a [`ServeClient`]
+/// from hanging forever on a stalled or dead server.
+#[derive(Debug, Clone)]
+pub struct ClientOptions {
+    /// TCP connect deadline (`None` = the OS default blocking connect).
+    pub connect_timeout: Option<Duration>,
+    /// Read/write deadline per frame (`None` = block forever).
+    pub io_timeout: Option<Duration>,
+}
+
+impl Default for ClientOptions {
+    fn default() -> Self {
+        ClientOptions {
+            connect_timeout: Some(Duration::from_secs(5)),
+            io_timeout: Some(Duration::from_secs(5)),
+        }
+    }
+}
+
+/// Aggregate server-side counters returned by the wire `STATS` op.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// Generation publications.
+    pub flips: u64,
+    /// Sessions opened against the core.
+    pub sessions: u64,
+    /// Draws delivered across all sessions.
+    pub draws_served: u64,
+    /// Stale-generation batch rejects (expected 0).
+    pub stale_rejected: u64,
+    /// Sessions that fell back to synchronous draws (expected 0).
+    pub degraded_sessions: u64,
+    /// Connections accepted into the pool.
+    pub connections: u64,
+    /// Connections that ended in an isolated error.
+    pub conn_errors: u64,
+    /// Connections turned away at the pool bound.
+    pub rejected_at_capacity: u64,
 }
 
 /// Client half of the wire protocol.
@@ -855,10 +1140,48 @@ pub struct ServeClient {
 }
 
 impl ServeClient {
-    /// Connect and HELLO with `seed` (the server opens a session whose
-    /// draw stream is pinned by that seed).
+    /// [`Self::connect_with`] under the default [`ClientOptions`] (5 s
+    /// connect and per-frame deadlines).
     pub fn connect(addr: impl ToSocketAddrs, seed: u64) -> Result<Self> {
-        let mut stream = TcpStream::connect(addr).map_err(io_err)?;
+        Self::connect_with(addr, seed, &ClientOptions::default())
+    }
+
+    /// Connect and HELLO with `seed` (the server opens a session whose
+    /// draw stream is pinned by that seed), under explicit deadlines.
+    pub fn connect_with(
+        addr: impl ToSocketAddrs,
+        seed: u64,
+        opts: &ClientOptions,
+    ) -> Result<Self> {
+        let mut stream = match opts.connect_timeout {
+            Some(d) => {
+                let mut last: Option<std::io::Error> = None;
+                let mut found: Option<TcpStream> = None;
+                for a in addr.to_socket_addrs().map_err(io_err)? {
+                    match TcpStream::connect_timeout(&a, d) {
+                        Ok(s) => {
+                            found = Some(s);
+                            break;
+                        }
+                        Err(e) => last = Some(e),
+                    }
+                }
+                match found {
+                    Some(s) => s,
+                    None => {
+                        return Err(match last {
+                            Some(e) => io_err(e),
+                            None => Error::Pipeline(
+                                "serving wire: address resolved to nothing".into(),
+                            ),
+                        })
+                    }
+                }
+            }
+            None => TcpStream::connect(&addr).map_err(io_err)?,
+        };
+        stream.set_read_timeout(opts.io_timeout).map_err(io_err)?;
+        stream.set_write_timeout(opts.io_timeout).map_err(io_err)?;
         stream.set_nodelay(true).ok();
         let mut p = Vec::with_capacity(17);
         p.push(OP_HELLO);
@@ -905,9 +1228,153 @@ impl ServeClient {
         Ok((generation, draws))
     }
 
+    /// Fetch the server's aggregate counters (allowed before HELLO).
+    pub fn stats(&mut self) -> Result<WireStats> {
+        write_frame(&mut self.stream, &[OP_STATS])?;
+        let resp = read_frame(&mut self.stream)?
+            .ok_or_else(|| Error::Pipeline("serving wire: server closed during STATS".into()))?;
+        let mut r = Reader::new(&resp);
+        if r.u8()? != ST_OK {
+            return Err(Error::Pipeline(format!("serving server error: {}", r.rest_str())));
+        }
+        Ok(WireStats {
+            flips: r.u64()?,
+            sessions: r.u64()?,
+            draws_served: r.u64()?,
+            stale_rejected: r.u64()?,
+            degraded_sessions: r.u64()?,
+            connections: r.u64()?,
+            conn_errors: r.u64()?,
+            rejected_at_capacity: r.u64()?,
+        })
+    }
+
     /// Polite goodbye (the server also handles a plain disconnect).
     pub fn bye(mut self) -> Result<()> {
         write_frame(&mut self.stream, &[OP_BYE])
+    }
+}
+
+/// Deterministic exponential-backoff schedule for [`RetryClient`].
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Reconnect attempts per draw beyond the first try.
+    pub max_retries: u32,
+    /// Backoff before retry `k` (0-based) is `min(base · 2^k, max)`.
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(500),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The deterministic backoff before retry `attempt` (0-based) — no
+    /// jitter, so retry schedules are reproducible in tests.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        self.base_backoff
+            .checked_mul(1u32 << attempt.min(16))
+            .map_or(self.max_backoff, |d| d.min(self.max_backoff))
+    }
+}
+
+/// A [`ServeClient`] that survives connection failures: on an I/O error
+/// it backs off (per the deterministic policy schedule), reconnects with
+/// the **same seed**, and fast-forwards — re-issuing every previously
+/// consumed draw against the fresh server session and discarding the
+/// responses. Server sessions are seed-pinned and die with their
+/// connection, so the replayed session walks the identical RNG stream and
+/// the resumed stream is draw-for-draw what an uninterrupted client would
+/// have seen.
+pub struct RetryClient {
+    addr: String,
+    seed: u64,
+    opts: ClientOptions,
+    policy: RetryPolicy,
+    inner: ServeClient,
+    /// Every consumed request `(theta, m)`, in order — the fast-forward
+    /// script a reconnect replays.
+    history: Vec<(Vec<f32>, usize)>,
+    retries: u64,
+    /// Generation the live connection reported at HELLO.
+    pub generation: u64,
+}
+
+impl RetryClient {
+    /// Connect and HELLO with `seed`, remembering `addr` for reconnects.
+    pub fn connect(
+        addr: &str,
+        seed: u64,
+        opts: ClientOptions,
+        policy: RetryPolicy,
+    ) -> Result<Self> {
+        let inner = ServeClient::connect_with(addr, seed, &opts)?;
+        let generation = inner.generation;
+        Ok(RetryClient {
+            addr: addr.to_string(),
+            seed,
+            opts,
+            policy,
+            inner,
+            history: Vec::new(),
+            retries: 0,
+            generation,
+        })
+    }
+
+    /// Reconnects performed so far.
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    fn reconnect(&mut self) -> Result<()> {
+        let mut fresh = ServeClient::connect_with(self.addr.as_str(), self.seed, &self.opts)?;
+        // Fast-forward: the fresh seed-pinned session replays the stream
+        // from the top; burn through everything already consumed.
+        for (theta, m) in &self.history {
+            fresh.draw(theta, *m)?;
+        }
+        self.generation = fresh.generation;
+        self.inner = fresh;
+        Ok(())
+    }
+
+    /// Like [`ServeClient::draw`], with reconnect-and-fast-forward on
+    /// failure. Gives up (returning the last error) after the policy's
+    /// retry budget.
+    pub fn draw(&mut self, theta: &[f32], m: usize) -> Result<(u64, Vec<WeightedDraw>)> {
+        let mut last: Option<Error> = None;
+        for attempt in 0..=self.policy.max_retries {
+            if attempt > 0 {
+                thread::sleep(self.policy.backoff(attempt - 1));
+                self.retries += 1;
+                if let Err(e) = self.reconnect() {
+                    last = Some(e);
+                    continue;
+                }
+            }
+            match self.inner.draw(theta, m) {
+                Ok(out) => {
+                    self.history.push((theta.to_vec(), m));
+                    return Ok(out);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| Error::Pipeline("serving wire: retries exhausted".into())))
+    }
+
+    /// Polite goodbye on the live connection.
+    pub fn bye(self) -> Result<()> {
+        self.inner.bye()
     }
 }
 
@@ -1061,13 +1528,22 @@ mod tests {
         q.close();
         let mut stale = 0u64;
         let mut delivered_draws = 0usize;
-        let delivered = deliver_batches(&q, 3, 10, &mut stale, &mut |_, draws| {
+        let (delivered, stopped) = deliver_batches(&q, 3, 10, &mut stale, &mut |_, draws| {
             delivered_draws += draws.len();
             true
         });
         assert_eq!(delivered, 3, "three live-generation batches");
         assert_eq!(stale, 2, "two foreign-generation batches rejected");
         assert_eq!(delivered_draws, 12);
+        assert!(!stopped, "the queue drained; the callback never said stop");
+        // a callback stop is reported as such
+        let q2: DrawQueue<GenBatch> = DrawQueue::new(4);
+        assert!(q2.push(GenBatch { gen: 1, draws: vec![d; 2] }));
+        assert!(q2.push(GenBatch { gen: 1, draws: vec![d; 2] }));
+        q2.close();
+        let (delivered, stopped) = deliver_batches(&q2, 1, 10, &mut stale, &mut |_, _| false);
+        assert_eq!(delivered, 1);
+        assert!(stopped, "the callback ended the run");
     }
 
     /// The harness aggregates across clients and observes zero stale
@@ -1153,5 +1629,205 @@ mod tests {
         assert_eq!(sess.stats().fallbacks, 16);
         let rep = run_harness(&core, 2, 2, 8, &[0.1; 6], 3).unwrap();
         assert_eq!(rep.draws, 2 * 2 * 8);
+    }
+
+    /// Wire-protocol torture under the supervised front: mid-frame
+    /// disconnects, oversized length headers, truncated DRAW payloads,
+    /// DRAW before HELLO, and out-of-range dims all answer (or close)
+    /// cleanly — and a healthy client still gets served afterwards. None
+    /// of it surfaces as a server error: `Err` is reserved for the
+    /// listener.
+    #[test]
+    fn wire_torture_cases_never_take_the_server_down() {
+        let d = 6usize;
+        let pre = setup(100, d, 91);
+        let core = mk_core(&pre, 2, true);
+        let theta = vec![0.05f32; d];
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = AtomicBool::new(false);
+        let opts = ServeOptions { idle_timeout: Duration::from_millis(600), ..Default::default() };
+        thread::scope(|scope| {
+            let corer = &core;
+            let stopr = &stop;
+            let optsr = &opts;
+            let server = scope.spawn(move || serve_supervised(corer, listener, stopr, optsr));
+
+            // mid-frame disconnect: a header promising 100 bytes, then 3
+            // bytes, then gone
+            let mut raw = TcpStream::connect(addr).unwrap();
+            raw.write_all(&100u32.to_le_bytes()).unwrap();
+            raw.write_all(&[1, 2, 3]).unwrap();
+            drop(raw);
+
+            // oversized length header: answered with an error frame
+            let mut raw = TcpStream::connect(addr).unwrap();
+            raw.write_all(&(MAX_FRAME + 1).to_le_bytes()).unwrap();
+            let resp = read_frame(&mut raw).unwrap().unwrap();
+            assert_eq!(resp[0], ST_ERR, "oversized header must answer an error frame");
+            drop(raw);
+
+            // truncated DRAW payload: dim claims the full width, the
+            // frame carries only 2 floats
+            let client = ServeClient::connect(addr, 5).unwrap();
+            let mut stream = client.stream;
+            let mut p = vec![OP_DRAW];
+            p.extend_from_slice(&4u32.to_le_bytes());
+            p.extend_from_slice(&(d as u32).to_le_bytes());
+            p.extend_from_slice(&0.5f32.to_le_bytes());
+            p.extend_from_slice(&0.5f32.to_le_bytes());
+            write_frame(&mut stream, &p).unwrap();
+            let resp = read_frame(&mut stream).unwrap().unwrap();
+            assert_eq!(resp[0], ST_ERR, "truncated payload must answer an error frame");
+            drop(stream);
+
+            // DRAW before HELLO
+            let mut raw = TcpStream::connect(addr).unwrap();
+            let mut p = vec![OP_DRAW];
+            p.extend_from_slice(&8u32.to_le_bytes());
+            p.extend_from_slice(&(d as u32).to_le_bytes());
+            p.extend_from_slice(&vec![0u8; 4 * d]);
+            write_frame(&mut raw, &p).unwrap();
+            let resp = read_frame(&mut raw).unwrap().unwrap();
+            assert_eq!(resp[0], ST_ERR, "DRAW before HELLO must answer an error frame");
+            drop(raw);
+
+            // dim boundary sweep: only the dataset dim is accepted
+            for (dim, ok) in [(0usize, false), (d - 1, false), (d, true), (d + 1, false)] {
+                let mut c = ServeClient::connect(addr, 9).unwrap();
+                let th = vec![0.1f32; dim];
+                assert_eq!(c.draw(&th, 8).is_ok(), ok, "dim={dim}");
+            }
+
+            // after all the abuse, a healthy client is served normally
+            let mut healthy = ServeClient::connect(addr, 1234).unwrap();
+            let (_, got) = healthy.draw(&theta, 16).unwrap();
+            assert_eq!(got.len(), 16);
+            healthy.bye().unwrap();
+
+            stop.store(true, Ordering::Relaxed);
+            let totals = server.join().unwrap().unwrap();
+            assert!(totals.draws >= 16 + 8, "dim=d probe + healthy client draws");
+            assert!(totals.connections >= 8);
+            assert!(totals.conn_errors >= 1, "the mid-frame disconnect is an isolated error");
+            assert_eq!(totals.rejected_at_capacity, 0);
+        });
+    }
+
+    /// The pool bound: with `max_clients = 2`, a third live connection is
+    /// turned away with an error frame and counted — and gets in once a
+    /// slot frees up.
+    #[test]
+    fn capacity_bound_rejects_excess_clients() {
+        let pre = setup(80, 6, 93);
+        let core = mk_core(&pre, 2, true);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = AtomicBool::new(false);
+        let opts = ServeOptions { max_clients: 2, ..Default::default() };
+        thread::scope(|scope| {
+            let corer = &core;
+            let stopr = &stop;
+            let optsr = &opts;
+            let server = scope.spawn(move || serve_supervised(corer, listener, stopr, optsr));
+            let a = ServeClient::connect(addr, 1).unwrap();
+            let b = ServeClient::connect(addr, 2).unwrap();
+            // third connection: rejected at HELLO with the capacity error
+            match ServeClient::connect(addr, 3) {
+                Err(Error::Pipeline(msg)) => {
+                    assert!(msg.contains("capacity"), "unexpected rejection: {msg}")
+                }
+                other => panic!("expected a capacity rejection, got {:?}", other.is_ok()),
+            }
+            // free a slot; the pool admits a new client again
+            a.bye().unwrap();
+            thread::sleep(Duration::from_millis(200));
+            let c = ServeClient::connect(addr, 4).unwrap();
+            c.bye().unwrap();
+            b.bye().unwrap();
+            stop.store(true, Ordering::Relaxed);
+            let totals = server.join().unwrap().unwrap();
+            assert_eq!(totals.rejected_at_capacity, 1);
+            assert_eq!(totals.connections, 3, "rejected connections never enter the pool");
+        });
+    }
+
+    /// The wire STATS op round-trips the server counters (and works
+    /// before HELLO).
+    #[test]
+    fn stats_op_reports_server_counters() {
+        let pre = setup(90, 6, 95);
+        let core = mk_core(&pre, 2, true);
+        let theta = vec![0.05f32; 6];
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = AtomicBool::new(false);
+        thread::scope(|scope| {
+            let corer = &core;
+            let stopr = &stop;
+            let server = scope.spawn(move || serve_tcp(corer, listener, stopr));
+            let mut client = ServeClient::connect(addr, 7).unwrap();
+            client.draw(&theta, 20).unwrap();
+            client.draw(&theta, 12).unwrap();
+            let s = client.stats().unwrap();
+            assert!(s.sessions >= 1);
+            assert_eq!(s.draws_served, 32);
+            assert_eq!(s.stale_rejected, 0);
+            assert_eq!(s.degraded_sessions, 0);
+            assert_eq!(s.connections, 1);
+            assert_eq!(s.conn_errors, 0);
+            assert_eq!(s.rejected_at_capacity, 0);
+            client.bye().unwrap();
+            stop.store(true, Ordering::Relaxed);
+            assert_eq!(server.join().unwrap().unwrap(), 32);
+        });
+    }
+
+    /// The retry client's deterministic backoff schedule and its plain
+    /// (failure-free) operation: same stream as a ServeClient, zero
+    /// retries. The reconnect-and-fast-forward path itself is exercised in
+    /// `tests/chaos.rs` with the TCP_READ failpoint armed.
+    #[test]
+    fn retry_client_matches_plain_client_without_failures() {
+        let policy = RetryPolicy::default();
+        assert_eq!(policy.backoff(0), Duration::from_millis(10));
+        assert_eq!(policy.backoff(1), Duration::from_millis(20));
+        assert_eq!(policy.backoff(2), Duration::from_millis(40));
+        assert_eq!(policy.backoff(12), Duration::from_millis(500), "capped at max_backoff");
+        let pre = setup(110, 6, 97);
+        let core = mk_core(&pre, 2, true);
+        let theta = vec![0.04f32; 6];
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = AtomicBool::new(false);
+        thread::scope(|scope| {
+            let corer = &core;
+            let stopr = &stop;
+            let server = scope.spawn(move || serve_tcp(corer, listener, stopr));
+            let mut reference = ServingSession::open(&core, 55);
+            let mut want = Vec::new();
+            let mut batch = Vec::new();
+            for _ in 0..3 {
+                reference.draw_batch(&theta, 16, &mut batch);
+                want.extend(batch.iter().copied());
+            }
+            let mut rc = RetryClient::connect(
+                &addr.to_string(),
+                55,
+                ClientOptions::default(),
+                RetryPolicy { base_backoff: Duration::from_millis(1), ..Default::default() },
+            )
+            .unwrap();
+            let mut got = Vec::new();
+            for _ in 0..3 {
+                let (_, draws) = rc.draw(&theta, 16).unwrap();
+                got.extend(draws);
+            }
+            assert_eq!(want, got, "retry client diverged from the session stream");
+            assert_eq!(rc.retries(), 0, "no failures, no retries");
+            rc.bye().unwrap();
+            stop.store(true, Ordering::Relaxed);
+            server.join().unwrap().unwrap();
+        });
     }
 }

@@ -33,6 +33,7 @@ use std::path::{Path, PathBuf};
 
 use crate::core::error::{Error, Result};
 use crate::store::checksum::crc32;
+use crate::testkit::faults;
 
 /// File magic ("LGD snapshot", NUL-terminated).
 pub const MAGIC: [u8; 8] = *b"LGDSNAP\0";
@@ -260,8 +261,25 @@ pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
     };
     {
         let mut f = std::fs::File::create(&tmp).map_err(|e| wrap(e, "create"))?;
+        if faults::should_fail(faults::SNAPSHOT_WRITE) {
+            // Simulated crash mid-stream: leave a truncated tmp behind.
+            let _ = f.write_all(&bytes[..bytes.len() / 2]);
+            return Err(wrap(
+                std::io::Error::new(std::io::ErrorKind::Other, "failpoint"),
+                "write",
+            ));
+        }
         f.write_all(bytes).map_err(|e| wrap(e, "write"))?;
+        if faults::should_fail(faults::SNAPSHOT_FSYNC) {
+            return Err(wrap(
+                std::io::Error::new(std::io::ErrorKind::Other, "failpoint"),
+                "fsync",
+            ));
+        }
         f.sync_all().map_err(|e| wrap(e, "fsync"))?;
+    }
+    if faults::should_fail(faults::SNAPSHOT_RENAME) {
+        return Err(Error::Store(format!("rename into {}: failpoint", path.display())));
     }
     std::fs::rename(&tmp, path)
         .map_err(|e| Error::Store(format!("rename into {}: {e}", path.display())))?;

@@ -19,8 +19,10 @@
 //!   always a clean [`Error::Store`](crate::core::error::Error::Store).
 //! * [`format`] — the magic/version header, CRC-protected section table and
 //!   crash-safe atomic writes (`*.tmp` + fsync + rename).
-//! * [`snapshot`] — engine-level encode/decode/restore plus the
-//!   [`SnapshotHasher`](snapshot::SnapshotHasher) family trait.
+//! * [`snapshot`] — engine-level encode/decode/restore, the
+//!   [`SnapshotHasher`](snapshot::SnapshotHasher) family trait, and rotated
+//!   autosaves ([`save_rotated`](snapshot::save_rotated)) with
+//!   newest-valid-wins crash recovery ([`recover`](snapshot::recover)).
 //!
 //! See `docs/persistence.md` for the on-disk layout and the compatibility
 //! policy.
@@ -33,6 +35,7 @@ pub mod snapshot;
 pub use checksum::crc32;
 pub use format::{write_atomic, SectionKind, MAGIC, VERSION};
 pub use snapshot::{
-    load, restore_boxed, restore_estimator, save, snapshot_bytes, EngineDump, LoadedSnapshot,
-    SnapshotHasher, SnapshotInfo, SnapshotMeta, TrainState,
+    load, recover, restore_boxed, restore_estimator, rotated_path, save, save_rotated,
+    snapshot_bytes, EngineDump, LoadedSnapshot, Recovered, SnapshotHasher, SnapshotInfo,
+    SnapshotMeta, TrainState,
 };

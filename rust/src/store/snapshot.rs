@@ -693,6 +693,99 @@ pub fn save<H: SnapshotHasher>(
     Ok(bytes.len() as u64)
 }
 
+/// Path of rotation slot `slot` for base path `base`: slot 0 is the base
+/// itself, slot `k` appends `.{k}` to the full file name
+/// (`snap.lgdsnap` → `snap.lgdsnap.1`).
+pub fn rotated_path(base: &Path, slot: usize) -> std::path::PathBuf {
+    if slot == 0 {
+        return base.to_path_buf();
+    }
+    let mut name = std::ffi::OsString::from(base.as_os_str());
+    name.push(format!(".{slot}"));
+    std::path::PathBuf::from(name)
+}
+
+/// [`save`] with crash-recovery rotation: before writing, shift the
+/// existing generations one slot down (`base` → `base.1` → … →
+/// `base.{keep-1}`, dropping the oldest), then write the new snapshot to
+/// `base` atomically. A crash at any point leaves the previous generation
+/// reachable: mid-shift, the renames are themselves atomic; mid-write,
+/// `base` is missing or truncated but `base.1` holds the previous
+/// generation intact — exactly what [`recover`] scans for. `keep` is
+/// floored at 1 (plain [`save`] semantics, no rotation).
+pub fn save_rotated<H: SnapshotHasher>(
+    base: &Path,
+    keep: usize,
+    est: &ShardedLgdEstimator<'_, H>,
+    train: Option<&TrainState>,
+) -> Result<u64> {
+    let keep = keep.max(1);
+    let oldest = rotated_path(base, keep - 1);
+    if keep > 1 && oldest.exists() {
+        std::fs::remove_file(&oldest)
+            .map_err(|e| Error::Store(format!("rotate remove {}: {e}", oldest.display())))?;
+    }
+    for k in (0..keep.saturating_sub(1)).rev() {
+        let from = rotated_path(base, k);
+        if from.exists() {
+            let to = rotated_path(base, k + 1);
+            std::fs::rename(&from, &to).map_err(|e| {
+                Error::Store(format!("rotate {} -> {}: {e}", from.display(), to.display()))
+            })?;
+        }
+    }
+    save(base, est, train)
+}
+
+/// What [`recover`] found.
+pub struct Recovered {
+    /// The newest valid snapshot.
+    pub snap: LoadedSnapshot,
+    /// The file it was loaded from.
+    pub path: std::path::PathBuf,
+    /// Its rotation slot (0 = the base path; > 0 = an older generation
+    /// recovered after the newer ones failed verification).
+    pub slot: usize,
+    /// Slots skipped as missing, truncated, or corrupt before this one.
+    pub skipped: usize,
+}
+
+/// Newest-valid-wins recovery scan over the rotation slots of `base`:
+/// try `base`, then `base.1`, … up to `base.{keep-1}`, returning the
+/// first snapshot that fully verifies (every CRC and structural
+/// invariant) and how many newer slots had to be skipped. Errs only when
+/// no slot holds a valid snapshot.
+pub fn recover(base: &Path, keep: usize) -> Result<Recovered> {
+    let keep = keep.max(1);
+    let mut last_err: Option<Error> = None;
+    let mut skipped = 0usize;
+    for slot in 0..keep {
+        let path = rotated_path(base, slot);
+        if !path.exists() {
+            skipped += 1;
+            continue;
+        }
+        match load(&path) {
+            Ok(snap) => return Ok(Recovered { snap, path, slot, skipped }),
+            Err(e) => {
+                skipped += 1;
+                last_err = Some(e);
+            }
+        }
+    }
+    Err(match last_err {
+        Some(Error::Store(msg)) => Error::Store(format!(
+            "no valid snapshot among {keep} rotation slot(s) of {} (last error: {msg})",
+            base.display()
+        )),
+        Some(e) => e,
+        None => Error::Store(format!(
+            "no snapshot found in any of the {keep} rotation slot(s) of {}",
+            base.display()
+        )),
+    })
+}
+
 /// A fully decoded and verified snapshot. `pre` owns the dataset the
 /// restored estimator borrows; `engine` + `hasher` feed
 /// [`restore_estimator`] / [`restore_boxed`].
@@ -1223,5 +1316,69 @@ mod tests {
         assert_eq!(info.meta.shards, 2);
         assert!(info.meta.mirror);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    /// Rotation + newest-valid-wins recovery: `save_rotated` keeps the
+    /// last `keep` generations, `recover` loads the newest slot that
+    /// verifies and skips corrupt ones. (The crash-injected mid-save
+    /// variants live in `tests/chaos.rs`.)
+    #[test]
+    fn rotation_keeps_generations_and_recovery_skips_corruption() {
+        let pre = setup(50, 5, 111);
+        let hd = pre.hashed.cols();
+        let est = ShardedLgdEstimator::new(
+            &pre,
+            DenseSrp::new(hd, 3, 4, 113),
+            115,
+            LgdOptions::default(),
+            2,
+        )
+        .unwrap();
+        let dir = std::env::temp_dir().join("lgd-store-rotate");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("rot.lgdsnap");
+        for slot in 0..3 {
+            let p = rotated_path(&base, slot);
+            if p.exists() {
+                std::fs::remove_file(&p).unwrap();
+            }
+        }
+        let ts = |iter: u64| TrainState {
+            theta: vec![0.5; 5],
+            iter,
+            epochs_done: 0,
+            optimizer: OptimizerKind::Sgd,
+            optim: OptimState { t: 0, slots: vec![] },
+        };
+        // three generations under keep = 3: newest at the base, oldest at .2
+        for iter in [1u64, 2, 3] {
+            save_rotated(&base, 3, &est, Some(&ts(iter))).unwrap();
+        }
+        for (slot, want) in [(0usize, 3u64), (1, 2), (2, 1)] {
+            let snap = load(&rotated_path(&base, slot)).unwrap();
+            assert_eq!(snap.train.unwrap().iter, want, "slot {slot}");
+        }
+        let rec = recover(&base, 3).unwrap();
+        assert_eq!(rec.slot, 0);
+        assert_eq!(rec.skipped, 0);
+        assert_eq!(rec.snap.train.unwrap().iter, 3, "newest generation wins");
+        // corrupt the newest (truncate): recovery falls back to slot 1
+        let full = std::fs::read(&base).unwrap();
+        std::fs::write(&base, &full[..full.len() / 2]).unwrap();
+        let rec = recover(&base, 3).unwrap();
+        assert_eq!(rec.slot, 1);
+        assert_eq!(rec.skipped, 1);
+        assert_eq!(rec.snap.train.unwrap().iter, 2);
+        assert_eq!(rec.path, rotated_path(&base, 1));
+        // keep = 1 scans only the (corrupt) base and fails cleanly
+        assert!(recover(&base, 1).is_err());
+        // nothing on disk at all: a clean Store error, not a panic
+        for slot in 0..3 {
+            let p = rotated_path(&base, slot);
+            if p.exists() {
+                std::fs::remove_file(&p).unwrap();
+            }
+        }
+        assert!(matches!(recover(&base, 3), Err(Error::Store(_))));
     }
 }

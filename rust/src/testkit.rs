@@ -12,6 +12,8 @@
 
 use crate::core::rng::Pcg64;
 
+pub mod faults;
+
 /// Run `cases` generated test cases. Each case gets a fresh, seeded RNG;
 /// panics are caught and re-raised with the case seed attached.
 pub fn prop<F: Fn(&mut Pcg64) + std::panic::RefUnwindSafe>(cases: u64, f: F) {

@@ -1,0 +1,330 @@
+//! Zero-dependency failpoint registry — deterministic fault injection for
+//! the robustness suite.
+//!
+//! A **failpoint** is a named site in production code where a test can
+//! schedule a failure: an injected `Err`, a panic, or an early `None`,
+//! depending on what a *real* failure looks like at that site (the site
+//! decides the failure shape; the registry only answers "fail now?").
+//! This generalizes the draw engine's original one-off `#[cfg(test)]`
+//! kill hook into one catalog covering the snapshot writer, the draw
+//! queues, the sampler workers, generation flips and the TCP wire.
+//!
+//! **Gating.** The registry is compiled under
+//! `cfg(any(test, feature = "failpoints"))`: unit tests get it for free,
+//! integration/chaos binaries opt in with `--features failpoints`, and
+//! release builds compile every `should_fail` call to a constant `false`
+//! with zero data. Even when compiled in, the disarmed fast path is one
+//! relaxed atomic load — cheap enough to sit on the draw hot path, which
+//! is what lets the determinism gates run bit-for-bit identical with
+//! failpoints compiled in but disarmed.
+//!
+//! **Concurrency caveat.** The registry is process-global. Arming a real
+//! site from a test that shares its process with unrelated concurrent
+//! tests (the default `cargo test` threading) can fire the fault inside
+//! *their* code. Real sites are therefore armed only from the dedicated
+//! `tests/chaos.rs` binary, which serializes its tests; unit tests in
+//! this module use private site names that no production code checks.
+//!
+//! ```ignore
+//! faults::arm(faults::SNAPSHOT_WRITE, faults::Mode::Once);
+//! assert!(snapshot::save(&path, &est, None).is_err()); // injected
+//! assert_eq!(faults::fires(faults::SNAPSHOT_WRITE), 1);
+//! faults::disarm_all();
+//! ```
+
+/// Snapshot writer, mid-write: the tmp file is left truncated (a crash
+/// while streaming bytes). The target file is never touched.
+pub const SNAPSHOT_WRITE: &str = "store.snapshot.write";
+/// Snapshot writer, post-write: the tmp file is complete but the fsync
+/// "fails" (a crash before durability). The target file is never touched.
+pub const SNAPSHOT_FSYNC: &str = "store.snapshot.fsync";
+/// Snapshot writer, pre-rename: the tmp file is durable but never renamed
+/// into place (a crash between fsync and rename).
+pub const SNAPSHOT_RENAME: &str = "store.snapshot.rename";
+/// `DrawQueue::push` panics at entry — a producer (sampler/mixer) thread
+/// dying mid-pipeline.
+pub const QUEUE_PUSH: &str = "coordinator.queue.push";
+/// `DrawQueue::pop` returns an early `None` — the consumer observes a
+/// queue that looks closed/dead.
+pub const QUEUE_POP: &str = "coordinator.queue.pop";
+/// Sampler-worker start: the worker panics while holding its queue mutex
+/// (genuinely poisoning it). The check passes the shard index as the
+/// filter argument ([`arm_at`]); the serving-session producer passes 0.
+pub const WORKER_START: &str = "runtime.worker.start";
+/// `ServingCore::mutate` fails after taking the writer lock, before
+/// cloning or publishing anything — a flip that never happens.
+pub const GENERATION_FLIP: &str = "runtime.generation.flip";
+/// Wire read (server `read_full` / client `read_frame`) fails at entry.
+/// The filter argument is the side: [`SIDE_CLIENT`] or [`SIDE_SERVER`].
+pub const TCP_READ: &str = "runtime.tcp.read";
+/// Wire `write_frame` fails at entry (either side).
+pub const TCP_WRITE: &str = "runtime.tcp.write";
+
+/// Filter argument for [`TCP_READ`] checks on the client side.
+pub const SIDE_CLIENT: u64 = 0;
+/// Filter argument for [`TCP_READ`] checks on the server side.
+pub const SIDE_SERVER: u64 = 1;
+
+/// Every registered production site — the chaos suite iterates this to
+/// prove each one actually fires.
+pub const SITES: &[&str] = &[
+    SNAPSHOT_WRITE,
+    SNAPSHOT_FSYNC,
+    SNAPSHOT_RENAME,
+    QUEUE_PUSH,
+    QUEUE_POP,
+    WORKER_START,
+    GENERATION_FLIP,
+    TCP_READ,
+    TCP_WRITE,
+];
+
+#[cfg(any(test, feature = "failpoints"))]
+mod imp {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Mutex, MutexGuard, PoisonError};
+
+    /// When an armed site fires.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Mode {
+        /// Never (the disarmed state; arming with `Off` is a no-op).
+        Off,
+        /// The next matching check fires, then the site disarms.
+        Once,
+        /// The next `k` matching checks fire, then the site disarms.
+        Times(u64),
+        /// The `n`-th matching check (1-based) fires, then the site
+        /// disarms — earlier checks pass through untouched. This is how a
+        /// fault lands *mid-stream* (e.g. the third queue push).
+        Nth(u64),
+        /// Every matching check fires until [`disarm`](super::disarm).
+        Always,
+    }
+
+    struct Entry {
+        site: &'static str,
+        mode: Mode,
+        when: Option<u64>,
+        fires: u64,
+    }
+
+    /// Count of non-`Off` entries, mirrored outside the lock so the
+    /// disarmed hot path is a single relaxed load.
+    static ARMED: AtomicUsize = AtomicUsize::new(0);
+    static REG: Mutex<Vec<Entry>> = Mutex::new(Vec::new());
+
+    fn reg() -> MutexGuard<'static, Vec<Entry>> {
+        // A test that panicked mid-check poisons nothing structurally —
+        // the entries are plain data — so recover like the draw queues do.
+        REG.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn sync_armed(entries: &[Entry]) {
+        let n = entries.iter().filter(|e| e.mode != Mode::Off).count();
+        ARMED.store(n, Ordering::Relaxed);
+    }
+
+    /// Arm `site` to fail per `mode`, firing on every check regardless of
+    /// the check's filter argument. Re-arming replaces the previous mode
+    /// (fire counts are kept).
+    pub fn arm(site: &'static str, mode: Mode) {
+        arm_entry(site, mode, None);
+    }
+
+    /// Arm `site` to fail per `mode`, but only for checks whose filter
+    /// argument equals `when` (e.g. one specific shard's worker). Checks
+    /// that pass no argument never match a filtered arm.
+    pub fn arm_at(site: &'static str, mode: Mode, when: u64) {
+        arm_entry(site, mode, Some(when));
+    }
+
+    fn arm_entry(site: &'static str, mode: Mode, when: Option<u64>) {
+        let mode = match mode {
+            Mode::Times(0) | Mode::Nth(0) => Mode::Off,
+            m => m,
+        };
+        let mut entries = reg();
+        match entries.iter_mut().find(|e| e.site == site) {
+            Some(e) => {
+                e.mode = mode;
+                e.when = when;
+            }
+            None => entries.push(Entry { site, mode, when, fires: 0 }),
+        }
+        sync_armed(&entries);
+    }
+
+    /// Disarm `site` (its fire count is kept for inspection).
+    pub fn disarm(site: &str) {
+        let mut entries = reg();
+        if let Some(e) = entries.iter_mut().find(|e| e.site == site) {
+            e.mode = Mode::Off;
+            e.when = None;
+        }
+        sync_armed(&entries);
+    }
+
+    /// Disarm everything and reset all fire counts — the clean-slate the
+    /// chaos suite's drop guard restores between tests.
+    pub fn disarm_all() {
+        let mut entries = reg();
+        entries.clear();
+        sync_armed(&entries);
+    }
+
+    /// How many times `site` has fired since the last [`disarm_all`].
+    pub fn fires(site: &str) -> u64 {
+        reg().iter().find(|e| e.site == site).map_or(0, |e| e.fires)
+    }
+
+    fn check(site: &str, arg: Option<u64>) -> bool {
+        if ARMED.load(Ordering::Relaxed) == 0 {
+            return false;
+        }
+        let mut entries = reg();
+        let Some(e) = entries.iter_mut().find(|e| e.site == site) else {
+            return false;
+        };
+        match (e.when, arg) {
+            (None, _) => {}
+            (Some(w), Some(a)) if w == a => {}
+            _ => return false,
+        }
+        let fire = match e.mode {
+            Mode::Off => false,
+            Mode::Once => {
+                e.mode = Mode::Off;
+                true
+            }
+            Mode::Times(k) => {
+                e.mode = if k <= 1 { Mode::Off } else { Mode::Times(k - 1) };
+                true
+            }
+            Mode::Nth(n) => {
+                if n <= 1 {
+                    e.mode = Mode::Off;
+                    true
+                } else {
+                    e.mode = Mode::Nth(n - 1);
+                    false
+                }
+            }
+            Mode::Always => true,
+        };
+        if fire {
+            e.fires += 1;
+        }
+        sync_armed(&entries);
+        fire
+    }
+
+    /// Should this (argless) check of `site` fail? Sites armed with a
+    /// filter ([`arm_at`]) never match an argless check.
+    #[inline]
+    pub fn should_fail(site: &str) -> bool {
+        if ARMED.load(Ordering::Relaxed) == 0 {
+            return false;
+        }
+        check(site, None)
+    }
+
+    /// Should this check of `site` (with filter argument `arg`) fail?
+    #[inline]
+    pub fn should_fail_at(site: &str, arg: u64) -> bool {
+        if ARMED.load(Ordering::Relaxed) == 0 {
+            return false;
+        }
+        check(site, Some(arg))
+    }
+}
+
+/// Compiled-out stubs: release builds pay nothing and can never fire.
+#[cfg(not(any(test, feature = "failpoints")))]
+mod imp {
+    /// Always false — the registry is compiled out.
+    #[inline(always)]
+    pub fn should_fail(_site: &str) -> bool {
+        false
+    }
+
+    /// Always false — the registry is compiled out.
+    #[inline(always)]
+    pub fn should_fail_at(_site: &str, _arg: u64) -> bool {
+        false
+    }
+
+    /// Always 0 — the registry is compiled out.
+    #[inline(always)]
+    pub fn fires(_site: &str) -> u64 {
+        0
+    }
+}
+
+pub use imp::*;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Private site names no production code checks: these tests share the
+    // process-global registry with every other concurrently running unit
+    // test, so they must never arm a real site from SITES.
+    const FAKE_A: &str = "testkit.faults.fake_a";
+    const FAKE_B: &str = "testkit.faults.fake_b";
+
+    #[test]
+    fn disarmed_sites_never_fire() {
+        assert!(!should_fail(FAKE_A));
+        assert!(!should_fail_at(FAKE_A, 7));
+        assert_eq!(fires(FAKE_A), 0);
+    }
+
+    #[test]
+    fn once_fires_exactly_once_then_disarms() {
+        arm(FAKE_A, Mode::Once);
+        assert!(should_fail(FAKE_A));
+        assert!(!should_fail(FAKE_A), "Once must self-disarm");
+        assert_eq!(fires(FAKE_A), 1);
+        disarm(FAKE_A);
+    }
+
+    #[test]
+    fn times_and_nth_count_checks() {
+        arm(FAKE_B, Mode::Times(2));
+        assert!(should_fail(FAKE_B));
+        assert!(should_fail(FAKE_B));
+        assert!(!should_fail(FAKE_B));
+        assert_eq!(fires(FAKE_B), 2);
+        // Nth(3): two pass-throughs, then the third check fires
+        arm(FAKE_B, Mode::Nth(3));
+        assert!(!should_fail(FAKE_B));
+        assert!(!should_fail(FAKE_B));
+        assert!(should_fail(FAKE_B));
+        assert!(!should_fail(FAKE_B), "Nth self-disarms after firing");
+        assert_eq!(fires(FAKE_B), 3, "pass-through checks do not count as fires");
+        disarm(FAKE_B);
+    }
+
+    #[test]
+    fn filter_argument_scopes_the_fault() {
+        arm_at(FAKE_A, Mode::Always, 3);
+        assert!(!should_fail_at(FAKE_A, 2), "non-matching arg must pass");
+        assert!(should_fail_at(FAKE_A, 3));
+        assert!(should_fail_at(FAKE_A, 3), "Always keeps firing");
+        assert!(!should_fail(FAKE_A), "argless checks never match a filtered arm");
+        disarm(FAKE_A);
+        assert!(!should_fail_at(FAKE_A, 3), "disarm stops it");
+    }
+
+    #[test]
+    fn rearm_replaces_mode_and_zero_counts_are_off() {
+        arm(FAKE_B, Mode::Times(0));
+        assert!(!should_fail(FAKE_B), "Times(0) normalizes to Off");
+        arm(FAKE_B, Mode::Nth(0));
+        assert!(!should_fail(FAKE_B), "Nth(0) normalizes to Off");
+        arm(FAKE_B, Mode::Once);
+        arm(FAKE_B, Mode::Off);
+        assert!(!should_fail(FAKE_B), "re-arming with Off disarms");
+        disarm(FAKE_B);
+    }
+}

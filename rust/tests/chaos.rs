@@ -1,0 +1,468 @@
+//! Chaos suite: arms the *real* failpoint sites (`testkit::faults`) inside
+//! production code and proves the fault-tolerance contracts hold — degraded
+//! sessions serve the identical stream, crash-interrupted autosaves recover
+//! the previous rotated generation, the retry client rides over wire
+//! failures, and per-connection faults never take the supervised front
+//! down.
+//!
+//! This binary only builds with `--features failpoints` (CI's chaos step);
+//! without the feature it is empty. Real sites are armed **only** here:
+//! the registry is process-global, so every test serializes on one gate
+//! mutex and restores a clean slate through a drop guard, even on panic.
+//! (Injected worker faults are panics by design — the "thread panicked"
+//! noise on stderr is the fault being injected, not a test failure.)
+
+#![cfg(feature = "failpoints")]
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::thread;
+use std::time::Duration;
+
+use lgd::coordinator::draw_engine::{run_session, DrawEngineConfig};
+use lgd::data::preprocess::{preprocess, PreprocessOptions, Preprocessed};
+use lgd::data::SynthSpec;
+use lgd::estimator::lgd::LgdOptions;
+use lgd::estimator::{GradientEstimator, ShardedLgdEstimator, WeightedDraw};
+use lgd::lsh::srp::DenseSrp;
+use lgd::runtime::{
+    serve_supervised, ClientOptions, RetryClient, RetryPolicy, ServeClient, ServeOptions,
+    ServingCore, ServingSession,
+};
+use lgd::store::snapshot::{load, recover, rotated_path, save_rotated, LoadedSnapshot};
+use lgd::testkit::faults::{self, Mode};
+
+/// One test at a time: the failpoint registry is process-global.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn serialize() -> MutexGuard<'static, ()> {
+    // A failed sibling test poisons nothing structurally — take the gate
+    // anyway, same policy as the registry itself.
+    GATE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Restores the clean slate when dropped, even if the test panics while a
+/// real site is still armed.
+struct Disarm;
+
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        faults::disarm_all();
+    }
+}
+
+fn setup(n: usize, d: usize, seed: u64) -> Arc<Preprocessed> {
+    let ds = SynthSpec::power_law("chaos", n, d, seed).generate().unwrap();
+    Arc::new(preprocess(ds, &PreprocessOptions::default()).unwrap())
+}
+
+fn mk_core(pre: &Arc<Preprocessed>, shards: usize) -> Arc<ServingCore<DenseSrp>> {
+    let hd = pre.hashed.cols();
+    ServingCore::build(Arc::clone(pre), DenseSrp::new(hd, 3, 10, 61), LgdOptions::default(), shards)
+        .unwrap()
+}
+
+/// Drift guard: the chaos suite below exercises exactly the registered
+/// catalog — a new site added to production code must show up here (and
+/// get a scenario) or this fails.
+#[test]
+fn chaos_site_catalog_matches_the_wired_sites() {
+    assert_eq!(
+        faults::SITES,
+        &[
+            faults::SNAPSHOT_WRITE,
+            faults::SNAPSHOT_FSYNC,
+            faults::SNAPSHOT_RENAME,
+            faults::QUEUE_PUSH,
+            faults::QUEUE_POP,
+            faults::WORKER_START,
+            faults::GENERATION_FLIP,
+            faults::TCP_READ,
+            faults::TCP_WRITE,
+        ]
+    );
+}
+
+/// The crash-recovery gate: a crash injected at every stage of the atomic
+/// snapshot write (mid-write, pre-fsync, pre-rename) fails the save, and
+/// `recover` falls back to the previous rotated generation — whose
+/// restored engine serves a stream draw-for-draw identical to one restored
+/// from the pristine file before the crash.
+#[test]
+fn chaos_crash_mid_autosave_recovers_previous_and_resumes_identical() {
+    let _gate = serialize();
+    faults::disarm_all();
+    let _clean = Disarm;
+
+    let pre = setup(90, 7, 131);
+    let hd = pre.hashed.cols();
+    let est =
+        ShardedLgdEstimator::new(&pre, DenseSrp::new(hd, 3, 8, 137), 139, LgdOptions::default(), 2)
+            .unwrap();
+    let dir = std::env::temp_dir().join("lgd-chaos-rotate");
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = dir.join("auto.lgdsnap");
+    let theta = vec![0.02f32; 7];
+
+    for site in [faults::SNAPSHOT_WRITE, faults::SNAPSHOT_FSYNC, faults::SNAPSHOT_RENAME] {
+        for slot in 0..3 {
+            let p = rotated_path(&base, slot);
+            if p.exists() {
+                std::fs::remove_file(&p).unwrap();
+            }
+        }
+        // two healthy rotated generations (identical state: save borrows)
+        save_rotated(&base, 2, &est, None).unwrap();
+        save_rotated(&base, 2, &est, None).unwrap();
+        // the stream a restart would serve from the pristine newest file
+        let LoadedSnapshot { pre: lpre, hasher, engine, .. } = load(&base).unwrap();
+        let mut reference = lgd::store::snapshot::restore_boxed(hasher, &lpre, engine).unwrap();
+        let mut want = Vec::new();
+        let mut buf: Vec<WeightedDraw> = Vec::new();
+        for _ in 0..3 {
+            reference.draw_batch(&theta, 16, &mut buf);
+            want.extend_from_slice(&buf);
+        }
+        // crash mid-autosave: rotation already shifted the previous
+        // generation to slot 1; the new base never materializes
+        faults::arm(site, Mode::Once);
+        let err = save_rotated(&base, 2, &est, None);
+        assert!(err.is_err(), "{site}: injected crash must fail the save");
+        assert_eq!(faults::fires(site), 1, "{site}: the site must actually fire");
+        let rec = recover(&base, 2).unwrap();
+        assert_eq!(rec.slot, 1, "{site}: recovery must fall back to the rotated slot");
+        assert_eq!(rec.skipped, 1, "{site}: the dead newest slot is skipped");
+        let LoadedSnapshot { pre: rpre, hasher, engine, .. } = rec.snap;
+        let mut revived = lgd::store::snapshot::restore_boxed(hasher, &rpre, engine).unwrap();
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            revived.draw_batch(&theta, 16, &mut buf);
+            got.extend_from_slice(&buf);
+        }
+        assert_eq!(want, got, "{site}: recovered stream diverged from the pristine one");
+    }
+    for slot in 0..3 {
+        let _ = std::fs::remove_file(rotated_path(&base, slot));
+    }
+}
+
+/// The degraded-mode gate: a sampler thread killed at session start AND one
+/// killed mid-stream (third queue push) both flip the session to the
+/// synchronous fallback — the delivered stream, the handed-back RNG
+/// position, and the draw counts stay identical to an undegraded run, and
+/// the core counts each event without anything else stopping.
+#[test]
+fn chaos_degraded_session_serves_identical_stream() {
+    let _gate = serialize();
+    faults::disarm_all();
+    let _clean = Disarm;
+
+    let pre = setup(150, 8, 141);
+    let core = mk_core(&pre, 2);
+    let theta = vec![0.04f32; 8];
+    let (m, steps) = (16usize, 6usize);
+
+    // undegraded reference: the pipelined stream plus its continuation
+    let mut reference = ServingSession::open(&core, 42);
+    let mut want = Vec::new();
+    reference
+        .run_pipelined(&theta, m, steps, 64, |_, draws| {
+            want.extend_from_slice(draws);
+            true
+        })
+        .unwrap();
+    let mut want_cont = Vec::new();
+    reference.draw_batch(&theta, m, &mut want_cont);
+
+    let faulted = [
+        // the producer dies before assembling anything
+        (faults::WORKER_START, Mode::Once, true),
+        // the producer dies mid-stream, on its third push
+        (faults::QUEUE_PUSH, Mode::Nth(3), false),
+    ];
+    for (round, (site, mode, filtered)) in faulted.into_iter().enumerate() {
+        let mut sess = ServingSession::open(&core, 42);
+        if filtered {
+            faults::arm_at(site, mode, 0);
+        } else {
+            faults::arm(site, mode);
+        }
+        let mut got = Vec::new();
+        let rep = sess
+            .run_pipelined(&theta, m, steps, 64, |_, draws| {
+                got.extend_from_slice(draws);
+                true
+            })
+            .unwrap();
+        assert_eq!(faults::fires(site), 1, "{site}: the site must actually fire");
+        assert!(rep.degraded, "{site}: a dead sampler must degrade the session");
+        assert_eq!(rep.batches, steps, "{site}: every batch still reaches the consumer");
+        assert_eq!(rep.draws, (m * steps) as u64);
+        assert_eq!(want, got, "{site}: degraded stream diverged from the healthy one");
+        // RNG continuation: sync draws after the degraded run match too
+        let mut cont = Vec::new();
+        sess.draw_batch(&theta, m, &mut cont);
+        assert_eq!(want_cont, cont, "{site}: post-degradation stream diverged");
+        assert_eq!(
+            core.counters().degraded_sessions,
+            (round + 1) as u64,
+            "{site}: each degradation is counted exactly once"
+        );
+        faults::disarm_all();
+    }
+}
+
+/// An injected early-`None` from `DrawQueue::pop` looks like a dead queue
+/// to the consumer: the session ends early but cleanly (no degradation —
+/// the producer is healthy) and the session keeps serving afterwards.
+#[test]
+fn chaos_queue_pop_fault_ends_session_early_not_fatally() {
+    let _gate = serialize();
+    faults::disarm_all();
+    let _clean = Disarm;
+
+    let pre = setup(120, 8, 151);
+    let core = mk_core(&pre, 2);
+    let theta = vec![0.03f32; 8];
+    let mut sess = ServingSession::open(&core, 9);
+    faults::arm(faults::QUEUE_POP, Mode::Once);
+    let rep = sess.run_pipelined(&theta, 16, 5, 64, |_, _| true).unwrap();
+    assert_eq!(faults::fires(faults::QUEUE_POP), 1);
+    assert_eq!(rep.batches, 0, "the consumer saw a dead queue on its first pop");
+    assert!(!rep.degraded, "a healthy producer is not a degraded session");
+    let mut out = Vec::new();
+    sess.draw_batch(&theta, 16, &mut out);
+    assert_eq!(out.len(), 16, "the session must keep serving after the early end");
+}
+
+/// A shard worker killed at start (poisoning its candidate queue for real)
+/// fails `run_session` with a clean pipeline error — and the estimator's
+/// synchronous path, plus a fresh disarmed session, keep working.
+#[test]
+fn chaos_killed_shard_worker_fails_session_cleanly_and_sync_survives() {
+    let _gate = serialize();
+    faults::disarm_all();
+    let _clean = Disarm;
+
+    let pre = setup(160, 8, 161);
+    let hd = pre.hashed.cols();
+    let mut est =
+        ShardedLgdEstimator::new(&pre, DenseSrp::new(hd, 3, 10, 163), 7, LgdOptions::default(), 3)
+            .unwrap();
+    let theta = vec![0.05f32; 8];
+    let cfg = DrawEngineConfig { workers: 3, queue_depth: 128 };
+
+    faults::arm_at(faults::WORKER_START, Mode::Once, 1);
+    let err = run_session(&mut est, &cfg, &theta, 10, 5, |_, _| true).unwrap_err();
+    assert!(
+        err.to_string().contains("shard worker"),
+        "want a clean shard-worker error, got: {err}"
+    );
+    assert_eq!(faults::fires(faults::WORKER_START), 1);
+
+    // the engine survives: synchronous draws and a fresh session both work
+    let mut out = Vec::new();
+    est.draw_batch(&theta, 10, &mut out);
+    assert_eq!(out.len(), 10);
+    let rep = run_session(&mut est, &cfg, &theta, 10, 5, |_, _| true).unwrap();
+    assert_eq!(rep.batches, 5, "a disarmed rerun must complete normally");
+}
+
+/// A generation flip that fails (after taking the writer lock, before
+/// publishing) is fully isolated: nothing is published, the flip counter
+/// does not move, pinned sessions keep serving, and the next flip works.
+#[test]
+fn chaos_generation_flip_failure_is_isolated() {
+    let _gate = serialize();
+    faults::disarm_all();
+    let _clean = Disarm;
+
+    let pre = setup(100, 6, 171);
+    let core = mk_core(&pre, 2);
+    let theta = vec![0.02f32; 6];
+    let mut sess = ServingSession::open(&core, 3);
+    let g0 = core.generation();
+
+    faults::arm(faults::GENERATION_FLIP, Mode::Once);
+    assert!(core.remove(0).is_err(), "the armed flip must fail");
+    assert_eq!(faults::fires(faults::GENERATION_FLIP), 1);
+    assert_eq!(core.generation(), g0, "a failed flip publishes nothing");
+    assert_eq!(core.counters().flips, 0);
+
+    let mut out = Vec::new();
+    sess.draw_batch(&theta, 12, &mut out);
+    assert_eq!(out.len(), 12, "sessions keep serving through a failed flip");
+    assert!(core.remove(0).unwrap(), "the next (disarmed) flip succeeds");
+    assert!(core.generation() > g0);
+    assert_eq!(core.counters().flips, 1);
+}
+
+/// The reconnect gate: a read failure injected into the client mid-run
+/// makes [`RetryClient`] back off, reconnect with the same seed, and
+/// fast-forward — the assembled stream is draw-for-draw what an
+/// uninterrupted client (and an in-process session) would have seen, and
+/// the server keeps serving.
+#[test]
+fn chaos_retry_client_resumes_identical_stream() {
+    let _gate = serialize();
+    faults::disarm_all();
+    let _clean = Disarm;
+
+    let d = 6usize;
+    let pre = setup(110, d, 181);
+    let core = mk_core(&pre, 2);
+    let theta = vec![0.05f32; d];
+    let (m, steps) = (12usize, 4usize);
+
+    // uninterrupted reference: in-process session, same seed
+    let mut reference = ServingSession::open(&core, 77);
+    let mut want = Vec::new();
+    let mut buf = Vec::new();
+    for _ in 0..steps {
+        reference.draw_batch(&theta, m, &mut buf);
+        want.extend_from_slice(&buf);
+    }
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = AtomicBool::new(false);
+    let opts = ServeOptions::default();
+    thread::scope(|scope| {
+        let corer = &core;
+        let stopr = &stop;
+        let optsr = &opts;
+        let server = scope.spawn(move || serve_supervised(corer, listener, stopr, optsr));
+
+        let policy = RetryPolicy {
+            max_retries: 3,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(8),
+        };
+        let mut client =
+            RetryClient::connect(&addr.to_string(), 77, ClientOptions::default(), policy).unwrap();
+        let mut got = Vec::new();
+        for step in 0..steps {
+            if step == 2 {
+                // the next client-side frame read dies mid-run
+                faults::arm_at(faults::TCP_READ, Mode::Once, faults::SIDE_CLIENT);
+            }
+            let (_, draws) = client.draw(&theta, m).unwrap();
+            got.extend_from_slice(&draws);
+        }
+        assert_eq!(faults::fires(faults::TCP_READ), 1, "the injected read failure fired");
+        assert_eq!(client.retries(), 1, "exactly one reconnect");
+        assert_eq!(want, got, "resumed stream diverged from the uninterrupted one");
+        client.bye().unwrap();
+
+        // the server is untouched: a fresh client draws, and STATS shows a
+        // healthy front
+        let mut fresh = ServeClient::connect(addr, 99).unwrap();
+        let (_, extra) = fresh.draw(&theta, 5).unwrap();
+        assert_eq!(extra.len(), 5);
+        let stats = fresh.stats().unwrap();
+        assert_eq!(stats.degraded_sessions, 0);
+        fresh.bye().unwrap();
+
+        stop.store(true, Ordering::Relaxed);
+        let totals = server.join().unwrap().unwrap();
+        // conn 2 (2 fast-forward replays + the retried step + step 3) and
+        // conn 3 (the 5-draw health check) always land. Conn 1 adds its 3
+        // served batches unless its handler lost the race writing the
+        // reply the client never reads against the dropped connection —
+        // in which case that handler's draws are not totalled and the
+        // broken pipe counts as the (benign) connection error.
+        let conn2_and_3 = (4 * m + 5) as u64;
+        assert!(
+            totals.draws == conn2_and_3 + (3 * m) as u64 || totals.draws == conn2_and_3,
+            "unexpected draw total {}",
+            totals.draws
+        );
+        assert_eq!(totals.connections, 3);
+        assert!(totals.conn_errors <= 1, "only conn 1's benign write race may error");
+        assert_eq!(totals.rejected_at_capacity, 0);
+    });
+}
+
+/// Wire faults on the server's read path and the write path are isolated
+/// to their connection: the victim client errors, the fault is counted,
+/// and the next client is served normally — the front never exits.
+#[test]
+fn chaos_tcp_faults_are_counted_not_fatal() {
+    let _gate = serialize();
+    faults::disarm_all();
+    let _clean = Disarm;
+
+    let d = 6usize;
+    let pre = setup(100, d, 191);
+    let core = mk_core(&pre, 2);
+    let theta = vec![0.05f32; d];
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = AtomicBool::new(false);
+    let opts = ServeOptions::default();
+    thread::scope(|scope| {
+        let corer = &core;
+        let stopr = &stop;
+        let optsr = &opts;
+        let server = scope.spawn(move || serve_supervised(corer, listener, stopr, optsr));
+
+        // server-side read failure: the handler errors, the HELLO never
+        // answers, and the failure lands in conn_errors — not in Err
+        faults::arm_at(faults::TCP_READ, Mode::Once, faults::SIDE_SERVER);
+        assert!(ServeClient::connect(addr, 1).is_err());
+        assert_eq!(faults::fires(faults::TCP_READ), 1);
+
+        // client-side write failure: the HELLO frame never leaves the
+        // process; the server just sees a connection that goes away
+        faults::arm(faults::TCP_WRITE, Mode::Once);
+        assert!(ServeClient::connect(addr, 2).is_err());
+        assert_eq!(faults::fires(faults::TCP_WRITE), 1);
+
+        // the front is unaffected
+        let mut ok = ServeClient::connect(addr, 3).unwrap();
+        let (_, draws) = ok.draw(&theta, 9).unwrap();
+        assert_eq!(draws.len(), 9);
+        ok.bye().unwrap();
+
+        stop.store(true, Ordering::Relaxed);
+        let totals = server.join().unwrap().unwrap();
+        assert_eq!(totals.draws, 9);
+        assert_eq!(totals.connections, 3);
+        assert_eq!(totals.conn_errors, 1, "exactly the injected server-side read failure");
+        assert_eq!(totals.rejected_at_capacity, 0);
+    });
+}
+
+/// The determinism gate for the compiled-in registry: with failpoints
+/// compiled in (this whole binary) but disarmed, pipelined serving still
+/// replays the synchronous stream bit-for-bit and nothing degrades.
+#[test]
+fn chaos_disarmed_failpoints_leave_streams_identical() {
+    let _gate = serialize();
+    faults::disarm_all();
+    let _clean = Disarm;
+
+    let pre = setup(140, 8, 201);
+    let core = mk_core(&pre, 3);
+    let theta = vec![0.03f32; 8];
+    let (m, steps) = (20usize, 5usize);
+    let mut sync = ServingSession::open(&core, 17);
+    let mut piped = ServingSession::open(&core, 17);
+    let mut want = Vec::new();
+    let mut buf = Vec::new();
+    for _ in 0..steps {
+        sync.draw_batch(&theta, m, &mut buf);
+        want.extend_from_slice(&buf);
+    }
+    let mut got = Vec::new();
+    let rep = piped
+        .run_pipelined(&theta, m, steps, 64, |_, draws| {
+            got.extend_from_slice(draws);
+            true
+        })
+        .unwrap();
+    assert!(!rep.degraded);
+    assert_eq!(want, got, "disarmed failpoints changed a stream");
+    assert_eq!(core.counters().degraded_sessions, 0);
+}
