@@ -6,7 +6,9 @@
 use std::sync::Arc;
 
 use lgd::benchkit::{bb, Bench};
+use lgd::config::spec::{EstimatorKind, RunConfig};
 use lgd::coordinator::draw_engine::{run_session, DrawEngineConfig};
+use lgd::coordinator::trainer::{train, GradSource};
 use lgd::core::matrix::axpy;
 use lgd::data::preprocess::{preprocess, PreprocessOptions};
 use lgd::data::SynthSpec;
@@ -14,6 +16,7 @@ use lgd::estimator::lgd::{LgdEstimator, LgdOptions};
 use lgd::estimator::{GradientEstimator, ShardedLgdEstimator, WeightedDraw};
 use lgd::lsh::srp::{DenseSrp, SrpHasher};
 use lgd::model::{LinReg, Model};
+use lgd::optim::Schedule;
 use lgd::runtime::executor::{lit_f32, lit_i32};
 use lgd::runtime::{run_harness, BertSession, Runtime, ServingCore};
 
@@ -227,6 +230,38 @@ fn bench_sharded_draws() {
         // nothing in the bench arms a failpoint, so a nonzero value means a
         // worker died on its own.
         b.note("serve_degraded_sessions", degraded_total as f64);
+    }
+
+    // --- Health supervisor overhead: the same tiny training run with the
+    // sentinels disarmed vs armed (and never tripping). The per-step
+    // timing rows are advisory; the trip/rollback counters are gated work
+    // counters pinned at 0 — a clean run that trips (or rolls back) is a
+    // supervisor bug, not noise.
+    {
+        let ds = SynthSpec::power_law("rt-health", 2_000, 16, 51).generate().unwrap();
+        let (tr, te) = ds.split(0.9, 1).unwrap();
+        let hpre = preprocess(tr, &PreprocessOptions::default()).unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.train.estimator = EstimatorKind::Lgd;
+        cfg.train.epochs = 2;
+        cfg.train.batch = 8;
+        cfg.train.schedule = Schedule::Const(0.05);
+        cfg.lsh.k = 4;
+        cfg.lsh.l = 16;
+        cfg.lsh.shards = 2;
+        let t0 = std::time::Instant::now();
+        let off = train(&cfg, &hpre, &te, GradSource::Native).unwrap();
+        let off_ns = t0.elapsed().as_secs_f64() * 1e9;
+        cfg.health.enabled = true;
+        let t0 = std::time::Instant::now();
+        let on = train(&cfg, &hpre, &te, GradSource::Native).unwrap();
+        let on_ns = t0.elapsed().as_secs_f64() * 1e9;
+        let steps = on.iterations.max(1) as f64;
+        b.record("health_off_step_ns", off_ns / steps);
+        b.record("health_on_step_ns", on_ns / steps);
+        assert_eq!(off.theta, on.theta, "armed-but-untripped sentinels must be bitwise invisible");
+        b.note("health_sentinel_trips", on.health.sentinel_trips() as f64);
+        b.note("health_rollbacks", on.health.rollbacks as f64);
     }
 
     b.report();

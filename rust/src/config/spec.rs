@@ -215,6 +215,16 @@ pub struct DataConfig {
     pub seed: u64,
     /// Load from CSV instead of generating.
     pub csv: Option<PathBuf>,
+    /// Accept non-finite (`nan`/`inf`) feature/target cells when loading
+    /// CSV data. Off by default: one NaN row silently poisons row norms,
+    /// hash codes and every gradient downstream, so the loader rejects it
+    /// with a line-numbered error unless this escape hatch is set.
+    pub allow_nonfinite: bool,
+    /// Example ids to evict from the LGD engine before training — the
+    /// operator-facing twin of the health supervisor's automatic
+    /// quarantine (comma-separated in TOML/CLI: `quarantine = "3,17"`).
+    /// Evicted rows can never be drawn. LGD estimator only.
+    pub quarantine: Vec<usize>,
 }
 
 impl Default for DataConfig {
@@ -225,6 +235,8 @@ impl Default for DataConfig {
             train_frac: 0.9,
             seed: 99,
             csv: None,
+            allow_nonfinite: false,
+            quarantine: Vec::new(),
         }
     }
 }
@@ -262,6 +274,49 @@ impl StoreConfig {
     /// True when any persistence behavior is requested.
     pub fn is_active(&self) -> bool {
         self.path.is_some() || self.resume
+    }
+}
+
+/// Training-health block of a run config (`coordinator::health` — the
+/// NaN/divergence sentinels, poisoned-input quarantine and
+/// rollback-to-last-good supervisor). Disabled by default; when enabled
+/// but never tripped the training stream is bit-for-bit identical to a
+/// run without it (the sentinels only *read* the batch gradient, θ and
+/// the loss — they never touch an RNG).
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// Arm the sentinels (CLI `--health on`).
+    pub enabled: bool,
+    /// Trailing window (in θ-norm observations / loss evals) the
+    /// divergence detectors baseline against (2..=1024).
+    pub window: usize,
+    /// Loss-spike trip: train loss > `spike_factor ×` the windowed
+    /// minimum for `patience` consecutive evals (> 1).
+    pub spike_factor: f64,
+    /// Consecutive spiking evals tolerated before tripping (>= 1).
+    pub patience: u32,
+    /// θ-explosion trip: ‖θ‖ > `theta_factor ×` the windowed baseline
+    /// norm (floored at 1.0 so a near-zero start cannot trip it) (> 1).
+    pub theta_factor: f64,
+    /// Learning-rate multiplier applied after each rollback ((0,1]; 1.0
+    /// is bitwise a no-op — used by the determinism gates).
+    pub rollback_lr_factor: f64,
+    /// Rollbacks allowed before the run aborts with a clean
+    /// `Error::Health` (0..=64; 0 = detect-and-abort, never roll back).
+    pub max_rollbacks: u32,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            enabled: false,
+            window: 16,
+            spike_factor: 10.0,
+            patience: 2,
+            theta_factor: 1e4,
+            rollback_lr_factor: 0.5,
+            max_rollbacks: 3,
+        }
     }
 }
 
@@ -306,6 +361,25 @@ impl Default for ServeConfig {
     }
 }
 
+/// Parse a comma-separated example-id list (`"3,17"`) — the TOML/CLI
+/// surface for [`DataConfig::quarantine`] (the hand-rolled TOML layer has
+/// no arrays). Empty string = empty list; blank segments are ignored so
+/// trailing commas are harmless.
+pub fn parse_quarantine(s: &str) -> Result<Vec<usize>> {
+    let mut ids = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let id = tok.parse::<usize>().map_err(|_| {
+            Error::Config(format!("data.quarantine: '{tok}' is not an example id"))
+        })?;
+        ids.push(id);
+    }
+    Ok(ids)
+}
+
 /// A full run configuration.
 #[derive(Debug, Clone, Default)]
 pub struct RunConfig {
@@ -319,6 +393,8 @@ pub struct RunConfig {
     pub train: TrainConfig,
     /// Snapshot persistence.
     pub store: StoreConfig,
+    /// Training-health supervisor.
+    pub health: HealthConfig,
     /// Concurrent serving (`lgd serve`).
     pub serve: ServeConfig,
     /// Output directory for result CSVs.
@@ -343,6 +419,10 @@ impl RunConfig {
         if !csv.is_empty() {
             cfg.data.csv = Some(PathBuf::from(csv));
         }
+        cfg.data.allow_nonfinite =
+            doc.bool_or("data", "allow_nonfinite", cfg.data.allow_nonfinite)?;
+        let quarantine = doc.str_or("data", "quarantine", "")?;
+        cfg.data.quarantine = parse_quarantine(&quarantine)?;
 
         // [lsh]
         cfg.lsh.k = doc.int_or("lsh", "k", cfg.lsh.k as i64)? as usize;
@@ -420,6 +500,21 @@ impl RunConfig {
         cfg.store.autosave_epochs =
             doc.int_or("store", "autosave_epochs", cfg.store.autosave_epochs as i64)? as usize;
         cfg.store.keep = doc.int_or("store", "keep", cfg.store.keep as i64)? as usize;
+
+        // [health]
+        cfg.health.enabled = doc.bool_or("health", "enabled", cfg.health.enabled)?;
+        cfg.health.window =
+            doc.int_or("health", "window", cfg.health.window as i64)? as usize;
+        cfg.health.spike_factor =
+            doc.float_or("health", "spike_factor", cfg.health.spike_factor)?;
+        cfg.health.patience =
+            doc.int_or("health", "patience", cfg.health.patience as i64)? as u32;
+        cfg.health.theta_factor =
+            doc.float_or("health", "theta_factor", cfg.health.theta_factor)?;
+        cfg.health.rollback_lr_factor =
+            doc.float_or("health", "rollback_lr_factor", cfg.health.rollback_lr_factor)?;
+        cfg.health.max_rollbacks =
+            doc.int_or("health", "max_rollbacks", cfg.health.max_rollbacks as i64)? as u32;
 
         // [serve]
         cfg.serve.clients = doc.int_or("serve", "clients", cfg.serve.clients as i64)? as usize;
@@ -509,6 +604,46 @@ impl RunConfig {
                     .into(),
             ));
         }
+        if self.health.window < 2 || self.health.window > 1024 {
+            return Err(Error::Config(format!(
+                "health.window = {} out of 2..=1024",
+                self.health.window
+            )));
+        }
+        if !(self.health.spike_factor.is_finite() && self.health.spike_factor > 1.0) {
+            return Err(Error::Config(format!(
+                "health.spike_factor = {} must be finite and > 1",
+                self.health.spike_factor
+            )));
+        }
+        if self.health.patience == 0 {
+            return Err(Error::Config("health.patience must be >= 1".into()));
+        }
+        if !(self.health.theta_factor.is_finite() && self.health.theta_factor > 1.0) {
+            return Err(Error::Config(format!(
+                "health.theta_factor = {} must be finite and > 1",
+                self.health.theta_factor
+            )));
+        }
+        let f = self.health.rollback_lr_factor;
+        if !(f.is_finite() && f > 0.0 && f <= 1.0) {
+            return Err(Error::Config(format!(
+                "health.rollback_lr_factor = {f} out of (0,1]"
+            )));
+        }
+        if self.health.max_rollbacks > 64 {
+            return Err(Error::Config(format!(
+                "health.max_rollbacks = {} out of 0..=64",
+                self.health.max_rollbacks
+            )));
+        }
+        if !self.data.quarantine.is_empty() && self.train.estimator != EstimatorKind::Lgd {
+            return Err(Error::Config(
+                "data.quarantine evicts rows from the LGD engine; it requires \
+                 train.estimator = \"lgd\""
+                    .into(),
+            ));
+        }
         if self.serve.clients == 0 || self.serve.clients > 1024 {
             return Err(Error::Config(format!(
                 "serve.clients = {} out of 1..=1024",
@@ -587,6 +722,43 @@ mod tests {
         assert_eq!(cfg.serve.max_clients, 64);
         assert_eq!(cfg.serve.idle_timeout_ms, 30_000);
         assert_eq!(cfg.serve.io_timeout_ms, 5_000);
+        assert!(!cfg.data.allow_nonfinite, "CSV non-finite cells rejected by default");
+        assert!(cfg.data.quarantine.is_empty());
+        assert!(!cfg.health.enabled, "the health supervisor is opt-in");
+        assert_eq!(cfg.health.window, 16);
+        assert_eq!(cfg.health.spike_factor, 10.0);
+        assert_eq!(cfg.health.patience, 2);
+        assert_eq!(cfg.health.theta_factor, 1e4);
+        assert_eq!(cfg.health.rollback_lr_factor, 0.5);
+        assert_eq!(cfg.health.max_rollbacks, 3);
+    }
+
+    #[test]
+    fn health_block_parses_and_validates() {
+        let doc = TomlDoc::parse(
+            "[health]\nenabled = true\nwindow = 8\nspike_factor = 4.0\npatience = 1\n\
+             theta_factor = 100.0\nrollback_lr_factor = 1.0\nmax_rollbacks = 2\n\
+             [data]\nquarantine = \"3, 17,\"\nallow_nonfinite = true\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert!(cfg.health.enabled);
+        assert_eq!(cfg.health.window, 8);
+        assert_eq!(cfg.health.spike_factor, 4.0);
+        assert_eq!(cfg.health.patience, 1);
+        assert_eq!(cfg.health.theta_factor, 100.0);
+        assert_eq!(cfg.health.rollback_lr_factor, 1.0);
+        assert_eq!(cfg.health.max_rollbacks, 2);
+        assert_eq!(cfg.data.quarantine, vec![3, 17]);
+        assert!(cfg.data.allow_nonfinite);
+        assert_eq!(parse_quarantine("").unwrap(), Vec::<usize>::new());
+        assert!(parse_quarantine("3,x").is_err());
+        // quarantine only makes sense for the LGD engine
+        let doc = TomlDoc::parse(
+            "[data]\nquarantine = \"1\"\n[train]\nestimator = \"sgd\"\n",
+        )
+        .unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
     }
 
     #[test]
@@ -721,6 +893,15 @@ backend = "pjrt"
             "[train]\nestimator = \"bogus\"",
             "[train]\nlr = -0.1",
             "[data]\ntrain_frac = 1.0",
+            "[data]\nquarantine = \"1,abc\"",
+            "[health]\nwindow = 1",
+            "[health]\nwindow = 2048",
+            "[health]\nspike_factor = 1.0",
+            "[health]\npatience = 0",
+            "[health]\ntheta_factor = 0.5",
+            "[health]\nrollback_lr_factor = 0.0",
+            "[health]\nrollback_lr_factor = 1.5",
+            "[health]\nmax_rollbacks = 100",
         ] {
             let doc = TomlDoc::parse(bad).unwrap();
             assert!(RunConfig::from_toml(&doc).is_err(), "accepted bad config: {bad}");

@@ -1,0 +1,291 @@
+//! Training-loop health supervisor: the NaN/divergence sentinels and the
+//! bookkeeping behind quarantine and rollback-to-last-good recovery.
+//!
+//! The trainer ([`crate::coordinator::trainer`]) owns the recovery *acts* —
+//! evicting poisoned examples through the shard set's generation-flip
+//! machinery and restoring θ/optimizer/engine state from the newest
+//! health-stamped snapshot. This module owns the *judgement*: when is a
+//! batch gradient, a parameter vector or a loss evaluation evidence that
+//! the run has gone off the rails?
+//!
+//! Determinism contract: the sentinels only **read** the quantities the
+//! loop already computed — the accumulated batch gradient, θ after the
+//! optimizer step, the train loss at an eval point. They never draw from
+//! an RNG, never touch the estimator and never perturb a float, so a run
+//! with the supervisor enabled but never tripped is bit-for-bit identical
+//! to a run without it (gated by the integration suite).
+
+use std::collections::VecDeque;
+
+use crate::config::spec::HealthConfig;
+use crate::core::numerics::all_finite;
+
+/// Why a sentinel tripped — everything the trainer's rollback state
+/// machine needs to recover.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Trip {
+    /// The accumulated batch gradient went non-finite. `poisoned` holds
+    /// the example ids per-example attribution blamed (possibly empty if
+    /// the corruption was not attributable to a single input — e.g. an
+    /// overflow of the weighted sum itself).
+    Grad {
+        /// Example ids whose individual contribution is non-finite.
+        poisoned: Vec<usize>,
+    },
+    /// θ went non-finite or its norm exploded past the windowed bound.
+    Theta(String),
+    /// The train loss went non-finite or spiked past the windowed bound
+    /// for `patience` consecutive evals.
+    Loss(String),
+}
+
+impl Trip {
+    /// One-line description for errors and logs.
+    pub fn describe(&self) -> String {
+        match self {
+            Trip::Grad { poisoned } => format!(
+                "non-finite batch gradient (attributed to {} example(s): {:?})",
+                poisoned.len(),
+                poisoned
+            ),
+            Trip::Theta(m) => format!("parameter sentinel tripped: {m}"),
+            Trip::Loss(m) => format!("loss sentinel tripped: {m}"),
+        }
+    }
+}
+
+/// Counters the supervisor accumulates over a run — surfaced on
+/// [`crate::coordinator::trainer::TrainOutcome`] and gated at zero on the
+/// clean benchmark path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HealthReport {
+    /// Gradient-sentinel trips (non-finite batch gradient).
+    pub grad_trips: u64,
+    /// θ-sentinel trips (non-finite or exploded parameters).
+    pub theta_trips: u64,
+    /// Loss-sentinel trips (non-finite or spiking train loss).
+    pub loss_trips: u64,
+    /// Examples evicted from the engine by poisoned-input quarantine.
+    pub quarantined: u64,
+    /// Rollbacks to a health-stamped snapshot performed.
+    pub rollbacks: u64,
+}
+
+impl HealthReport {
+    /// Total sentinel trips of any kind.
+    pub fn sentinel_trips(&self) -> u64 {
+        self.grad_trips + self.theta_trips + self.loss_trips
+    }
+}
+
+/// The armed sentinels: windowed baselines for the divergence detectors
+/// plus the run's counters. One per training run, owned by the loop
+/// context when `health.enabled` is set.
+pub struct HealthMonitor {
+    cfg: HealthConfig,
+    /// Run counters (the trainer also bumps `quarantined`/`rollbacks`).
+    pub report: HealthReport,
+    /// Trailing ‖θ‖ observations (healthy steps only).
+    theta_norms: VecDeque<f64>,
+    /// Trailing train-loss observations (healthy evals only).
+    losses: VecDeque<f64>,
+    /// Consecutive spiking evals so far.
+    strikes: u32,
+}
+
+impl HealthMonitor {
+    /// Arm the sentinels with the run's thresholds.
+    pub fn new(cfg: &HealthConfig) -> Self {
+        HealthMonitor {
+            cfg: cfg.clone(),
+            report: HealthReport::default(),
+            theta_norms: VecDeque::new(),
+            losses: VecDeque::new(),
+            strikes: 0,
+        }
+    }
+
+    /// Record a gradient trip (the trainer already holds the attribution).
+    pub fn trip_grad(&mut self, poisoned: Vec<usize>) -> Trip {
+        self.report.grad_trips += 1;
+        Trip::Grad { poisoned }
+    }
+
+    /// Observe θ after an optimizer step. Trips on any non-finite
+    /// parameter, or when ‖θ‖ exceeds `theta_factor ×` the smallest norm
+    /// in the trailing window (floored at 1.0 so a near-zero start cannot
+    /// trip the ratio). Healthy observations enter the window; a tripping
+    /// one does not, so the baseline stays untainted for the resumed run.
+    pub fn observe_theta(&mut self, theta: &[f32]) -> Option<Trip> {
+        if !all_finite(theta) {
+            self.report.theta_trips += 1;
+            return Some(Trip::Theta("θ contains a non-finite parameter".into()));
+        }
+        let norm = theta.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt();
+        if let Some(base) = self.theta_norms.iter().copied().fold(None, |m: Option<f64>, v| {
+            Some(m.map_or(v, |m| m.min(v)))
+        }) {
+            let bound = self.cfg.theta_factor * base.max(1.0);
+            if norm > bound {
+                self.report.theta_trips += 1;
+                return Some(Trip::Theta(format!(
+                    "‖θ‖ = {norm:.3e} exceeds {:.1} × windowed baseline {base:.3e}",
+                    self.cfg.theta_factor
+                )));
+            }
+        }
+        self.theta_norms.push_back(norm);
+        while self.theta_norms.len() > self.cfg.window {
+            self.theta_norms.pop_front();
+        }
+        None
+    }
+
+    /// Observe the train loss at an eval point. Trips immediately on
+    /// NaN/Inf; trips on divergence when the loss exceeds `spike_factor ×`
+    /// the windowed minimum for `patience` consecutive evals. Spiking
+    /// evals never enter the window (they would drag the baseline up
+    /// toward the divergence they are meant to catch).
+    pub fn observe_loss(&mut self, loss: f64) -> Option<Trip> {
+        if !loss.is_finite() {
+            self.report.loss_trips += 1;
+            return Some(Trip::Loss(format!("train loss is {loss}")));
+        }
+        let min = self.losses.iter().copied().fold(None, |m: Option<f64>, v| {
+            Some(m.map_or(v, |m| m.min(v)))
+        });
+        if let Some(min) = min {
+            if loss > self.cfg.spike_factor * min {
+                self.strikes += 1;
+                if self.strikes >= self.cfg.patience {
+                    self.report.loss_trips += 1;
+                    return Some(Trip::Loss(format!(
+                        "train loss {loss:.3e} > {:.1} × windowed minimum {min:.3e} \
+                         for {} consecutive eval(s)",
+                        self.cfg.spike_factor, self.strikes
+                    )));
+                }
+                return None;
+            }
+        }
+        self.strikes = 0;
+        self.losses.push_back(loss);
+        while self.losses.len() > self.cfg.window {
+            self.losses.pop_front();
+        }
+        None
+    }
+
+    /// Reset the windowed baselines after a rollback: the loop state
+    /// jumped back to an earlier point, so observations from the doomed
+    /// segment no longer describe the stream being supervised. Counters
+    /// are kept — they describe the run, not the segment.
+    pub fn rollback_reset(&mut self) {
+        self.theta_norms.clear();
+        self.losses.clear();
+        self.strikes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HealthConfig {
+        HealthConfig {
+            enabled: true,
+            window: 4,
+            spike_factor: 10.0,
+            patience: 2,
+            theta_factor: 100.0,
+            rollback_lr_factor: 1.0,
+            max_rollbacks: 3,
+        }
+    }
+
+    #[test]
+    fn healthy_streams_never_trip() {
+        let mut m = HealthMonitor::new(&cfg());
+        for i in 0..200 {
+            let t = vec![0.1 + 0.001 * i as f32; 8];
+            assert!(m.observe_theta(&t).is_none(), "step {i}");
+            assert!(m.observe_loss(1.0 / (1.0 + i as f64)).is_none(), "eval {i}");
+        }
+        assert_eq!(m.report, HealthReport::default());
+        assert_eq!(m.report.sentinel_trips(), 0);
+    }
+
+    #[test]
+    fn non_finite_theta_trips_immediately() {
+        let mut m = HealthMonitor::new(&cfg());
+        assert!(m.observe_theta(&[0.5, 0.5]).is_none());
+        let trip = m.observe_theta(&[0.5, f32::NAN]).unwrap();
+        assert!(matches!(trip, Trip::Theta(_)));
+        assert_eq!(m.report.theta_trips, 1);
+    }
+
+    #[test]
+    fn theta_norm_explosion_trips_against_windowed_baseline() {
+        let mut m = HealthMonitor::new(&cfg());
+        // window fills with ~unit norms; baseline floor is 1.0
+        for _ in 0..4 {
+            assert!(m.observe_theta(&[1.0, 0.0, 0.0]).is_none());
+        }
+        // 50× is under theta_factor = 100 — healthy, enters the window
+        assert!(m.observe_theta(&[50.0, 0.0, 0.0]).is_none());
+        // 200× the min-of-window (still 1.0) trips
+        let trip = m.observe_theta(&[200.0, 0.0, 0.0]).unwrap();
+        assert!(matches!(trip, Trip::Theta(_)), "{trip:?}");
+        assert_eq!(m.report.theta_trips, 1);
+        // the tripping norm did not enter the window: the same vector
+        // trips again (baseline unchanged)
+        assert!(m.observe_theta(&[200.0, 0.0, 0.0]).is_some());
+        // tiny norms never trip via the 1.0 floor
+        let mut m = HealthMonitor::new(&cfg());
+        assert!(m.observe_theta(&[1e-8, 0.0]).is_none());
+        assert!(m.observe_theta(&[1e-3, 0.0]).is_none(), "1e5× a tiny norm is under the floor");
+    }
+
+    #[test]
+    fn loss_nan_trips_immediately_and_spike_respects_patience() {
+        let mut m = HealthMonitor::new(&cfg());
+        assert!(m.observe_loss(f64::NAN).is_some());
+        assert_eq!(m.report.loss_trips, 1);
+        // patience = 2: one spike is a strike, the second consecutive trips
+        let mut m = HealthMonitor::new(&cfg());
+        for _ in 0..3 {
+            assert!(m.observe_loss(1.0).is_none());
+        }
+        assert!(m.observe_loss(50.0).is_none(), "first spike is a strike, not a trip");
+        assert!(m.observe_loss(60.0).is_some(), "second consecutive spike trips");
+        assert_eq!(m.report.loss_trips, 1);
+        // a healthy eval between spikes resets the strike counter
+        let mut m = HealthMonitor::new(&cfg());
+        for _ in 0..3 {
+            assert!(m.observe_loss(1.0).is_none());
+        }
+        assert!(m.observe_loss(50.0).is_none());
+        assert!(m.observe_loss(1.1).is_none(), "recovery resets strikes");
+        assert!(m.observe_loss(55.0).is_none(), "strike count restarted");
+        assert_eq!(m.report.loss_trips, 0);
+    }
+
+    #[test]
+    fn windows_are_bounded_and_rollback_reset_clears_baselines() {
+        let mut m = HealthMonitor::new(&cfg());
+        // old tiny losses age out of the window = 4, so a slow upward
+        // drift never trips
+        for i in 0..50 {
+            let v = 1.0 + i as f64;
+            assert!(m.observe_loss(v).is_none(), "drift eval {i}");
+        }
+        // after a reset the next observations rebuild the baseline from
+        // scratch: a value 10^4 times the pre-reset baseline is fine
+        m.rollback_reset();
+        assert!(m.observe_loss(5e5).is_none());
+        let grad = m.trip_grad(vec![3, 17]);
+        assert!(matches!(&grad, Trip::Grad { poisoned } if poisoned == &vec![3, 17]));
+        assert_eq!(m.report.grad_trips, 1);
+        assert!(grad.describe().contains("2 example(s)"));
+    }
+}

@@ -2,11 +2,13 @@
 //! the asynchronous pipelined draw engine and the metrics registry.
 
 pub mod draw_engine;
+pub mod health;
 pub mod metrics;
 pub mod pipeline;
 pub mod trainer;
 
 pub use draw_engine::{run_session, DrawEngineConfig, DrawQueue, SessionReport};
+pub use health::{HealthMonitor, HealthReport, Trip};
 pub use metrics::Metrics;
 pub use pipeline::{
     build_shard_tables, streaming_build, streaming_build_sharded, PipelineConfig,

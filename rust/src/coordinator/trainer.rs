@@ -26,8 +26,10 @@ use std::time::Instant;
 
 use crate::config::spec::{EstimatorKind, OptimizerKind, RunConfig};
 use crate::coordinator::draw_engine::{run_session, DrawEngineConfig};
+use crate::coordinator::health::{HealthMonitor, HealthReport, Trip};
 use crate::core::error::{Error, Result};
 use crate::core::matrix::axpy;
+use crate::core::numerics::all_finite;
 use crate::data::dataset::{Dataset, Task};
 use crate::data::preprocess::Preprocessed;
 use crate::estimator::lgd::{LgdEstimator, LgdOptions};
@@ -38,7 +40,10 @@ use crate::lsh::{AnyHasher, HasherVisitor};
 use crate::model::{LinReg, LogReg, Model};
 use crate::optim::{AdaGrad, Adam, Optimizer, Sgd};
 use crate::runtime::{PjrtLinear, Runtime};
-use crate::store::snapshot::{self, EngineDump, LoadedSnapshot, SnapshotHasher, TrainState};
+use crate::store::snapshot::{
+    self, EngineDump, HealthStamp, LoadedSnapshot, SnapshotHasher, TrainState,
+};
+use crate::testkit::faults;
 
 /// One point of the convergence curve.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -83,6 +88,9 @@ pub struct TrainOutcome {
     pub resumed: bool,
     /// Snapshots written during the run (autosaves + the final save).
     pub autosaves: u32,
+    /// Health-supervisor counters (all zero when `health.enabled` is off
+    /// or nothing tripped — the clean-path gate).
+    pub health: HealthReport,
 }
 
 /// Gradient execution source.
@@ -248,6 +256,9 @@ fn accumulate_grad(
             for dr in draws {
                 let (x, y) = pre.data.example(dr.index);
                 model.grad(x, y, theta, grad);
+                if faults::should_fail_at(faults::GRAD_NAN, dr.index as u64) {
+                    grad[0] = f32::NAN;
+                }
                 axpy(dr.weight as f32 * inv_b, grad, acc);
             }
         }
@@ -260,6 +271,40 @@ fn accumulate_grad(
         }
     }
     Ok(())
+}
+
+/// Per-example attribution after a non-finite batch gradient: re-derive
+/// each drawn example's contribution in isolation and blame the ones that
+/// are themselves non-finite (input row, target, importance weight or
+/// per-example gradient). Runs only on the already-tripped slow path, so
+/// its cost is irrelevant; it re-checks the [`faults::GRAD_NAN`] site with
+/// the same per-example filter so an injected persistent poison is
+/// attributed exactly like a real one. Uses the native model even under
+/// the PJRT backend (attribution needs per-example isolation, not batch
+/// throughput).
+fn attribute_poison(
+    pre: &Preprocessed,
+    model: &dyn Model,
+    draws: &[WeightedDraw],
+    theta: &[f32],
+    grad: &mut [f32],
+) -> Vec<usize> {
+    let mut poisoned = Vec::new();
+    for dr in draws {
+        let (x, y) = pre.data.example(dr.index);
+        let mut bad = !all_finite(x) || !y.is_finite() || !dr.weight.is_finite();
+        if !bad {
+            model.grad(x, y, theta, grad);
+            if faults::should_fail_at(faults::GRAD_NAN, dr.index as u64) {
+                grad[0] = f32::NAN;
+            }
+            bad = !all_finite(grad);
+        }
+        if bad && !poisoned.contains(&dr.index) {
+            poisoned.push(dr.index);
+        }
+    }
+    poisoned
 }
 
 /// The single definition of the training-loop scaffolding: iteration
@@ -285,6 +330,9 @@ struct LoopCtx<'rt> {
     /// schedules and eval cadence stay aligned across restarts).
     it: u64,
     autosaves: u32,
+    /// Armed sentinels when `health.enabled`; `None` keeps the loop body
+    /// on the exact pre-health path.
+    monitor: Option<HealthMonitor>,
 }
 
 impl<'rt> LoopCtx<'rt> {
@@ -365,6 +413,7 @@ impl<'rt> LoopCtx<'rt> {
             curve: Vec::new(),
             it,
             autosaves: 0,
+            monitor: cfg.health.enabled.then(|| HealthMonitor::new(&cfg.health)),
         })
     }
 
@@ -392,8 +441,14 @@ impl<'rt> LoopCtx<'rt> {
         Ok(())
     }
 
-    /// One gradient estimate + optimizer update from a drawn batch.
-    fn grad_update(&mut self, pre: &Preprocessed, draws: &[WeightedDraw]) -> Result<()> {
+    /// One gradient estimate + optimizer update from a drawn batch. With
+    /// the health supervisor armed, the batch gradient is checked for
+    /// finiteness *before* the optimizer step (a trip leaves θ and the
+    /// moments untouched) and θ is checked after it; `Some(trip)` hands
+    /// the verdict to the caller's recovery path. Untripped, the float
+    /// stream is identical to the unsupervised body — the sentinels only
+    /// read.
+    fn grad_update(&mut self, pre: &Preprocessed, draws: &[WeightedDraw]) -> Result<Option<Trip>> {
         accumulate_grad(
             pre,
             self.model.as_ref(),
@@ -406,8 +461,49 @@ impl<'rt> LoopCtx<'rt> {
             &mut self.weights,
             &mut self.acc,
         )?;
+        if self.monitor.is_some() && !all_finite(&self.acc) {
+            let poisoned =
+                attribute_poison(pre, self.model.as_ref(), draws, &self.theta, &mut self.grad);
+            let mon = self.monitor.as_mut().expect("checked above");
+            return Ok(Some(mon.trip_grad(poisoned)));
+        }
         self.opt.step(&mut self.theta, &self.acc);
-        Ok(())
+        if faults::should_fail(faults::THETA_POISON) {
+            self.theta[0] = f32::NAN;
+        }
+        if let Some(mon) = self.monitor.as_mut() {
+            if let Some(trip) = mon.observe_theta(&self.theta) {
+                return Ok(Some(trip));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Run the loss sentinel (and the `LOSS_CORRUPT` failpoint) over a
+    /// fresh train-loss evaluation. Shared by the sync cadence eval and
+    /// the async callback (which computes its wall-clock differently).
+    fn check_loss(&mut self, tr: &mut f64) -> Option<Trip> {
+        if faults::should_fail(faults::LOSS_CORRUPT) {
+            *tr = f64::NAN;
+        }
+        self.monitor.as_mut().and_then(|mon| mon.observe_loss(*tr))
+    }
+
+    /// Eval + record with the loss sentinel in the path: a tripping eval
+    /// is not pushed onto the curve (the doomed point would survive the
+    /// rollback's truncation only to mislead the plots).
+    fn eval_checked(
+        &mut self,
+        pre: &Preprocessed,
+        test: &Dataset,
+        wall: f64,
+    ) -> Result<Option<Trip>> {
+        let (mut tr, te) = self.eval_now(pre, test)?;
+        if let Some(trip) = self.check_loss(&mut tr) {
+            return Ok(Some(trip));
+        }
+        self.push_point(wall, tr, te);
+        Ok(None)
     }
 
     /// Is a curve eval due at the current iteration?
@@ -436,6 +532,7 @@ impl<'rt> LoopCtx<'rt> {
             shard_build_secs,
             resumed,
             autosaves: self.autosaves,
+            health: self.monitor.map(|m| m.report).unwrap_or_default(),
         }
     }
 }
@@ -443,7 +540,8 @@ impl<'rt> LoopCtx<'rt> {
 /// Run `steps` synchronous draw → gradient → update steps, timing each step
 /// into the training clock and evaluating at the cadence (eval excluded
 /// from the clock). Shared by the SGD baseline and the synchronous LGD
-/// epoch loop.
+/// epoch loop. A sentinel trip stops the loop early and hands the verdict
+/// back with the clock so far; the caller owns recovery.
 fn run_sync_steps(
     ctx: &mut LoopCtx<'_>,
     est: &mut dyn GradientEstimator,
@@ -452,7 +550,7 @@ fn run_sync_steps(
     steps: u64,
     mut train_wall: f64,
     draws: &mut Vec<WeightedDraw>,
-) -> Result<f64> {
+) -> Result<(f64, Option<Trip>)> {
     for _ in 0..steps {
         let step_t = Instant::now();
         // --- sample ---
@@ -464,14 +562,18 @@ fn run_sync_steps(
         }
         ctx.it += 1;
         // --- gradient estimate + update ---
-        ctx.grad_update(pre, draws)?;
+        if let Some(trip) = ctx.grad_update(pre, draws)? {
+            train_wall += step_t.elapsed().as_secs_f64();
+            return Ok((train_wall, Some(trip)));
+        }
         train_wall += step_t.elapsed().as_secs_f64();
         if ctx.due_eval() {
-            let (tr, te) = ctx.eval_now(pre, test)?;
-            ctx.push_point(train_wall, tr, te);
+            if let Some(trip) = ctx.eval_checked(pre, test, train_wall)? {
+                return Ok((train_wall, Some(trip)));
+            }
         }
     }
-    Ok(train_wall)
+    Ok((train_wall, None))
 }
 
 /// Save the engine + training state at an epoch boundary when the config
@@ -496,9 +598,114 @@ fn maybe_autosave<H: SnapshotHasher>(
         optimizer: cfg.train.optimizer,
         optim: ctx.opt.export_state(),
     };
-    snapshot::save_rotated(path, cfg.store.keep, est, Some(&ts))?;
+    // With the supervisor armed, every autosave carries a health stamp —
+    // the loop only reaches an epoch boundary through healthy steps, so
+    // the verdict is `healthy: true` with the run's counters alongside.
+    // Unsupervised saves stay byte-identical to the pre-health format.
+    let stamp = ctx.monitor.as_ref().map(|m| HealthStamp {
+        healthy: true,
+        sentinel_trips: m.report.sentinel_trips(),
+        quarantined: m.report.quarantined,
+        rollbacks: m.report.rollbacks,
+        loss: ctx.curve.last().map(|p| p.train_loss).unwrap_or(f64::NAN),
+    });
+    snapshot::save_rotated_stamped(path, cfg.store.keep, est, Some(&ts), stamp.as_ref())?;
     ctx.autosaves += 1;
     Ok(())
+}
+
+/// The rollback-to-last-good state machine, entered when a sentinel
+/// trips. Charges the rollback budget (a clean [`Error::Health`] once
+/// `health.max_rollbacks` is spent), scans the rotation slots for the
+/// newest health-stamped-good snapshot, rebuilds the estimator from it,
+/// re-applies every quarantine verdict so far (the restored engine
+/// predates them) plus whatever this trip attributed, and rewinds
+/// θ/iteration/optimizer/curve state to the save point. The caller
+/// replaces its estimator with the returned one and re-enters the epoch
+/// loop at the rewound `epoch`.
+#[allow(clippy::too_many_arguments)]
+fn rollback<'p, H: SnapshotHasher + Clone>(
+    cfg: &RunConfig,
+    pre: &'p Preprocessed,
+    hasher: H,
+    ctx: &mut LoopCtx<'_>,
+    trip: &Trip,
+    quarantined: &mut Vec<usize>,
+    epoch: &mut usize,
+) -> Result<ShardedLgdEstimator<'p, H>> {
+    {
+        let mon = ctx.monitor.as_mut().expect("a trip implies an armed supervisor");
+        mon.report.rollbacks += 1;
+        if mon.report.rollbacks > cfg.health.max_rollbacks as u64 {
+            return Err(Error::Health(format!(
+                "{}; rollback budget exhausted (health.max_rollbacks = {})",
+                trip.describe(),
+                cfg.health.max_rollbacks
+            )));
+        }
+    }
+    let Some(base) = &cfg.store.path else {
+        return Err(Error::Health(format!(
+            "{}; no store.path configured to roll back to",
+            trip.describe()
+        )));
+    };
+    let rec = snapshot::recover_healthy(base, cfg.store.keep)
+        .map_err(|e| Error::Health(format!("{}; rollback failed: {e}", trip.describe())))?;
+    let Some(ts) = rec.snap.train else {
+        return Err(Error::Health(format!(
+            "{}; snapshot {} carries no training state to roll back to",
+            trip.describe(),
+            rec.path.display()
+        )));
+    };
+    if ts.theta.len() != ctx.theta.len() {
+        return Err(Error::Store(format!(
+            "rollback snapshot θ has {} parameters but the run trains {}",
+            ts.theta.len(),
+            ctx.theta.len()
+        )));
+    }
+    if ts.optimizer != cfg.train.optimizer {
+        return Err(Error::Store(format!(
+            "rollback snapshot optimizer state is {:?} but the config trains with {:?}",
+            ts.optimizer, cfg.train.optimizer
+        )));
+    }
+    let mut est = snapshot::restore_estimator(pre, hasher, rec.snap.engine)?;
+    if cfg.lsh.rebalance_threshold > 0.0 {
+        est.set_rebalance_threshold(cfg.lsh.rebalance_threshold);
+    }
+    // Quarantine: this trip's attributions join the run's cumulative
+    // eviction list, and the whole list is applied to the restored engine
+    // (supervisor verdicts survive rollbacks; only fresh evictions count).
+    let mut fresh_ids: Vec<usize> = Vec::new();
+    if let Trip::Grad { poisoned } = trip {
+        for &id in poisoned {
+            if !quarantined.contains(&id) {
+                quarantined.push(id);
+                fresh_ids.push(id);
+            }
+        }
+    }
+    let mut fresh = 0u64;
+    for &id in quarantined.iter() {
+        if est.remove(id)? && fresh_ids.contains(&id) {
+            fresh += 1;
+        }
+    }
+    ctx.theta.copy_from_slice(&ts.theta);
+    ctx.it = ts.iter;
+    ctx.opt.import_state(&ts.optim)?;
+    ctx.opt.scale_lr(cfg.health.rollback_lr_factor);
+    ctx.curve.retain(|p| p.iter <= ts.iter);
+    {
+        let mon = ctx.monitor.as_mut().expect("a trip implies an armed supervisor");
+        mon.report.quarantined += fresh;
+        mon.rollback_reset();
+    }
+    *epoch = ts.epochs_done as usize;
+    Ok(est)
 }
 
 /// Run one training configuration. `test` may be empty (test loss = 0).
@@ -610,7 +817,7 @@ impl<'c, 'p, 't, 'rt> HasherVisitor for LgdRun<'c, 'p, 't, 'rt> {
         let t0 = Instant::now();
         let (est, tstate, resumed) = match warm {
             Some((engine, ts)) => {
-                let mut est = snapshot::restore_estimator(pre, hasher, engine)?;
+                let mut est = snapshot::restore_estimator(pre, hasher.clone(), engine)?;
                 // Live-engine tuning follows the config on a warm start
                 // too: an explicit rebalance threshold overrides the
                 // persisted one (the cold path applies it the same way).
@@ -619,20 +826,21 @@ impl<'c, 'p, 't, 'rt> HasherVisitor for LgdRun<'c, 'p, 't, 'rt> {
                 }
                 (est, ts, true)
             }
-            None => (build_sharded_estimator(cfg, pre, hasher)?, None, false),
+            None => (build_sharded_estimator(cfg, pre, hasher.clone())?, None, false),
         };
         let preprocess_secs = t0.elapsed().as_secs_f64();
-        run_lgd(cfg, pre, test, src, est, tstate, resumed, preprocess_secs)
+        run_lgd(cfg, pre, test, src, hasher, est, tstate, resumed, preprocess_secs)
     }
 }
 
 #[allow(clippy::too_many_arguments)]
-fn run_lgd<H: SnapshotHasher + Clone>(
+fn run_lgd<'p, H: SnapshotHasher + Clone>(
     cfg: &RunConfig,
-    pre: &Preprocessed,
+    pre: &'p Preprocessed,
     test: &Dataset,
     src: GradSource<'_>,
-    mut est: ShardedLgdEstimator<'_, H>,
+    hasher: H,
+    mut est: ShardedLgdEstimator<'p, H>,
     tstate: Option<TrainState>,
     resumed: bool,
     preprocess_secs: f64,
@@ -647,13 +855,32 @@ fn run_lgd<H: SnapshotHasher + Clone>(
     };
     let start_epoch = tstate.as_ref().map(|t| t.epochs_done as usize).unwrap_or(0);
 
+    // Operator-directed quarantine: evict the configured example ids from
+    // the engine before the first draw, on the cold and warm paths alike.
+    // These evictions are config, not supervisor verdicts, so they do not
+    // count in the health report.
+    for &id in &cfg.data.quarantine {
+        if id >= pre.data.len() {
+            return Err(Error::Config(format!(
+                "data.quarantine: example id {id} is out of range for a dataset of {} examples",
+                pre.data.len()
+            )));
+        }
+        est.remove(id)?;
+    }
+
     // The table build (or snapshot restore) counts as wall-clock spent
     // before the first step; loss evals never enter the clock.
     let mut train_wall = preprocess_secs;
     ctx.eval_point(pre, test, train_wall)?;
 
     let mut draws: Vec<WeightedDraw> = Vec::with_capacity(ctx.batch);
-    for epoch in start_epoch..cfg.train.epochs {
+    // Supervisor-evicted example ids, cumulative across rollbacks (a
+    // restored engine predates the evictions, so they must be re-applied).
+    let mut auto_quarantine: Vec<usize> = Vec::new();
+    let mut epoch = start_epoch;
+    while epoch < cfg.train.epochs {
+        let tripped: Option<Trip>;
         if asynchronous {
             // One draw-engine session per epoch: the sampling query is
             // frozen at the epoch's entry θ (stale proposal, *exact*
@@ -667,23 +894,36 @@ fn run_lgd<H: SnapshotHasher + Clone>(
             let wall_base = train_wall;
             let mut eval_secs = 0.0f64;
             let mut abort: Option<Error> = None;
+            let mut trip: Option<Trip> = None;
             {
                 let ctx = &mut ctx;
                 let abort = &mut abort;
                 let eval_secs = &mut eval_secs;
+                let trip_slot = &mut trip;
                 run_session(&mut est, &engine, &frozen, m, steps, |_, dr| {
                     ctx.it += 1;
-                    if let Err(e) = ctx.grad_update(pre, dr) {
-                        *abort = Some(e);
-                        return false;
+                    match ctx.grad_update(pre, dr) {
+                        Err(e) => {
+                            *abort = Some(e);
+                            return false;
+                        }
+                        Ok(Some(t)) => {
+                            *trip_slot = Some(t);
+                            return false;
+                        }
+                        Ok(None) => {}
                     }
                     if ctx.due_eval() {
                         let ev = Instant::now();
                         match ctx.eval_now(pre, test) {
-                            Ok((tr, te)) => {
+                            Ok((mut tr, te)) => {
                                 *eval_secs += ev.elapsed().as_secs_f64();
                                 let wall =
                                     wall_base + epoch_t.elapsed().as_secs_f64() - *eval_secs;
+                                if let Some(t) = ctx.check_loss(&mut tr) {
+                                    *trip_slot = Some(t);
+                                    return false;
+                                }
                                 ctx.push_point(wall, tr, te);
                             }
                             Err(e) => {
@@ -699,14 +939,34 @@ fn run_lgd<H: SnapshotHasher + Clone>(
                 return Err(e);
             }
             train_wall = wall_base + epoch_t.elapsed().as_secs_f64() - eval_secs;
+            tripped = trip;
         } else {
             let steps = ctx.iters_per_epoch;
-            train_wall =
+            let (wall, trip) =
                 run_sync_steps(&mut ctx, &mut est, pre, test, steps, train_wall, &mut draws)?;
+            train_wall = wall;
+            tripped = trip;
         }
-        // Epoch boundary: the only legal save point (the session borrow has
-        // been released; the generation counter is quiescent).
-        maybe_autosave(cfg, &est, &mut ctx, (epoch + 1) as u32)?;
+        match tripped {
+            None => {
+                // Epoch boundary: the only legal save point (the session
+                // borrow has been released; the generation counter is
+                // quiescent).
+                maybe_autosave(cfg, &est, &mut ctx, (epoch + 1) as u32)?;
+                epoch += 1;
+            }
+            Some(trip) => {
+                est = rollback(
+                    cfg,
+                    pre,
+                    hasher.clone(),
+                    &mut ctx,
+                    &trip,
+                    &mut auto_quarantine,
+                    &mut epoch,
+                )?;
+            }
+        }
     }
 
     let name = if asynchronous {
@@ -735,8 +995,17 @@ fn train_sgd(
     ctx.eval_point(pre, test, train_wall)?;
     let mut draws: Vec<WeightedDraw> = Vec::with_capacity(ctx.batch);
     let steps = ctx.total_iters;
-    train_wall =
+    let (wall, tripped) =
         run_sync_steps(&mut ctx, est.as_mut(), pre, test, steps, train_wall, &mut draws)?;
+    train_wall = wall;
+    if let Some(trip) = tripped {
+        // The uniform baseline has no engine to quarantine from and no
+        // health-stamped snapshot chain — fail fast with the verdict.
+        return Err(Error::Health(format!(
+            "{} (the sgd estimator has no rollback path)",
+            trip.describe()
+        )));
+    }
     let stats = est.stats();
     let name = est.name().to_string();
     Ok(ctx.outcome(train_wall, preprocess_secs, stats, name, shard_build_secs, false))
@@ -964,5 +1233,53 @@ mod tests {
         assert_eq!(warm.autosaves, 1, "final save still fires when a path is set");
         assert_eq!(warm.curve.first().unwrap().iter, cold.iterations);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    /// The determinism contract: a run with the supervisor armed but never
+    /// tripped is bit-for-bit the run without it — θ, the curve, and the
+    /// estimator counters. Covered for the sync and async LGD paths.
+    #[test]
+    fn untripped_supervisor_is_bitwise_invisible() {
+        let (pre, te) = setup(400, 8, 17);
+        for async_workers in [0usize, 2] {
+            let mut cfg = small_cfg(EstimatorKind::Lgd);
+            cfg.lsh.shards = 2;
+            cfg.lsh.async_workers = async_workers;
+            let plain = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+            cfg.health.enabled = true;
+            let watched = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+            assert_eq!(plain.theta, watched.theta, "async_workers = {async_workers}");
+            assert_eq!(plain.curve.len(), watched.curve.len());
+            for (a, b) in plain.curve.iter().zip(&watched.curve) {
+                // wall-clock is timing, not math — compare everything else
+                assert_eq!(
+                    (a.iter, a.train_loss, a.test_loss),
+                    (b.iter, b.train_loss, b.test_loss),
+                    "async_workers = {async_workers}"
+                );
+            }
+            assert_eq!(plain.est_stats.draws, watched.est_stats.draws);
+            assert_eq!(plain.health, HealthReport::default());
+            assert_eq!(watched.health, HealthReport::default(), "nothing may trip");
+        }
+    }
+
+    /// `data.quarantine` evicts the listed examples before the first draw
+    /// (duplicates are harmless); the evictions are operator config, not
+    /// supervisor verdicts, so the health counters stay zero. An
+    /// out-of-range id is a config error.
+    #[test]
+    fn operator_quarantine_applies_and_validates() {
+        let (pre, te) = setup(300, 8, 19);
+        let mut cfg = small_cfg(EstimatorKind::Lgd);
+        cfg.data.quarantine = vec![0, 7, 7];
+        let out = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+        assert_eq!(out.health.quarantined, 0, "operator evictions are not supervisor verdicts");
+        let first = out.curve.first().unwrap().train_loss;
+        let last = out.curve.last().unwrap().train_loss;
+        assert!(last < first, "quarantined run still trains: {first} -> {last}");
+        cfg.data.quarantine = vec![pre.data.len()];
+        let err = train(&cfg, &pre, &te, GradSource::Native).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err:?}");
     }
 }

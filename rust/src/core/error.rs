@@ -28,6 +28,12 @@ pub enum Error {
     /// damaged snapshot must always surface as this — never UB and never a
     /// silently wrong index.
     Store(String),
+    /// Training-health failure: a sentinel tripped (non-finite gradient or
+    /// θ, NaN/spiking loss) and recovery was impossible — no healthy
+    /// snapshot to roll back to, or `health.max_rollbacks` exhausted. A
+    /// diverged run must always surface as this, never as silently
+    /// poisoned parameters.
+    Health(String),
 }
 
 impl fmt::Display for Error {
@@ -41,6 +47,7 @@ impl fmt::Display for Error {
             Error::Io(m) => write!(f, "io error: {m}"),
             Error::Pipeline(m) => write!(f, "pipeline error: {m}"),
             Error::Store(m) => write!(f, "store error: {m}"),
+            Error::Health(m) => write!(f, "health error: {m}"),
         }
     }
 }
@@ -80,6 +87,8 @@ mod tests {
         assert!(e.to_string().contains("runtime"));
         let e = Error::Store("crc mismatch in section 3".into());
         assert_eq!(e.to_string(), "store error: crc mismatch in section 3");
+        let e = Error::Health("3 rollbacks exhausted".into());
+        assert_eq!(e.to_string(), "health error: 3 rollbacks exhausted");
     }
 
     #[test]

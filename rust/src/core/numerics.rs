@@ -490,6 +490,22 @@ pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
     }
 }
 
+/// True iff every value is finite (no NaN, no ±Inf) — the sentinel kernel
+/// `coordinator::health` runs over batch gradients and θ each step. One
+/// pass, early exit at the first non-finite chunk. The AVX2 path classifies
+/// by exponent bits, which is exactly `f32::is_finite` per element, so
+/// dispatch cannot change the answer; and the guaranteed-zero tail of
+/// padded blocks is finite, so padded and logical slices always agree.
+#[inline]
+pub fn all_finite(xs: &[f32]) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 presence was runtime-verified by `use_avx2`.
+        return unsafe { all_finite_avx2(xs) };
+    }
+    xs.iter().all(|x| x.is_finite())
+}
+
 // ---------------------------------------------------------------------------
 // AVX2 paths — no FMA, scalar-identical rounding per element
 // ---------------------------------------------------------------------------
@@ -558,6 +574,26 @@ unsafe fn scale_avx2(alpha: f32, v: &mut [f32]) {
         v[i] *= alpha;
         i += 1;
     }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn all_finite_avx2(xs: &[f32]) -> bool {
+    use std::arch::x86_64::*;
+    let n = xs.len();
+    // An f32 is finite iff its exponent bits are not all ones — the same
+    // classification `f32::is_finite` performs, lifted to 8 lanes.
+    let expo = _mm256_set1_epi32(0x7f80_0000u32 as i32);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let v = _mm256_loadu_si256(xs.as_ptr().add(i) as *const __m256i);
+        let bad = _mm256_cmpeq_epi32(_mm256_and_si256(v, expo), expo);
+        if _mm256_movemask_epi8(bad) != 0 {
+            return false;
+        }
+        i += 8;
+    }
+    xs[i..].iter().all(|x| x.is_finite())
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -722,6 +758,41 @@ mod tests {
                 assert_eq!(oa[i].to_bits(), os[i].to_bits(), "scale_into n={n} i={i}");
             }
         }
+        set_kernel_mode(prev);
+    }
+
+    #[test]
+    fn all_finite_detects_every_position_and_dispatch_agrees() {
+        // every planted NaN/±Inf position is caught on both dispatch paths,
+        // across sizes straddling the 8-lane AVX2 chunk and its remainder
+        let prev = kernel_mode();
+        for n in [1usize, 7, 8, 9, 15, 16, 17, 47, 91] {
+            let base = ref_vec(13, n);
+            for mode in [KernelMode::Auto, KernelMode::Scalar] {
+                set_kernel_mode(mode);
+                assert!(all_finite(&base), "clean vector must be finite (n={n})");
+                assert!(all_finite(&[]), "empty slice is vacuously finite");
+            }
+            for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                for i in 0..n {
+                    let mut v = base.clone();
+                    v[i] = bad;
+                    set_kernel_mode(KernelMode::Auto);
+                    let a = all_finite(&v);
+                    set_kernel_mode(KernelMode::Scalar);
+                    let s = all_finite(&v);
+                    assert!(!a && !s, "n={n} i={i} {bad}: non-finite value missed");
+                }
+            }
+        }
+        // subnormals are finite; padded blocks agree with logical rows
+        // because the zero tail is finite
+        assert!(all_finite(&[f32::MIN_POSITIVE / 2.0, -0.0, f32::MAX]));
+        let mut m = AlignedRows::new(5);
+        m.push_row(&[1.0, 2.0, f32::NAN, 4.0, 5.0]);
+        assert!(!all_finite(m.row_block(0)));
+        m.row_mut(0)[2] = 3.0;
+        assert!(all_finite(m.row_block(0)));
         set_kernel_mode(prev);
     }
 

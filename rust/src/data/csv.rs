@@ -25,7 +25,22 @@ pub enum TargetColumn {
 
 /// Load a numeric CSV into a dataset. Blank lines are skipped; a first line
 /// containing any non-numeric cell is treated as a header and skipped.
+/// Non-finite cells (`nan`, `inf`, `-inf` — which `f32::parse` happily
+/// accepts) are rejected with a line-numbered error: one poisoned row
+/// corrupts row norms, hash codes and every gradient downstream, long
+/// before the health sentinels could attribute it. Use [`load_csv_with`]
+/// with `allow_nonfinite = true` (`data.allow_nonfinite`) to opt out.
 pub fn load_csv(path: &Path, target: TargetColumn, task: Task) -> Result<Dataset> {
+    load_csv_with(path, target, task, false)
+}
+
+/// [`load_csv`] with the non-finite gate exposed (`data.allow_nonfinite`).
+pub fn load_csv_with(
+    path: &Path,
+    target: TargetColumn,
+    task: Task,
+    allow_nonfinite: bool,
+) -> Result<Dataset> {
     let file = std::fs::File::open(path)
         .map_err(|e| Error::Io(format!("{}: {e}", path.display())))?;
     let reader = std::io::BufReader::new(file);
@@ -52,6 +67,18 @@ pub fn load_csv(path: &Path, target: TargetColumn, task: Task) -> Result<Dataset
                 )))
             }
         };
+        if !allow_nonfinite {
+            if let Some(j) = vals.iter().position(|v| !v.is_finite()) {
+                return Err(Error::Data(format!(
+                    "{}:{}: non-finite cell '{}' in column {} (set \
+                     data.allow_nonfinite to accept)",
+                    path.display(),
+                    lineno + 1,
+                    cells[j],
+                    j
+                )));
+            }
+        }
         if let Some(w) = width {
             if vals.len() != w {
                 return Err(Error::Data(format!(
@@ -184,6 +211,34 @@ mod tests {
         let p = tmpfile("bad.csv");
         std::fs::write(&p, "1,2\n3,x\n").unwrap();
         assert!(load_csv(&p, TargetColumn::Last, Task::Regression).is_err());
+    }
+
+    /// `f32::parse` accepts `nan`/`inf` spellings, so without the explicit
+    /// gate a poisoned row loads silently. Each fixture must fail with the
+    /// 1-based line number and column; the escape hatch loads them all.
+    #[test]
+    fn non_finite_cells_rejected_with_line_numbers() {
+        let fixtures = [
+            ("nanfeat.csv", "1,2,3\n4,NaN,6\n", "2", "column 1"),
+            ("inftarget.csv", "1,2,3\n4,5,inf\n", "2", "column 2"),
+            ("mixed.csv", "1,2,3\n-inf,nan,6\n", "2", "column 0"),
+        ];
+        for (name, body, line, col) in fixtures {
+            let p = tmpfile(name);
+            std::fs::write(&p, body).unwrap();
+            let err = load_csv(&p, TargetColumn::Last, Task::Regression).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(&format!(":{line}:")), "{name}: no line number in {msg}");
+            assert!(msg.contains(col), "{name}: no column in {msg}");
+            // escape hatch: same file loads, non-finite values preserved
+            let ds = load_csv_with(&p, TargetColumn::Last, Task::Regression, true).unwrap();
+            assert_eq!(ds.len(), 2);
+            assert!(
+                ds.y.iter().any(|v| !v.is_finite())
+                    || (0..ds.len()).any(|i| ds.x.row(i).iter().any(|v| !v.is_finite())),
+                "{name}: escape hatch dropped the non-finite cell"
+            );
+        }
     }
 
     #[test]

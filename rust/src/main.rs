@@ -23,7 +23,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use lgd::cli::Args;
-use lgd::config::spec::{Backend, RunConfig};
+use lgd::config::spec::{parse_quarantine, Backend, RunConfig};
 use lgd::config::toml::TomlDoc;
 use lgd::coordinator::trainer::{
     build_sharded_estimator, lgd_options, train, train_resumed, GradSource,
@@ -45,6 +45,8 @@ USAGE:
             [--rebalance-threshold <f>] [--sealed <true|false>]
             [--async-workers <n>] [--queue-depth <n>] [--kernel <auto|scalar>]
             [--snapshot <file.lgdsnap>] [--autosave-epochs <n>] [--keep <n>] [--resume]
+            [--health <on|off>] [--quarantine <id,id,...>] [--allow-nonfinite]
+            [--inject <grad-nan|theta-poison|loss-corrupt>:<once|always|times:N>[:<arg>]]
   lgd snapshot save --config <run.toml> --out <file.lgdsnap>
                [--shards <n>] [--sealed <true|false>]
   lgd snapshot inspect --path <file.lgdsnap>
@@ -94,6 +96,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.allow(&[
         "config", "out", "shards", "rebalance-threshold", "sealed", "async-workers",
         "queue-depth", "kernel", "snapshot", "autosave-epochs", "keep", "resume",
+        "health", "quarantine", "allow-nonfinite", "inject",
     ])?;
     let cfg_path = args.require("config")?;
     let doc = TomlDoc::load(std::path::Path::new(&cfg_path))?;
@@ -149,12 +152,33 @@ fn cmd_train(args: &Args) -> Result<()> {
     if args.has("resume") || args.bool_or("resume", false)? {
         cfg.store.resume = true;
     }
+    // --health arms/disarms the training-loop supervisor ([health] block);
+    // --quarantine / --allow-nonfinite override the [data] robustness knobs.
+    match args.str_or("health", "").as_str() {
+        "" => {}
+        "on" | "true" => cfg.health.enabled = true,
+        "off" | "false" => cfg.health.enabled = false,
+        other => return Err(Error::Config(format!("--health {other}: expected on|off"))),
+    }
+    if !args.str_or("quarantine", "").is_empty() {
+        cfg.data.quarantine = parse_quarantine(&args.str_or("quarantine", ""))?;
+    }
+    if args.has("allow-nonfinite") || args.bool_or("allow-nonfinite", false)? {
+        cfg.data.allow_nonfinite = true;
+    }
+    // --inject arms a failpoint for chaos smoke runs; only builds carrying
+    // the `failpoints` feature have an armable registry.
+    let inject = args.str_or("inject", "");
+    if !inject.is_empty() {
+        arm_injection(&inject)?;
+    }
     cfg.validate()?;
 
     // dataset: the test split always comes from the config; the training
     // split is either preprocessed here (cold) or restored from the
     // snapshot (warm — the whole point is not touching the raw data again)
-    let ds = build_dataset(&cfg.data.name, cfg.data.scale, cfg.data.seed)?;
+    let ds =
+        build_dataset(&cfg.data.name, cfg.data.scale, cfg.data.seed, cfg.data.allow_nonfinite)?;
     let (tr, te) = ds.split(cfg.data.train_frac, cfg.data.seed)?;
 
     let outcome = if cfg.store.resume {
@@ -265,6 +289,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     if outcome.resumed {
         println!("  warm start: restored engine, zero table-build work");
     }
+    if cfg.health.enabled {
+        let h = &outcome.health;
+        println!(
+            "  health: trips={} (grad={} theta={} loss={}) quarantined={} rollbacks={}",
+            h.sentinel_trips(),
+            h.grad_trips,
+            h.theta_trips,
+            h.loss_trips,
+            h.quarantined,
+            h.rollbacks
+        );
+    }
     if outcome.autosaves > 0 {
         if let Some(p) = &cfg.store.path {
             println!("  snapshots: {} written to {}", outcome.autosaves, p.display());
@@ -321,7 +357,8 @@ fn cmd_snapshot_save(args: &Args) -> Result<()> {
     }
     cfg.lsh.sealed = args.bool_or("sealed", cfg.lsh.sealed)?;
     cfg.validate()?;
-    let ds = build_dataset(&cfg.data.name, cfg.data.scale, cfg.data.seed)?;
+    let ds =
+        build_dataset(&cfg.data.name, cfg.data.scale, cfg.data.seed, cfg.data.allow_nonfinite)?;
     let (tr, _te) = ds.split(cfg.data.train_frac, cfg.data.seed)?;
     let pre = preprocess(tr, &PreprocessOptions { center: cfg.lsh.center })?;
     let hd = pre.hashed.cols();
@@ -407,7 +444,59 @@ fn cmd_snapshot_load(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn build_dataset(name: &str, scale: f64, seed: u64) -> Result<lgd::data::Dataset> {
+/// Arm one failpoint from an `--inject site:mode[:n]` spec — chaos smoke
+/// runs for CI and operators. Site names: `grad-nan`, `theta-poison`,
+/// `loss-corrupt`. Modes: `once`, `always`, `times:N`, `nth:N`.
+#[cfg(feature = "failpoints")]
+fn arm_injection(spec: &str) -> Result<()> {
+    use lgd::testkit::faults;
+    let parts: Vec<&str> = spec.split(':').collect();
+    let site = match parts[0] {
+        "grad-nan" => faults::GRAD_NAN,
+        "theta-poison" => faults::THETA_POISON,
+        "loss-corrupt" => faults::LOSS_CORRUPT,
+        other => {
+            return Err(Error::Config(format!(
+                "--inject: unknown site '{other}' (grad-nan|theta-poison|loss-corrupt)"
+            )))
+        }
+    };
+    let parse_n = |s: Option<&&str>, what: &str| -> Result<u64> {
+        s.and_then(|v| v.parse::<u64>().ok())
+            .ok_or_else(|| Error::Config(format!("--inject: {what} needs a count, got '{spec}'")))
+    };
+    let mode = match parts.get(1).copied() {
+        Some("once") => faults::Mode::Once,
+        Some("always") => faults::Mode::Always,
+        Some("times") => faults::Mode::Times(parse_n(parts.get(2), "times")?),
+        Some("nth") => faults::Mode::Nth(parse_n(parts.get(2), "nth")?),
+        other => {
+            return Err(Error::Config(format!(
+                "--inject: unknown mode '{}' (once|always|times:N|nth:N)",
+                other.unwrap_or("")
+            )))
+        }
+    };
+    faults::arm(site, mode);
+    println!("chaos: armed failpoint {site} ({})", &spec[parts[0].len() + 1..]);
+    Ok(())
+}
+
+/// Without the `failpoints` feature there is no armable registry — make
+/// the flag an explicit error rather than a silent no-op.
+#[cfg(not(feature = "failpoints"))]
+fn arm_injection(_spec: &str) -> Result<()> {
+    Err(Error::Config(
+        "--inject requires a build with --features failpoints".into(),
+    ))
+}
+
+fn build_dataset(
+    name: &str,
+    scale: f64,
+    seed: u64,
+    allow_nonfinite: bool,
+) -> Result<lgd::data::Dataset> {
     use lgd::data::SynthSpec;
     let spec = match name {
         "yearmsd-like" => SynthSpec::power_law("yearmsd-like", scaled(463_715, scale), 90, seed),
@@ -421,10 +510,11 @@ fn build_dataset(name: &str, scale: f64, seed: u64) -> Result<lgd::data::Dataset
             // fall back to CSV path
             let p = std::path::Path::new(other);
             if p.exists() {
-                return lgd::data::csv::load_csv(
+                return lgd::data::csv::load_csv_with(
                     p,
                     lgd::data::csv::TargetColumn::Last,
                     lgd::data::Task::Regression,
+                    allow_nonfinite,
                 );
             }
             return Err(Error::Config(format!("unknown dataset '{other}'")));
@@ -461,7 +551,7 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
     args.allow(&["name", "out", "scale", "seed"])?;
     let name = args.require("name")?;
     let out = PathBuf::from(args.require("out")?);
-    let ds = build_dataset(&name, args.f64_or("scale", 0.02)?, args.u64_or("seed", 42)?)?;
+    let ds = build_dataset(&name, args.f64_or("scale", 0.02)?, args.u64_or("seed", 42)?, false)?;
     let mut header: Vec<String> = (0..ds.dim()).map(|j| format!("x{j}")).collect();
     header.push("y".into());
     let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
@@ -601,7 +691,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     cfg.validate()?;
 
-    let ds = build_dataset(&cfg.data.name, cfg.data.scale, cfg.data.seed)?;
+    let ds =
+        build_dataset(&cfg.data.name, cfg.data.scale, cfg.data.seed, cfg.data.allow_nonfinite)?;
     let (tr, _te) = ds.split(cfg.data.train_frac, cfg.data.seed)?;
     let pre = Arc::new(preprocess(tr, &PreprocessOptions { center: cfg.lsh.center })?);
     let hd = pre.hashed.cols();

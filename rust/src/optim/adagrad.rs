@@ -42,6 +42,10 @@ impl Optimizer for AdaGrad {
         "adagrad"
     }
 
+    fn scale_lr(&mut self, factor: f64) {
+        self.lr *= factor;
+    }
+
     fn export_state(&self) -> OptimState {
         OptimState { t: 0, slots: vec![self.accum.clone()] }
     }

@@ -58,6 +58,10 @@ impl Optimizer for Adam {
         "adam"
     }
 
+    fn scale_lr(&mut self, factor: f64) {
+        self.lr *= factor;
+    }
+
     fn export_state(&self) -> OptimState {
         OptimState { t: self.t, slots: vec![self.m.clone(), self.v.clone()] }
     }

@@ -35,6 +35,14 @@ pub trait Optimizer: Send {
     /// Name for logs.
     fn name(&self) -> &'static str;
 
+    /// Multiply the learning rate by `factor`, leaving moments and the step
+    /// counter untouched — the health supervisor's rollback hook
+    /// (`health.rollback_lr_factor`). Scaling accumulated moments instead
+    /// would warp Adam/AdaGrad's effective step nonlinearly; the base rate
+    /// is the one knob every rule shares. Repeated calls compound. A
+    /// factor of exactly 1.0 is bitwise a no-op (`x * 1.0 == x`).
+    fn scale_lr(&mut self, factor: f64);
+
     /// Export internal state for a snapshot (step counter + moment slots).
     fn export_state(&self) -> OptimState;
 
@@ -92,6 +100,49 @@ mod tests {
             }
             assert_eq!(theta_a, theta_b, "{}: restored optimizer diverged", a.name());
         }
+    }
+
+    /// `scale_lr` multiplies exactly the base rate: factor 1.0 is a bitwise
+    /// no-op on every rule, and a halved rate halves the (fresh-state)
+    /// first step of every rule.
+    #[test]
+    fn scale_lr_scales_rate_and_unit_factor_is_identity() {
+        let mk: [fn() -> Box<dyn Optimizer>; 3] = [
+            || Box::new(Sgd::new(Schedule::Step { base: 0.1, drop: 0.5, every: 3 })),
+            || Box::new(AdaGrad::new(0.1)),
+            || Box::new(Adam::new(0.05)),
+        ];
+        for f in mk {
+            let mut a = f();
+            let mut b = f();
+            b.scale_lr(1.0);
+            let mut ta = vec![0.5f32; 4];
+            let mut tb = ta.clone();
+            for t in 0..5 {
+                let g: Vec<f32> = (0..4).map(|j| (t + j) as f32 * 0.2 - 0.3).collect();
+                a.step(&mut ta, &g);
+                b.step(&mut tb, &g);
+            }
+            assert_eq!(ta, tb, "{}: factor 1.0 must be an exact no-op", a.name());
+        }
+        // first steps are lr-sized for all three rules, so halving shows up
+        // directly (AdaGrad/Adam first step ≈ lr·sign(g))
+        let mut o = Sgd::constant(0.1);
+        o.scale_lr(0.5);
+        let mut th = [0.0f32];
+        o.step(&mut th, &[1.0]);
+        assert!((th[0] + 0.05).abs() < 1e-7);
+        let mut o = AdaGrad::new(0.1);
+        o.scale_lr(0.5);
+        let mut th = [0.0f32];
+        o.step(&mut th, &[4.0]);
+        assert!((th[0] + 0.05).abs() < 1e-5);
+        let mut o = Adam::new(0.01);
+        o.scale_lr(0.5);
+        o.scale_lr(0.5); // compounds
+        let mut th = [0.0f32];
+        o.step(&mut th, &[5.0]);
+        assert!((th[0] + 0.0025).abs() < 1e-4);
     }
 
     /// Slot-count mismatches are a loud `Error::Store`, not silent drift.

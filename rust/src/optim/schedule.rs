@@ -38,6 +38,18 @@ impl Schedule {
             Schedule::InvTime { base, .. } => base,
         }
     }
+
+    /// Scale the schedule's base step size in place (the health
+    /// supervisor's `rollback_lr_factor` hook). Decay shape is untouched:
+    /// `at(t)` afterwards is exactly `factor * at(t)` before.
+    pub fn scale(&mut self, factor: f64) {
+        match self {
+            Schedule::Const(lr) => *lr *= factor,
+            Schedule::Step { base, .. } => *base *= factor,
+            Schedule::Exp { base, .. } => *base *= factor,
+            Schedule::InvTime { base, .. } => *base *= factor,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -58,6 +70,20 @@ mod tests {
         assert_eq!(s.at(9), 1.0);
         assert_eq!(s.at(10), 0.5);
         assert_eq!(s.at(25), 0.25);
+    }
+
+    #[test]
+    fn scale_multiplies_base_and_keeps_decay_shape() {
+        let mut s = Schedule::Step { base: 1.0, drop: 0.5, every: 10 };
+        s.scale(0.5);
+        assert_eq!(s.at(0), 0.5);
+        assert_eq!(s.at(10), 0.25);
+        let mut c = Schedule::Const(0.2);
+        c.scale(1.0);
+        assert_eq!(c.at(3), 0.2);
+        let mut e = Schedule::Exp { base: 0.4, rate: 0.01 };
+        e.scale(0.25);
+        assert_eq!(e.base(), 0.1);
     }
 
     #[test]

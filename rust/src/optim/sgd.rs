@@ -41,6 +41,10 @@ impl Optimizer for Sgd {
         "sgd-update"
     }
 
+    fn scale_lr(&mut self, factor: f64) {
+        self.schedule.scale(factor);
+    }
+
     fn export_state(&self) -> OptimState {
         OptimState { t: self.t, slots: Vec::new() }
     }

@@ -66,6 +66,12 @@ pub enum SectionKind {
     Estimator,
     /// Optional training state: θ, iteration, optimizer moments.
     Train,
+    /// Optional health stamp: the supervisor's verdict on the training
+    /// state at save time (`coordinator::health`). Recovery in
+    /// newest-*healthy*-wins mode skips snapshots whose stamp says
+    /// unhealthy; unstamped snapshots (every pre-health save path) are
+    /// treated as healthy.
+    Health,
 }
 
 impl SectionKind {
@@ -78,6 +84,7 @@ impl SectionKind {
             SectionKind::Shards => 4,
             SectionKind::Estimator => 5,
             SectionKind::Train => 6,
+            SectionKind::Health => 7,
         }
     }
 
@@ -90,6 +97,7 @@ impl SectionKind {
             4 => SectionKind::Shards,
             5 => SectionKind::Estimator,
             6 => SectionKind::Train,
+            7 => SectionKind::Health,
             other => return Err(Error::Store(format!("unknown section kind {other}"))),
         })
     }
@@ -103,6 +111,7 @@ impl SectionKind {
             SectionKind::Shards => "shards",
             SectionKind::Estimator => "estimator",
             SectionKind::Train => "train",
+            SectionKind::Health => "health",
         }
     }
 }

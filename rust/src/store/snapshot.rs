@@ -658,11 +658,67 @@ fn decode_train(bytes: &[u8]) -> Result<TrainState> {
     Ok(TrainState { theta, iter, epochs_done, optimizer, optim: OptimState { t, slots } })
 }
 
+/// The health supervisor's verdict on the training state at save time,
+/// persisted as an optional trailing section (`SectionKind::Health`).
+/// Only the health-enabled save paths emit it, so snapshots written with
+/// the supervisor off are byte-identical to pre-health builds; recovery in
+/// [`recover_healthy`] mode skips stamped-unhealthy snapshots and treats
+/// unstamped ones as healthy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthStamp {
+    /// The supervisor's verdict: is this state safe to roll back to?
+    pub healthy: bool,
+    /// Sentinel trips observed so far in the run that saved this.
+    pub sentinel_trips: u64,
+    /// Examples quarantined so far.
+    pub quarantined: u64,
+    /// Rollbacks performed so far.
+    pub rollbacks: u64,
+    /// Train loss at the save point (NaN when no eval had run yet).
+    pub loss: f64,
+}
+
+fn encode_health(hs: &HealthStamp) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u8(hs.healthy as u8);
+    w.u64(hs.sentinel_trips);
+    w.u64(hs.quarantined);
+    w.u64(hs.rollbacks);
+    w.f64(hs.loss);
+    w.into_bytes()
+}
+
+fn decode_health(bytes: &[u8]) -> Result<HealthStamp> {
+    let mut r = Reader::new(bytes);
+    let healthy = match r.u8()? {
+        0 => false,
+        1 => true,
+        t => return Err(Error::Store(format!("unknown health verdict tag {t}"))),
+    };
+    let sentinel_trips = r.u64()?;
+    let quarantined = r.u64()?;
+    let rollbacks = r.u64()?;
+    let loss = r.f64()?;
+    r.expect_end("health section")?;
+    Ok(HealthStamp { healthy, sentinel_trips, quarantined, rollbacks, loss })
+}
+
 /// Encode the full engine (plus optional training state) into a snapshot
 /// image — the bytes [`save`] writes atomically.
 pub fn snapshot_bytes<H: SnapshotHasher>(
     est: &ShardedLgdEstimator<'_, H>,
     train: Option<&TrainState>,
+) -> Vec<u8> {
+    snapshot_bytes_stamped(est, train, None)
+}
+
+/// [`snapshot_bytes`] with an optional health stamp. `None` produces bytes
+/// identical to the unstamped encoder — the wire-format gate the existing
+/// corruption/inspect tests pin down.
+pub fn snapshot_bytes_stamped<H: SnapshotHasher>(
+    est: &ShardedLgdEstimator<'_, H>,
+    train: Option<&TrainState>,
+    health: Option<&HealthStamp>,
 ) -> Vec<u8> {
     let hasher = est.shard_set().shard(0).tables.hasher();
     let mut hw = Writer::new();
@@ -678,6 +734,9 @@ pub fn snapshot_bytes<H: SnapshotHasher>(
     if let Some(ts) = train {
         sections.push((SectionKind::Train, encode_train(ts)));
     }
+    if let Some(hs) = health {
+        sections.push((SectionKind::Health, encode_health(hs)));
+    }
     format::assemble(&sections)
 }
 
@@ -688,7 +747,17 @@ pub fn save<H: SnapshotHasher>(
     est: &ShardedLgdEstimator<'_, H>,
     train: Option<&TrainState>,
 ) -> Result<u64> {
-    let bytes = snapshot_bytes(est, train);
+    save_stamped(path, est, train, None)
+}
+
+/// [`save`] with an optional health stamp.
+pub fn save_stamped<H: SnapshotHasher>(
+    path: &Path,
+    est: &ShardedLgdEstimator<'_, H>,
+    train: Option<&TrainState>,
+    health: Option<&HealthStamp>,
+) -> Result<u64> {
+    let bytes = snapshot_bytes_stamped(est, train, health);
     format::write_atomic(path, &bytes)?;
     Ok(bytes.len() as u64)
 }
@@ -719,6 +788,17 @@ pub fn save_rotated<H: SnapshotHasher>(
     est: &ShardedLgdEstimator<'_, H>,
     train: Option<&TrainState>,
 ) -> Result<u64> {
+    save_rotated_stamped(base, keep, est, train, None)
+}
+
+/// [`save_rotated`] with an optional health stamp.
+pub fn save_rotated_stamped<H: SnapshotHasher>(
+    base: &Path,
+    keep: usize,
+    est: &ShardedLgdEstimator<'_, H>,
+    train: Option<&TrainState>,
+    health: Option<&HealthStamp>,
+) -> Result<u64> {
     let keep = keep.max(1);
     let oldest = rotated_path(base, keep - 1);
     if keep > 1 && oldest.exists() {
@@ -734,7 +814,7 @@ pub fn save_rotated<H: SnapshotHasher>(
             })?;
         }
     }
-    save(base, est, train)
+    save_stamped(base, est, train, health)
 }
 
 /// What [`recover`] found.
@@ -756,6 +836,19 @@ pub struct Recovered {
 /// invariant) and how many newer slots had to be skipped. Errs only when
 /// no slot holds a valid snapshot.
 pub fn recover(base: &Path, keep: usize) -> Result<Recovered> {
+    recover_with(base, keep, false)
+}
+
+/// [`recover`] in newest-*healthy*-wins mode: slots whose snapshot carries
+/// a health stamp with `healthy = false` are skipped like corrupt ones, so
+/// the trainer's rollback lands on the newest state the supervisor vouched
+/// for. Unstamped snapshots (every save made with the supervisor off)
+/// count as healthy.
+pub fn recover_healthy(base: &Path, keep: usize) -> Result<Recovered> {
+    recover_with(base, keep, true)
+}
+
+fn recover_with(base: &Path, keep: usize, require_healthy: bool) -> Result<Recovered> {
     let keep = keep.max(1);
     let mut last_err: Option<Error> = None;
     let mut skipped = 0usize;
@@ -766,16 +859,27 @@ pub fn recover(base: &Path, keep: usize) -> Result<Recovered> {
             continue;
         }
         match load(&path) {
-            Ok(snap) => return Ok(Recovered { snap, path, slot, skipped }),
+            Ok(snap) => {
+                if require_healthy && snap.health.as_ref().is_some_and(|h| !h.healthy) {
+                    skipped += 1;
+                    last_err = Some(Error::Store(format!(
+                        "{} is stamped unhealthy",
+                        path.display()
+                    )));
+                    continue;
+                }
+                return Ok(Recovered { snap, path, slot, skipped });
+            }
             Err(e) => {
                 skipped += 1;
                 last_err = Some(e);
             }
         }
     }
+    let what = if require_healthy { "healthy " } else { "" };
     Err(match last_err {
         Some(Error::Store(msg)) => Error::Store(format!(
-            "no valid snapshot among {keep} rotation slot(s) of {} (last error: {msg})",
+            "no valid {what}snapshot among {keep} rotation slot(s) of {} (last error: {msg})",
             base.display()
         )),
         Some(e) => e,
@@ -800,6 +904,8 @@ pub struct LoadedSnapshot {
     pub engine: EngineDump,
     /// Training state, when the snapshot carries one.
     pub train: Option<TrainState>,
+    /// Health stamp, when the snapshot carries one (health-enabled saves).
+    pub health: Option<HealthStamp>,
 }
 
 /// Decode and verify a snapshot image (every CRC checked before any
@@ -816,6 +922,10 @@ pub fn decode(bytes: &[u8]) -> Result<LoadedSnapshot> {
     let engine = decode_estimator(est_bytes, shards)?;
     let train = match format::section(bytes, &entries, SectionKind::Train) {
         Some(b) => Some(decode_train(b)?),
+        None => None,
+    };
+    let health = match format::section(bytes, &entries, SectionKind::Health) {
+        Some(b) => Some(decode_health(b)?),
         None => None,
     };
     if meta.has_train != train.is_some() {
@@ -856,7 +966,7 @@ pub fn decode(bytes: &[u8]) -> Result<LoadedSnapshot> {
             "meta section disagrees with the data/estimator sections".into(),
         ));
     }
-    Ok(LoadedSnapshot { meta, pre, hasher, engine, train })
+    Ok(LoadedSnapshot { meta, pre, hasher, engine, train, health })
 }
 
 /// Load and verify a snapshot file.
@@ -1226,6 +1336,85 @@ mod tests {
         let snap = decode(&bytes).unwrap();
         assert!(snap.meta.has_train);
         assert_eq!(snap.train, Some(ts));
+    }
+
+    /// The health stamp rides along as its own trailing section: it
+    /// round-trips exactly, a `None` stamp leaves the image byte-identical
+    /// to the unstamped encoder (the wire-format invariance gate), and
+    /// `recover_healthy` skips stamped-unhealthy generations while plain
+    /// `recover` does not.
+    #[test]
+    fn snapshot_health_stamp_roundtrips_and_gates_recovery() {
+        let pre = setup(40, 5, 121);
+        let hd = pre.hashed.cols();
+        let est = ShardedLgdEstimator::new(
+            &pre,
+            DenseSrp::new(hd, 3, 4, 123),
+            125,
+            LgdOptions::default(),
+            2,
+        )
+        .unwrap();
+        let ts = |iter: u64| TrainState {
+            theta: vec![0.5; 5],
+            iter,
+            epochs_done: 0,
+            optimizer: OptimizerKind::Sgd,
+            optim: OptimState { t: 0, slots: vec![] },
+        };
+        // None stamp == legacy bytes, bit for bit
+        assert_eq!(
+            snapshot_bytes_stamped(&est, Some(&ts(7)), None),
+            snapshot_bytes(&est, Some(&ts(7))),
+            "a None stamp must not change the wire format"
+        );
+        // roundtrip
+        let hs = HealthStamp {
+            healthy: true,
+            sentinel_trips: 2,
+            quarantined: 1,
+            rollbacks: 1,
+            loss: 0.125,
+        };
+        let snap = decode(&snapshot_bytes_stamped(&est, Some(&ts(7)), Some(&hs))).unwrap();
+        assert_eq!(snap.health, Some(hs.clone()));
+        assert_eq!(snap.train.unwrap().iter, 7);
+        let snap = decode(&snapshot_bytes(&est, None)).unwrap();
+        assert_eq!(snap.health, None, "unstamped snapshots decode with no stamp");
+        // recovery: newest is stamped unhealthy, middle is stamped healthy,
+        // oldest is unstamped (pre-health save)
+        let dir = std::env::temp_dir().join("lgd-store-health");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("hs.lgdsnap");
+        for slot in 0..3 {
+            let p = rotated_path(&base, slot);
+            if p.exists() {
+                std::fs::remove_file(&p).unwrap();
+            }
+        }
+        save_rotated_stamped(&base, 3, &est, Some(&ts(1)), None).unwrap();
+        save_rotated_stamped(&base, 3, &est, Some(&ts(2)), Some(&hs)).unwrap();
+        let bad = HealthStamp { healthy: false, ..hs.clone() };
+        save_rotated_stamped(&base, 3, &est, Some(&ts(3)), Some(&bad)).unwrap();
+        let rec = recover(&base, 3).unwrap();
+        assert_eq!(rec.snap.train.unwrap().iter, 3, "plain recover ignores stamps");
+        let rec = recover_healthy(&base, 3).unwrap();
+        assert_eq!(rec.slot, 1);
+        assert_eq!(rec.skipped, 1);
+        assert_eq!(rec.snap.train.unwrap().iter, 2, "newest healthy generation wins");
+        // unstamped counts as healthy too
+        std::fs::remove_file(rotated_path(&base, 1)).unwrap();
+        let rec = recover_healthy(&base, 3).unwrap();
+        assert_eq!(rec.slot, 2);
+        assert_eq!(rec.snap.train.unwrap().iter, 1);
+        // every remaining slot unhealthy => clean Store error
+        std::fs::remove_file(rotated_path(&base, 2)).unwrap();
+        let err = recover_healthy(&base, 3).unwrap_err();
+        assert!(
+            matches!(&err, Error::Store(m) if m.contains("healthy")),
+            "want a 'no healthy snapshot' error, got {err}"
+        );
+        std::fs::remove_file(&base).unwrap();
     }
 
     /// Corruption gate: every single-byte flip in the header/section table

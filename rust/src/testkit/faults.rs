@@ -59,6 +59,19 @@ pub const GENERATION_FLIP: &str = "runtime.generation.flip";
 pub const TCP_READ: &str = "runtime.tcp.read";
 /// Wire `write_frame` fails at entry (either side).
 pub const TCP_WRITE: &str = "runtime.tcp.write";
+/// Batch-gradient accumulation: the contribution of one drawn example is
+/// poisoned to NaN — a persistently corrupt input row. The check passes the
+/// example id as the filter argument, so `arm_at(GRAD_NAN, Always, id)`
+/// models "row `id` is poison every time it is drawn", and the health
+/// supervisor's per-example attribution (which re-checks the same site)
+/// sees the same poison the accumulator saw.
+pub const GRAD_NAN: &str = "coordinator.health.grad_nan";
+/// Parameter vector, post-optimizer-step: θ[0] is poisoned to NaN — a
+/// divergent/corrupted update the θ sentinel must catch.
+pub const THETA_POISON: &str = "coordinator.health.theta_poison";
+/// Loss evaluation: the train loss is corrupted to NaN — a broken eval the
+/// loss sentinel must catch.
+pub const LOSS_CORRUPT: &str = "coordinator.health.loss_corrupt";
 
 /// Filter argument for [`TCP_READ`] checks on the client side.
 pub const SIDE_CLIENT: u64 = 0;
@@ -77,6 +90,9 @@ pub const SITES: &[&str] = &[
     GENERATION_FLIP,
     TCP_READ,
     TCP_WRITE,
+    GRAD_NAN,
+    THETA_POISON,
+    LOSS_CORRUPT,
 ];
 
 #[cfg(any(test, feature = "failpoints"))]

@@ -20,12 +20,16 @@ use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread;
 use std::time::Duration;
 
+use lgd::config::spec::{EstimatorKind, RunConfig};
 use lgd::coordinator::draw_engine::{run_session, DrawEngineConfig};
+use lgd::coordinator::trainer::{train, train_resumed, GradSource, TrainOutcome};
+use lgd::core::error::Error;
 use lgd::data::preprocess::{preprocess, PreprocessOptions, Preprocessed};
-use lgd::data::SynthSpec;
+use lgd::data::{Dataset, SynthSpec};
 use lgd::estimator::lgd::LgdOptions;
 use lgd::estimator::{GradientEstimator, ShardedLgdEstimator, WeightedDraw};
 use lgd::lsh::srp::DenseSrp;
+use lgd::optim::Schedule;
 use lgd::runtime::{
     serve_supervised, ClientOptions, RetryClient, RetryPolicy, ServeClient, ServeOptions,
     ServingCore, ServingSession,
@@ -80,6 +84,9 @@ fn chaos_site_catalog_matches_the_wired_sites() {
             faults::GENERATION_FLIP,
             faults::TCP_READ,
             faults::TCP_WRITE,
+            faults::GRAD_NAN,
+            faults::THETA_POISON,
+            faults::LOSS_CORRUPT,
         ]
     );
 }
@@ -465,4 +472,247 @@ fn chaos_disarmed_failpoints_leave_streams_identical() {
     assert!(!rep.degraded);
     assert_eq!(want, got, "disarmed failpoints changed a stream");
     assert_eq!(core.counters().degraded_sessions, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Training-loop health supervisor scenarios (GRAD_NAN / THETA_POISON /
+// LOSS_CORRUPT). Shared shape: phase A trains two epochs cold with per-epoch
+// autosaves, producing the rotation chain a rollback recovers from; the
+// faulted resumed run is then compared against a disarmed reference resumed
+// from the *same* snapshot — the contract is that recovery is not merely
+// survival but bit-for-bit re-entry onto the reference trajectory.
+// ---------------------------------------------------------------------------
+
+/// Training split + test split + the base run config the health scenarios
+/// share (sync sharded LGD, small constant-step batches).
+fn train_setup(n: usize, seed: u64) -> (Preprocessed, Dataset, RunConfig) {
+    let ds = SynthSpec::power_law("chaos-train", n, 8, seed).generate().unwrap();
+    let (tr, te) = ds.split(0.8, 1).unwrap();
+    let pre = preprocess(tr, &PreprocessOptions::default()).unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.train.estimator = EstimatorKind::Lgd;
+    cfg.train.epochs = 2;
+    cfg.train.batch = 4;
+    cfg.train.schedule = Schedule::Const(0.05);
+    cfg.lsh.k = 4;
+    cfg.lsh.l = 16;
+    cfg.lsh.shards = 2;
+    (pre, te, cfg)
+}
+
+/// Phase A: cold-train two epochs with per-epoch autosaves into `base`
+/// (slot 0 = epoch 2, slot 1 = epoch 1), wiping any stale rotation files
+/// first.
+fn seed_snapshots(cfg: &mut RunConfig, pre: &Preprocessed, te: &Dataset, base: &std::path::Path) {
+    for slot in 0..4 {
+        let _ = std::fs::remove_file(rotated_path(base, slot));
+    }
+    cfg.store.path = Some(base.to_path_buf());
+    cfg.store.autosave_epochs = 1;
+    cfg.store.keep = 3;
+    let cold = train(cfg, pre, te, GradSource::Native).unwrap();
+    assert_eq!(cold.autosaves, 2, "phase A must leave a two-deep rotation chain");
+}
+
+/// The resumed-run config: two more epochs with the supervisor armed.
+/// `rollback_lr_factor = 1.0` keeps the optimizer bitwise-identical after a
+/// rollback so trajectories can be compared draw-for-draw.
+fn resume_cfg(cfg: &RunConfig) -> RunConfig {
+    let mut r = cfg.clone();
+    r.train.epochs = 4;
+    r.store.autosave_epochs = 0;
+    r.health.enabled = true;
+    r.health.rollback_lr_factor = 1.0;
+    r
+}
+
+fn curve_key(out: &TrainOutcome) -> Vec<(u64, f64, f64)> {
+    out.curve.iter().map(|p| (p.iter, p.train_loss, p.test_loss)).collect()
+}
+
+/// θ poisoned to NaN right after an optimizer step: the θ sentinel trips,
+/// the run rolls back to the newest healthy snapshot and resumes — and the
+/// resumed trajectory (curve, final θ) is bit-for-bit the disarmed
+/// reference resumed from that same snapshot. Proven for the sync and the
+/// async (pipelined) trainer.
+#[test]
+fn chaos_theta_poison_rolls_back_and_resumes_identical() {
+    let _gate = serialize();
+    faults::disarm_all();
+    let _clean = Disarm;
+
+    for async_workers in [0usize, 2] {
+        let (pre, te, mut cfg) = train_setup(300, 211);
+        cfg.lsh.async_workers = async_workers;
+        let base = std::env::temp_dir()
+            .join(format!("lgd-chaos-health-theta-{async_workers}.lgdsnap"));
+        seed_snapshots(&mut cfg, &pre, &te, &base);
+
+        // disarmed reference: resume from the epoch-2 snapshot, no saves
+        let mut ref_cfg = resume_cfg(&cfg);
+        ref_cfg.store.path = None;
+        let reference =
+            train_resumed(&ref_cfg, &te, GradSource::Native, load(&base).unwrap()).unwrap();
+
+        // faulted run: the first resumed step's update is poisoned
+        let fault_cfg = resume_cfg(&cfg);
+        faults::arm(faults::THETA_POISON, Mode::Once);
+        let faulted =
+            train_resumed(&fault_cfg, &te, GradSource::Native, load(&base).unwrap()).unwrap();
+        assert_eq!(faults::fires(faults::THETA_POISON), 1, "async={async_workers}");
+        assert_eq!(faulted.health.theta_trips, 1, "async={async_workers}");
+        assert_eq!(faulted.health.rollbacks, 1, "async={async_workers}");
+        assert_eq!(faulted.health.quarantined, 0, "θ poison blames no example");
+        assert_eq!(
+            curve_key(&faulted),
+            curve_key(&reference),
+            "async={async_workers}: post-rollback trajectory diverged from the reference"
+        );
+        assert_eq!(faulted.theta, reference.theta, "async={async_workers}");
+        faults::disarm_all();
+        for slot in 0..4 {
+            let _ = std::fs::remove_file(rotated_path(&base, slot));
+        }
+    }
+}
+
+/// A persistently poisoned input: one drawn example's gradient contribution
+/// is NaN on *every* draw (`Mode::Always`, filtered to its id). The grad
+/// sentinel trips before the optimizer step, attribution blames exactly
+/// that example, the rollback evicts it from the restored engine — and the
+/// resumed run, which can never draw it again, matches bit-for-bit a
+/// reference run that quarantined the id from the start via
+/// `data.quarantine`. The fire count seals the eviction proof: the site is
+/// armed Always, yet it fires only during the one poisoned batch.
+#[test]
+fn chaos_poisoned_example_is_quarantined_and_resume_matches_reference() {
+    let _gate = serialize();
+    faults::disarm_all();
+    let _clean = Disarm;
+
+    let (pre, te, mut cfg) = train_setup(300, 221);
+    let base = std::env::temp_dir().join("lgd-chaos-health-grad.lgdsnap");
+    seed_snapshots(&mut cfg, &pre, &te, &base);
+
+    // Discovery: replay the resumed run's first batch draw to learn which
+    // example id to poison (and how often it appears in that batch).
+    let snap = load(&base).unwrap();
+    let ts = snap.train.clone().unwrap();
+    let LoadedSnapshot { pre: lpre, hasher, engine, .. } = snap;
+    let mut probe = lgd::store::snapshot::restore_boxed(hasher, &lpre, engine).unwrap();
+    let mut buf: Vec<WeightedDraw> = Vec::new();
+    probe.draw_batch(&ts.theta, cfg.train.batch, &mut buf);
+    let victim = buf[0].index;
+    let count = buf.iter().filter(|d| d.index == victim).count() as u64;
+
+    // disarmed reference: the victim is quarantined from step one
+    let mut ref_cfg = resume_cfg(&cfg);
+    ref_cfg.store.path = None;
+    ref_cfg.data.quarantine = vec![victim];
+    let reference =
+        train_resumed(&ref_cfg, &te, GradSource::Native, load(&base).unwrap()).unwrap();
+    assert_eq!(reference.health.quarantined, 0, "operator eviction is not a verdict");
+
+    // faulted run: the victim's contribution is NaN forever
+    let fault_cfg = resume_cfg(&cfg);
+    faults::arm_at(faults::GRAD_NAN, Mode::Always, victim as u64);
+    let faulted =
+        train_resumed(&fault_cfg, &te, GradSource::Native, load(&base).unwrap()).unwrap();
+    assert_eq!(faulted.health.grad_trips, 1, "one poisoned batch, one trip");
+    assert_eq!(faulted.health.quarantined, 1, "the victim was evicted");
+    assert_eq!(faulted.health.rollbacks, 1);
+    // `count` fires in the accumulate pass + `count` in attribution, then
+    // the evicted example is unreachable — Always never fires again.
+    assert_eq!(
+        faults::fires(faults::GRAD_NAN),
+        2 * count,
+        "an evicted example must never be drawn (or checked) again"
+    );
+    assert_eq!(
+        curve_key(&faulted),
+        curve_key(&reference),
+        "quarantined resume diverged from the quarantined-from-the-start reference"
+    );
+    assert_eq!(faulted.theta, reference.theta);
+    faults::disarm_all();
+    for slot in 0..4 {
+        let _ = std::fs::remove_file(rotated_path(&base, slot));
+    }
+}
+
+/// A corrupted loss eval (NaN at the epoch-cadence eval) trips the loss
+/// sentinel, rolls back, and the resumed run re-enters the reference
+/// trajectory; the suppressed eval never reaches the curve.
+#[test]
+fn chaos_corrupt_loss_eval_rolls_back_and_curve_stays_clean() {
+    let _gate = serialize();
+    faults::disarm_all();
+    let _clean = Disarm;
+
+    let (pre, te, mut cfg) = train_setup(300, 231);
+    let base = std::env::temp_dir().join("lgd-chaos-health-loss.lgdsnap");
+    seed_snapshots(&mut cfg, &pre, &te, &base);
+
+    let mut ref_cfg = resume_cfg(&cfg);
+    ref_cfg.store.path = None;
+    let reference =
+        train_resumed(&ref_cfg, &te, GradSource::Native, load(&base).unwrap()).unwrap();
+
+    let fault_cfg = resume_cfg(&cfg);
+    // the entry eval is unchecked by design — Once lands on the first
+    // *cadence* eval (end of epoch 3)
+    faults::arm(faults::LOSS_CORRUPT, Mode::Once);
+    let faulted =
+        train_resumed(&fault_cfg, &te, GradSource::Native, load(&base).unwrap()).unwrap();
+    assert_eq!(faults::fires(faults::LOSS_CORRUPT), 1);
+    assert_eq!(faulted.health.loss_trips, 1);
+    assert_eq!(faulted.health.rollbacks, 1);
+    assert!(
+        faulted.curve.iter().all(|p| p.train_loss.is_finite() && p.test_loss.is_finite()),
+        "a tripping eval must never reach the curve"
+    );
+    assert_eq!(
+        curve_key(&faulted),
+        curve_key(&reference),
+        "post-rollback trajectory diverged from the reference"
+    );
+    assert_eq!(faulted.theta, reference.theta);
+    faults::disarm_all();
+    for slot in 0..4 {
+        let _ = std::fs::remove_file(rotated_path(&base, slot));
+    }
+}
+
+/// Rollback exhaustion: a fault that persists across rollbacks (θ poisoned
+/// on every step) burns the budget — `health.max_rollbacks` recoveries,
+/// then a clean `Error::Health` carrying the final verdict, not a panic
+/// and not an NaN-laced outcome.
+#[test]
+fn chaos_persistent_fault_exhausts_rollbacks_into_clean_error() {
+    let _gate = serialize();
+    faults::disarm_all();
+    let _clean = Disarm;
+
+    let (pre, te, mut cfg) = train_setup(300, 241);
+    let base = std::env::temp_dir().join("lgd-chaos-health-exhaust.lgdsnap");
+    seed_snapshots(&mut cfg, &pre, &te, &base);
+
+    let mut fault_cfg = resume_cfg(&cfg);
+    fault_cfg.health.max_rollbacks = 2;
+    faults::arm(faults::THETA_POISON, Mode::Always);
+    let err = train_resumed(&fault_cfg, &te, GradSource::Native, load(&base).unwrap())
+        .unwrap_err();
+    match &err {
+        Error::Health(msg) => {
+            assert!(msg.contains("rollback budget exhausted"), "{msg}");
+            assert!(msg.contains("max_rollbacks = 2"), "{msg}");
+        }
+        other => panic!("want Error::Health, got {other:?}"),
+    }
+    // 2 successful rollbacks + the final straw = 3 poisoned steps
+    assert_eq!(faults::fires(faults::THETA_POISON), 3);
+    faults::disarm_all();
+    for slot in 0..4 {
+        let _ = std::fs::remove_file(rotated_path(&base, slot));
+    }
 }
