@@ -10,6 +10,7 @@ use lgd::config::spec::{EstimatorKind, RunConfig};
 use lgd::coordinator::draw_engine::{run_session, DrawEngineConfig};
 use lgd::coordinator::trainer::{train, GradSource};
 use lgd::core::matrix::axpy;
+use lgd::core::telemetry::probes;
 use lgd::data::preprocess::{preprocess, PreprocessOptions};
 use lgd::data::SynthSpec;
 use lgd::estimator::lgd::{LgdEstimator, LgdOptions};
@@ -191,6 +192,62 @@ fn bench_sharded_draws() {
         b.note("snapshot_save_ns_n20k", save_ns);
         b.note("snapshot_load_restore_ns_n20k", load_ns);
         let _ = std::fs::remove_file(&path);
+    }
+
+    // --- Telemetry overhead A/B: the same batched draw loop with the
+    // sampling-quality probes disarmed vs armed. Two gates ride this row:
+    // `telemetry_probe_extra_rng_draws` counts draw-stream divergences
+    // between the runs and is pinned at 0 (armed probes observe — they
+    // never touch the RNG), and the armed/disarmed throughput delta must
+    // stay under 2% (asserted only on full runs; LGD_BENCH_FAST timings
+    // are too short to gate on, so fast runs report the advisory rate).
+    {
+        let m = 32usize;
+        let steps = if std::env::var("LGD_BENCH_FAST").is_ok() { 100 } else { 2000 };
+        let mk = || {
+            ShardedLgdEstimator::new(
+                &pre,
+                DenseSrp::new(hd, 5, 25, 35),
+                37,
+                LgdOptions::default(),
+                2,
+            )
+            .unwrap()
+        };
+        probes::disarm();
+        let mut est = mk();
+        let mut out: Vec<WeightedDraw> = Vec::new();
+        let mut off_draws: Vec<WeightedDraw> = Vec::with_capacity(steps * m);
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            est.draw_batch(&theta, m, &mut out);
+            off_draws.extend(out.iter().copied());
+        }
+        let off_secs = t0.elapsed().as_secs_f64();
+        probes::arm(4096, n);
+        let mut est = mk();
+        let mut on_draws: Vec<WeightedDraw> = Vec::with_capacity(steps * m);
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            est.draw_batch(&theta, m, &mut out);
+            on_draws.extend(out.iter().copied());
+        }
+        let on_secs = t0.elapsed().as_secs_f64();
+        probes::disarm();
+        let diverged = off_draws.len().abs_diff(on_draws.len())
+            + off_draws.iter().zip(&on_draws).filter(|(a, b)| a != b).count();
+        assert_eq!(diverged, 0, "armed probes perturbed the draw stream");
+        b.note("telemetry_probe_extra_rng_draws", diverged as f64);
+        b.record("telemetry_off_draw_ns", off_secs * 1e9 / (steps * m) as f64);
+        b.record("telemetry_on_draw_ns", on_secs * 1e9 / (steps * m) as f64);
+        let overhead_pct = (on_secs / off_secs - 1.0) * 100.0;
+        b.note("telemetry_overhead_rate_pct", overhead_pct);
+        if std::env::var("LGD_BENCH_FAST").is_err() {
+            assert!(
+                overhead_pct < 2.0,
+                "armed telemetry costs {overhead_pct:.2}% draw throughput (gate: < 2%)"
+            );
+        }
     }
 
     // --- Concurrent serving (`runtime::serving`): aggregate draws/sec of

@@ -15,7 +15,9 @@ use lgd::data::preprocess::{preprocess, PreprocessOptions};
 use lgd::data::shard::ShardPlan;
 use lgd::data::SynthSpec;
 use lgd::estimator::lgd::{LgdEstimator, LgdOptions};
-use lgd::estimator::{GradientEstimator, ShardedLgdEstimator};
+use lgd::core::telemetry::probes;
+use lgd::core::telemetry::registry::Registry;
+use lgd::estimator::{GradientEstimator, ShardedLgdEstimator, WeightedDraw};
 use lgd::lsh::sampler::LshSampler;
 use lgd::lsh::srp::{DenseSrp, SparseSrp, SrpHasher};
 use lgd::lsh::tables::LshTables;
@@ -248,6 +250,43 @@ fn main() {
         b.note(
             &format!("per_row_code_calls_on_draw_path_shards{shards}"),
             (s.code_calls - base.code_calls) as f64,
+        );
+    }
+
+    // --- Telemetry probe gates: the armed sampling-quality probes must be
+    // bitwise invisible (same seed → identical draw stream) AND account
+    // for every emitted draw exactly once (hit or uniform fallback — the
+    // `probe.draws` gauge after `publish`). Both counters gate at 0.
+    {
+        let batches = 100usize;
+        let m = 32usize;
+        let mk = || {
+            let h = DenseSrp::new(hd, 5, 25, 11);
+            ShardedLgdEstimator::new(&pre, h, 13, LgdOptions::default(), 4).unwrap()
+        };
+        probes::disarm();
+        let mut est = mk();
+        let mut plain: Vec<WeightedDraw> = Vec::with_capacity(batches * m);
+        for _ in 0..batches {
+            est.draw_batch(&theta, m, &mut out);
+            plain.extend(out.iter().copied());
+        }
+        probes::arm(4096, n);
+        let mut est = mk();
+        let mut armed: Vec<WeightedDraw> = Vec::with_capacity(batches * m);
+        for _ in 0..batches {
+            est.draw_batch(&theta, m, &mut out);
+            armed.extend(out.iter().copied());
+        }
+        probes::publish(Registry::global());
+        let accounted = Registry::global().gauge_value("probe.draws");
+        probes::disarm();
+        let diverged = plain.iter().zip(&armed).filter(|(a, b)| a != b).count();
+        assert_eq!(diverged, 0, "armed probes perturbed the draw stream");
+        b.note("telemetry_probe_extra_rng_draws", diverged as f64);
+        b.note(
+            "telemetry_probe_draw_accounting_gap",
+            (accounted - (batches * m) as f64).abs(),
         );
     }
 

@@ -8,6 +8,6 @@ pub mod toml;
 pub use json::Json;
 pub use spec::{
     Backend, DataConfig, EstimatorKind, HasherKind, LshConfig, OptimizerKind, RunConfig,
-    ServeConfig, TrainConfig,
+    ServeConfig, TelemetryConfig, TrainConfig,
 };
 pub use toml::{TomlDoc, TomlValue};

@@ -361,6 +361,38 @@ impl Default for ServeConfig {
     }
 }
 
+/// Telemetry block of a run config (`core::telemetry` — registry, spans,
+/// sampling-quality probes).
+#[derive(Debug, Clone)]
+pub struct TelemetryConfig {
+    /// Master switch: arm the sampling-quality probes and per-epoch
+    /// registry snapshots. Telemetry is passive — armed or not, a seeded
+    /// run is bitwise identical (enforced by the determinism gates) — so
+    /// it defaults on.
+    pub enabled: bool,
+    /// Append JSONL span events to a rotating trace file (see
+    /// `docs/observability.md`). Off by default: tracing writes to disk.
+    pub trace: bool,
+    /// Trace file path (rotates to `<path>.1` past `trace_max_bytes`).
+    pub trace_path: PathBuf,
+    /// Rotation threshold for the trace file, in bytes (>= 4096).
+    pub trace_max_bytes: u64,
+    /// Sliding-window size (draws) for the TV-distance sketch (16..=2^20).
+    pub probe_window: usize,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            enabled: true,
+            trace: false,
+            trace_path: PathBuf::from("lgd-trace.jsonl"),
+            trace_max_bytes: 16 << 20,
+            probe_window: 4096,
+        }
+    }
+}
+
 /// Parse a comma-separated example-id list (`"3,17"`) — the TOML/CLI
 /// surface for [`DataConfig::quarantine`] (the hand-rolled TOML layer has
 /// no arrays). Empty string = empty list; blank segments are ignored so
@@ -397,6 +429,8 @@ pub struct RunConfig {
     pub health: HealthConfig,
     /// Concurrent serving (`lgd serve`).
     pub serve: ServeConfig,
+    /// Observability (`core::telemetry`).
+    pub telemetry: TelemetryConfig,
     /// Output directory for result CSVs.
     pub out_dir: PathBuf,
 }
@@ -527,6 +561,21 @@ impl RunConfig {
             doc.int_or("serve", "idle_timeout_ms", cfg.serve.idle_timeout_ms as i64)? as u64;
         cfg.serve.io_timeout_ms =
             doc.int_or("serve", "io_timeout_ms", cfg.serve.io_timeout_ms as i64)? as u64;
+
+        // [telemetry]
+        cfg.telemetry.enabled =
+            doc.bool_or("telemetry", "enabled", cfg.telemetry.enabled)?;
+        cfg.telemetry.trace = doc.bool_or("telemetry", "trace", cfg.telemetry.trace)?;
+        let trace_path = doc.str_or("telemetry", "trace_path", "")?;
+        if !trace_path.is_empty() {
+            cfg.telemetry.trace_path = PathBuf::from(trace_path);
+        }
+        cfg.telemetry.trace_max_bytes = doc
+            .int_or("telemetry", "trace_max_bytes", cfg.telemetry.trace_max_bytes as i64)?
+            as u64;
+        cfg.telemetry.probe_window =
+            doc.int_or("telemetry", "probe_window", cfg.telemetry.probe_window as i64)?
+                as usize;
 
         cfg.validate()?;
         Ok(cfg)
@@ -685,6 +734,23 @@ impl RunConfig {
                 self.serve.addr
             )));
         }
+        if self.telemetry.trace && !self.telemetry.enabled {
+            return Err(Error::Config(
+                "telemetry.trace requires telemetry.enabled = true".into(),
+            ));
+        }
+        if self.telemetry.trace_max_bytes < 4096 {
+            return Err(Error::Config(format!(
+                "telemetry.trace_max_bytes = {} must be >= 4096",
+                self.telemetry.trace_max_bytes
+            )));
+        }
+        let pw = self.telemetry.probe_window;
+        if pw < 16 || pw > (1 << 20) {
+            return Err(Error::Config(format!(
+                "telemetry.probe_window = {pw} out of 16..=2^20"
+            )));
+        }
         Ok(())
     }
 }
@@ -731,6 +797,32 @@ mod tests {
         assert_eq!(cfg.health.theta_factor, 1e4);
         assert_eq!(cfg.health.rollback_lr_factor, 0.5);
         assert_eq!(cfg.health.max_rollbacks, 3);
+        assert!(cfg.telemetry.enabled, "passive telemetry defaults on");
+        assert!(!cfg.telemetry.trace, "trace files are opt-in");
+        assert_eq!(cfg.telemetry.trace_path, PathBuf::from("lgd-trace.jsonl"));
+        assert_eq!(cfg.telemetry.trace_max_bytes, 16 << 20);
+        assert_eq!(cfg.telemetry.probe_window, 4096);
+    }
+
+    #[test]
+    fn telemetry_block_parses_and_validates() {
+        let doc = TomlDoc::parse(
+            "[telemetry]\nenabled = true\ntrace = true\ntrace_path = \"t.jsonl\"\n\
+             trace_max_bytes = 8192\nprobe_window = 128\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert!(cfg.telemetry.trace);
+        assert_eq!(cfg.telemetry.trace_path, PathBuf::from("t.jsonl"));
+        assert_eq!(cfg.telemetry.trace_max_bytes, 8192);
+        assert_eq!(cfg.telemetry.probe_window, 128);
+        // trace without the master switch is a config error, not a no-op.
+        let doc = TomlDoc::parse("[telemetry]\nenabled = false\ntrace = true\n").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[telemetry]\nprobe_window = 2\n").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[telemetry]\ntrace_max_bytes = 16\n").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
     }
 
     #[test]

@@ -1,49 +1,82 @@
-//! Lightweight metrics registry: named counters and timers shared across
-//! pipeline stages and the trainer. (No external metrics crates offline —
-//! this is the substrate.)
+//! Pipeline/trainer metrics facade over the unified telemetry registry
+//! (`core::telemetry::registry`).
+//!
+//! The old implementation locked a whole `BTreeMap` per `count()` call,
+//! defeating the inner `AtomicU64`. Now `Metrics` is a thin view over a
+//! [`Registry`]: the name-keyed map is consulted only when a metric is
+//! first registered (or enumerated), and hot paths can hold a
+//! pre-registered [`CounterHandle`]/[`HistogramHandle`] via
+//! [`Metrics::counter_handle`] / [`Metrics::timer_handle`] — every
+//! increment through a handle is a single relaxed atomic op.
+//!
+//! `Metrics::new()` is backed by a private registry (isolated, as the
+//! pipeline tests expect); [`Metrics::shared`] is backed by the
+//! process-global registry so a build report also lands on the wire
+//! surface (`METRICS` op, `lgd stats`). Names are kind-unique per
+//! registry: using one name as both a counter and a timer panics.
 
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::core::stats::Welford;
+use crate::core::telemetry::registry::{
+    CounterHandle, HistogramHandle, Registry, SampleValue,
+};
 
-/// Thread-safe metrics registry.
-#[derive(Default)]
+/// Thread-safe metrics facade. Cloning shares the underlying registry.
+#[derive(Clone)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, AtomicU64>>,
-    timers: Mutex<BTreeMap<String, Welford>>,
+    /// `None` = the process-global registry.
+    reg: Option<Arc<Registry>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
 }
 
 impl Metrics {
-    /// Fresh registry.
+    /// Fresh facade over a private registry.
     pub fn new() -> Self {
-        Self::default()
+        Metrics { reg: Some(Arc::new(Registry::new())) }
     }
 
-    /// Increment a counter by `v`.
+    /// Facade over the process-global registry (what the `METRICS` wire op
+    /// and `lgd stats` read).
+    pub fn shared() -> Self {
+        Metrics { reg: None }
+    }
+
+    /// The backing registry.
+    pub fn registry(&self) -> &Registry {
+        self.reg.as_deref().unwrap_or_else(Registry::global)
+    }
+
+    /// Pre-register a counter and return its lock-free handle — the hot
+    /// path API (one relaxed `fetch_add` per increment, no map lookup).
+    pub fn counter_handle(&self, name: &str) -> CounterHandle {
+        self.registry().counter(name)
+    }
+
+    /// Pre-register a duration histogram and return its lock-free handle.
+    pub fn timer_handle(&self, name: &str) -> HistogramHandle {
+        self.registry().histogram(name)
+    }
+
+    /// Increment a counter by `v`. Slow path (registers on first use);
+    /// hold a [`Metrics::counter_handle`] in loops.
     pub fn count(&self, name: &str, v: u64) {
-        let mut m = self.counters.lock().unwrap();
-        m.entry(name.to_string())
-            .or_insert_with(|| AtomicU64::new(0))
-            .fetch_add(v, Ordering::Relaxed);
+        self.registry().counter(name).add(v);
     }
 
     /// Read a counter (0 when absent).
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters
-            .lock()
-            .unwrap()
-            .get(name)
-            .map(|a| a.load(Ordering::Relaxed))
-            .unwrap_or(0)
+        self.registry().counter_value(name)
     }
 
-    /// Record a duration sample (seconds).
+    /// Record a duration sample (seconds) into the named histogram.
     pub fn observe(&self, name: &str, secs: f64) {
-        let mut m = self.timers.lock().unwrap();
-        m.entry(name.to_string()).or_default().push(secs);
+        self.registry().histogram(name).observe_secs(secs);
     }
 
     /// Time a closure and record it under `name`.
@@ -54,25 +87,51 @@ impl Metrics {
         out
     }
 
-    /// Timer summary: (count, mean_secs, total_secs).
+    /// Timer summary: (count, mean_secs, total_secs). `None` when the
+    /// timer is absent or empty.
     pub fn timer(&self, name: &str) -> Option<(u64, f64, f64)> {
-        let m = self.timers.lock().unwrap();
-        m.get(name).map(|w| (w.count(), w.mean(), w.mean() * w.count() as f64))
+        self.registry()
+            .snapshot()
+            .into_iter()
+            .find(|s| s.labels.is_empty() && s.name == name)
+            .and_then(|s| match s.value {
+                SampleValue::Histogram { sum_secs, count, .. } if count > 0 => {
+                    Some((count, sum_secs / count as f64, sum_secs))
+                }
+                _ => None,
+            })
     }
 
-    /// Render a human-readable report of everything recorded.
+    /// Render a human-readable report of everything recorded: counters
+    /// first, then gauges, then timers — each section name-sorted.
     pub fn report(&self) -> String {
+        let snap = self.registry().snapshot();
+        let key = |s: &crate::core::telemetry::registry::MetricSample| {
+            if s.labels.is_empty() {
+                s.name.clone()
+            } else {
+                format!("{}{{{}}}", s.name, s.labels)
+            }
+        };
         let mut out = String::new();
-        for (k, v) in self.counters.lock().unwrap().iter() {
-            out.push_str(&format!("counter {k} = {}\n", v.load(Ordering::Relaxed)));
+        for s in &snap {
+            if let SampleValue::Counter(v) = s.value {
+                out.push_str(&format!("counter {} = {v}\n", key(s)));
+            }
         }
-        for (k, w) in self.timers.lock().unwrap().iter() {
-            out.push_str(&format!(
-                "timer   {k}: n={} mean={:.6}s total={:.3}s\n",
-                w.count(),
-                w.mean(),
-                w.mean() * w.count() as f64
-            ));
+        for s in &snap {
+            if let SampleValue::Gauge(v) = s.value {
+                out.push_str(&format!("gauge   {} = {v}\n", key(s)));
+            }
+        }
+        for s in &snap {
+            if let SampleValue::Histogram { sum_secs, count, .. } = &s.value {
+                let mean = if *count > 0 { sum_secs / *count as f64 } else { 0.0 };
+                out.push_str(&format!(
+                    "timer   {}: n={count} mean={mean:.6}s total={sum_secs:.3}s\n",
+                    key(s)
+                ));
+            }
         }
         out
     }
@@ -81,7 +140,6 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
 
     #[test]
     fn counters_accumulate() {
@@ -114,7 +172,7 @@ mod tests {
 
     #[test]
     fn concurrent_counting() {
-        let m = Arc::new(Metrics::new());
+        let m = Metrics::new();
         let mut handles = Vec::new();
         for _ in 0..8 {
             let m = m.clone();
@@ -131,12 +189,55 @@ mod tests {
     }
 
     #[test]
+    fn handles_bypass_the_registration_lock() {
+        let m = Metrics::new();
+        let c = m.counter_handle("hot");
+        let t = m.timer_handle("lat");
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = c.clone();
+            let t = t.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    c.inc();
+                    t.observe_ns(i * 100);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("hot"), 8000);
+        assert_eq!(m.timer("lat").unwrap().0, 8000);
+    }
+
+    #[test]
     fn report_contains_entries() {
         let m = Metrics::new();
         m.count("x", 1);
         m.observe("y", 0.1);
+        m.registry().gauge("z").set(2.5);
         let r = m.report();
         assert!(r.contains("counter x = 1"));
         assert!(r.contains("timer   y"));
+        assert!(r.contains("gauge   z = 2.5"));
+    }
+
+    #[test]
+    fn shared_facades_see_the_global_registry() {
+        let a = Metrics::shared();
+        let b = Metrics::shared();
+        // Unique name: global registry is shared across the test binary.
+        a.count("metrics.test.shared_facade", 3);
+        assert!(b.counter("metrics.test.shared_facade") >= 3);
+    }
+
+    #[test]
+    fn clones_share_the_private_registry() {
+        let m = Metrics::new();
+        let m2 = m.clone();
+        m.count("c", 1);
+        m2.count("c", 1);
+        assert_eq!(m.counter("c"), 2);
     }
 }

@@ -298,6 +298,7 @@ where
             let members = plan.members(s);
             let h = hasher.clone();
             handles.push(scope.spawn(move || -> Result<ShardTables<H>> {
+                let _sp = crate::span!("pipeline.shard_build", shard = s);
                 let t0 = Instant::now();
                 let mut rows: Vec<u32> = members.to_vec();
                 let mut local = Matrix::zeros(0, 0);
@@ -425,9 +426,10 @@ where
 
         // --- Shard workers: own their tables; coded inserts, no locks. ---
         let mut handles = Vec::with_capacity(shards);
-        for rx in shard_rxs.into_iter() {
+        for (s, rx) in shard_rxs.into_iter().enumerate() {
             let h = hasher_ref.clone();
             handles.push(scope.spawn(move || -> Result<ShardTables<H>> {
+                let _sp = crate::span!("pipeline.shard_build", shard = s);
                 let tw = Instant::now();
                 let l = h.l();
                 let mut rows: Vec<u32> = Vec::new();

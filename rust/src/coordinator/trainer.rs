@@ -29,6 +29,8 @@ use crate::coordinator::draw_engine::{run_session, DrawEngineConfig};
 use crate::coordinator::health::{HealthMonitor, HealthReport, Trip};
 use crate::core::error::{Error, Result};
 use crate::core::matrix::axpy;
+use crate::core::telemetry::registry::Registry;
+use crate::core::telemetry::{probes, prom};
 use crate::core::numerics::all_finite;
 use crate::data::dataset::{Dataset, Task};
 use crate::data::preprocess::Preprocessed;
@@ -61,6 +63,17 @@ pub struct CurvePoint {
     pub test_loss: f64,
 }
 
+/// One epoch's flattened view of the global metrics registry, captured at
+/// the epoch boundary (after the autosave, so the snapshot-write timings
+/// are included). Histograms flatten to `<name>.count` / `<name>.sum_secs`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochMetricsSnapshot {
+    /// 1-based epoch the capture closed.
+    pub epoch: u32,
+    /// `(metric key, value)` pairs, sorted by key.
+    pub samples: Vec<(String, f64)>,
+}
+
 /// Everything a training run produces.
 #[derive(Debug, Clone)]
 pub struct TrainOutcome {
@@ -91,6 +104,9 @@ pub struct TrainOutcome {
     /// Health-supervisor counters (all zero when `health.enabled` is off
     /// or nothing tripped — the clean-path gate).
     pub health: HealthReport,
+    /// Per-epoch registry captures (`telemetry.enabled`, LGD epoch loop
+    /// only — empty for SGD runs and with telemetry off).
+    pub epoch_metrics: Vec<EpochMetricsSnapshot>,
 }
 
 /// Gradient execution source.
@@ -333,6 +349,9 @@ struct LoopCtx<'rt> {
     /// Armed sentinels when `health.enabled`; `None` keeps the loop body
     /// on the exact pre-health path.
     monitor: Option<HealthMonitor>,
+    /// Epoch-boundary registry captures (filled by the LGD epoch loop when
+    /// `telemetry.enabled`).
+    epoch_metrics: Vec<EpochMetricsSnapshot>,
 }
 
 impl<'rt> LoopCtx<'rt> {
@@ -414,6 +433,7 @@ impl<'rt> LoopCtx<'rt> {
             it,
             autosaves: 0,
             monitor: cfg.health.enabled.then(|| HealthMonitor::new(&cfg.health)),
+            epoch_metrics: Vec::new(),
         })
     }
 
@@ -533,6 +553,7 @@ impl<'rt> LoopCtx<'rt> {
             resumed,
             autosaves: self.autosaves,
             health: self.monitor.map(|m| m.report).unwrap_or_default(),
+            epoch_metrics: self.epoch_metrics,
         }
     }
 }
@@ -551,6 +572,8 @@ fn run_sync_steps(
     mut train_wall: f64,
     draws: &mut Vec<WeightedDraw>,
 ) -> Result<(f64, Option<Trip>)> {
+    // Register-once handle: the hot loop below touches only the atomics.
+    let draw_hist = Registry::global().histogram("train.draw_secs");
     for _ in 0..steps {
         let step_t = Instant::now();
         // --- sample ---
@@ -560,6 +583,7 @@ fn run_sync_steps(
         } else {
             est.draw_batch(&ctx.theta, ctx.batch, draws);
         }
+        draw_hist.observe_secs(step_t.elapsed().as_secs_f64());
         ctx.it += 1;
         // --- gradient estimate + update ---
         if let Some(trip) = ctx.grad_update(pre, draws)? {
@@ -609,8 +633,22 @@ fn maybe_autosave<H: SnapshotHasher>(
         rollbacks: m.report.rollbacks,
         loss: ctx.curve.last().map(|p| p.train_loss).unwrap_or(f64::NAN),
     });
-    snapshot::save_rotated_stamped(path, cfg.store.keep, est, Some(&ts), stamp.as_ref())?;
+    {
+        let _sp = crate::span!("store.snapshot_write", epoch = epochs_done);
+        snapshot::save_rotated_stamped(path, cfg.store.keep, est, Some(&ts), stamp.as_ref())?;
+    }
     ctx.autosaves += 1;
+    // Metrics ride along with every autosave: a best-effort Prometheus
+    // sidecar next to the snapshot base path. Never fails the save.
+    if cfg.telemetry.enabled {
+        if probes::armed() {
+            probes::publish(Registry::global());
+        }
+        let _ = std::fs::write(
+            path.with_extension("metrics.prom"),
+            prom::render(Registry::global()),
+        );
+    }
     Ok(())
 }
 
@@ -636,6 +674,7 @@ fn rollback<'p, H: SnapshotHasher + Clone>(
     {
         let mon = ctx.monitor.as_mut().expect("a trip implies an armed supervisor");
         mon.report.rollbacks += 1;
+        Registry::global().counter("health.rollbacks").inc();
         if mon.report.rollbacks > cfg.health.max_rollbacks as u64 {
             return Err(Error::Health(format!(
                 "{}; rollback budget exhausted (health.max_rollbacks = {})",
@@ -880,6 +919,7 @@ fn run_lgd<'p, H: SnapshotHasher + Clone>(
     let mut auto_quarantine: Vec<usize> = Vec::new();
     let mut epoch = start_epoch;
     while epoch < cfg.train.epochs {
+        let _ep_span = crate::span!("train.epoch", epoch = epoch as u64);
         let tripped: Option<Trip>;
         if asynchronous {
             // One draw-engine session per epoch: the sampling query is
@@ -954,6 +994,15 @@ fn run_lgd<'p, H: SnapshotHasher + Clone>(
                 // quiescent).
                 maybe_autosave(cfg, &est, &mut ctx, (epoch + 1) as u32)?;
                 epoch += 1;
+                if cfg.telemetry.enabled {
+                    if probes::armed() {
+                        probes::publish(Registry::global());
+                    }
+                    ctx.epoch_metrics.push(EpochMetricsSnapshot {
+                        epoch: epoch as u32,
+                        samples: Registry::global().flat(),
+                    });
+                }
             }
             Some(trip) => {
                 est = rollback(
@@ -1262,6 +1311,57 @@ mod tests {
             assert_eq!(plain.health, HealthReport::default());
             assert_eq!(watched.health, HealthReport::default(), "nothing may trip");
         }
+    }
+
+    /// The telemetry determinism gate: arming the sampling probes (and the
+    /// span layer, which is always passively timing) leaves a seeded run
+    /// bit-for-bit identical — θ, the curve losses, the estimator
+    /// counters. Probes observe the draw stream; they never touch the RNG.
+    #[test]
+    fn armed_telemetry_is_bitwise_invisible_to_training() {
+        let (pre, te) = setup(400, 8, 23);
+        for async_workers in [0usize, 2] {
+            let mut cfg = small_cfg(EstimatorKind::Lgd);
+            cfg.lsh.shards = 2;
+            cfg.lsh.async_workers = async_workers;
+            probes::disarm();
+            let plain = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+            probes::arm(512, pre.data.len());
+            let observed = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+            probes::disarm();
+            assert_eq!(plain.theta, observed.theta, "async_workers = {async_workers}");
+            assert_eq!(plain.curve.len(), observed.curve.len());
+            for (a, b) in plain.curve.iter().zip(&observed.curve) {
+                assert_eq!(
+                    (a.iter, a.train_loss, a.test_loss),
+                    (b.iter, b.train_loss, b.test_loss),
+                    "async_workers = {async_workers}"
+                );
+            }
+            assert_eq!(plain.est_stats.draws, observed.est_stats.draws);
+            assert_eq!(plain.est_stats.fallbacks, observed.est_stats.fallbacks);
+        }
+    }
+
+    /// `telemetry.enabled` (the default) captures one registry snapshot
+    /// per completed epoch; disabling it empties the capture without
+    /// touching the math.
+    #[test]
+    fn epoch_metrics_capture_follows_the_telemetry_knob() {
+        let (pre, te) = setup(300, 8, 27);
+        let mut cfg = small_cfg(EstimatorKind::Lgd);
+        let on = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+        assert_eq!(on.epoch_metrics.len(), cfg.train.epochs);
+        let last = on.epoch_metrics.last().unwrap();
+        assert_eq!(last.epoch as usize, cfg.train.epochs);
+        assert!(
+            last.samples.iter().any(|(k, v)| k == "train.draw_secs.count" && *v >= 1.0),
+            "the draw histogram must appear in the epoch capture"
+        );
+        cfg.telemetry.enabled = false;
+        let off = train(&cfg, &pre, &te, GradSource::Native).unwrap();
+        assert!(off.epoch_metrics.is_empty());
+        assert_eq!(on.theta, off.theta, "the capture knob must not touch the math");
     }
 
     /// `data.quarantine` evicts the listed examples before the first draw

@@ -1,11 +1,12 @@
 //! Foundational substrates: errors, PRNG, aligned-block numerics, dense
-//! linear algebra, statistics.
+//! linear algebra, statistics, telemetry.
 
 pub mod error;
 pub mod matrix;
 pub mod numerics;
 pub mod rng;
 pub mod stats;
+pub mod telemetry;
 
 pub use error::{Error, Result};
 pub use matrix::Matrix;

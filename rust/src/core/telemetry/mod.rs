@@ -1,0 +1,26 @@
+//! Unified observability substrate: one registry, four views.
+//!
+//! - [`registry`] — register-once counters/gauges/histograms behind
+//!   lock-free handles, with a process-global instance;
+//! - [`prom`] — Prometheus text exposition + strict validator;
+//! - [`trace`] — `span!` scopes recording into histograms and (when
+//!   armed) a rotating JSONL trace file;
+//! - [`probes`] — streaming sampling-quality health (fallback/exhausted
+//!   rates, occupancy skew, importance-weighted TV-distance sketch).
+//!
+//! Design contract: everything here is passive. Recording telemetry never
+//! touches RNG state, never reorders draws, and never changes θ — armed
+//! telemetry is bitwise invisible to a seeded run (enforced by the
+//! determinism gates in the trainer and serving tests).
+
+pub mod probes;
+pub mod prom;
+pub mod registry;
+pub mod trace;
+
+pub use prom::{render as render_prometheus, validate as validate_prometheus, PromSummary};
+pub use registry::{
+    CounterHandle, GaugeHandle, HistogramCore, HistogramHandle, MetricSample, Registry,
+    SampleValue, HIST_BUCKETS,
+};
+pub use trace::{SpanGuard, TraceEvent};

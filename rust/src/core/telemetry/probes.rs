@@ -1,0 +1,343 @@
+//! Sampling-quality probes: streaming health of the LSH draw distribution.
+//!
+//! The Theorem-1 guarantee only holds if the sampler's *claimed*
+//! probabilities match the distribution it actually draws from. These
+//! probes watch that contract live, without touching the draw path's RNG
+//! or ordering (bitwise-invisibility contract):
+//!
+//! - **rates** — fallback / exhausted fractions, mean probes per draw,
+//!   mean accepted-bucket size;
+//! - **occupancy skew** — draws are folded into 64 occupancy buckets by a
+//!   fixed integer mix of the example index; `max/mean` over bucket counts
+//!   exposes a sampler collapsing onto a few hot buckets;
+//! - **TV-distance sketch** — each accepted draw of example `i` with
+//!   claimed probability `p` contributes importance weight `w = 1/(p·N)`
+//!   to its occupancy bucket over a sliding window. If the claimed
+//!   probabilities are correct, the normalized per-bucket mass converges
+//!   to the *uniform* mass of that bucket (computed exactly at arm time),
+//!   for **any** sampling distribution — so the total-variation distance
+//!   between the two is a direct drift detector for the
+//!   probability-accounting itself, not a uniformity test of the sampler.
+//!
+//! Disarmed cost is one relaxed atomic load per hook (the failpoint-
+//! registry bar). Armed cost is a handful of relaxed `fetch_add`s plus a
+//! `try_lock` on the sketch — contention skips the sketch update rather
+//! than blocking a draw thread.
+//!
+//! [`publish`] snapshots everything into registry gauges/counters under
+//! the `probe.` prefix; it is called from the `METRICS` wire op and the
+//! trainer's per-epoch capture.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use crate::core::telemetry::registry::Registry;
+
+/// Occupancy buckets for the skew / TV sketches.
+pub const PROBE_BUCKETS: usize = 64;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static DRAWS: AtomicU64 = ZERO;
+static FALLBACKS: AtomicU64 = ZERO;
+static EXHAUSTED: AtomicU64 = ZERO;
+static PROBE_SUM: AtomicU64 = ZERO;
+static BUCKET_SIZE_SUM: AtomicU64 = ZERO;
+static SHARD_HITS: [AtomicU64; PROBE_BUCKETS] = [ZERO; PROBE_BUCKETS];
+static OCCUPANCY: [AtomicU64; PROBE_BUCKETS] = [ZERO; PROBE_BUCKETS];
+
+static SKETCH: Mutex<Option<TvSketch>> = Mutex::new(None);
+
+fn sketch() -> MutexGuard<'static, Option<TvSketch>> {
+    SKETCH.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Fixed integer mix (splitmix64 finalizer) folding an example index into
+/// an occupancy bucket. Deterministic across runs by construction.
+#[inline]
+fn mix(i: u64) -> usize {
+    let mut z = i.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    (z ^ (z >> 31)) as usize % PROBE_BUCKETS
+}
+
+/// Sliding-window importance-weighted estimate of per-bucket *uniform*
+/// mass, compared against the exact uniform reference. Pure struct —
+/// unit-testable without the global arming machinery.
+#[derive(Debug, Clone)]
+pub struct TvSketch {
+    window: usize,
+    rows: usize,
+    /// Exact uniform mass per bucket: `|{i < rows : mix(i) == b}| / rows`.
+    reference: [f64; PROBE_BUCKETS],
+    /// Ring of (bucket, importance weight) for the live window.
+    ring: std::collections::VecDeque<(usize, f64)>,
+    mass: [f64; PROBE_BUCKETS],
+    total: f64,
+}
+
+impl TvSketch {
+    /// Build a sketch for a dataset of `rows` examples with the given
+    /// window. The uniform reference is computed exactly by enumeration.
+    pub fn new(window: usize, rows: usize) -> TvSketch {
+        let mut reference = [0.0; PROBE_BUCKETS];
+        for i in 0..rows {
+            reference[mix(i as u64)] += 1.0;
+        }
+        for r in &mut reference {
+            *r /= rows.max(1) as f64;
+        }
+        TvSketch {
+            window: window.max(1),
+            rows: rows.max(1),
+            reference,
+            ring: std::collections::VecDeque::new(),
+            mass: [0.0; PROBE_BUCKETS],
+            total: 0.0,
+        }
+    }
+
+    /// Record one accepted draw: example `index`, claimed probability `p`.
+    pub fn record(&mut self, index: usize, p: f64) {
+        if !(p > 0.0) || !p.is_finite() {
+            return;
+        }
+        let b = mix(index as u64);
+        let w = 1.0 / (p * self.rows as f64);
+        self.ring.push_back((b, w));
+        self.mass[b] += w;
+        self.total += w;
+        while self.ring.len() > self.window {
+            let (ob, ow) = self.ring.pop_front().unwrap();
+            self.mass[ob] -= ow;
+            self.total -= ow;
+        }
+    }
+
+    /// Draws currently in the window.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// Is the window empty?
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Total-variation distance between the windowed importance-weighted
+    /// mass and the exact uniform reference. `None` until the window holds
+    /// at least a quarter of its capacity (early readings are noise).
+    pub fn tv_distance(&self) -> Option<f64> {
+        if self.ring.len() < (self.window + 3) / 4 || self.total <= 0.0 {
+            return None;
+        }
+        let mut tv = 0.0;
+        for b in 0..PROBE_BUCKETS {
+            tv += (self.mass[b] / self.total - self.reference[b]).abs();
+        }
+        Some(tv / 2.0)
+    }
+}
+
+/// Arm the probes for a dataset of `rows` examples, with a TV-sketch
+/// window of `window` draws. Resets all probe state.
+pub fn arm(window: usize, rows: usize) {
+    DRAWS.store(0, Ordering::Relaxed);
+    FALLBACKS.store(0, Ordering::Relaxed);
+    EXHAUSTED.store(0, Ordering::Relaxed);
+    PROBE_SUM.store(0, Ordering::Relaxed);
+    BUCKET_SIZE_SUM.store(0, Ordering::Relaxed);
+    for a in SHARD_HITS.iter().chain(OCCUPANCY.iter()) {
+        a.store(0, Ordering::Relaxed);
+    }
+    *sketch() = Some(TvSketch::new(window, rows));
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm the probes. Idempotent; state is kept until the next [`arm`].
+pub fn disarm() {
+    ARMED.store(false, Ordering::Release);
+}
+
+/// Are the probes armed? One relaxed load — the hook guard.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Record an accepted LSH draw: owning shard, global example index, the
+/// sampler's claimed probability, tables probed, and accepted bucket size.
+/// No-op (one atomic load) when disarmed; never touches RNG state.
+#[inline]
+pub fn observe_hit(shard: usize, index: usize, prob: f64, probes: usize, bucket_size: usize) {
+    if !armed() {
+        return;
+    }
+    DRAWS.fetch_add(1, Ordering::Relaxed);
+    PROBE_SUM.fetch_add(probes as u64, Ordering::Relaxed);
+    BUCKET_SIZE_SUM.fetch_add(bucket_size as u64, Ordering::Relaxed);
+    SHARD_HITS[shard % PROBE_BUCKETS].fetch_add(1, Ordering::Relaxed);
+    OCCUPANCY[mix(index as u64)].fetch_add(1, Ordering::Relaxed);
+    // try_lock: a contended sketch drops the observation instead of
+    // stalling a draw thread.
+    if let Ok(mut guard) = SKETCH.try_lock() {
+        if let Some(s) = guard.as_mut() {
+            s.record(index, prob);
+        }
+    }
+}
+
+/// Record a uniform fallback (empty LSH candidate set → uniform draw).
+#[inline]
+pub fn observe_fallback() {
+    if !armed() {
+        return;
+    }
+    DRAWS.fetch_add(1, Ordering::Relaxed);
+    FALLBACKS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record `k` exhausted sampling attempts (all probed buckets empty).
+#[inline]
+pub fn observe_exhausted(k: usize) {
+    if !armed() {
+        return;
+    }
+    EXHAUSTED.fetch_add(k as u64, Ordering::Relaxed);
+}
+
+/// Snapshot the probe state into `probe.*` gauges/counters on `reg`.
+/// Also safe to call while disarmed (publishes the last armed state).
+pub fn publish(reg: &Registry) {
+    let draws = DRAWS.load(Ordering::Relaxed);
+    let fallbacks = FALLBACKS.load(Ordering::Relaxed);
+    let exhausted = EXHAUSTED.load(Ordering::Relaxed);
+    let probe_sum = PROBE_SUM.load(Ordering::Relaxed);
+    let bucket_sum = BUCKET_SIZE_SUM.load(Ordering::Relaxed);
+    let hits = draws.saturating_sub(fallbacks);
+
+    reg.gauge("probe.draws").set(draws as f64);
+    let rate = |num: u64| if draws > 0 { num as f64 / draws as f64 } else { 0.0 };
+    reg.gauge("probe.fallback_rate").set(rate(fallbacks));
+    reg.gauge("probe.exhausted_rate").set(rate(exhausted));
+    let per_hit = |num: u64| if hits > 0 { num as f64 / hits as f64 } else { 0.0 };
+    reg.gauge("probe.probes_per_draw").set(per_hit(probe_sum));
+    reg.gauge("probe.bucket_size_mean").set(per_hit(bucket_sum));
+
+    // Occupancy skew: max / mean over non-degenerate bucket counts.
+    let occ: Vec<u64> = OCCUPANCY.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+    let occ_total: u64 = occ.iter().sum();
+    let occ_max = occ.iter().copied().max().unwrap_or(0);
+    let mean = occ_total as f64 / PROBE_BUCKETS as f64;
+    reg.gauge("probe.occupancy_max").set(occ_max as f64);
+    reg.gauge("probe.occupancy_skew").set(if mean > 0.0 { occ_max as f64 / mean } else { 0.0 });
+
+    // Per-shard acceptance share (only shards that saw traffic).
+    let shard_total: u64 = SHARD_HITS.iter().map(|a| a.load(Ordering::Relaxed)).sum();
+    if shard_total > 0 {
+        for (s, a) in SHARD_HITS.iter().enumerate() {
+            let n = a.load(Ordering::Relaxed);
+            if n > 0 {
+                reg.gauge_labeled("probe.shard_accept", &[("shard", &s.to_string())])
+                    .set(n as f64 / shard_total as f64);
+            }
+        }
+    }
+
+    if let Some(s) = sketch().as_ref() {
+        reg.gauge("probe.tv_window").set(s.len() as f64);
+        if let Some(tv) = s.tv_distance() {
+            reg.gauge("probe.tv_distance").set(tv);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_is_deterministic_and_in_range() {
+        for i in 0..1000u64 {
+            let b = mix(i);
+            assert!(b < PROBE_BUCKETS);
+            assert_eq!(b, mix(i));
+        }
+    }
+
+    #[test]
+    fn uniform_reference_sums_to_one() {
+        let s = TvSketch::new(128, 5000);
+        let sum: f64 = s.reference.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correct_probabilities_give_small_tv() {
+        // Draw uniformly with the *correct* claimed probability 1/N:
+        // every draw gets weight 1, the windowed mass is the empirical
+        // bucket frequency, which converges to the exact reference.
+        let rows = 4096usize;
+        let mut s = TvSketch::new(rows, rows);
+        // Deterministic LCG so the test needs no RNG plumbing.
+        let mut x = 12345u64;
+        for _ in 0..rows {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let idx = (x >> 33) as usize % rows;
+            s.record(idx, 1.0 / rows as f64);
+        }
+        let tv = s.tv_distance().expect("window warm");
+        assert!(tv < 0.15, "uniform-with-correct-probs TV too large: {tv}");
+    }
+
+    #[test]
+    fn wrong_probabilities_give_large_tv() {
+        // Same uniform draws, but the claimed probability is biased 100x
+        // for half the index space — the importance weights are wrong, so
+        // the estimated uniform mass drifts far from the reference.
+        let rows = 4096usize;
+        let mut s = TvSketch::new(rows, rows);
+        let mut x = 987654321u64;
+        for _ in 0..rows {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let idx = (x >> 33) as usize % rows;
+            let p = if idx < rows / 2 { 100.0 / rows as f64 } else { 1.0 / rows as f64 };
+            s.record(idx, p);
+        }
+        let tv = s.tv_distance().expect("window warm");
+        assert!(tv > 0.3, "biased claimed probs should inflate TV: {tv}");
+    }
+
+    #[test]
+    fn sketch_window_slides() {
+        let mut s = TvSketch::new(8, 100);
+        for i in 0..20 {
+            s.record(i, 0.01);
+        }
+        assert_eq!(s.len(), 8);
+    }
+
+    #[test]
+    fn degenerate_probabilities_are_ignored() {
+        let mut s = TvSketch::new(8, 100);
+        s.record(1, 0.0);
+        s.record(2, -1.0);
+        s.record(3, f64::NAN);
+        s.record(4, f64::INFINITY);
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn publish_writes_probe_gauges() {
+        // Private registry: publish() reads global probe state, which other
+        // tests may also touch — assert presence, not exact values.
+        let reg = Registry::new();
+        publish(&reg);
+        let flat = reg.flat();
+        for want in ["probe.draws", "probe.fallback_rate", "probe.exhausted_rate"] {
+            assert!(flat.iter().any(|(n, _)| n == want), "missing {want}");
+        }
+    }
+}

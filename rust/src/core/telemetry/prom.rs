@@ -1,0 +1,279 @@
+//! Prometheus text exposition (version 0.0.4) for the telemetry registry,
+//! plus a strict validator shared by the tests, the `lgd stats` client and
+//! the CI observability smoke.
+//!
+//! Naming scheme: dotted registry names map to `lgd_` + dots/dashes →
+//! underscores (`serve.draws_served` → `lgd_serve_draws_served`).
+//! Histograms are exported in seconds with the conventional
+//! `_seconds_bucket{le=...}` / `_seconds_sum` / `_seconds_count` triplet
+//! over the registry's power-of-two nanosecond bounds.
+
+use crate::core::telemetry::registry::{Registry, SampleValue};
+
+/// `lgd_`-prefixed exposition name for a dotted registry name.
+pub fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 4);
+    out.push_str("lgd_");
+    for ch in name.chars() {
+        if ch.is_ascii_alphanumeric() {
+            out.push(ch);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".into()
+    } else if v == f64::INFINITY {
+        "+Inf".into()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".into()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render the full registry as Prometheus text exposition. Metrics sharing
+/// a base name (label variants) are grouped under one `# TYPE` header; the
+/// registry's sorted enumeration keeps variants adjacent.
+pub fn render(reg: &Registry) -> String {
+    let mut out = String::new();
+    let mut last_base = String::new();
+    for s in reg.snapshot() {
+        let base = prom_name(&s.name);
+        let ty = match s.value {
+            SampleValue::Counter(_) => "counter",
+            SampleValue::Gauge(_) => "gauge",
+            SampleValue::Histogram { .. } => "histogram",
+        };
+        // Histograms get a `_seconds` unit suffix on the exposition name.
+        let ename = match s.value {
+            SampleValue::Histogram { .. } => format!("{base}_seconds"),
+            _ => base.clone(),
+        };
+        if ename != last_base {
+            out.push_str(&format!("# HELP {ename} lgd runtime metric {}\n", s.name));
+            out.push_str(&format!("# TYPE {ename} {ty}\n"));
+            last_base = ename.clone();
+        }
+        let labels = |extra: &str| -> String {
+            match (s.labels.is_empty(), extra.is_empty()) {
+                (true, true) => String::new(),
+                (true, false) => format!("{{{extra}}}"),
+                (false, true) => format!("{{{}}}", s.labels),
+                (false, false) => format!("{{{},{extra}}}", s.labels),
+            }
+        };
+        match &s.value {
+            SampleValue::Counter(v) => {
+                out.push_str(&format!("{ename}{} {v}\n", labels("")));
+            }
+            SampleValue::Gauge(v) => {
+                out.push_str(&format!("{ename}{} {}\n", labels(""), fmt_f64(*v)));
+            }
+            SampleValue::Histogram { buckets, sum_secs, count } => {
+                for (le, c) in buckets {
+                    let le = format!("le=\"{}\"", fmt_f64(*le));
+                    out.push_str(&format!("{ename}_bucket{} {c}\n", labels(&le)));
+                }
+                out.push_str(&format!("{ename}_sum{} {}\n", labels(""), fmt_f64(*sum_secs)));
+                out.push_str(&format!("{ename}_count{} {count}\n", labels("")));
+            }
+        }
+    }
+    out
+}
+
+/// What a validated exposition contained.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PromSummary {
+    /// `# TYPE ... counter` declarations.
+    pub counters: usize,
+    /// `# TYPE ... gauge` declarations.
+    pub gauges: usize,
+    /// `# TYPE ... histogram` declarations.
+    pub histograms: usize,
+    /// Non-comment sample lines.
+    pub samples: usize,
+}
+
+fn valid_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn parse_value(s: &str) -> Option<f64> {
+    match s {
+        "+Inf" => Some(f64::INFINITY),
+        "-Inf" => Some(f64::NEG_INFINITY),
+        "NaN" => Some(f64::NAN),
+        _ => s.parse::<f64>().ok(),
+    }
+}
+
+/// Strictly validate a Prometheus text exposition: every sample line must
+/// parse as `name[{labels}] value`, reference a preceding `# TYPE`
+/// declaration (histogram samples via their `_bucket`/`_sum`/`_count`
+/// suffixes), carry a parseable value, and histogram buckets must be
+/// cumulative (non-decreasing in `le` order, ending at `+Inf`).
+pub fn validate(text: &str) -> Result<PromSummary, String> {
+    let mut sum = PromSummary::default();
+    // Declared (name, type) pairs.
+    let mut types: Vec<(String, String)> = Vec::new();
+    // Per-histogram bucket trail: (name, last_count, saw_inf).
+    let mut hist_state: Vec<(String, u64, bool)> = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let ln = ln + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().ok_or(format!("line {ln}: TYPE without a name"))?;
+            let ty = it.next().ok_or(format!("line {ln}: TYPE without a type"))?;
+            if !valid_name(name) {
+                return Err(format!("line {ln}: invalid metric name '{name}'"));
+            }
+            match ty {
+                "counter" => sum.counters += 1,
+                "gauge" => sum.gauges += 1,
+                "histogram" => {
+                    sum.histograms += 1;
+                    hist_state.push((name.to_string(), 0, false));
+                }
+                other => return Err(format!("line {ln}: unknown type '{other}'")),
+            }
+            types.push((name.to_string(), ty.to_string()));
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP or comment
+        }
+        // Sample: name[{labels}] value
+        let (name_part, value_part) = match line.rfind(' ') {
+            Some(i) => (&line[..i], &line[i + 1..]),
+            None => return Err(format!("line {ln}: sample without a value")),
+        };
+        let (name, labels) = match name_part.find('{') {
+            Some(i) => {
+                if !name_part.ends_with('}') {
+                    return Err(format!("line {ln}: unbalanced label braces"));
+                }
+                (&name_part[..i], &name_part[i + 1..name_part.len() - 1])
+            }
+            None => (name_part, ""),
+        };
+        if !valid_name(name) {
+            return Err(format!("line {ln}: invalid sample name '{name}'"));
+        }
+        let value = parse_value(value_part)
+            .ok_or(format!("line {ln}: unparseable value '{value_part}'"))?;
+        // Resolve the declaring TYPE: exact name, or histogram suffixes.
+        let declared = types.iter().any(|(n, _)| n == name);
+        let hist_parent = ["_bucket", "_sum", "_count"].iter().find_map(|suf| {
+            name.strip_suffix(suf).filter(|base| {
+                types.iter().any(|(n, t)| n == base && t == "histogram")
+            })
+        });
+        if !declared && hist_parent.is_none() {
+            return Err(format!("line {ln}: sample '{name}' has no preceding # TYPE"));
+        }
+        if let Some(base) = name.strip_suffix("_bucket") {
+            let le = labels
+                .split(',')
+                .find_map(|kv| kv.strip_prefix("le=\""))
+                .and_then(|v| v.strip_suffix('"'))
+                .ok_or(format!("line {ln}: histogram bucket without an le label"))?;
+            let le = parse_value(le).ok_or(format!("line {ln}: unparseable le '{le}'"))?;
+            let count = value as u64;
+            if let Some(st) = hist_state.iter_mut().find(|(n, _, _)| n == base) {
+                if count < st.1 {
+                    return Err(format!(
+                        "line {ln}: histogram '{base}' buckets not cumulative"
+                    ));
+                }
+                st.1 = count;
+                if le.is_infinite() {
+                    st.2 = true;
+                }
+            }
+        }
+        let _ = value;
+        sum.samples += 1;
+    }
+    for (name, _, saw_inf) in &hist_state {
+        if !saw_inf {
+            return Err(format!("histogram '{name}' has no +Inf bucket"));
+        }
+    }
+    Ok(sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::telemetry::registry::HIST_BUCKETS;
+
+    #[test]
+    fn render_validates_and_covers_all_kinds() {
+        let r = Registry::new();
+        r.counter("serve.draws_served").add(42);
+        r.gauge("probe.tv_distance").set(0.03125);
+        r.gauge_labeled("serve.shard_rows", &[("shard", "0")]).set(100.0);
+        r.gauge_labeled("serve.shard_rows", &[("shard", "1")]).set(96.0);
+        r.histogram("serve.request_secs").observe_secs(0.002);
+        let text = render(&r);
+        let sum = validate(&text).expect("rendered exposition must validate");
+        assert_eq!(sum.counters, 1);
+        assert_eq!(sum.gauges, 2); // tv_distance + shard_rows (one TYPE for both labels)
+        assert_eq!(sum.histograms, 1);
+        // 1 counter + 1 gauge + 2 labeled gauges + buckets + sum + count
+        assert_eq!(sum.samples, 4 + HIST_BUCKETS + 2);
+        assert!(text.contains("lgd_serve_draws_served 42"));
+        assert!(text.contains("lgd_probe_tv_distance 0.03125"));
+        assert!(text.contains("lgd_serve_shard_rows{shard=\"0\"} 100"));
+        assert!(text.contains("lgd_serve_request_secs_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("lgd_serve_request_secs_seconds_count 1"));
+    }
+
+    #[test]
+    fn labeled_variants_share_one_type_header() {
+        let r = Registry::new();
+        r.gauge_labeled("g", &[("shard", "0")]).set(1.0);
+        r.gauge_labeled("g", &[("shard", "1")]).set(2.0);
+        let text = render(&r);
+        assert_eq!(text.matches("# TYPE lgd_g gauge").count(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed_text() {
+        assert!(validate("no_type_decl 1\n").is_err());
+        assert!(validate("# TYPE x counter\nx notanumber\n").is_err());
+        assert!(validate("# TYPE x counter\n9bad 1\n").is_err());
+        assert!(validate("# TYPE x bogus\n").is_err());
+        assert!(validate("# TYPE h histogram\nh_bucket{le=\"1\"} 5\nh_bucket{le=\"2\"} 3\n")
+            .is_err());
+        // Histogram that never reaches +Inf.
+        assert!(validate("# TYPE h histogram\nh_bucket{le=\"1\"} 5\n").is_err());
+    }
+
+    #[test]
+    fn accepts_special_values() {
+        let ok = "# TYPE g gauge\ng +Inf\ng2{x=\"y\"} NaN\n";
+        // g2 undeclared — must fail.
+        assert!(validate(ok).is_err());
+        let ok = "# TYPE g gauge\ng +Inf\n# TYPE g2 gauge\ng2{x=\"y\"} NaN\n";
+        let sum = validate(ok).unwrap();
+        assert_eq!(sum.samples, 2);
+    }
+
+    #[test]
+    fn prom_name_sanitizes() {
+        assert_eq!(prom_name("pipeline.shard_build"), "lgd_pipeline_shard_build");
+        assert_eq!(prom_name("a-b.c"), "lgd_a_b_c");
+    }
+}

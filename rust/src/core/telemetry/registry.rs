@@ -1,0 +1,515 @@
+//! The unified metrics registry: lock-free hot-path counters, f64 gauges
+//! and log-bucketed latency histograms behind register-once handles.
+//!
+//! The registration path (`counter`/`gauge`/`histogram`) takes the
+//! registry mutex and returns a cloneable handle wrapping the metric's
+//! atomics; every subsequent `add`/`set`/`observe` through the handle is a
+//! relaxed atomic op with no lock and no map lookup. The name-keyed map
+//! exists only for the slow paths — enumeration ([`Registry::snapshot`]),
+//! ad-hoc reads in tests, and the Prometheus renderer. This is the fix for
+//! the original `coordinator::metrics` defect where `count()` locked a
+//! whole `BTreeMap` per increment.
+//!
+//! One process-global instance ([`Registry::global`]) backs the wire
+//! surface (`METRICS` op, `lgd stats`) and the trainer's per-epoch
+//! snapshots; private instances (`Registry::new`) keep unit tests and
+//! per-build reports isolated.
+//!
+//! Everything here is *passive*: recording touches no RNG and reorders no
+//! draws, which is what keeps armed-but-unread telemetry bitwise invisible
+//! to draw streams and θ (the repo's standing contract, enforced by the
+//! determinism gates in `coordinator::trainer` and `runtime::serving`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+/// First finite histogram bound: `2^10` ns (~1 µs). Latencies below land
+/// in bucket 0.
+pub const HIST_MIN_EXP: u32 = 10;
+/// Last finite histogram bound: `2^36` ns (~68.7 s). Latencies above land
+/// in the `+Inf` bucket.
+pub const HIST_MAX_EXP: u32 = 36;
+/// Bucket count: one per power of two in `MIN..=MAX`, plus `+Inf`.
+pub const HIST_BUCKETS: usize = (HIST_MAX_EXP - HIST_MIN_EXP + 2) as usize;
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // Metric maps are plain data; a panicking holder poisons nothing
+    // structurally. Recover like the serving layer does.
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Shared counter cell: monotone u64, relaxed ordering (totals are read
+/// after a happens-before edge — thread join or a later lock — so relaxed
+/// is enough, the same argument the serving counters make).
+#[derive(Clone)]
+pub struct CounterHandle(Arc<AtomicU64>);
+
+impl CounterHandle {
+    /// Add `v` to the counter. Lock-free.
+    #[inline]
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Increment by one. Lock-free.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current total.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Shared gauge cell: an f64 stored as bits in an `AtomicU64` (last write
+/// wins; no read-modify-write on the hot path needs locking).
+#[derive(Clone)]
+pub struct GaugeHandle(Arc<AtomicU64>);
+
+impl GaugeHandle {
+    /// Set the gauge. Lock-free.
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Log-bucketed latency histogram core: per-bucket counts over power-of-two
+/// nanosecond bounds, plus an exact nanosecond sum and a sample count. All
+/// atomics, all relaxed — `observe` never locks.
+pub struct HistogramCore {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+impl HistogramCore {
+    fn new() -> Self {
+        HistogramCore {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// The bucket a `ns`-long sample lands in: the smallest exponent `e`
+    /// in `MIN..=MAX` with `ns <= 2^e`, clamped to bucket 0 below and the
+    /// `+Inf` bucket above.
+    pub fn bucket_index(ns: u64) -> usize {
+        // ceil(log2(ns)) for ns >= 1; 0 for ns <= 1.
+        let exp = 64 - ns.saturating_sub(1).leading_zeros();
+        if exp <= HIST_MIN_EXP {
+            0
+        } else if exp > HIST_MAX_EXP {
+            HIST_BUCKETS - 1
+        } else {
+            (exp - HIST_MIN_EXP) as usize
+        }
+    }
+
+    /// Upper bound of bucket `i` in seconds (`+Inf` for the last bucket).
+    pub fn bucket_bound_secs(i: usize) -> f64 {
+        if i >= HIST_BUCKETS - 1 {
+            f64::INFINITY
+        } else {
+            (1u64 << (HIST_MIN_EXP + i as u32)) as f64 / 1e9
+        }
+    }
+
+    /// Record one duration in nanoseconds. Lock-free.
+    #[inline]
+    pub fn observe_ns(&self, ns: u64) {
+        self.buckets[Self::bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one duration in seconds (negative clamps to zero).
+    #[inline]
+    pub fn observe_secs(&self, secs: f64) {
+        self.observe_ns((secs.max(0.0) * 1e9) as u64);
+    }
+
+    /// Sample count.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Total seconds observed.
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Cumulative `(upper_bound_secs, count_le)` pairs, ending at `+Inf`.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        (0..HIST_BUCKETS)
+            .map(|i| {
+                acc += self.buckets[i].load(Ordering::Relaxed);
+                (Self::bucket_bound_secs(i), acc)
+            })
+            .collect()
+    }
+}
+
+/// Shared histogram handle.
+#[derive(Clone)]
+pub struct HistogramHandle(Arc<HistogramCore>);
+
+impl HistogramHandle {
+    /// Record one duration in seconds. Lock-free.
+    #[inline]
+    pub fn observe_secs(&self, secs: f64) {
+        self.0.observe_secs(secs);
+    }
+
+    /// Record one duration in nanoseconds. Lock-free.
+    #[inline]
+    pub fn observe_ns(&self, ns: u64) {
+        self.0.observe_ns(ns);
+    }
+
+    /// The shared core (for reads).
+    pub fn core(&self) -> &HistogramCore {
+        &self.0
+    }
+}
+
+enum Entry {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicU64>),
+    Histogram(Arc<HistogramCore>),
+}
+
+/// One enumerated metric value (see [`Registry::snapshot`]).
+#[derive(Debug, Clone)]
+pub enum SampleValue {
+    /// Monotone counter total.
+    Counter(u64),
+    /// Last-set gauge value.
+    Gauge(f64),
+    /// Histogram: cumulative `(le_secs, count)` buckets + sum + count.
+    Histogram {
+        /// Cumulative buckets ending at `+Inf`.
+        buckets: Vec<(f64, u64)>,
+        /// Total observed seconds.
+        sum_secs: f64,
+        /// Number of samples.
+        count: u64,
+    },
+}
+
+/// One enumerated metric: dotted base name, rendered label pairs (empty or
+/// `k="v",...`), and the value.
+#[derive(Debug, Clone)]
+pub struct MetricSample {
+    /// Dotted metric name (e.g. `serve.draws_served`).
+    pub name: String,
+    /// Label fragment without braces (e.g. `shard="3"`); empty when
+    /// unlabeled.
+    pub labels: String,
+    /// The value.
+    pub value: SampleValue,
+}
+
+/// The registry: a name-keyed map consulted only at registration and
+/// enumeration time. Keys are `name` or `name{labels}`.
+pub struct Registry {
+    inner: Mutex<BTreeMap<String, Entry>>,
+}
+
+static GLOBAL: Registry = Registry::new();
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    /// Fresh private registry.
+    pub const fn new() -> Self {
+        Registry { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The process-global registry backing the wire surface and the
+    /// trainer's per-epoch snapshots.
+    pub fn global() -> &'static Registry {
+        &GLOBAL
+    }
+
+    fn key(name: &str, labels: &[(&str, &str)]) -> String {
+        if labels.is_empty() {
+            return name.to_string();
+        }
+        let mut k = String::with_capacity(name.len() + 16);
+        k.push_str(name);
+        k.push('{');
+        for (i, (lk, lv)) in labels.iter().enumerate() {
+            if i > 0 {
+                k.push(',');
+            }
+            k.push_str(lk);
+            k.push_str("=\"");
+            k.push_str(lv);
+            k.push('"');
+        }
+        k.push('}');
+        k
+    }
+
+    /// Register-once counter: the first call creates it, later calls (from
+    /// any thread) return a handle to the same cell. Panics if `name` is
+    /// already registered as a different kind — metric kinds are a static
+    /// property of the name.
+    pub fn counter(&self, name: &str) -> CounterHandle {
+        self.counter_labeled(name, &[])
+    }
+
+    /// [`Self::counter`] with labels (`shard="3"`-style).
+    pub fn counter_labeled(&self, name: &str, labels: &[(&str, &str)]) -> CounterHandle {
+        let key = Self::key(name, labels);
+        let mut m = lock(&self.inner);
+        match m.entry(key).or_insert_with(|| Entry::Counter(Arc::new(AtomicU64::new(0)))) {
+            Entry::Counter(c) => CounterHandle(Arc::clone(c)),
+            _ => panic!("metric '{name}' is already registered as a non-counter"),
+        }
+    }
+
+    /// Register-once gauge (see [`Self::counter`] for the contract).
+    pub fn gauge(&self, name: &str) -> GaugeHandle {
+        self.gauge_labeled(name, &[])
+    }
+
+    /// [`Self::gauge`] with labels.
+    pub fn gauge_labeled(&self, name: &str, labels: &[(&str, &str)]) -> GaugeHandle {
+        let key = Self::key(name, labels);
+        let mut m = lock(&self.inner);
+        match m.entry(key).or_insert_with(|| Entry::Gauge(Arc::new(AtomicU64::new(0)))) {
+            Entry::Gauge(g) => GaugeHandle(Arc::clone(g)),
+            _ => panic!("metric '{name}' is already registered as a non-gauge"),
+        }
+    }
+
+    /// Register-once log-bucketed latency histogram (see [`Self::counter`]
+    /// for the contract).
+    pub fn histogram(&self, name: &str) -> HistogramHandle {
+        let key = Self::key(name, &[]);
+        let mut m = lock(&self.inner);
+        match m.entry(key).or_insert_with(|| Entry::Histogram(Arc::new(HistogramCore::new()))) {
+            Entry::Histogram(h) => HistogramHandle(Arc::clone(h)),
+            _ => panic!("metric '{name}' is already registered as a non-histogram"),
+        }
+    }
+
+    /// Slow-path counter read: 0 when absent or not a counter. For tests
+    /// and reports — hot paths hold a [`CounterHandle`].
+    pub fn counter_value(&self, name: &str) -> u64 {
+        match lock(&self.inner).get(name) {
+            Some(Entry::Counter(c)) => c.load(Ordering::Relaxed),
+            _ => 0,
+        }
+    }
+
+    /// Slow-path gauge read: 0.0 when absent or not a gauge.
+    pub fn gauge_value(&self, name: &str) -> f64 {
+        match lock(&self.inner).get(name) {
+            Some(Entry::Gauge(g)) => f64::from_bits(g.load(Ordering::Relaxed)),
+            _ => 0.0,
+        }
+    }
+
+    /// Enumerate every metric, sorted by key. The only path that walks the
+    /// map — rendering, wire dumps and epoch snapshots all build on it.
+    pub fn snapshot(&self) -> Vec<MetricSample> {
+        let m = lock(&self.inner);
+        m.iter()
+            .map(|(key, entry)| {
+                let (name, labels) = match key.find('{') {
+                    Some(i) => (key[..i].to_string(), key[i + 1..key.len() - 1].to_string()),
+                    None => (key.clone(), String::new()),
+                };
+                let value = match entry {
+                    Entry::Counter(c) => SampleValue::Counter(c.load(Ordering::Relaxed)),
+                    Entry::Gauge(g) => {
+                        SampleValue::Gauge(f64::from_bits(g.load(Ordering::Relaxed)))
+                    }
+                    Entry::Histogram(h) => SampleValue::Histogram {
+                        buckets: h.cumulative(),
+                        sum_secs: h.sum_secs(),
+                        count: h.count(),
+                    },
+                };
+                MetricSample { name, labels, value }
+            })
+            .collect()
+    }
+
+    /// Flat `(name_or_labeled_name, value)` pairs for wire dumps and epoch
+    /// snapshots: counters and gauges verbatim; histograms contribute
+    /// `<name>.count` and `<name>.sum_secs`.
+    pub fn flat(&self) -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        for s in self.snapshot() {
+            let key = if s.labels.is_empty() {
+                s.name.clone()
+            } else {
+                format!("{}{{{}}}", s.name, s.labels)
+            };
+            match s.value {
+                SampleValue::Counter(v) => out.push((key, v as f64)),
+                SampleValue::Gauge(v) => out.push((key, v)),
+                SampleValue::Histogram { sum_secs, count, .. } => {
+                    out.push((format!("{key}.count"), count as f64));
+                    out.push((format!("{key}.sum_secs"), sum_secs));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_once_returns_same_cell() {
+        let r = Registry::new();
+        let a = r.counter("c");
+        let b = r.counter("c");
+        a.add(2);
+        b.add(3);
+        assert_eq!(r.counter_value("c"), 5);
+        assert_eq!(a.get(), 5);
+    }
+
+    #[test]
+    fn gauge_last_write_wins() {
+        let r = Registry::new();
+        let g = r.gauge("g");
+        g.set(1.5);
+        g.set(-2.25);
+        assert_eq!(r.gauge_value("g"), -2.25);
+        assert_eq!(r.gauge_value("missing"), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        r.counter("m");
+        r.gauge("m");
+    }
+
+    #[test]
+    fn labeled_metrics_are_distinct() {
+        let r = Registry::new();
+        r.counter_labeled("s", &[("shard", "0")]).add(1);
+        r.counter_labeled("s", &[("shard", "1")]).add(2);
+        assert_eq!(r.counter_value("s{shard=\"0\"}"), 1);
+        assert_eq!(r.counter_value("s{shard=\"1\"}"), 2);
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].name, "s");
+        assert_eq!(snap[0].labels, "shard=\"0\"");
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        // Exactly on a power-of-two bound lands in that bucket; one past
+        // it spills to the next; extremes clamp.
+        assert_eq!(HistogramCore::bucket_index(0), 0);
+        assert_eq!(HistogramCore::bucket_index(1), 0);
+        assert_eq!(HistogramCore::bucket_index(1 << HIST_MIN_EXP), 0);
+        assert_eq!(HistogramCore::bucket_index((1 << HIST_MIN_EXP) + 1), 1);
+        assert_eq!(HistogramCore::bucket_index(1 << (HIST_MIN_EXP + 1)), 1);
+        assert_eq!(
+            HistogramCore::bucket_index(1u64 << HIST_MAX_EXP),
+            HIST_BUCKETS - 2
+        );
+        assert_eq!(
+            HistogramCore::bucket_index((1u64 << HIST_MAX_EXP) + 1),
+            HIST_BUCKETS - 1
+        );
+        assert_eq!(HistogramCore::bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_cumulative_and_sum() {
+        let r = Registry::new();
+        let h = r.histogram("lat");
+        h.observe_ns(1_000); // bucket 0 (1000 <= 1024)
+        h.observe_ns(2_000); // bucket 1 (<= 2048)
+        h.observe_ns(u64::MAX / 2); // +Inf bucket
+        let core = h.core();
+        assert_eq!(core.count(), 3);
+        let cum = core.cumulative();
+        assert_eq!(cum.len(), HIST_BUCKETS);
+        assert_eq!(cum[0].1, 1);
+        assert_eq!(cum[1].1, 2);
+        assert_eq!(cum[HIST_BUCKETS - 1].1, 3);
+        assert!(cum[HIST_BUCKETS - 1].0.is_infinite());
+        // Cumulative counts never decrease.
+        for w in cum.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+
+    #[test]
+    fn histogram_secs_roundtrip() {
+        let r = Registry::new();
+        let h = r.histogram("t");
+        h.observe_secs(0.5);
+        h.observe_secs(1.5);
+        assert_eq!(h.core().count(), 2);
+        assert!((h.core().sum_secs() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_hammering_from_8_threads() {
+        let r = std::sync::Arc::new(Registry::new());
+        let c = r.counter("hits");
+        let h = r.histogram("lat");
+        let mut joins = Vec::new();
+        for t in 0..8 {
+            let c = c.clone();
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    c.add(1);
+                    h.observe_ns((t * 1000 + i) * 1000);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(c.get(), 8000);
+        assert_eq!(h.core().count(), 8000);
+        let cum = h.core().cumulative();
+        assert_eq!(cum[HIST_BUCKETS - 1].1, 8000);
+    }
+
+    #[test]
+    fn flat_dump_covers_all_kinds() {
+        let r = Registry::new();
+        r.counter("c").add(7);
+        r.gauge("g").set(0.25);
+        r.histogram("h").observe_secs(1.0);
+        let flat = r.flat();
+        let get = |k: &str| flat.iter().find(|(n, _)| n == k).map(|(_, v)| *v);
+        assert_eq!(get("c"), Some(7.0));
+        assert_eq!(get("g"), Some(0.25));
+        assert_eq!(get("h.count"), Some(1.0));
+        assert!((get("h.sum_secs").unwrap() - 1.0).abs() < 1e-9);
+    }
+}

@@ -6,6 +6,7 @@
 //! importance weight `1/(p·N)` of Theorem 1.
 
 use crate::core::rng::{Pcg64, Rng};
+use crate::core::telemetry::probes;
 use crate::data::preprocess::Preprocessed;
 use crate::estimator::{EstimatorStats, GradientEstimator, WeightedDraw};
 use crate::lsh::sampler::{LshSampler, QueryCache, SampleCost, Sampled};
@@ -233,16 +234,18 @@ impl<'a, H: SrpHasher> GradientEstimator for LgdEstimator<'a, H> {
         let mut cache = std::mem::take(&mut self.cache);
         let sampler = Self::sampler(&self.tables, &self.stored, &self.stored_norms, &self.opts);
         let out = match sampler.sample_cached(&mut cache, &mut self.rng, &mut cost) {
-            Sampled::Hit(d) => WeightedDraw {
-                index: self.example_of(d.index),
-                weight: self.weight_of(d.prob),
-                prob: d.prob,
-            },
+            Sampled::Hit(d) => {
+                let index = self.example_of(d.index);
+                probes::observe_hit(0, index, d.prob, d.probes, d.bucket_size);
+                WeightedDraw { index, weight: self.weight_of(d.prob), prob: d.prob }
+            }
             Sampled::Exhausted { .. } => {
                 // Degenerate fallback: uniform draw, weight 1 (plain SGD
                 // step). Counted so experiments can verify it never fires
                 // under paper-default K.
                 self.stats.fallbacks += 1;
+                probes::observe_exhausted(1);
+                probes::observe_fallback();
                 let n = self.pre.data.len();
                 WeightedDraw { index: self.rng.index(n), weight: 1.0, prob: 1.0 / n as f64 }
             }
@@ -271,16 +274,16 @@ impl<'a, H: SrpHasher> GradientEstimator for LgdEstimator<'a, H> {
             sampler.sample_batch_coded(&codes, &query, m, &mut self.rng, &mut cost, &mut batch);
         }
         for d in &batch {
-            out.push(WeightedDraw {
-                index: self.example_of(d.index),
-                weight: self.weight_of(d.prob),
-                prob: d.prob,
-            });
+            let index = self.example_of(d.index);
+            probes::observe_hit(0, index, d.prob, d.probes, d.bucket_size);
+            out.push(WeightedDraw { index, weight: self.weight_of(d.prob), prob: d.prob });
         }
         // B.2 exhaustion: top up with uniform fallbacks.
         let n = self.pre.data.len();
+        probes::observe_exhausted(m.saturating_sub(out.len()));
         while out.len() < m {
             self.stats.fallbacks += 1;
+            probes::observe_fallback();
             out.push(WeightedDraw { index: self.rng.index(n), weight: 1.0, prob: 1.0 / n as f64 });
         }
         self.stats.draws += m as u64;

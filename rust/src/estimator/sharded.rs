@@ -40,6 +40,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pipeline::{build_shard_tables, ShardSet, ShardTables};
 use crate::core::error::Result;
 use crate::core::rng::{Pcg64, Rng};
+use crate::core::telemetry::probes;
 use crate::data::preprocess::Preprocessed;
 use crate::data::shard::ShardPlan;
 use crate::estimator::lgd::LgdOptions;
@@ -113,6 +114,9 @@ pub(crate) fn mixture_weigh<H: SrpHasher>(
     };
     let global = shard.rows[d.index] as usize;
     let index = if global >= n { global - n } else { global };
+    // Passive probe: records rates/occupancy/TV when armed, single relaxed
+    // load when not; never touches the RNG or the draw order.
+    probes::observe_hit(s, index, prob, d.probes, d.bucket_size);
     WeightedDraw { index, weight, prob }
 }
 
@@ -128,6 +132,7 @@ pub(crate) fn uniform_fallback_from<H: SrpHasher>(
     fallbacks: &mut u64,
 ) -> WeightedDraw {
     *fallbacks += 1;
+    probes::observe_fallback();
     let present = set.present_len();
     if present == 0 || present == n {
         return WeightedDraw { index: rng.index(n), weight: 1.0, prob: 1.0 / n as f64 };
@@ -198,6 +203,7 @@ pub(crate) fn mixture_draw_batch<H: SrpHasher>(
         // single-draw fallback.
         short += quota - scratch.len();
     }
+    probes::observe_exhausted(short);
     for _ in 0..short {
         let d = uniform_fallback_from(set, n, rng, &mut stats.fallbacks);
         out.push(d);

@@ -13,6 +13,10 @@
 //!   in-process N-client harness reports draws/sec vs client count, and
 //!   `--addr host:port` additionally exposes the length-prefixed TCP
 //!   front (`runtime::serving`).
+//! * `stats --addr host:port` — query a running server: STATS (wire
+//!   counters + registry dump) and METRICS (validated Prometheus text).
+//! * `trace summarize --path file.jsonl` — aggregate a telemetry trace
+//!   file into a per-span table.
 //! * `runtime-smoke` — load an AOT artifact, execute it, cross-check
 //!   against the native Rust gradient (three-layer health check).
 //! * `help` — this text.
@@ -29,6 +33,8 @@ use lgd::coordinator::trainer::{
     build_sharded_estimator, lgd_options, train, train_resumed, GradSource,
 };
 use lgd::core::error::{Error, Result};
+use lgd::core::telemetry::registry::Registry;
+use lgd::core::telemetry::{probes, prom, trace};
 use lgd::data::csv::CsvWriter;
 use lgd::data::preprocess::{preprocess, PreprocessOptions, Preprocessed};
 use lgd::estimator::GradientEstimator;
@@ -47,6 +53,7 @@ USAGE:
             [--snapshot <file.lgdsnap>] [--autosave-epochs <n>] [--keep <n>] [--resume]
             [--health <on|off>] [--quarantine <id,id,...>] [--allow-nonfinite]
             [--inject <grad-nan|theta-poison|loss-corrupt>:<once|always|times:N>[:<arg>]]
+            [--telemetry <on|off>] [--trace] [--trace-path <file.jsonl>]
   lgd snapshot save --config <run.toml> --out <file.lgdsnap>
                [--shards <n>] [--sealed <true|false>]
   lgd snapshot inspect --path <file.lgdsnap>
@@ -58,6 +65,9 @@ USAGE:
   lgd serve [--config <run.toml>] [--clients <n>] [--batch <m>] [--requests <n>]
             [--addr <host:port>] [--shards <n>] [--sealed <true|false>]
             [--max-clients <n>] [--idle-timeout-ms <n>] [--io-timeout-ms <n>]
+            [--metrics]
+  lgd stats --addr <host:port> [--seed <n>]
+  lgd trace summarize --path <file.jsonl>
   lgd runtime-smoke [--artifacts <dir>]
   lgd help
 ";
@@ -77,12 +87,17 @@ fn run(argv: &[String]) -> Result<()> {
     if argv.first().map(|s| s.as_str()) == Some("snapshot") {
         return cmd_snapshot(&argv[1..]);
     }
+    // `lgd trace summarize` carries a sub-verb too.
+    if argv.first().map(|s| s.as_str()) == Some("trace") {
+        return cmd_trace(&argv[1..]);
+    }
     let args = Args::parse(argv)?;
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "experiments" => cmd_experiments(&args),
         "gen-data" => cmd_gen_data(&args),
         "serve" => cmd_serve(&args),
+        "stats" => cmd_stats(&args),
         "runtime-smoke" => cmd_runtime_smoke(&args),
         "" | "help" => {
             print!("{USAGE}");
@@ -96,7 +111,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.allow(&[
         "config", "out", "shards", "rebalance-threshold", "sealed", "async-workers",
         "queue-depth", "kernel", "snapshot", "autosave-epochs", "keep", "resume",
-        "health", "quarantine", "allow-nonfinite", "inject",
+        "health", "quarantine", "allow-nonfinite", "inject", "telemetry", "trace",
+        "trace-path",
     ])?;
     let cfg_path = args.require("config")?;
     let doc = TomlDoc::load(std::path::Path::new(&cfg_path))?;
@@ -166,6 +182,21 @@ fn cmd_train(args: &Args) -> Result<()> {
     if args.has("allow-nonfinite") || args.bool_or("allow-nonfinite", false)? {
         cfg.data.allow_nonfinite = true;
     }
+    // --telemetry / --trace / --trace-path override the [telemetry] block
+    // (docs/observability.md). Telemetry is passive: armed or not, a
+    // seeded run is bit-for-bit identical.
+    match args.str_or("telemetry", "").as_str() {
+        "" => {}
+        "on" | "true" => cfg.telemetry.enabled = true,
+        "off" | "false" => cfg.telemetry.enabled = false,
+        other => return Err(Error::Config(format!("--telemetry {other}: expected on|off"))),
+    }
+    if args.has("trace") || args.bool_or("trace", false)? {
+        cfg.telemetry.trace = true;
+    }
+    if !args.str_or("trace-path", "").is_empty() {
+        cfg.telemetry.trace_path = PathBuf::from(args.str_or("trace-path", ""));
+    }
     // --inject arms a failpoint for chaos smoke runs; only builds carrying
     // the `failpoints` feature have an armable registry.
     let inject = args.str_or("inject", "");
@@ -180,6 +211,20 @@ fn cmd_train(args: &Args) -> Result<()> {
     let ds =
         build_dataset(&cfg.data.name, cfg.data.scale, cfg.data.seed, cfg.data.allow_nonfinite)?;
     let (tr, te) = ds.split(cfg.data.train_frac, cfg.data.seed)?;
+
+    // Arm the passive telemetry before the first draw: the probes watch
+    // the training split's draw stream, tracing appends JSONL span events
+    // to the configured file (rotated at trace_max_bytes). Neither touches
+    // the RNG — a seeded run is bit-for-bit identical either way.
+    if cfg.telemetry.enabled {
+        probes::arm(cfg.telemetry.probe_window, tr.len());
+    }
+    if cfg.telemetry.trace {
+        trace::arm(&cfg.telemetry.trace_path, cfg.telemetry.trace_max_bytes).map_err(|e| {
+            Error::Io(format!("trace {}: {e}", cfg.telemetry.trace_path.display()))
+        })?;
+        println!("telemetry: tracing spans to {}", cfg.telemetry.trace_path.display());
+    }
 
     let outcome = if cfg.store.resume {
         let base = cfg.store.path.clone().expect("validated: resume requires a path");
@@ -304,6 +349,27 @@ fn cmd_train(args: &Args) -> Result<()> {
     if outcome.autosaves > 0 {
         if let Some(p) = &cfg.store.path {
             println!("  snapshots: {} written to {}", outcome.autosaves, p.display());
+        }
+    }
+    if cfg.telemetry.enabled {
+        let reg = Registry::global();
+        probes::publish(reg);
+        println!(
+            "  telemetry: {} draws probed, fallback rate {:.4}, {:.2} probes/draw, \
+             tv-distance {:.4}; {} epoch metric snapshot(s)",
+            reg.gauge_value("probe.draws"),
+            reg.gauge_value("probe.fallback_rate"),
+            reg.gauge_value("probe.probes_per_draw"),
+            reg.gauge_value("probe.tv_distance"),
+            outcome.epoch_metrics.len()
+        );
+        probes::disarm();
+    }
+    if cfg.telemetry.trace {
+        trace::disarm();
+        match trace::summarize_file(&cfg.telemetry.trace_path) {
+            Ok(table) => print!("{table}"),
+            Err(e) => println!("  trace summarize failed: {e}"),
         }
     }
     Ok(())
@@ -574,6 +640,9 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
 struct ServeRun<'a> {
     cfg: &'a RunConfig,
     pre: Arc<Preprocessed>,
+    /// `--metrics`: print the Prometheus exposition after the harness
+    /// sweep (the TCP front always answers the METRICS op regardless).
+    metrics: bool,
 }
 
 impl<'a> HasherVisitor for ServeRun<'a> {
@@ -622,6 +691,11 @@ impl<'a> HasherVisitor for ServeRun<'a> {
             );
         }
 
+        if self.metrics {
+            probes::publish(Registry::global());
+            print!("{}", prom::render(Registry::global()));
+        }
+
         if !cfg.serve.addr.is_empty() {
             let listener = std::net::TcpListener::bind(&cfg.serve.addr)
                 .map_err(|e| Error::Io(format!("bind {}: {e}", cfg.serve.addr)))?;
@@ -655,7 +729,7 @@ impl<'a> HasherVisitor for ServeRun<'a> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.allow(&[
         "config", "clients", "batch", "requests", "addr", "shards", "sealed", "max-clients",
-        "idle-timeout-ms", "io-timeout-ms",
+        "idle-timeout-ms", "io-timeout-ms", "metrics",
     ])?;
     let mut cfg = match args.str_or("config", "").as_str() {
         "" => RunConfig::default(),
@@ -695,8 +769,66 @@ fn cmd_serve(args: &Args) -> Result<()> {
         build_dataset(&cfg.data.name, cfg.data.scale, cfg.data.seed, cfg.data.allow_nonfinite)?;
     let (tr, _te) = ds.split(cfg.data.train_frac, cfg.data.seed)?;
     let pre = Arc::new(preprocess(tr, &PreprocessOptions { center: cfg.lsh.center })?);
+    // Sampling-quality probes watch the serving draw streams too (passive
+    // — the wire draws are bit-for-bit identical armed or not).
+    if cfg.telemetry.enabled {
+        probes::arm(cfg.telemetry.probe_window, pre.data.len());
+    }
+    let metrics = args.has("metrics") || args.bool_or("metrics", false)?;
     let hd = pre.hashed.cols();
-    AnyHasher::from_lsh_config(&cfg.lsh, hd).visit(ServeRun { cfg: &cfg, pre })
+    AnyHasher::from_lsh_config(&cfg.lsh, hd).visit(ServeRun { cfg: &cfg, pre, metrics })
+}
+
+/// `lgd stats --addr host:port` — query a running server's wire counters,
+/// dump the registry appendix, and validate the Prometheus exposition.
+fn cmd_stats(args: &Args) -> Result<()> {
+    args.allow(&["addr", "seed"])?;
+    let addr = args.require("addr")?;
+    let seed = args.u64_or("seed", 0)?;
+    let mut client = lgd::runtime::ServeClient::connect(addr.as_str(), seed)?;
+    let (stats, registry) = client.stats_full()?;
+    println!("server at {addr} (generation {}):", client.generation);
+    println!(
+        "  flips={} sessions={} draws_served={} stale_rejected={} degraded={}",
+        stats.flips, stats.sessions, stats.draws_served, stats.stale_rejected,
+        stats.degraded_sessions
+    );
+    println!(
+        "  connections={} conn_errors={} rejected_at_capacity={}",
+        stats.connections, stats.conn_errors, stats.rejected_at_capacity
+    );
+    println!("registry appendix: {} metrics", registry.len());
+    for (name, value) in &registry {
+        println!("  {name} = {value}");
+    }
+    let text = client.metrics()?;
+    let sum = prom::validate(&text)
+        .map_err(|e| Error::Pipeline(format!("METRICS failed Prometheus validation: {e}")))?;
+    println!(
+        "METRICS: valid Prometheus text ({} counters, {} gauges, {} histograms, {} samples)",
+        sum.counters, sum.gauges, sum.histograms, sum.samples
+    );
+    print!("{text}");
+    client.bye()
+}
+
+/// `lgd trace summarize --path file.jsonl` — aggregate a JSONL span trace
+/// (plus its rotated predecessor, when present) into a per-span table.
+fn cmd_trace(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "summarize" => {
+            args.allow(&["path"])?;
+            let path = PathBuf::from(args.require("path")?);
+            let table = trace::summarize_file(&path)
+                .map_err(|e| Error::Io(format!("trace {}: {e}", path.display())))?;
+            print!("{table}");
+            Ok(())
+        }
+        other => {
+            Err(Error::Config(format!("trace needs a verb: summarize (got '{other}')\n{USAGE}")))
+        }
+    }
 }
 
 fn cmd_runtime_smoke(args: &Args) -> Result<()> {

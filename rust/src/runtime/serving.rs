@@ -66,6 +66,8 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pipeline::{build_shard_tables, ShardSet, ShardTables};
 use crate::core::error::{Error, Result};
 use crate::core::rng::Pcg64;
+use crate::core::telemetry::registry::Registry;
+use crate::core::telemetry::{probes, prom};
 use crate::data::preprocess::Preprocessed;
 use crate::data::shard::ShardPlan;
 use crate::estimator::lgd::LgdOptions;
@@ -203,6 +205,7 @@ impl<H: SrpHasher> ServingCore<H> {
         F: FnOnce(&mut ShardSet<H>, &Preprocessed) -> Result<T>,
     {
         let _w = lock(&self.writer);
+        let _sp = crate::span!("serve.generation_flip");
         if faults::should_fail(faults::GENERATION_FLIP) {
             // Before the clone: a failed flip publishes nothing and the
             // previous generation keeps serving untouched.
@@ -214,6 +217,7 @@ impl<H: SrpHasher> ServingCore<H> {
         *lock(&self.published) = Arc::new(next);
         self.gen.store(gen, Ordering::Release);
         self.flips.fetch_add(1, Ordering::Relaxed);
+        Registry::global().gauge("serve.generation").set(gen as f64);
         Ok(out)
     }
 
@@ -662,14 +666,20 @@ pub fn run_harness<H: SrpHasher>(
 // ---------------------------------------------------------------------------
 // Wire protocol: u32 LE length-prefixed frames over std::net TCP.
 //
-//   request  = HELLO(op=1, magic u32, version u32, seed u64)
-//            | DRAW (op=2, m u32, dim u32, theta f32×dim)
-//            | BYE  (op=3)
-//            | STATS(op=4) — allowed before HELLO
+//   request  = HELLO  (op=1, magic u32, version u32, seed u64)
+//            | DRAW   (op=2, m u32, dim u32, theta f32×dim)
+//            | BYE    (op=3)
+//            | STATS  (op=4) — allowed before HELLO
+//            | METRICS(op=5) — allowed before HELLO
 //   response = ok:  status=0 + HELLO → generation u64
 //                              DRAW  → generation u64, count u32,
 //                                      (index u32, weight f64, prob f64)×count
-//                              STATS → 8×u64 (see WireStats)
+//                              STATS → 8×u64 (see WireStats), then the
+//                                      registry appendix: count u32 +
+//                                      (len u16, name utf-8, value f64)×count
+//                                      — old clients read the 8 u64s and
+//                                      ignore the rest
+//                              METRICS → Prometheus text exposition (utf-8)
 //              err: status=1 + utf-8 message
 // ---------------------------------------------------------------------------
 
@@ -682,6 +692,7 @@ const OP_HELLO: u8 = 1;
 const OP_DRAW: u8 = 2;
 const OP_BYE: u8 = 3;
 const OP_STATS: u8 = 4;
+const OP_METRICS: u8 = 5;
 const ST_OK: u8 = 0;
 const ST_ERR: u8 = 1;
 /// Frame size ceiling (16 MiB) — refuse anything larger before allocating.
@@ -877,8 +888,50 @@ pub struct ServeTotals {
     pub rejected_at_capacity: u64,
 }
 
+/// Bring a monotone counter in the global registry up to `total` (totals
+/// come from per-core atomics; the registry cell only ever moves forward).
+fn set_counter_total(reg: &Registry, name: &str, total: u64) {
+    let h = reg.counter(name);
+    let cur = h.get();
+    if total > cur {
+        h.add(total - cur);
+    }
+}
+
+/// Publish the serving core + listener state into the global registry —
+/// the single producer the `STATS` appendix and the `METRICS` exposition
+/// read from. Also pre-registers the PR-7/8/9 gated counters
+/// (`serve.stale_candidates_rejected`, `serve.degraded_sessions`,
+/// `health.rollbacks`) so they are visible at 0 before anything trips.
+fn publish_wire_metrics<H: SrpHasher>(core: &ServingCore<H>, state: &ServeState) {
+    let reg = Registry::global();
+    let c = core.counters();
+    set_counter_total(reg, "serve.flips", c.flips);
+    set_counter_total(reg, "serve.sessions", c.sessions);
+    set_counter_total(reg, "serve.draws_served", c.draws_served);
+    set_counter_total(reg, "serve.stale_candidates_rejected", c.stale_rejected);
+    set_counter_total(reg, "serve.degraded_sessions", c.degraded_sessions);
+    set_counter_total(reg, "serve.connections", state.connections.load(Ordering::Relaxed));
+    set_counter_total(reg, "serve.conn_errors", state.conn_errors.load(Ordering::Relaxed));
+    set_counter_total(
+        reg,
+        "serve.rejected_at_capacity",
+        state.rejected_at_capacity.load(Ordering::Relaxed),
+    );
+    // Registered-for-exposure: the trainer increments it on rollback.
+    reg.counter("health.rollbacks");
+    reg.gauge("serve.generation").set(core.generation() as f64);
+    let pin = core.pin();
+    for s in 0..pin.shard_count() {
+        reg.gauge_labeled("serve.shard_rows", &[("shard", &s.to_string())])
+            .set(pin.shard(s).stored.rows() as f64);
+    }
+    probes::publish(reg);
+}
+
 /// Handle one client connection: HELLO opens the session, DRAWs stream
-/// batches, STATS reads the server counters, BYE (or EOF, or the idle
+/// batches, STATS reads the server counters (plus the registry appendix),
+/// METRICS dumps the Prometheus exposition, BYE (or EOF, or the idle
 /// deadline) ends it. Returns draws served on this connection. Protocol
 /// violations get an error frame, then the connection closes — they never
 /// take the server down.
@@ -895,6 +948,8 @@ fn handle_conn<H: SrpHasher>(
     let mut session: Option<ServingSession<H>> = None;
     let mut served = 0u64;
     let mut draws: Vec<WeightedDraw> = Vec::new();
+    // Pre-registered once per connection; each observe is lock-free.
+    let req_hist = Registry::global().histogram("serve.request_secs");
     loop {
         let mut lb = [0u8; 4];
         if read_full(&mut stream, &mut lb, stop, Some(opts.idle_timeout))?.is_none() {
@@ -911,6 +966,7 @@ fn handle_conn<H: SrpHasher>(
         }
         // Decode + dispatch; a malformed frame answers with an error
         // payload and closes this connection only.
+        let req_t0 = Instant::now();
         let flow = (|| -> Result<bool> {
             let mut r = Reader::new(&payload);
             match r.u8()? {
@@ -983,6 +1039,28 @@ fn handle_conn<H: SrpHasher>(
                     ] {
                         p.extend_from_slice(&v.to_le_bytes());
                     }
+                    // Registry appendix (protocol-compatible: old clients
+                    // stop after the 8 u64s above).
+                    publish_wire_metrics(core, state);
+                    let flat = Registry::global().flat();
+                    p.extend_from_slice(&(flat.len() as u32).to_le_bytes());
+                    for (name, value) in &flat {
+                        let bytes = name.as_bytes();
+                        p.extend_from_slice(&(bytes.len() as u16).to_le_bytes());
+                        p.extend_from_slice(bytes);
+                        p.extend_from_slice(&value.to_le_bytes());
+                    }
+                    write_frame(&mut stream, &p)?;
+                    Ok(true)
+                }
+                OP_METRICS => {
+                    // Allowed before HELLO, like STATS: scrapers don't
+                    // open sessions.
+                    publish_wire_metrics(core, state);
+                    let text = prom::render(Registry::global());
+                    let mut p = Vec::with_capacity(1 + text.len());
+                    p.push(ST_OK);
+                    p.extend_from_slice(text.as_bytes());
                     write_frame(&mut stream, &p)?;
                     Ok(true)
                 }
@@ -990,6 +1068,7 @@ fn handle_conn<H: SrpHasher>(
                 op => Err(Error::Pipeline(format!("serving wire: unknown op {op}"))),
             }
         })();
+        req_hist.observe_secs(req_t0.elapsed().as_secs_f64());
         match flow {
             Ok(true) => {}
             Ok(false) => return Ok(served),
@@ -1020,6 +1099,7 @@ pub fn serve_supervised<H: SrpHasher>(
     listener.set_nonblocking(true).map_err(io_err)?;
     let state = ServeState::default();
     let mut listen_err: Option<Error> = None;
+    let live_gauge = Registry::global().gauge("serve.live_connections");
     thread::scope(|scope| {
         let st = &state;
         let mut handlers: Vec<thread::ScopedJoinHandle<'_, ()>> = Vec::new();
@@ -1054,6 +1134,7 @@ pub fn serve_supervised<H: SrpHasher>(
                             }
                         }
                     }));
+                    live_gauge.set(handlers.len() as f64);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     thread::sleep(Duration::from_millis(5));
@@ -1069,6 +1150,7 @@ pub fn serve_supervised<H: SrpHasher>(
                 st.conn_errors.fetch_add(1, Ordering::Relaxed);
             }
         }
+        live_gauge.set(0.0);
     });
     match listen_err {
         Some(e) => Err(e),
@@ -1247,6 +1329,49 @@ impl ServeClient {
             conn_errors: r.u64()?,
             rejected_at_capacity: r.u64()?,
         })
+    }
+
+    /// Fetch the server's counters *and* the full registry appendix
+    /// (name → value pairs) the `STATS` response carries after the 8 u64s.
+    pub fn stats_full(&mut self) -> Result<(WireStats, Vec<(String, f64)>)> {
+        write_frame(&mut self.stream, &[OP_STATS])?;
+        let resp = read_frame(&mut self.stream)?
+            .ok_or_else(|| Error::Pipeline("serving wire: server closed during STATS".into()))?;
+        let mut r = Reader::new(&resp);
+        if r.u8()? != ST_OK {
+            return Err(Error::Pipeline(format!("serving server error: {}", r.rest_str())));
+        }
+        let stats = WireStats {
+            flips: r.u64()?,
+            sessions: r.u64()?,
+            draws_served: r.u64()?,
+            stale_rejected: r.u64()?,
+            degraded_sessions: r.u64()?,
+            connections: r.u64()?,
+            conn_errors: r.u64()?,
+            rejected_at_capacity: r.u64()?,
+        };
+        let count = r.u32()? as usize;
+        let mut registry = Vec::with_capacity(count);
+        for _ in 0..count {
+            let len = u16::from_le_bytes(r.take(2)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8_lossy(r.take(len)?).into_owned();
+            registry.push((name, r.f64()?));
+        }
+        Ok((stats, registry))
+    }
+
+    /// Fetch the Prometheus text exposition (the `METRICS` op; allowed
+    /// before HELLO).
+    pub fn metrics(&mut self) -> Result<String> {
+        write_frame(&mut self.stream, &[OP_METRICS])?;
+        let resp = read_frame(&mut self.stream)?
+            .ok_or_else(|| Error::Pipeline("serving wire: server closed during METRICS".into()))?;
+        let mut r = Reader::new(&resp);
+        if r.u8()? != ST_OK {
+            return Err(Error::Pipeline(format!("serving server error: {}", r.rest_str())));
+        }
+        Ok(r.rest_str())
     }
 
     /// Polite goodbye (the server also handles a plain disconnect).
@@ -1781,6 +1906,84 @@ mod tests {
             stop.store(true, Ordering::Relaxed);
             assert_eq!(server.join().unwrap().unwrap(), 32);
         });
+    }
+
+    /// The METRICS op answers a strictly-valid Prometheus exposition
+    /// covering counters, gauges and histogram buckets, with the gated
+    /// counters visible at 0; the STATS appendix dumps the same registry
+    /// as name → value pairs (old clients read the 8 u64s and stop).
+    #[test]
+    fn metrics_op_returns_valid_prometheus_and_stats_appendix() {
+        let pre = setup(90, 6, 99);
+        let core = mk_core(&pre, 2, true);
+        let theta = vec![0.05f32; 6];
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = AtomicBool::new(false);
+        thread::scope(|scope| {
+            let corer = &core;
+            let stopr = &stop;
+            let server = scope.spawn(move || serve_tcp(corer, listener, stopr));
+            let mut client = ServeClient::connect(addr, 7).unwrap();
+            client.draw(&theta, 24).unwrap();
+
+            let text = client.metrics().unwrap();
+            let sum = prom::validate(&text).expect("METRICS must be valid Prometheus text");
+            assert!(sum.counters >= 1 && sum.gauges >= 1 && sum.histograms >= 1);
+            assert!(text.contains("lgd_serve_draws_served"));
+            assert!(text.contains("lgd_serve_request_secs_seconds_bucket{le=\"+Inf\"}"));
+            assert!(text.contains("lgd_serve_generation"));
+            // PR-7/8/9 gated counters: visible, and (structurally) zero.
+            assert!(text.contains("lgd_serve_stale_candidates_rejected 0"));
+            assert!(text.contains("lgd_serve_degraded_sessions 0"));
+            // Registered for exposure even before any rollback happens
+            // (value asserted 0 in the CI smoke against a fresh process;
+            // here trainer tests in the same binary may have bumped it).
+            assert!(text.contains("lgd_health_rollbacks"));
+
+            let (stats, registry) = client.stats_full().unwrap();
+            assert_eq!(stats.draws_served, 24);
+            assert_eq!(stats.stale_rejected, 0);
+            let get = |k: &str| registry.iter().find(|(n, _)| n == k).map(|(_, v)| *v);
+            assert!(get("serve.draws_served").unwrap() >= 24.0);
+            assert_eq!(get("serve.stale_candidates_rejected"), Some(0.0));
+            assert_eq!(get("serve.degraded_sessions"), Some(0.0));
+            assert!(get("serve.request_secs.count").unwrap() >= 1.0);
+            // The compact client still parses the extended response.
+            let s2 = client.stats().unwrap();
+            assert_eq!(s2.draws_served, 24);
+            client.bye().unwrap();
+            stop.store(true, Ordering::Relaxed);
+            server.join().unwrap().unwrap();
+        });
+    }
+
+    /// Bitwise-invisibility gate (serving side): arming the sampling
+    /// probes changes nothing about a session's draw stream — same seed,
+    /// same draws, armed or not. Probes observe; they never touch the RNG.
+    #[test]
+    fn armed_probes_leave_serve_draw_stream_identical() {
+        let pre = setup(120, 6, 103);
+        let core = mk_core(&pre, 3, true);
+        let theta = vec![0.03f32; 6];
+        probes::disarm();
+        let mut plain = Vec::new();
+        let mut sess = ServingSession::open(&core, 4242);
+        for _ in 0..4 {
+            let mut b = Vec::new();
+            sess.draw_batch(&theta, 32, &mut b);
+            plain.extend(b);
+        }
+        probes::arm(256, 120);
+        let mut armed = Vec::new();
+        let mut sess = ServingSession::open(&core, 4242);
+        for _ in 0..4 {
+            let mut b = Vec::new();
+            sess.draw_batch(&theta, 32, &mut b);
+            armed.extend(b);
+        }
+        probes::disarm();
+        assert_eq!(plain, armed, "armed probes perturbed the draw stream");
     }
 
     /// The retry client's deterministic backoff schedule and its plain
